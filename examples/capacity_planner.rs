@@ -1,0 +1,86 @@
+//! Domain example: FPGA capacity planning for a cloud "Sensing as a
+//! Service" deployment (the paper's section-1 scenario: dynamic,
+//! priori-unknown clustering workloads on reconfigurable data-center
+//! accelerators).
+//!
+//! Given a mix of tenant workloads, use the Table-1 resource model to pick
+//! the largest fully-parallel cluster configuration per tenant, then use
+//! the platform model to quote expected latency per request and compare
+//! deployment options (software pool vs MUCH-SWIFT boards).
+//!
+//!     cargo run --release --example capacity_planner
+
+use muchswift::arch::{evaluate, ArchKind};
+use muchswift::config::WorkloadConfig;
+use muchswift::hw::resources;
+
+struct Tenant {
+    name: &'static str,
+    n: usize,
+    d: usize,
+    k: usize,
+    requests_per_hour: f64,
+}
+
+fn main() {
+    let tenants = [
+        Tenant { name: "iot-telemetry", n: 400_000, d: 8, k: 12, requests_per_hour: 60.0 },
+        Tenant { name: "geo-imagery", n: 1_000_000, d: 15, k: 20, requests_per_hour: 12.0 },
+        Tenant { name: "fraud-features", n: 250_000, d: 30, k: 6, requests_per_hour: 120.0 },
+        Tenant { name: "genomics-micro", n: 100_000, d: 15, k: 64, requests_per_hour: 4.0 },
+    ];
+
+    println!("ZU9EG capacity plan (Table-1 resource model):\n");
+    let mut board_busy = 0f64; // seconds of board time per hour
+    let mut sw_busy = 0f64;
+    for t in &tenants {
+        let fits = resources::fits(t.k);
+        let kp = if fits {
+            t.k
+        } else {
+            resources::max_parallel_clusters()
+        };
+        let u = resources::utilization(kp.min(20));
+        let w = WorkloadConfig {
+            n: t.n,
+            d: t.d,
+            k: t.k,
+            true_k: t.k,
+            sigma: 0.15,
+            seed: 7,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let ms = evaluate(ArchKind::MuchSwift, &w);
+        let sw = evaluate(ArchKind::SwLloyd, &w);
+        board_busy += ms.total_s * t.requests_per_hour;
+        sw_busy += sw.total_s * t.requests_per_hour;
+        println!(
+            "  {:<16} k={:<3} {} | LUT {:>6.1}% DSP {:>6.1}% BRAM {:>6.1}% | \
+             latency {:>8.3}s (sw {:>8.2}s, {:>5.0}x)",
+            t.name,
+            t.k,
+            if fits { "fully-parallel" } else { "module-shared " },
+            100.0 * u.luts as f64 / resources::ZU9EG.luts as f64,
+            100.0 * u.dsps as f64 / resources::ZU9EG.dsps as f64,
+            100.0 * u.brams as f64 / resources::ZU9EG.brams as f64,
+            ms.total_s,
+            sw.total_s,
+            sw.total_s / ms.total_s,
+        );
+    }
+    println!("\nfleet sizing at the given request rates:");
+    println!(
+        "  MUCH-SWIFT boards needed: {:.2} (busy {:.0} s/h each)",
+        board_busy / 3600.0,
+        3600.0
+    );
+    println!(
+        "  software-only cores needed: {:.1}",
+        sw_busy / 3600.0
+    );
+    println!(
+        "  consolidation ratio: {:.0}x",
+        sw_busy / board_busy.max(1e-9)
+    );
+}

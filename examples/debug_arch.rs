@@ -1,0 +1,22 @@
+//! Scratch: inspect breakdowns (not part of the example set).
+use muchswift::arch::{evaluate, measure, ArchKind};
+use muchswift::config::WorkloadConfig;
+
+fn main() {
+    let w = WorkloadConfig { n: 1_000_000, d: 15, k: 20, true_k: 20, sigma: 0.15, seed: 42, max_iters: 60, ..Default::default() };
+    for kind in [ArchKind::FpgaFilterSingle, ArchKind::MuchSwift] {
+        let m = measure(kind, &w);
+        let it = &m.stats.iters[1];
+        println!("{}: iters={} dist_evals/iter={} node_visits={} leaf_points={} interior={} prune={} levels={}",
+            kind.name(), m.stats.iterations(), it.dist_evals, it.node_visits, it.leaf_points,
+            it.interior_assigns, it.prune_tests, it.levels.len());
+        for (i, l) in it.levels.iter().enumerate() {
+            if l.interior_jobs + l.leaf_jobs > 0 {
+                println!("  lvl {i}: interior={} leaf={} cand={} prune={}", l.interior_jobs, l.leaf_jobs, l.cand_evals, l.prune_tests);
+            }
+        }
+        let r = evaluate(kind, &w);
+        println!("  total={:.3}s ingest={:.3}s pl={:.3}s ps={:.3}s xfer={:.3}s stall={:.3}s iters={}",
+            r.total_s, r.ingest_s, r.breakdown.pl_s, r.breakdown.ps_s, r.breakdown.xfer_s, r.breakdown.stall_s, r.iterations);
+    }
+}

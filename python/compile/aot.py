@@ -1,0 +1,179 @@
+"""AOT compile path: lower the L2 graph to HLO text for the Rust runtime.
+
+Run once by ``make artifacts`` (never at request time):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (entry, metric, shape) variant plus a
+``manifest.json`` the Rust runtime (`rust/src/runtime/artifacts.rs`) uses to
+pick the smallest variant a request fits into after padding.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Variant grid.
+#
+# The Rust coordinator pads every request up to one of these shapes.  The
+# grid covers the paper's evaluation space:
+#   Fig 2  : D=3  -> (4, 8)        (Winterstein-style workloads, K=8)
+#   Fig 3a : D=15, K=2..100 -> (16, 32) and (16, 128)
+#   Fig 3b : D=2..50, K=6  -> (64, 8)
+#   Table 1 / headline : K up to 20 -> (16, 32)
+# ---------------------------------------------------------------------------
+
+LLOYD_BLOCK_N = 1024  # points per PJRT call; kernel streams 256-point tiles
+LLOYD_TILE_N = 256
+# Filtering node-visit blocks per PJRT call: two sizes per (metric, d, k)
+# so the runtime can pick the larger block for big tree levels (amortizing
+# per-execution overhead ~4x) and the small one for shallow levels (less
+# padding waste).  See §Perf L1-1 in EXPERIMENTS.md.
+FILTER_BLOCK_JS = (256, 1024)
+FILTER_TILE_J = 64
+
+LLOYD_VARIANTS = [
+    # (metric, D_pad, K_pad)
+    ("euclid", 4, 8),
+    ("euclid", 16, 32),
+    ("euclid", 16, 128),
+    ("euclid", 64, 8),
+    ("manhattan", 4, 8),
+    ("manhattan", 16, 32),
+]
+
+FILTER_VARIANTS = [
+    ("euclid", 4, 8),
+    ("euclid", 16, 32),
+    ("euclid", 16, 128),
+    ("euclid", 64, 8),
+    ("manhattan", 16, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lloyd(metric: str, d: int, k: int):
+    fn = functools.partial(model.lloyd_step, metric=metric, block_n=LLOYD_TILE_N)
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return jax.jit(fn).lower(
+        spec(LLOYD_BLOCK_N, d), spec(k, d), spec(LLOYD_BLOCK_N)
+    )
+
+
+def lower_filter(metric: str, d: int, k: int, block_j: int):
+    fn = functools.partial(model.filter_dists, metric=metric, block_j=FILTER_TILE_J)
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return jax.jit(fn).lower(spec(block_j, d), spec(block_j, k, d))
+
+
+def build(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for metric, d, k in LLOYD_VARIANTS:
+        name = f"lloyd_{metric}_n{LLOYD_BLOCK_N}_d{d}_k{k}"
+        text = to_hlo_text(lower_lloyd(metric, d, k))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "lloyd",
+                "metric": metric,
+                "n": LLOYD_BLOCK_N,
+                "d": d,
+                "k": k,
+                "file": os.path.basename(path),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "inputs": [
+                    {"shape": [LLOYD_BLOCK_N, d], "dtype": "f32"},
+                    {"shape": [k, d], "dtype": "f32"},
+                    {"shape": [LLOYD_BLOCK_N], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"shape": [LLOYD_BLOCK_N], "dtype": "i32"},
+                    {"shape": [k, d], "dtype": "f32"},
+                    {"shape": [k], "dtype": "f32"},
+                    {"shape": [1], "dtype": "f32"},
+                ],
+            }
+        )
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    for metric, d, k in FILTER_VARIANTS:
+        for block_j in FILTER_BLOCK_JS:
+            name = f"filter_{metric}_j{block_j}_d{d}_k{k}"
+            text = to_hlo_text(lower_filter(metric, d, k, block_j))
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "kind": "filter",
+                    "metric": metric,
+                    "n": block_j,
+                    "d": d,
+                    "k": k,
+                    "file": os.path.basename(path),
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    "inputs": [
+                        {"shape": [block_j, d], "dtype": "f32"},
+                        {"shape": [block_j, k, d], "dtype": "f32"},
+                    ],
+                    "outputs": [{"shape": [block_j, k], "dtype": "f32"}],
+                }
+            )
+            if verbose:
+                print(f"  wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format_version": 1,
+        "jax_version": jax.__version__,
+        "pad_sentinel": 1.0e17,
+        "entries": entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote {mpath} ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""L1 Pallas kernels: the "PL arithmetic cores" of MUCH-SWIFT.
+
+The paper implements K x 4 parallel fixed-latency distance / compare /
+update pipelines in FPGA programmable logic, fed from a BRAM FIFO that
+double-buffers DDR3 bursts.  The TPU re-think (DESIGN.md
+section "Hardware-Adaptation"):
+
+- the *assignment* hot loop becomes a ``[BLOCK_N, D] x [D, K]`` matmul on the
+  MXU via the squared-distance expansion ``x^2 - 2 x.c + c^2`` (euclid), or a
+  VPU broadcast/abs/reduce sweep (manhattan — the metric the paper's PL
+  actually wires up, which has no matmul form);
+- the BRAM double-buffer becomes the ``BlockSpec`` HBM->VMEM schedule: the
+  grid walks ``BLOCK_N``-point tiles while the ``[K, D]`` centroid panel
+  stays VMEM-resident across the whole grid (same reuse the paper gets from
+  holding centroids in PL registers);
+- the paper's log2(K) comparator tree becomes a lane-wise arg-min.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin used by the
+Rust runtime cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and real-TPU performance is estimated analytically in
+EXPERIMENTS.md from the VMEM footprint / MXU utilization of these BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile of points streamed HBM->VMEM per grid step.  1024 x 64 dims x
+# 4 B = 256 KiB worst case, which together with the centroid panel
+# (128 x 64 x 4 B = 32 KiB) and the [BLOCK_N, K] distance tile
+# (1024 x 128 x 4 B = 512 KiB) fits comfortably in a 16 MiB TPU VMEM with
+# room for double buffering.
+DEFAULT_BLOCK_N = 1024
+
+
+def _assign_euclid_kernel(x_ref, c_ref, idx_ref, dist_ref):
+    """Squared-L2 assignment over one point tile (MXU formulation)."""
+    x = x_ref[...]  # [BN, D]
+    c = c_ref[...]  # [K, D]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [BN, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, K]
+    # The MXU op: everything else in this kernel is elementwise VPU work.
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # [BN, K]
+    d2 = jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+    idx_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+def _assign_manhattan_kernel(x_ref, c_ref, idx_ref, dist_ref):
+    """L1 assignment over one point tile (VPU formulation).
+
+    Manhattan distance has no matmul form, so this kernel mirrors the
+    paper's PL pipeline directly: stream the K centroids through a
+    subtract/abs/accumulate datapath and keep a running (best_dist, best_idx)
+    pair — the comparator tree collapsed into a sequential scan, which the
+    VPU executes one full [BN, D] lane-tile per step.
+    """
+    x = x_ref[...]  # [BN, D]
+    c = c_ref[...]  # [K, D]
+    k = c.shape[0]
+    bn = x.shape[0]
+
+    def body(j, carry):
+        best_d, best_i = carry
+        d = jnp.sum(jnp.abs(x - c[j][None, :]), axis=1)  # [BN]
+        better = d < best_d
+        return (
+            jnp.where(better, d, best_d),
+            jnp.where(better, jnp.int32(j), best_i),
+        )
+
+    init = (jnp.full((bn,), jnp.inf, jnp.float32), jnp.zeros((bn,), jnp.int32))
+    best_d, best_i = jax.lax.fori_loop(0, k, body, init)
+    idx_ref[...] = best_i
+    dist_ref[...] = best_d
+
+
+_KERNELS = {
+    "euclid": _assign_euclid_kernel,
+    "manhattan": _assign_manhattan_kernel,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_n"))
+def assign(points, centroids, metric: str = "euclid", block_n: int = DEFAULT_BLOCK_N):
+    """Pallas assignment step: ``(assignments i32[N], min_dist f32[N])``.
+
+    ``points`` is ``f32[N, D]`` with ``N % block_n == 0`` (the Rust
+    coordinator always ships full blocks, padding the tail with
+    zero-weighted rows); ``centroids`` is ``f32[K, D]`` with padded rows set
+    to ``ref.PAD_SENTINEL``.
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    bn = min(block_n, n)
+    if n % bn != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={bn}")
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _KERNELS[metric],
+        grid=grid,
+        in_specs=[
+            # point tiles stream; the centroid panel is grid-invariant
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)
+
+
+def _pairdist_euclid_kernel(m_ref, c_ref, d_ref):
+    m = m_ref[...]  # [BJ, D]
+    c = c_ref[...]  # [BJ, K, D]
+    diff = m[:, None, :] - c
+    d_ref[...] = jnp.sum(diff * diff, axis=2)
+
+
+def _pairdist_manhattan_kernel(m_ref, c_ref, d_ref):
+    m = m_ref[...]
+    c = c_ref[...]
+    d_ref[...] = jnp.sum(jnp.abs(m[:, None, :] - c), axis=2)
+
+
+_PAIRDIST_KERNELS = {
+    "euclid": _pairdist_euclid_kernel,
+    "manhattan": _pairdist_manhattan_kernel,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_j"))
+def batched_pair_dists(mids, cands, metric: str = "euclid", block_j: int = 256):
+    """Filtering-offload kernel: per-job candidate distance panels.
+
+    One "job" is one kd-tree node visit from Alg. 1: ``mids[j]`` is the
+    node's cell midpoint (or leaf point) and ``cands[j]`` its candidate
+    centroid set, padded to K with ``ref.PAD_SENTINEL`` rows.  The Rust
+    coordinator batches all visits of one tree level into a single call —
+    the same level-by-level schedule the paper uses to size its BRAM bridge
+    (section 4.2).  Returns ``f32[J, K]``.
+    """
+    j, d = mids.shape
+    _, k, _ = cands.shape
+    bj = min(block_j, j)
+    if j % bj != 0:
+        raise ValueError(f"J={j} must be a multiple of block_j={bj}")
+    grid = (j // bj,)
+    return pl.pallas_call(
+        _PAIRDIST_KERNELS[metric],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bj, d), lambda i: (i, 0)),
+            pl.BlockSpec((bj, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, k), jnp.float32),
+        interpret=True,
+    )(mids, cands)

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a corresponding reference
+implementation here, written with plain ``jax.numpy`` ops only, with no
+blocking/tiling tricks.  ``python/tests`` asserts the Pallas outputs against
+these references (``assert_allclose``), including over hypothesis-generated
+shape/dtype sweeps, before anything is AOT-lowered for the Rust runtime.
+
+Conventions shared with the kernels and the Rust coordinator:
+
+- ``points``    f32[N, D]   point block (rows past the real count are padding)
+- ``centroids`` f32[K, D]   centroid panel; padded rows use ``PAD_SENTINEL``
+- ``weights``   f32[N]      1.0 for real rows, 0.0 for padding rows
+- distances are *squared* Euclidean (``metric="euclid"``) or L1 Manhattan
+  (``metric="manhattan"``) — the Rust side never takes a sqrt either.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Padded (invalid) centroid rows are filled with this value.  It is large
+# enough that no real point can be closer to a padded centroid than to a real
+# one, but small enough that the squared-distance expansion
+# ``x^2 - 2xc + c^2`` stays finite in f32 (max ~3.4e38):  with D <= 64 and
+# |x| <= 1e6, d2 <= 64 * (1e17)^2 ~= 6.4e35  <  f32 max.
+PAD_SENTINEL = 1.0e17
+
+#: Metrics understood by every kernel in this package.
+METRICS = ("euclid", "manhattan")
+
+
+def pair_dists(points, centroids, metric: str = "euclid"):
+    """All-pairs distances ``f32[N, K]`` between points and centroids.
+
+    ``euclid`` returns *squared* L2 distances (monotone in L2, so arg-min and
+    filtering tests are unchanged and the PL never pays for a sqrt — the
+    paper's fixed-point pipelines make the same move).
+    """
+    if metric == "euclid":
+        # The MXU-friendly expansion used by the Pallas kernel as well.
+        x2 = jnp.sum(points * points, axis=1, keepdims=True)  # [N, 1]
+        c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # [1, K]
+        xc = points @ centroids.T  # [N, K]
+        d = x2 - 2.0 * xc + c2
+        # The expansion can go slightly negative through cancellation.
+        return jnp.maximum(d, 0.0)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(points[:, None, :] - centroids[None, :, :]), axis=2)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def assign(points, centroids, metric: str = "euclid"):
+    """Assignment step: ``(assignments i32[N], min_dist f32[N])``."""
+    d = pair_dists(points, centroids, metric)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d, axis=1)
+
+
+def update(points, assignments, weights, k: int):
+    """Update step: per-cluster weighted sums and counts.
+
+    Returns ``(sums f32[K, D], counts f32[K])``.  Rows whose weight is zero
+    (block padding) contribute nothing.
+    """
+    onehot = (assignments[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(jnp.float32)
+    onehot = onehot * weights[:, None]  # [N, K]
+    sums = onehot.T @ points  # [K, D]
+    counts = jnp.sum(onehot, axis=0)  # [K]
+    return sums, counts
+
+
+def lloyd_step(points, centroids, weights, metric: str = "euclid"):
+    """One full k-means (Lloyd) iteration over a point block.
+
+    Returns ``(assignments i32[N], sums f32[K, D], counts f32[K], cost f32)``
+    where ``cost`` is the weighted sum of min-distances (the k-means
+    objective for this block, squared-L2 or L1 depending on ``metric``).
+    """
+    idx, mind = assign(points, centroids, metric)
+    sums, counts = update(points, idx, weights, centroids.shape[0])
+    cost = jnp.sum(mind * weights)
+    return idx, sums, counts, cost
+
+
+def batched_pair_dists(mids, cands, metric: str = "euclid"):
+    """Filtering-offload oracle: per-job candidate distances.
+
+    ``mids``  f32[J, D]    — one query point per job (a kd-cell midpoint)
+    ``cands`` f32[J, K, D] — per-job candidate centroid panel (padded rows
+                             use ``PAD_SENTINEL``)
+    Returns ``f32[J, K]``.
+    """
+    if metric == "euclid":
+        diff = mids[:, None, :] - cands  # [J, K, D]
+        return jnp.sum(diff * diff, axis=2)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(mids[:, None, :] - cands), axis=2)
+    raise ValueError(f"unknown metric {metric!r}")

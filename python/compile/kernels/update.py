@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: centroid update (the PL "updater" modules).
+
+The paper's updater accumulates each point into its winning cluster's
+weighted-centroid register bank.  On TPU the idiomatic formulation is a
+one-hot matmul — ``onehot[N, K].T @ points[N, D]`` — which runs on the MXU
+and keeps the whole update step in the same fused program as the
+assignment.  The kernel walks point tiles on the grid and accumulates the
+per-cluster partial sums/counts into a grid-invariant output tile
+(revisited output block = accumulation, zero-initialised on the first grid
+step), which is the Pallas analogue of the PL register bank surviving
+across FIFO bursts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .assign import DEFAULT_BLOCK_N
+
+
+def _update_kernel(x_ref, idx_ref, w_ref, sums_ref, counts_ref):
+    step = pl.program_id(0)
+
+    # Zero the accumulators on the first tile; they are grid-invariant
+    # output blocks, so later steps see the running totals.
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...]  # [BN, D]
+    idx = idx_ref[...]  # [BN]
+    w = w_ref[...]  # [BN]
+    k = sums_ref.shape[0]
+    onehot = (idx[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(jnp.float32)
+    onehot = onehot * w[:, None]  # [BN, K]
+    # MXU op: [K, BN] x [BN, D].
+    sums_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def update(points, assignments, weights, k: int, block_n: int = DEFAULT_BLOCK_N):
+    """Pallas update step: ``(sums f32[K, D], counts f32[K])``.
+
+    ``assignments`` are the winners from :func:`kernels.assign.assign`;
+    ``weights`` zero out block-padding rows so they contribute nothing.
+    """
+    n, d = points.shape
+    bn = min(block_n, n)
+    if n % bn != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={bn}")
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            # Grid-invariant accumulator tiles (the PL register bank).
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, assignments, weights)

@@ -1,0 +1,65 @@
+"""L2: the JAX compute graph the Rust coordinator executes via PJRT.
+
+Two entry points, both AOT-lowered to HLO text by ``aot.py``:
+
+- :func:`lloyd_step` — one full k-means iteration over a padded point
+  block; assignment + compare run in the L1 Pallas kernels
+  (``kernels.assign``), the centroid update in ``kernels.update``.  This is
+  the work the paper offloads to the PL for the plain-Lloyd baselines and
+  for the first-level clustering bursts.
+- :func:`filter_dists` — the per-tree-level distance panels the filtering
+  algorithm (Alg. 1) needs; the tree logic itself stays on the "PS" (the
+  Rust coordinator), exactly like the paper keeps traversal on the A53s and
+  only ships arithmetic to the PL.
+
+Shapes are static per artifact (PJRT has no dynamic shapes): the Rust side
+pads N up with zero-weight rows, D up with zero columns and K up with
+``PAD_SENTINEL`` centroid rows, then slices the valid prefix out of the
+results.  The (D, K) variant grid lives in ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import assign as assign_kernels
+from .kernels import update as update_kernels
+
+
+def lloyd_step(points, centroids, weights, metric: str = "euclid", block_n: int | None = None):
+    """One k-means iteration over a block.
+
+    Args:
+      points:    f32[N, D]  (N a multiple of the kernel block; pad rows with
+                 zeros and give them weight 0)
+      centroids: f32[K, D]  (pad rows with ``PAD_SENTINEL``)
+      weights:   f32[N]     (1 = real row, 0 = padding)
+      metric:    "euclid" (squared L2) or "manhattan" (L1)
+
+    Returns:
+      assignments i32[N], sums f32[K, D], counts f32[K], cost f32[1]
+      — the caller (Rust) divides sums by counts to get the new centroids,
+      which keeps the cross-block reduction (4 workers x many blocks) on the
+      coordinator where the paper's R5 core does it.
+    """
+    kwargs = {} if block_n is None else {"block_n": block_n}
+    idx, mind = assign_kernels.assign(points, centroids, metric=metric, **kwargs)
+    sums, counts = update_kernels.update(points, idx, weights, k=centroids.shape[0], **kwargs)
+    cost = jnp.sum(mind * weights)[None]
+    return idx, sums, counts, cost
+
+
+def filter_dists(mids, cands, metric: str = "euclid", block_j: int | None = None):
+    """Distance panels for a batch of filtering-algorithm node visits.
+
+    Args:
+      mids:  f32[J, D]    cell midpoints (or leaf points)
+      cands: f32[J, K, D] per-job candidate panels, ``PAD_SENTINEL``-padded
+
+    Returns:
+      dists f32[J, K] — the Rust side does the arg-min *and* the
+      ``z.isFarther(z*, C)`` bounding-box pruning test, which needs the cell
+      geometry that never leaves the PS.
+    """
+    kwargs = {} if block_j is None else {"block_j": block_j}
+    return assign_kernels.batched_pair_dists(mids, cands, metric=metric, **kwargs)

@@ -1,0 +1,84 @@
+"""AOT pipeline integrity: the variant grid, the manifest contract the
+Rust runtime depends on, and (when `make artifacts` has run) the integrity
+of the emitted files."""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+
+def test_variant_grid_covers_paper_evaluation_space():
+    """Every figure's (d, k) demand must fit some artifact after padding."""
+    demands = [
+        # (kind-list, d, k): Fig2 (D=3,K=8), Fig3a (15, up to 100),
+        # Fig3b (up to 50, 6), headline (15, 20)
+        (3, 8),
+        (15, 100),
+        (50, 6),
+        (15, 20),
+    ]
+    lloyd = [(d, k) for (_, d, k) in aot.LLOYD_VARIANTS]
+    filt = [(d, k) for (_, d, k) in aot.FILTER_VARIANTS]
+    for (d, k) in demands:
+        assert any(dd >= d and kk >= k for (dd, kk) in lloyd), f"lloyd gap at d={d} k={k}"
+        assert any(dd >= d and kk >= k for (dd, kk) in filt), f"filter gap at d={d} k={k}"
+
+
+def test_manhattan_variants_present():
+    assert any(m == "manhattan" for (m, _, _) in aot.LLOYD_VARIANTS)
+    assert any(m == "manhattan" for (m, _, _) in aot.FILTER_VARIANTS)
+
+
+def test_block_sizes_match_kernel_tiling():
+    assert aot.LLOYD_BLOCK_N % aot.LLOYD_TILE_N == 0
+    for j in aot.FILTER_BLOCK_JS:
+        assert j % aot.FILTER_TILE_J == 0
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_manifest_matches_emitted_files():
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    assert manifest["format_version"] == 1
+    assert manifest["pad_sentinel"] == 1e17
+    entries = manifest["entries"]
+    assert len(entries) == len(aot.LLOYD_VARIANTS) + len(aot.FILTER_VARIANTS) * len(
+        aot.FILTER_BLOCK_JS
+    )
+    for e in entries:
+        path = os.path.join(ART_DIR, e["file"])
+        assert os.path.exists(path), f"missing artifact {e['file']}"
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"], (
+            f"artifact {e['name']} drifted from its manifest hash — rerun `make artifacts`"
+        )
+        # HLO text sanity: entry computation + expected parameter count.
+        assert "ENTRY" in text
+        assert e["kind"] in ("lloyd", "filter")
+        n_inputs = len(e["inputs"])
+        assert n_inputs == (3 if e["kind"] == "lloyd" else 2)
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_manifest_shapes_are_consistent():
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    for e in manifest["entries"]:
+        n, d, k = e["n"], e["d"], e["k"]
+        if e["kind"] == "lloyd":
+            assert e["inputs"][0]["shape"] == [n, d]
+            assert e["inputs"][1]["shape"] == [k, d]
+            assert e["inputs"][2]["shape"] == [n]
+            assert e["outputs"][0]["shape"] == [n]
+            assert e["outputs"][1]["shape"] == [k, d]
+        else:
+            assert e["inputs"][0]["shape"] == [n, d]
+            assert e["inputs"][1]["shape"] == [n, k, d]
+            assert e["outputs"][0]["shape"] == [n, k]

@@ -1,0 +1,128 @@
+"""Pallas assignment kernel vs the pure-jnp oracle (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import assign as ak
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, scale=10.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@pytest.mark.parametrize("metric", ref.METRICS)
+@pytest.mark.parametrize("n,d,k,bn", [(64, 3, 5, 16), (128, 16, 32, 64), (256, 1, 2, 256)])
+def test_assign_matches_ref(metric, n, d, k, bn):
+    rng = np.random.default_rng(7)
+    x = rand(rng, n, d)
+    c = rand(rng, k, d)
+    idx, mind = ak.assign(x, c, metric=metric, block_n=bn)
+    ridx, rmind = ref.assign(x, c, metric=metric)
+    assert_allclose(np.asarray(mind), np.asarray(rmind), rtol=2e-5, atol=1e-4)
+    # arg-min may legitimately differ on exact ties; check distances agree
+    d_at = np.take_along_axis(
+        np.asarray(ref.pair_dists(x, c, metric)), np.asarray(idx)[:, None], axis=1
+    )[:, 0]
+    assert_allclose(d_at, np.asarray(rmind), rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ref.METRICS)
+def test_assign_padded_centroids_never_win(metric):
+    rng = np.random.default_rng(3)
+    x = rand(rng, 64, 8)
+    c = rand(rng, 5, 8)
+    cpad = jnp.concatenate([c, jnp.full((3, 8), ref.PAD_SENTINEL, jnp.float32)])
+    idx, _ = ak.assign(x, cpad, metric=metric, block_n=32)
+    assert int(jnp.max(idx)) < 5
+    ridx, _ = ref.assign(x, c, metric=metric)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_assign_rejects_ragged_block():
+    x = jnp.zeros((100, 4), jnp.float32)
+    c = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        ak.assign(x, c, block_n=64)
+
+
+def test_assign_single_centroid():
+    rng = np.random.default_rng(11)
+    x = rand(rng, 32, 4)
+    c = rand(rng, 1, 4)
+    idx, mind = ak.assign(x, c, block_n=32)
+    assert np.all(np.asarray(idx) == 0)
+    assert_allclose(np.asarray(mind), np.asarray(ref.pair_dists(x, c))[:, 0], rtol=2e-5)
+
+
+def test_euclid_is_squared_distance():
+    x = jnp.asarray([[0.0, 0.0], [3.0, 4.0]], jnp.float32)
+    c = jnp.asarray([[0.0, 0.0]], jnp.float32)
+    _, mind = ak.assign(x, c, block_n=2)
+    assert_allclose(np.asarray(mind), [0.0, 25.0], atol=1e-5)
+
+
+def test_manhattan_matches_hand_value():
+    x = jnp.asarray([[1.0, -2.0, 0.5]], jnp.float32)
+    c = jnp.asarray([[0.0, 0.0, 0.0], [1.0, -2.0, 0.5]], jnp.float32)
+    idx, mind = ak.assign(x, c, metric="manhattan", block_n=1)
+    assert int(idx[0]) == 1
+    assert_allclose(float(mind[0]), 0.0, atol=1e-6)
+    d = ref.pair_dists(x, c, "manhattan")
+    assert_allclose(float(d[0, 0]), 3.5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    bn=st.sampled_from([8, 16, 32]),
+    d=st.integers(1, 24),
+    k=st.integers(1, 33),
+    metric=st.sampled_from(ref.METRICS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_hypothesis_sweep(n_blocks, bn, d, k, metric, seed):
+    """Shape/seed sweep: Pallas block decomposition == unblocked oracle."""
+    rng = np.random.default_rng(seed)
+    n = n_blocks * bn
+    x = rand(rng, n, d, scale=5.0)
+    c = rand(rng, k, d, scale=5.0)
+    idx, mind = ak.assign(x, c, metric=metric, block_n=bn)
+    _, rmind = ref.assign(x, c, metric=metric)
+    assert_allclose(np.asarray(mind), np.asarray(rmind), rtol=3e-5, atol=1e-3)
+    d_at = np.take_along_axis(
+        np.asarray(ref.pair_dists(x, c, metric)), np.asarray(idx)[:, None], axis=1
+    )[:, 0]
+    assert_allclose(d_at, np.asarray(rmind), rtol=3e-5, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    j=st.sampled_from([16, 64]),
+    d=st.integers(1, 16),
+    k=st.integers(1, 9),
+    metric=st.sampled_from(ref.METRICS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairdist_hypothesis_sweep(j, d, k, metric, seed):
+    rng = np.random.default_rng(seed)
+    mids = rand(rng, j, d, scale=3.0)
+    cands = rand(rng, j, k, d, scale=3.0)
+    got = ak.batched_pair_dists(mids, cands, metric=metric, block_j=j)
+    want = ref.batched_pair_dists(mids, cands, metric=metric)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=1e-3)
+
+
+def test_pairdist_blocked_equals_unblocked():
+    rng = np.random.default_rng(5)
+    mids = rand(rng, 128, 6)
+    cands = rand(rng, 128, 4, 6)
+    a = ak.batched_pair_dists(mids, cands, block_j=32)
+    b = ak.batched_pair_dists(mids, cands, block_j=128)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,154 @@
+"""Pallas update kernel + L2 lloyd_step / filter_dists vs the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import update as uk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, scale=10.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@pytest.mark.parametrize("n,d,k,bn", [(64, 3, 5, 16), (128, 8, 7, 64), (32, 2, 1, 32)])
+def test_update_matches_ref(n, d, k, bn):
+    rng = np.random.default_rng(2)
+    x = rand(rng, n, d)
+    idx = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    w = jnp.ones((n,), jnp.float32)
+    sums, counts = uk.update(x, idx, w, k=k, block_n=bn)
+    rsums, rcounts = ref.update(x, idx, w, k)
+    assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-5, atol=1e-3)
+    assert_allclose(np.asarray(counts), np.asarray(rcounts), rtol=0, atol=0)
+
+
+def test_update_weights_mask_padding():
+    """Zero-weight rows (block padding) must contribute nothing."""
+    rng = np.random.default_rng(4)
+    x = rand(rng, 64, 4)
+    idx = jnp.asarray(rng.integers(0, 3, 64).astype(np.int32))
+    w = jnp.concatenate([jnp.ones((40,), jnp.float32), jnp.zeros((24,), jnp.float32)])
+    sums, counts = uk.update(x, idx, w, k=3, block_n=16)
+    rsums, rcounts = ref.update(x[:40], idx[:40], jnp.ones((40,)), 3)
+    assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-5, atol=1e-3)
+    assert_allclose(np.asarray(counts), np.asarray(rcounts))
+
+
+def test_update_accumulates_across_blocks():
+    """Grid accumulation == single-block computation."""
+    rng = np.random.default_rng(9)
+    x = rand(rng, 128, 5)
+    idx = jnp.asarray(rng.integers(0, 4, 128).astype(np.int32))
+    w = jnp.ones((128,), jnp.float32)
+    a = uk.update(x, idx, w, k=4, block_n=16)
+    b = uk.update(x, idx, w, k=4, block_n=128)
+    assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-5, atol=1e-3)
+    assert_allclose(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    bn=st.sampled_from([8, 32]),
+    d=st.integers(1, 16),
+    k=st.integers(1, 20),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_update_hypothesis_sweep(n_blocks, bn, d, k, frac, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * bn
+    x = rand(rng, n, d, scale=4.0)
+    idx = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    w = jnp.asarray((rng.random(n) < frac).astype(np.float32))
+    sums, counts = uk.update(x, idx, w, k=k, block_n=bn)
+    rsums, rcounts = ref.update(x, idx, w, k)
+    assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-4, atol=1e-2)
+    assert_allclose(np.asarray(counts), np.asarray(rcounts))
+
+
+# ---------------------------------------------------------------------------
+# L2 model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ref.METRICS)
+def test_lloyd_step_matches_ref(metric):
+    rng = np.random.default_rng(13)
+    x = rand(rng, 256, 8)
+    c = rand(rng, 6, 8)
+    w = jnp.ones((256,), jnp.float32)
+    idx, sums, counts, cost = model.lloyd_step(x, c, w, metric=metric, block_n=64)
+    ridx, rsums, rcounts, rcost = ref.lloyd_step(x, c, w, metric=metric)
+    assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-4, atol=1e-2)
+    assert_allclose(np.asarray(counts), np.asarray(rcounts))
+    assert_allclose(float(cost[0]), float(rcost), rtol=1e-4)
+
+
+def test_lloyd_step_padded_full_contract():
+    """Exercise the exact padding contract the Rust runtime relies on:
+
+    N padded with zero rows + zero weights, K padded with sentinel rows,
+    D padded with zero columns. Valid-region outputs must equal the
+    unpadded reference.
+    """
+    rng = np.random.default_rng(21)
+    n, d, k = 100, 3, 5
+    npad, dpad, kpad = 128, 4, 8
+    x = rng.standard_normal((n, d)).astype(np.float32) * 2.0
+    c = rng.standard_normal((k, d)).astype(np.float32) * 2.0
+
+    xp = np.zeros((npad, dpad), np.float32)
+    xp[:n, :d] = x
+    cp = np.full((kpad, dpad), ref.PAD_SENTINEL, np.float32)
+    cp[:k, :d] = c
+    cp[:k, d:] = 0.0
+    w = np.zeros((npad,), np.float32)
+    w[:n] = 1.0
+
+    idx, sums, counts, cost = model.lloyd_step(
+        jnp.asarray(xp), jnp.asarray(cp), jnp.asarray(w), block_n=32
+    )
+    ridx, rsums, rcounts, rcost = ref.lloyd_step(jnp.asarray(x), jnp.asarray(c), jnp.ones((n,)))
+
+    np.testing.assert_array_equal(np.asarray(idx)[:n], np.asarray(ridx))
+    assert_allclose(np.asarray(sums)[:k, :d], np.asarray(rsums), rtol=1e-4, atol=1e-2)
+    assert np.all(np.asarray(counts)[k:] == 0.0)
+    assert_allclose(np.asarray(counts)[:k], np.asarray(rcounts))
+    assert_allclose(float(cost[0]), float(rcost), rtol=1e-4)
+
+
+def test_filter_dists_matches_ref():
+    rng = np.random.default_rng(17)
+    mids = rand(rng, 64, 6, scale=2.0)
+    cands = rand(rng, 64, 5, 6, scale=2.0)
+    got = model.filter_dists(mids, cands, block_j=16)
+    want = ref.batched_pair_dists(mids, cands)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-3)
+
+
+def test_centroid_recovery_synthetic():
+    """End-to-end sanity: iterated lloyd_step recovers planted centroids."""
+    rng = np.random.default_rng(0)
+    true_c = np.array([[0.0, 0.0], [10.0, 10.0], [-10.0, 10.0]], np.float32)
+    pts = np.concatenate(
+        [rng.standard_normal((256, 2)).astype(np.float32) * 0.5 + c for c in true_c]
+    )
+    rng.shuffle(pts)
+    x = jnp.asarray(pts)
+    w = jnp.ones((x.shape[0],), jnp.float32)
+    c = jnp.asarray(pts[:3].copy())
+    for _ in range(12):
+        _, sums, counts, _ = model.lloyd_step(x, c, w, block_n=256)
+        c = sums / jnp.maximum(counts[:, None], 1.0)
+    got = np.sort(np.asarray(c), axis=0)
+    want = np.sort(true_c, axis=0)
+    assert_allclose(got, want, atol=0.2)

@@ -1,0 +1,108 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. partition strategy (round-robin vs kd-top) — merge-seed quality;
+//! 2. transfer/compute overlap (double-buffered FIFO vs store-and-forward);
+//! 3. module count scaling (1 / K / 4K modules);
+//! 4. two-level vs single-level filtering — iteration counts;
+//! 5. software baselines: Lloyd vs Elkan vs filtering.
+//!
+//! `cargo bench --bench ablations`
+
+use muchswift::arch::{evaluate, measure, ArchKind};
+use muchswift::config::{PlatformConfig, WorkloadConfig};
+use muchswift::data::synthetic::generate_params;
+use muchswift::hw::pl::PlArray;
+use muchswift::hw::zynq::ZynqSim;
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::twolevel::{self, Partition, TwoLevelOpts};
+use muchswift::kmeans::Metric;
+
+fn wl(n: usize, d: usize, k: usize) -> WorkloadConfig {
+    WorkloadConfig {
+        n,
+        d,
+        k,
+        true_k: k,
+        sigma: 0.15,
+        seed: 99,
+        max_iters: 60,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("== ablation 1: partition strategy (level-2 iterations, objective) ==");
+    for part in [Partition::RoundRobin, Partition::KdTop] {
+        let s = generate_params(60_000, 15, 8, 0.15, 1.0, 5);
+        let r = twolevel::run(
+            &s.data,
+            8,
+            &TwoLevelOpts {
+                partition: part,
+                init: Init::UniformSample,
+                seed: 11,
+                ..Default::default()
+            },
+        );
+        println!(
+            "  {:<12} level2_iters={:<4} objective={:.4e} l1_iters={:?}",
+            format!("{part:?}"),
+            r.level2_stats.iterations(),
+            r.result.objective(&s.data, Metric::Euclid),
+            r.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
+        );
+    }
+
+    println!("\n== ablation 2: FIFO double-buffering (overlap) ==");
+    let w = wl(1_000_000, 15, 20);
+    let m = measure(ArchKind::MuchSwift, &w);
+    let cfg = PlatformConfig::zcu102();
+    let sim = ZynqSim::new(cfg.clone());
+    let pl = PlArray::for_workload(&cfg, w.k, 4);
+    for overlap in [true, false] {
+        let mut total = 0.0;
+        for it in &m.stats.iters {
+            total += sim.filter_iteration(it, w.d, &pl, 4, overlap).total_s;
+        }
+        println!("  overlap={overlap:<5} level2 compute {total:.4} s");
+    }
+
+    println!("\n== ablation 3: module-count scaling (one Lloyd iteration) ==");
+    for (label, pl) in [
+        ("naive (II=8)", PlArray::naive(&cfg)),
+        ("K modules", PlArray::for_workload(&cfg, w.k, 1)),
+        ("4K modules", PlArray::for_workload(&cfg, w.k, 4)),
+    ] {
+        let t = sim.lloyd_iteration(w.n as u64, w.d, w.k, &pl, true);
+        println!(
+            "  {label:<12} modules={:<4} t/iter={:.4} s (pl {:.4}, xfer {:.4})",
+            pl.modules, t.total_s, t.pl_s, t.xfer_s
+        );
+    }
+
+    println!("\n== ablation 4: two-level vs single-level filtering iterations ==");
+    let s = generate_params(60_000, 15, 8, 0.15, 1.0, 5);
+    let two = twolevel::run(&s.data, 8, &TwoLevelOpts { seed: 11, ..Default::default() });
+    let tree = muchswift::kdtree::KdTree::build(&s.data);
+    let init = muchswift::kmeans::init::init_centroids(
+        &s.data, 8, Init::UniformSample, Metric::Euclid, 11,
+    );
+    let single = muchswift::kmeans::filtering::run(
+        &s.data,
+        &tree,
+        &init,
+        &muchswift::kmeans::filtering::FilterOpts::default(),
+    );
+    println!(
+        "  two-level: l1(max)={} + l2={} | single-level: {}",
+        two.level1_stats.iter().map(|s| s.iterations()).max().unwrap_or(0),
+        two.level2_stats.iterations(),
+        single.stats.iterations()
+    );
+
+    println!("\n== ablation 5: software algorithm comparison (simulated A53) ==");
+    let w2 = wl(200_000, 15, 16);
+    for kind in [ArchKind::SwLloyd, ArchKind::SwElkan, ArchKind::SwFilter] {
+        println!("  {}", evaluate(kind, &w2).row());
+    }
+}

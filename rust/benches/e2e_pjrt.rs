@@ -1,0 +1,70 @@
+//! End-to-end bench: the coordinator with the PJRT (Pallas/XLA) backend —
+//! the full three-layer stack on the request path.  Reports wall time and
+//! offload characteristics.  Requires `make artifacts`.
+//!
+//! `cargo bench --bench e2e_pjrt`
+
+use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::data::synthetic::generate_params;
+use muchswift::runtime::{self, PjrtRuntime};
+use muchswift::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let rt = match PjrtRuntime::load(&runtime::default_artifact_dir()) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("skipping e2e_pjrt: {e}");
+            return;
+        }
+    };
+
+    let n = 30_000;
+    let (d, k) = (15, 8);
+    let s = generate_params(n, d, k, 0.15, 1.0, 42);
+    let coord = Coordinator::new(Backend::Pjrt(Arc::clone(&rt)));
+    let quick = Bench::quick();
+
+    let r = quick.run("coordinator_pjrt_30k_d15_k8", || {
+        coord.run(
+            &s.data,
+            &CoordinatorOpts {
+                k,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+    });
+
+    // One instrumented run for the report.
+    let out = coord.run(
+        &s.data,
+        &CoordinatorOpts {
+            k,
+            seed: 3,
+            ..Default::default()
+        },
+    );
+    println!("  {}", out.metrics.summary());
+    println!(
+        "  throughput: {:.1} kpoints/s (median)",
+        n as f64 / r.median_s / 1e3
+    );
+    println!(
+        "  pjrt share of wall: {:.1}%",
+        100.0 * out.metrics.pjrt_exec_s / out.metrics.total_s
+    );
+
+    // CPU backend same workload for comparison.
+    let cpu = Coordinator::new(Backend::Cpu);
+    quick.run("coordinator_cpu_30k_d15_k8", || {
+        cpu.run(
+            &s.data,
+            &CoordinatorOpts {
+                k,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+    });
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 2a: average clock cycles per iteration,
+//! MUCH-SWIFT vs the single-core FPGA filtering architecture of [13].
+//! Paper: ~8.5x average speedup.  `cargo bench --bench fig2a`
+use muchswift::experiments::fig2;
+
+fn main() {
+    let sweep = fig2::fig2a();
+    print!("{}", sweep.render());
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 2b: end-to-end speedup of MUCH-SWIFT over the
+//! conventional single-module FPGA Lloyd implementation.
+//! Paper: >210x average, up to 330x.  `cargo bench --bench fig2b`
+use muchswift::experiments::fig2;
+
+fn main() {
+    let sweep = fig2::fig2b();
+    print!("{}", sweep.render());
+    let (sw, ms, speedup) = fig2::headline();
+    println!("headline (10^6 x 15d, K=20): software-only {sw:.2}s vs much-swift {ms:.3}s -> {speedup:.0}x (paper ~330x)");
+}

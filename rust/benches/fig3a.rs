@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 3a: execution time on 10^6 points, 15 dims,
+//! K = 2..100, MUCH-SWIFT vs the multi-core FPGA k-means of [17].
+//! Paper: ~12x average, gap grows with K.  `cargo bench --bench fig3a`
+use muchswift::experiments::fig3;
+
+fn main() {
+    print!("{}", fig3::fig3a().render());
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 3b: execution time on 10^6 points, K = 6,
+//! D = 2..50, MUCH-SWIFT vs [17].  `cargo bench --bench fig3b`
+use muchswift::experiments::fig3;
+
+fn main() {
+    print!("{}", fig3::fig3b().render());
+}

@@ -1,0 +1,68 @@
+//! Hot-path micro-benchmarks (the §Perf working set): kd-tree build, the
+//! two filtering engines, the software Lloyd inner loop, and the
+//! coordinator end-to-end on the CPU backend.
+//!
+//! `cargo bench --bench hotpath`
+
+use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::data::synthetic::generate_params;
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::filtering::{self, CpuPanels};
+use muchswift::kmeans::init::{init_centroids, Init};
+use muchswift::kmeans::lloyd::{self, LloydOpts};
+use muchswift::kmeans::Metric;
+use muchswift::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+    let n = 100_000;
+    let d = 15;
+    let k = 20;
+    let s = generate_params(n, d, k, 0.15, 1.0, 42);
+    let init = init_centroids(&s.data, k, Init::UniformSample, Metric::Euclid, 7);
+
+    b.run("kdtree_build_100k_d15", || KdTree::build(&s.data));
+
+    let tree = KdTree::build(&s.data);
+    let mut assignments = vec![0u32; n];
+
+    b.run("filter_iteration_recursive_100k", || {
+        filtering::filter_iteration(&tree, &s.data, &init, Metric::Euclid, &mut assignments)
+    });
+
+    b.run("filter_iteration_batched_cpu_100k", || {
+        filtering::filter_iteration_batched(
+            &tree,
+            &s.data,
+            &init,
+            Metric::Euclid,
+            &mut CpuPanels,
+            &mut assignments,
+        )
+    });
+
+    let quick = Bench::quick();
+    quick.run("lloyd_full_run_100k_k20", || {
+        lloyd::run(
+            &s.data,
+            &init,
+            &LloydOpts {
+                max_iters: 3,
+                tol: 0.0,
+                ..Default::default()
+            },
+        )
+    });
+
+    let coord = Coordinator::new(Backend::Cpu);
+    quick.run("coordinator_cpu_100k_k20", || {
+        coord.run(
+            &s.data,
+            &CoordinatorOpts {
+                k,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+    });
+}

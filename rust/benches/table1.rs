@@ -1,0 +1,8 @@
+//! Regenerates paper Table 1: PL resource utilization vs cluster count
+//! (calibrated model; anchors reproduce the table verbatim).
+//! `cargo bench --bench table1`
+use muchswift::experiments::table1;
+
+fn main() {
+    print!("{}", table1::render());
+}

@@ -1,0 +1,96 @@
+//! Architecture evaluation reports.
+
+use super::ArchKind;
+use crate::hw::zynq::PhaseTime;
+use crate::util::json::Json;
+use crate::util::stats::{eng, fmt_secs};
+
+/// Result of evaluating one architecture on one workload.
+#[derive(Clone, Debug)]
+pub struct ArchReport {
+    pub arch: ArchKind,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Total clustering iterations (level-1 max + level-2 for MUCH-SWIFT).
+    pub iterations: usize,
+    pub converged: bool,
+    /// Host->board PCIe ingest (zero for software architectures).
+    pub ingest_s: f64,
+    /// Iteration compute+transfer time.
+    pub compute_s: f64,
+    /// End-to-end (`ingest + compute`).
+    pub total_s: f64,
+    /// Average per-iteration time.
+    pub per_iter_s: f64,
+    /// Average per-iteration cycles on the architecture's own compute
+    /// clock (PL for FPGA archs, A53 for software) — the Fig. 2a unit.
+    pub per_iter_cycles: f64,
+    pub breakdown: PhaseTime,
+}
+
+impl ArchReport {
+    /// One row for the experiment tables.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<24} n={:<9} d={:<3} k={:<4} iters={:<4} cyc/iter={:<10} t/iter={:<12} total={}",
+            self.arch.name(),
+            self.n,
+            self.d,
+            self.k,
+            self.iterations,
+            eng(self.per_iter_cycles),
+            fmt_secs(self.per_iter_s),
+            fmt_secs(self.total_s),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.name())),
+            ("n", Json::num(self.n as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("ingest_s", Json::num(self.ingest_s)),
+            ("compute_s", Json::num(self.compute_s)),
+            ("total_s", Json::num(self.total_s)),
+            ("per_iter_s", Json::num(self.per_iter_s)),
+            ("per_iter_cycles", Json::num(self.per_iter_cycles)),
+            ("pl_s", Json::num(self.breakdown.pl_s)),
+            ("ps_s", Json::num(self.breakdown.ps_s)),
+            ("xfer_s", Json::num(self.breakdown.xfer_s)),
+            ("stall_s", Json::num(self.breakdown.stall_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_and_json_carry_key_fields() {
+        let r = ArchReport {
+            arch: ArchKind::MuchSwift,
+            n: 1000,
+            d: 15,
+            k: 8,
+            iterations: 12,
+            converged: true,
+            ingest_s: 0.01,
+            compute_s: 0.09,
+            total_s: 0.1,
+            per_iter_s: 0.0075,
+            per_iter_cycles: 2.25e6,
+            breakdown: PhaseTime::default(),
+        };
+        let row = r.row();
+        assert!(row.contains("much-swift"));
+        assert!(row.contains("iters=12"));
+        let j = r.to_json();
+        assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("arch").unwrap().as_str().unwrap(), "much-swift");
+    }
+}

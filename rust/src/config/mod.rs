@@ -1,0 +1,9 @@
+//! Configuration system: platform models (`configs/*.toml`) and workload
+//! descriptions, parsed with the in-crate TOML-subset parser.
+
+pub mod platform;
+pub mod toml;
+pub mod workload;
+
+pub use platform::PlatformConfig;
+pub use workload::WorkloadConfig;

@@ -1,0 +1,281 @@
+//! Platform model configuration: the ZCU102 / Zynq UltraScale+ parameters
+//! the hardware simulator and cost models consume.
+//!
+//! Defaults reproduce the paper's board (section 4): quad Cortex-A53 @
+//! 1.5 GHz, dual Cortex-R5 @ 600 MHz, ZU9EG programmable logic, 1 GB DDR3
+//! with a 128-bit bus, a 128-bit AXI PS<->PL link, a 64-bit AXI DMA channel
+//! between PCIe and DDR3, and a BRAM-based FIFO bridge into the PL.
+//! All numbers are overridable from a TOML file (`configs/zcu102.toml`) so
+//! ablations can sweep them.
+
+use super::toml::Doc;
+use std::path::Path;
+
+/// Frequencies, bus widths and cost-model constants for one platform.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlatformConfig {
+    /// Human-readable platform name.
+    pub name: String,
+
+    // ---- processing system ------------------------------------------------
+    /// Cortex-A53 application cores ("workers" of the two-level scheme).
+    pub a53_cores: usize,
+    pub a53_freq_hz: f64,
+    /// Cortex-R5 control cores (DMA handling + update stage control).
+    pub r5_cores: usize,
+    pub r5_freq_hz: f64,
+
+    // ---- programmable logic ----------------------------------------------
+    pub pl_freq_hz: f64,
+    /// Distance-pipeline depth (cycles of fill before first result).
+    pub pl_pipeline_depth: u64,
+    /// f32 lanes consumed per PL cycle per module (128-bit AXI beat = 4).
+    pub pl_lanes: usize,
+    /// Largest cluster count with fully parallel per-cluster modules
+    /// (Table 1: K = 20 exhausts the ZU9EG; beyond that modules are shared).
+    pub pl_max_parallel_clusters: usize,
+
+    // ---- interconnect & memory -------------------------------------------
+    /// Effective PCIe host->board bandwidth, bytes/s (Gen2 x4 ~ 1.6 GB/s).
+    pub pcie_bytes_per_s: f64,
+    /// Per-DMA-descriptor setup latency, seconds.
+    pub pcie_setup_s: f64,
+    /// DDR3 peak bandwidth, bytes/s (128-bit @ 1066 MT/s ~ 17 GB/s raw;
+    /// the paper's 1 GB single-rank part sustains far less — default 8.5e9
+    /// * efficiency).
+    pub ddr3_bytes_per_s: f64,
+    /// Sustained fraction of DDR3 peak (row misses, refresh).
+    pub ddr3_efficiency: f64,
+    /// DDR3 capacity in bytes (1 GB on the ZCU102).
+    pub ddr3_capacity: u64,
+    /// First-word DDR3 access latency, seconds.
+    pub ddr3_latency_s: f64,
+    /// AXI PS<->PL data width in bytes (128-bit = 16).
+    pub axi_ps_pl_bytes: usize,
+    /// AXI DMA (PCIe<->DDR3) width in bytes (64-bit = 8).
+    pub axi_dma_bytes: usize,
+    /// BRAM FIFO bridge capacity per direction, bytes.
+    pub bram_fifo_bytes: usize,
+
+    // ---- software cost model ----------------------------------------------
+    /// A53 cycles per (dimension, centroid) term of a software distance
+    /// computation (scalar FPU, load + sub + abs/mul + add).
+    pub sw_cycles_per_term: f64,
+    /// A53 cycles of overhead per kd-tree node visit (pointer chase,
+    /// candidate bookkeeping).
+    pub sw_node_visit_cycles: f64,
+    /// A53 cycles per point for the update step (accumulate + count).
+    pub sw_update_cycles_per_dim: f64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self::zcu102()
+    }
+}
+
+impl PlatformConfig {
+    /// The paper's evaluation board.
+    pub fn zcu102() -> Self {
+        Self {
+            name: "zcu102".into(),
+            a53_cores: 4,
+            a53_freq_hz: 1.5e9,
+            r5_cores: 2,
+            r5_freq_hz: 600e6,
+            pl_freq_hz: 300e6,
+            pl_pipeline_depth: 12,
+            pl_lanes: 4,
+            pl_max_parallel_clusters: 20,
+            pcie_bytes_per_s: 1.6e9,
+            pcie_setup_s: 5e-6,
+            ddr3_bytes_per_s: 8.5e9,
+            ddr3_efficiency: 0.70,
+            ddr3_capacity: 1 << 30,
+            ddr3_latency_s: 60e-9,
+            axi_ps_pl_bytes: 16,
+            axi_dma_bytes: 8,
+            bram_fifo_bytes: 64 * 1024,
+            sw_cycles_per_term: 4.0,
+            sw_node_visit_cycles: 40.0,
+            sw_update_cycles_per_dim: 2.0,
+        }
+    }
+
+    /// The single-core platform of Winterstein et al. [13] (the Fig. 2
+    /// baseline): one filtering datapath (single traversal engine, single
+    /// control core) at a lower clock, with per-centroid parallel distance
+    /// units but no transfer/compute double-buffering.
+    pub fn winterstein_fpl13() -> Self {
+        Self {
+            name: "fpl13-singlecore".into(),
+            a53_cores: 1,
+            a53_freq_hz: 800e6,
+            r5_cores: 0,
+            r5_freq_hz: 0.0,
+            pl_freq_hz: 200e6,
+            ..Self::zcu102()
+        }
+    }
+
+    /// The multi-core Zynq-7000 platform of Canilho et al. [17] (the
+    /// Fig. 3 baseline): dual Cortex-A9 @ 667 MHz, PL fabric at 142 MHz,
+    /// a *fixed* set of parallel MAC units (parallelism does not scale
+    /// with K — the contrast the paper draws in section 5).
+    pub fn canilho_fpl16() -> Self {
+        Self {
+            name: "fpl16-zynq7000".into(),
+            a53_cores: 2,       // Cortex-A9 pair
+            a53_freq_hz: 667e6,
+            r5_cores: 0,
+            r5_freq_hz: 0.0,
+            pl_freq_hz: 142e6,
+            ddr3_bytes_per_s: 4.2e9, // DDR3-1066 x32 on Zynq-7000
+            ..Self::zcu102()
+        }
+    }
+
+    /// Load from a TOML file, starting from ZCU102 defaults — every key is
+    /// optional so config files only state what they change.
+    pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let doc = Doc::parse(&src)?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &Doc) -> Self {
+        let mut c = Self::zcu102();
+        if let Some(v) = doc.str("name") {
+            c.name = v.to_string();
+        }
+        macro_rules! take {
+            ($field:ident, $key:expr, f64) => {
+                if let Some(v) = doc.f64($key) {
+                    c.$field = v;
+                }
+            };
+            ($field:ident, $key:expr, usize) => {
+                if let Some(v) = doc.usize($key) {
+                    c.$field = v;
+                }
+            };
+            ($field:ident, $key:expr, u64) => {
+                if let Some(v) = doc.usize($key) {
+                    c.$field = v as u64;
+                }
+            };
+        }
+        take!(a53_cores, "ps.a53_cores", usize);
+        take!(a53_freq_hz, "ps.a53_freq_hz", f64);
+        take!(r5_cores, "ps.r5_cores", usize);
+        take!(r5_freq_hz, "ps.r5_freq_hz", f64);
+        take!(pl_freq_hz, "pl.freq_hz", f64);
+        take!(pl_pipeline_depth, "pl.pipeline_depth", u64);
+        take!(pl_lanes, "pl.lanes", usize);
+        take!(pl_max_parallel_clusters, "pl.max_parallel_clusters", usize);
+        take!(pcie_bytes_per_s, "io.pcie_bytes_per_s", f64);
+        take!(pcie_setup_s, "io.pcie_setup_s", f64);
+        take!(ddr3_bytes_per_s, "io.ddr3_bytes_per_s", f64);
+        take!(ddr3_efficiency, "io.ddr3_efficiency", f64);
+        take!(ddr3_capacity, "io.ddr3_capacity", u64);
+        take!(ddr3_latency_s, "io.ddr3_latency_s", f64);
+        take!(axi_ps_pl_bytes, "io.axi_ps_pl_bytes", usize);
+        take!(axi_dma_bytes, "io.axi_dma_bytes", usize);
+        take!(bram_fifo_bytes, "io.bram_fifo_bytes", usize);
+        take!(sw_cycles_per_term, "sw.cycles_per_term", f64);
+        take!(sw_node_visit_cycles, "sw.node_visit_cycles", f64);
+        take!(sw_update_cycles_per_dim, "sw.update_cycles_per_dim", f64);
+        c
+    }
+
+    /// Sustained DDR3 bandwidth after efficiency derating.
+    pub fn ddr3_sustained(&self) -> f64 {
+        self.ddr3_bytes_per_s * self.ddr3_efficiency
+    }
+
+    /// Sanity checks used by config-loading paths and tests.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.a53_cores >= 1, "need at least one A53 core");
+        anyhow::ensure!(self.a53_freq_hz > 0.0, "a53 frequency must be positive");
+        anyhow::ensure!(self.pl_freq_hz > 0.0, "pl frequency must be positive");
+        anyhow::ensure!(self.pl_lanes >= 1, "pl lanes must be >= 1");
+        anyhow::ensure!(
+            self.pl_max_parallel_clusters >= 1,
+            "pl_max_parallel_clusters must be >= 1"
+        );
+        anyhow::ensure!(self.pcie_bytes_per_s > 0.0, "pcie bandwidth must be positive");
+        anyhow::ensure!(
+            self.ddr3_efficiency > 0.0 && self.ddr3_efficiency <= 1.0,
+            "ddr3 efficiency must be in (0, 1]"
+        );
+        anyhow::ensure!(self.bram_fifo_bytes >= 4096, "bram fifo unrealistically small");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_board() {
+        let c = PlatformConfig::zcu102();
+        assert_eq!(c.a53_cores, 4);
+        assert_eq!(c.r5_cores, 2);
+        assert_eq!(c.a53_freq_hz, 1.5e9);
+        assert_eq!(c.r5_freq_hz, 600e6);
+        assert_eq!(c.ddr3_capacity, 1 << 30);
+        assert_eq!(c.axi_ps_pl_bytes, 16); // 128-bit
+        assert_eq!(c.axi_dma_bytes, 8); // 64-bit
+        assert_eq!(c.pl_max_parallel_clusters, 20); // Table 1 limit
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_only_what_it_states() {
+        let doc = Doc::parse(
+            r#"
+            name = "ablation"
+            [pl]
+            freq_hz = 150e6
+            [ps]
+            a53_cores = 2
+            "#,
+        )
+        .unwrap();
+        let c = PlatformConfig::from_doc(&doc);
+        assert_eq!(c.name, "ablation");
+        assert_eq!(c.pl_freq_hz, 150e6);
+        assert_eq!(c.a53_cores, 2);
+        // untouched key keeps default
+        assert_eq!(c.pcie_bytes_per_s, 1.6e9);
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut c = PlatformConfig::zcu102();
+        c.a53_cores = 0;
+        assert!(c.validate().is_err());
+        let mut c = PlatformConfig::zcu102();
+        c.ddr3_efficiency = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = PlatformConfig::zcu102();
+        c.pl_freq_hz = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn winterstein_profile_is_single_core() {
+        let c = PlatformConfig::winterstein_fpl13();
+        assert_eq!(c.a53_cores, 1);
+        assert_eq!(c.pl_freq_hz, 200e6);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn ddr3_sustained_applies_efficiency() {
+        let c = PlatformConfig::zcu102();
+        assert!((c.ddr3_sustained() - 8.5e9 * 0.70).abs() < 1.0);
+    }
+}

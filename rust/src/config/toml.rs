@@ -1,0 +1,258 @@
+//! TOML-subset parser for platform/workload config files.
+//!
+//! Supports the subset the `configs/*.toml` files use: `[section]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous array
+//! values, `#` comments, and bare or dotted keys.  No inline tables, no
+//! multi-line strings, no datetime — config files in this repo don't need
+//! them (and the offline crate set has no `toml`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section.key -> value`.  Keys outside any section are
+/// stored under their bare name.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(src: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = ln + 1;
+            let trimmed = strip_comment(raw).trim().to_string();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(inner) = trimmed.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or(TomlError {
+                    line,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(TomlError {
+                        line,
+                        msg: "empty section name".into(),
+                    });
+                }
+                continue;
+            }
+            let (key, raw_val) = trimmed.split_once('=').ok_or(TomlError {
+                line,
+                msg: "expected `key = value`".into(),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(TomlError {
+                    line,
+                    msg: "empty key".into(),
+                });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(raw_val.trim()).map_err(|msg| TomlError { line, msg })?;
+            doc.entries.insert(full_key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(Value::as_usize)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as separators, scientific notation ok.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "zcu102"
+            [pl]
+            freq_hz = 300_000_000
+            efficiency = 0.7   # trailing comment
+            enabled = true
+            ks = [2, 3, 4]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("zcu102"));
+        assert_eq!(doc.usize("pl.freq_hz"), Some(300_000_000));
+        assert_eq!(doc.f64("pl.efficiency"), Some(0.7));
+        assert_eq!(doc.bool("pl.enabled"), Some(true));
+        match doc.get("pl.ks").unwrap() {
+            Value::Array(a) => assert_eq!(a.len(), 3),
+            v => panic!("expected array, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.str("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn numeric_forms() {
+        let doc = Doc::parse("a = 1e9\nb = -3\nc = 2.5\nd = 1_000").unwrap();
+        assert_eq!(doc.f64("a"), Some(1e9));
+        assert_eq!(doc.get("b").unwrap().as_i64(), Some(-3));
+        assert_eq!(doc.f64("c"), Some(2.5));
+        assert_eq!(doc.usize("d"), Some(1000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Doc::parse("[unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(Doc::parse("x = ").is_err());
+        assert!(Doc::parse("x = \"abc").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = zzz").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_and_usize_conversion() {
+        let doc = Doc::parse("i = 5\nf = 5.0\nneg = -1").unwrap();
+        assert_eq!(doc.get("i").unwrap().as_i64(), Some(5));
+        assert_eq!(doc.get("f").unwrap().as_i64(), None);
+        assert_eq!(doc.usize("neg"), None);
+        assert_eq!(doc.f64("i"), Some(5.0));
+    }
+}

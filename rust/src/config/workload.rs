@@ -1,0 +1,180 @@
+//! Workload description: what to cluster, with which algorithm parameters.
+
+use super::toml::Doc;
+use crate::kmeans::metrics::Metric;
+use std::path::Path;
+
+/// A clustering workload (dataset recipe + algorithm parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Number of data points.
+    pub n: usize,
+    /// Dimensionality of each point.
+    pub d: usize,
+    /// Number of clusters to find.
+    pub k: usize,
+    /// Number of planted generator clusters (defaults to `k`).
+    pub true_k: usize,
+    /// Standard deviation of each planted normal cluster (the paper sweeps
+    /// this: "normal distribution with varying standard deviation").
+    pub sigma: f32,
+    /// Half-width of the box centroids are placed in uniformly.
+    pub spread: f32,
+    /// Distance metric (the paper's PL computes Manhattan; the analysis
+    /// uses Euclidean — both are supported end to end).
+    pub metric: Metric,
+    /// Lloyd / filtering convergence threshold on centroid movement
+    /// (squared L2 per centroid).
+    pub tol: f32,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// RNG seed for data generation and initialization.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            n: 100_000,
+            d: 15,
+            k: 8,
+            true_k: 8,
+            sigma: 0.15,
+            spread: 1.0,
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            max_iters: 100,
+            seed: 42,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// A workload sized like the paper's Fig. 3 evaluation point
+    /// (10^6 points, 15 dimensions).
+    pub fn fig3(k: usize) -> Self {
+        Self {
+            n: 1_000_000,
+            d: 15,
+            k,
+            true_k: k,
+            ..Self::default()
+        }
+    }
+
+    pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let doc = Doc::parse(&src)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &Doc) -> anyhow::Result<Self> {
+        let mut w = Self::default();
+        if let Some(v) = doc.usize("workload.n") {
+            w.n = v;
+        }
+        if let Some(v) = doc.usize("workload.d") {
+            w.d = v;
+        }
+        if let Some(v) = doc.usize("workload.k") {
+            w.k = v;
+            w.true_k = v;
+        }
+        if let Some(v) = doc.usize("workload.true_k") {
+            w.true_k = v;
+        }
+        if let Some(v) = doc.f64("workload.sigma") {
+            w.sigma = v as f32;
+        }
+        if let Some(v) = doc.f64("workload.spread") {
+            w.spread = v as f32;
+        }
+        if let Some(v) = doc.str("workload.metric") {
+            w.metric = v.parse()?;
+        }
+        if let Some(v) = doc.f64("workload.tol") {
+            w.tol = v as f32;
+        }
+        if let Some(v) = doc.usize("workload.max_iters") {
+            w.max_iters = v;
+        }
+        if let Some(v) = doc.usize("workload.seed") {
+            w.seed = v as u64;
+        }
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n >= 1, "n must be >= 1");
+        anyhow::ensure!(self.d >= 1, "d must be >= 1");
+        anyhow::ensure!(self.k >= 1, "k must be >= 1");
+        anyhow::ensure!(self.k <= self.n, "k={} exceeds n={}", self.k, self.n);
+        anyhow::ensure!(self.true_k >= 1, "true_k must be >= 1");
+        anyhow::ensure!(self.sigma >= 0.0, "sigma must be non-negative");
+        anyhow::ensure!(self.max_iters >= 1, "max_iters must be >= 1");
+        Ok(())
+    }
+
+    /// Dataset footprint in bytes (f32), used by the DDR3 capacity check
+    /// the paper makes in section 4.2.
+    pub fn dataset_bytes(&self) -> u64 {
+        (self.n as u64) * (self.d as u64) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        WorkloadConfig::default().validate().unwrap();
+        WorkloadConfig::fig3(100).validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_round_trip() {
+        let doc = Doc::parse(
+            r#"
+            [workload]
+            n = 5000
+            d = 3
+            k = 7
+            sigma = 0.25
+            metric = "manhattan"
+            seed = 9
+            "#,
+        )
+        .unwrap();
+        let w = WorkloadConfig::from_doc(&doc).unwrap();
+        assert_eq!(w.n, 5000);
+        assert_eq!(w.d, 3);
+        assert_eq!(w.k, 7);
+        assert_eq!(w.true_k, 7);
+        assert_eq!(w.sigma, 0.25);
+        assert_eq!(w.metric, Metric::Manhattan);
+        assert_eq!(w.seed, 9);
+    }
+
+    #[test]
+    fn invalid_workloads_rejected() {
+        let doc = Doc::parse("[workload]\nn = 2\nk = 5").unwrap();
+        assert!(WorkloadConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[workload]\nmetric = \"cosine\"").unwrap();
+        assert!(WorkloadConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn dataset_bytes_matches_paper_example() {
+        // Paper section 4.2: N = 100000, K = 1024 fits easily in 1 GB.
+        let w = WorkloadConfig {
+            n: 100_000,
+            d: 15,
+            ..Default::default()
+        };
+        assert_eq!(w.dataset_bytes(), 100_000 * 15 * 4);
+        assert!(w.dataset_bytes() < (1 << 30));
+    }
+}

@@ -1,0 +1,89 @@
+//! Coordinator metrics: wall-clock per phase plus offload counters.
+//! These are *host* measurements (the §Perf numbers); simulated ZCU102
+//! time comes from `arch::*` over the same work counters.
+
+use std::time::{Duration, Instant};
+
+/// Phase timings of one coordinated run.
+#[derive(Clone, Debug, Default)]
+pub struct CoordMetrics {
+    pub partition_s: f64,
+    pub tree_build_s: f64,
+    pub level1_s: f64,
+    pub combine_s: f64,
+    pub level2_s: f64,
+    pub total_s: f64,
+    /// Panel batches / jobs served by the offload service.
+    pub offload_batches: u64,
+    pub offload_jobs: u64,
+    /// PJRT executions + seconds (zero for CPU backend).
+    pub pjrt_executions: u64,
+    pub pjrt_exec_s: f64,
+}
+
+impl CoordMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "total {:.3}s = partition {:.3}s + trees {:.3}s + level1 {:.3}s + \
+             combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
+             pjrt: {} execs / {:.3}s",
+            self.total_s,
+            self.partition_s,
+            self.tree_build_s,
+            self.level1_s,
+            self.combine_s,
+            self.level2_s,
+            self.offload_batches,
+            self.offload_jobs,
+            self.pjrt_executions,
+            self.pjrt_exec_s,
+        )
+    }
+}
+
+/// Tiny scope timer.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.0);
+        self.0 = now;
+        d.as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.002);
+        assert!(b < a);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let m = CoordMetrics {
+            total_s: 1.0,
+            offload_jobs: 42,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("42 jobs"));
+        assert!(s.contains("total 1.000s"));
+    }
+}

@@ -1,0 +1,214 @@
+//! The PL offload service: a dedicated thread owning the compute backend
+//! (PJRT runtime or CPU fallback), fed by the worker threads over a
+//! channel.
+//!
+//! This mirrors the paper's control architecture: the A53 workers never
+//! touch the PL directly — a single manager (one Cortex-R5 in MUCH-SWIFT)
+//! owns the DMA/PL interface and serializes batches into it.  It also
+//! keeps the `xla` FFI usage single-threaded regardless of worker count.
+
+use crate::data::Dataset;
+use crate::kmeans::filtering::{CpuPanels, PanelBackend};
+use crate::kmeans::Metric;
+use crate::runtime::PjrtRuntime;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Which compute substrate serves the panels.
+pub enum Backend {
+    /// Plain Rust math (software-only runs, tests).
+    Cpu,
+    /// The AOT Pallas/XLA artifacts through PJRT.
+    Pjrt(Arc<PjrtRuntime>),
+}
+
+/// Message to the service thread.
+enum Msg {
+    Panels(Request),
+    Shutdown,
+}
+
+/// One panel batch request.
+struct Request {
+    mids: Vec<f32>,
+    cand_idx: Vec<Vec<u32>>,
+    centroids: Dataset,
+    metric: Metric,
+    reply: Sender<Vec<Vec<f32>>>,
+}
+
+/// Service-side counters.
+#[derive(Debug, Default)]
+pub struct OffloadStats {
+    pub batches: AtomicU64,
+    pub jobs: AtomicU64,
+}
+
+/// Handle the workers use; cloneable.
+#[derive(Clone)]
+pub struct OffloadHandle {
+    tx: Sender<Msg>,
+    stats: Arc<OffloadStats>,
+}
+
+impl OffloadHandle {
+    /// Synchronously compute one panel batch through the service.
+    pub fn panels(
+        &self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> Vec<Vec<f32>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Panels(Request {
+                mids: mids.to_vec(),
+                cand_idx: cand_idx.to_vec(),
+                centroids: centroids.clone(),
+                metric,
+                reply: reply_tx,
+            }))
+            .expect("offload service died");
+        reply_rx.recv().expect("offload service dropped reply")
+    }
+
+    pub fn stats(&self) -> &OffloadStats {
+        &self.stats
+    }
+}
+
+/// The running service; dropping joins the thread.
+pub struct OffloadService {
+    handle: OffloadHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl OffloadService {
+    pub fn spawn(backend: Backend) -> Self {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let stats = Arc::new(OffloadStats::default());
+        let svc_stats = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("pl-offload".into())
+            .spawn(move || {
+                let mut cpu = CpuPanels;
+                while let Ok(msg) = rx.recv() {
+                    let req = match msg {
+                        Msg::Panels(r) => r,
+                        Msg::Shutdown => break,
+                    };
+                    svc_stats.batches.fetch_add(1, Ordering::Relaxed);
+                    svc_stats
+                        .jobs
+                        .fetch_add(req.cand_idx.len() as u64, Ordering::Relaxed);
+                    let out = match &backend {
+                        Backend::Cpu => {
+                            cpu.panels(&req.mids, &req.cand_idx, &req.centroids, req.metric)
+                        }
+                        Backend::Pjrt(rt) => rt
+                            .filter_panels(&req.mids, &req.cand_idx, &req.centroids, req.metric)
+                            .expect("pjrt panel execution failed"),
+                    };
+                    // Receiver may have given up (worker panic); ignore.
+                    let _ = req.reply.send(out);
+                }
+            })
+            .expect("cannot spawn offload service");
+        Self {
+            handle: OffloadHandle { tx, stats },
+            join: Some(join),
+        }
+    }
+
+    pub fn handle(&self) -> OffloadHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for OffloadService {
+    fn drop(&mut self) {
+        // Ask the thread to stop (cloned handles may still hold senders,
+        // so channel closure alone cannot be relied on), then join.
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// [`PanelBackend`] adapter over the service handle — what the batched
+/// filtering engine sees inside each worker.
+pub struct RemotePanels {
+    pub handle: OffloadHandle,
+}
+
+impl PanelBackend for RemotePanels {
+    fn panels(
+        &mut self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> Vec<Vec<f32>> {
+        self.handle.panels(mids, cand_idx, centroids, metric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+
+    #[test]
+    fn cpu_service_round_trip() {
+        let svc = OffloadService::spawn(Backend::Cpu);
+        let s = generate_params(50, 3, 2, 0.2, 1.0, 1);
+        let cents = s.data.gather(&[0, 1, 2]);
+        let mids: Vec<f32> = s.data.flat()[..6].to_vec(); // 2 jobs, d=3
+        let cand = vec![vec![0u32, 1, 2], vec![1u32]];
+        let got = svc.handle().panels(&mids, &cand, &cents, Metric::Euclid);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].len(), 3);
+        assert_eq!(got[1].len(), 1);
+        // Distances match direct computation.
+        let want = Metric::Euclid.dist(&mids[0..3], cents.point(1));
+        assert!((got[0][1] - want).abs() < 1e-6);
+        assert_eq!(svc.handle().stats().batches.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.handle().stats().jobs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_workers_share_service() {
+        let svc = OffloadService::spawn(Backend::Cpu);
+        let s = generate_params(100, 2, 3, 0.3, 1.0, 2);
+        let cents = Arc::new(s.data.gather(&[0, 1, 2]));
+        let mut joins = Vec::new();
+        for w in 0..4 {
+            let h = svc.handle();
+            let cents = Arc::clone(&cents);
+            let data = s.data.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..20 {
+                    let p = data.point((w * 20 + i) % 100).to_vec();
+                    let out = h.panels(&p, &[vec![0, 1, 2]], &cents, Metric::Manhattan);
+                    assert_eq!(out[0].len(), 3);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.handle().stats().batches.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn service_shuts_down_cleanly() {
+        let svc = OffloadService::spawn(Backend::Cpu);
+        let h = svc.handle();
+        drop(svc); // joins the thread without deadlock
+        let _ = h; // handle may outlive; sends would now fail, not hang
+    }
+}

@@ -1,0 +1,129 @@
+//! CSV load/save for datasets (plain comma-separated f32 rows, optional
+//! `#` comment/header lines).  Used by the CLI so real datasets can be fed
+//! through the same pipeline as the synthetic workloads.
+
+use super::dataset::Dataset;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CsvError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("empty dataset")]
+    Empty,
+}
+
+/// Load a dataset; every non-comment line must have the same number of
+/// comma-separated f32 fields.
+pub fn load(path: &Path) -> Result<Dataset, CsvError> {
+    let file = std::fs::File::open(path)?;
+    read(BufReader::new(file))
+}
+
+/// Parse from any reader (exposed for tests).
+pub fn read<R: BufRead>(reader: R) -> Result<Dataset, CsvError> {
+    let mut flat: Vec<f32> = Vec::new();
+    let mut d: Option<usize> = None;
+    let mut n = 0usize;
+    for (ln, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut count = 0usize;
+        for field in t.split(',') {
+            let v: f32 = field.trim().parse().map_err(|_| CsvError::Parse {
+                line: ln + 1,
+                msg: format!("bad float `{}`", field.trim()),
+            })?;
+            if !v.is_finite() {
+                return Err(CsvError::Parse {
+                    line: ln + 1,
+                    msg: format!("non-finite value `{v}`"),
+                });
+            }
+            flat.push(v);
+            count += 1;
+        }
+        match d {
+            None => d = Some(count),
+            Some(dd) if dd != count => {
+                return Err(CsvError::Parse {
+                    line: ln + 1,
+                    msg: format!("expected {dd} fields, found {count}"),
+                })
+            }
+            _ => {}
+        }
+        n += 1;
+    }
+    let d = d.ok_or(CsvError::Empty)?;
+    Ok(Dataset::from_flat(n, d, flat))
+}
+
+/// Save a dataset as CSV.
+pub fn save(ds: &Dataset, path: &Path) -> Result<(), CsvError> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# muchswift dataset: n={} d={}", ds.len(), ds.dims())?;
+    for p in ds.iter() {
+        let row: Vec<String> = p.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_simple() {
+        let ds = read(Cursor::new("1,2,3\n4,5,6\n")).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dims(), 3);
+        assert_eq!(ds.point(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = read(Cursor::new("# header\n\n1.5, -2\n# mid\n3,4\n")).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.point(0), &[1.5, -2.0]);
+    }
+
+    #[test]
+    fn rejects_ragged_and_bad_floats() {
+        assert!(matches!(
+            read(Cursor::new("1,2\n3\n")),
+            Err(CsvError::Parse { line: 2, .. })
+        ));
+        assert!(matches!(
+            read(Cursor::new("1,x\n")),
+            Err(CsvError::Parse { line: 1, .. })
+        ));
+        assert!(matches!(read(Cursor::new("")), Err(CsvError::Empty)));
+        assert!(matches!(
+            read(Cursor::new("inf,1\n")),
+            Err(CsvError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = Dataset::from_flat(3, 2, vec![0.5, -1.25, 3.0, 4.0, -0.0625, 7.5]);
+        let dir = std::env::temp_dir().join("muchswift_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.csv");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(ds, back);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,189 @@
+//! Dense f32 dataset storage.
+//!
+//! Points are stored row-major in one flat allocation (`[n, d]`), which is
+//! what the kd-tree builder, the software kernels and the PJRT runtime all
+//! consume directly — no per-point boxing, no pointer chasing on the hot
+//! path.
+
+/// A dense `[n, d]` matrix of f32 points.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    /// Construct from a flat row-major buffer. Panics if the length is not
+    /// `n * d`.
+    pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "flat buffer length mismatch");
+        assert!(d > 0, "dimensionality must be positive");
+        Self { n, d, data }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self::from_flat(n, d, vec![0.0; n * d])
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Borrow point `i` as a `&[f32; d]` slice.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn point_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The whole flat buffer (row-major).
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Iterate over points as slices.
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.d)
+    }
+
+    /// Gather a subset of rows into a new dataset (used by `Quarter`).
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut out = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            out.extend_from_slice(self.point(i));
+        }
+        Dataset::from_flat(idx.len(), self.d, out)
+    }
+
+    /// Split into `parts` contiguous chunks whose sizes differ by at most
+    /// one point.  Returns (datasets, starting row of each chunk).
+    pub fn split_contiguous(&self, parts: usize) -> (Vec<Dataset>, Vec<usize>) {
+        assert!(parts >= 1);
+        let base = self.n / parts;
+        let rem = self.n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut offsets = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        for p in 0..parts {
+            let take = base + usize::from(p < rem);
+            offsets.push(start);
+            let chunk = self.data[start * self.d..(start + take) * self.d].to_vec();
+            out.push(Dataset::from_flat(take, self.d, chunk));
+            start += take;
+        }
+        (out, offsets)
+    }
+
+    /// Per-dimension bounding box `(mins, maxs)` over all points.
+    pub fn bounds(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut mins = vec![f32::INFINITY; self.d];
+        let mut maxs = vec![f32::NEG_INFINITY; self.d];
+        for p in self.iter() {
+            for (j, &v) in p.iter().enumerate() {
+                if v < mins[j] {
+                    mins[j] = v;
+                }
+                if v > maxs[j] {
+                    maxs[j] = v;
+                }
+            }
+        }
+        (mins, maxs)
+    }
+
+    /// Size in bytes (the DDR3-capacity bookkeeping of section 4.2).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset::from_flat(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0])
+    }
+
+    #[test]
+    fn indexing_and_iter() {
+        let d = ds();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dims(), 2);
+        assert_eq!(d.point(1), &[2.0, 3.0]);
+        let pts: Vec<&[f32]> = d.iter().collect();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[2], &[4.0, 5.0]);
+        assert_eq!(d.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn bad_flat_length_panics() {
+        Dataset::from_flat(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let d = ds();
+        let g = d.gather(&[2, 0]);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.point(0), &[4.0, 5.0]);
+        assert_eq!(g.point(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn split_contiguous_covers_everything() {
+        let d = Dataset::from_flat(10, 1, (0..10).map(|i| i as f32).collect());
+        let (parts, offs) = d.split_contiguous(4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(offs, vec![0, 3, 6, 8]);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        let total: usize = sizes.iter().sum();
+        assert_eq!(total, 10);
+        // order preserved
+        assert_eq!(parts[1].point(0), &[3.0]);
+        assert_eq!(parts[3].point(1), &[9.0]);
+    }
+
+    #[test]
+    fn split_more_parts_than_points() {
+        let d = Dataset::from_flat(2, 1, vec![1.0, 2.0]);
+        let (parts, _) = d.split_contiguous(4);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn bounds() {
+        let d = Dataset::from_flat(3, 2, vec![0.0, 5.0, -1.0, 3.0, 4.0, 4.0]);
+        let (mins, maxs) = d.bounds();
+        assert_eq!(mins, vec![-1.0, 3.0]);
+        assert_eq!(maxs, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn point_mut_writes_through() {
+        let mut d = ds();
+        d.point_mut(0)[1] = 9.0;
+        assert_eq!(d.point(0), &[0.0, 9.0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: dense storage, the paper's synthetic workload
+//! recipe, and CSV I/O for external data.
+
+pub mod csv;
+pub mod dataset;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use synthetic::{generate, generate_params, Synthetic};

@@ -1,0 +1,138 @@
+//! Synthetic workload generator.
+//!
+//! Reproduces the paper's evaluation recipe (section 5): "the test case is
+//! generated with normal distribution with varying standard deviation, and
+//! all centroids are distributed between data points uniformly" — i.e.
+//! `true_k` cluster centers placed uniformly in a box, with points drawn
+//! from isotropic normals around them.
+
+use super::dataset::Dataset;
+use crate::config::WorkloadConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// A generated dataset together with its ground truth.
+#[derive(Clone, Debug)]
+pub struct Synthetic {
+    pub data: Dataset,
+    /// Planted cluster centers, `[true_k, d]`.
+    pub true_centroids: Dataset,
+    /// Planted label of each point.
+    pub labels: Vec<u32>,
+}
+
+/// Generate per the workload recipe.  Deterministic in `w.seed`.
+pub fn generate(w: &WorkloadConfig) -> Synthetic {
+    generate_params(w.n, w.d, w.true_k, w.sigma, w.spread, w.seed)
+}
+
+/// Explicit-parameter form used by sweeps.
+pub fn generate_params(
+    n: usize,
+    d: usize,
+    true_k: usize,
+    sigma: f32,
+    spread: f32,
+    seed: u64,
+) -> Synthetic {
+    assert!(n >= 1 && d >= 1 && true_k >= 1);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+
+    // Centers uniform in [-spread, spread]^d.
+    let mut centers = Vec::with_capacity(true_k * d);
+    for _ in 0..true_k * d {
+        centers.push(rng.uniform_f32(-spread, spread));
+    }
+    let true_centroids = Dataset::from_flat(true_k, d, centers);
+
+    // Points: round-robin cluster membership then shuffled, so every
+    // cluster is populated (the paper's workloads are balanced mixtures).
+    let mut order: Vec<u32> = (0..n).map(|i| (i % true_k) as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut flat = Vec::with_capacity(n * d);
+    for &lbl in &order {
+        let c = true_centroids.point(lbl as usize);
+        for &cj in c {
+            flat.push(rng.normal(cj, sigma));
+        }
+    }
+
+    Synthetic {
+        data: Dataset::from_flat(n, d, flat),
+        true_centroids,
+        labels: order,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let w = WorkloadConfig {
+            n: 500,
+            d: 4,
+            k: 3,
+            true_k: 3,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = generate(&w);
+        let b = generate(&w);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&WorkloadConfig { seed: 8, ..w });
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let s = generate_params(1000, 5, 7, 0.1, 1.0, 1);
+        assert_eq!(s.data.len(), 1000);
+        assert_eq!(s.data.dims(), 5);
+        assert_eq!(s.true_centroids.len(), 7);
+        assert_eq!(s.labels.len(), 1000);
+        assert!(s.labels.iter().all(|&l| (l as usize) < 7));
+        // Balanced mixture: every planted cluster appears.
+        let mut counts = [0usize; 7];
+        for &l in &s.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 1000 / 7 - 1));
+    }
+
+    #[test]
+    fn points_cluster_around_their_centers() {
+        let sigma = 0.05f32;
+        let s = generate_params(2000, 3, 4, sigma, 2.0, 3);
+        // Mean squared distance from a point to its planted center should
+        // be ~ d * sigma^2.
+        let mut acc = 0f64;
+        for (i, p) in s.data.iter().enumerate() {
+            let c = s.true_centroids.point(s.labels[i] as usize);
+            let d2: f32 = p.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+            acc += d2 as f64;
+        }
+        let msd = acc / s.data.len() as f64;
+        let expect = 3.0 * (sigma as f64) * (sigma as f64);
+        assert!((msd - expect).abs() < expect * 0.2, "msd {msd} vs {expect}");
+    }
+
+    #[test]
+    fn centers_respect_spread() {
+        let s = generate_params(10, 2, 50, 0.0, 1.5, 11);
+        for c in s.true_centroids.iter() {
+            assert!(c.iter().all(|&v| (-1.5..1.5).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn zero_sigma_collapses_to_centers() {
+        let s = generate_params(100, 2, 5, 0.0, 1.0, 13);
+        for (i, p) in s.data.iter().enumerate() {
+            let c = s.true_centroids.point(s.labels[i] as usize);
+            assert_eq!(p, c);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation.
+//!
+//! Every driver prints the same rows/series the paper plots and returns
+//! the numbers for EXPERIMENTS.md.  Regenerate via `cargo bench` (one
+//! bench target per experiment) or `muchswift experiment <id>`.
+//!
+//! | id      | paper artifact                                   |
+//! |---------|--------------------------------------------------|
+//! | fig2a   | avg clock cycles / iteration vs [13]             |
+//! | fig2b   | speedup vs conventional single-module FPGA Lloyd |
+//! | fig3a   | exec time vs [17], 10^6 pts, 15 dims, K sweep    |
+//! | fig3b   | exec time vs [17], 10^6 pts, K=6, D sweep        |
+//! | table1  | PL resource utilization vs cluster count         |
+//! | headline| end-to-end speedup vs software-only Lloyd        |
+
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+
+use crate::util::stats::geomean;
+
+/// A generic two-series sweep result.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    pub id: &'static str,
+    /// X-axis label and values.
+    pub x_label: &'static str,
+    pub xs: Vec<f64>,
+    /// (series name, y values) — time or cycles depending on experiment.
+    pub series: Vec<(String, Vec<f64>)>,
+    /// Ratio series (baseline / muchswift) if meaningful.
+    pub ratio: Vec<f64>,
+}
+
+impl Sweep {
+    /// Render the paper-shaped table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.id));
+        out.push_str(&format!("{:<12}", self.x_label));
+        for (name, _) in &self.series {
+            out.push_str(&format!("{name:>24}"));
+        }
+        if !self.ratio.is_empty() {
+            out.push_str(&format!("{:>12}", "ratio"));
+        }
+        out.push('\n');
+        for (i, x) in self.xs.iter().enumerate() {
+            out.push_str(&format!("{x:<12}"));
+            for (_, ys) in &self.series {
+                out.push_str(&format!("{:>24.6e}", ys[i]));
+            }
+            if !self.ratio.is_empty() {
+                out.push_str(&format!("{:>11.1}x", self.ratio[i]));
+            }
+            out.push('\n');
+        }
+        if !self.ratio.is_empty() {
+            out.push_str(&format!(
+                "geomean ratio: {:.1}x   max: {:.1}x\n",
+                geomean(&self.ratio),
+                self.ratio.iter().cloned().fold(f64::MIN, f64::max)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_render_shape() {
+        let s = Sweep {
+            id: "fig-test",
+            x_label: "k",
+            xs: vec![2.0, 4.0],
+            series: vec![
+                ("muchswift".into(), vec![1.0, 2.0]),
+                ("baseline".into(), vec![10.0, 30.0]),
+            ],
+            ratio: vec![10.0, 15.0],
+        };
+        let r = s.render();
+        assert!(r.contains("fig-test"));
+        assert!(r.contains("muchswift"));
+        assert!(r.contains("geomean ratio: 12.2x"));
+        assert!(r.contains("max: 15.0x"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Table 1 reproduction: PL resource utilization vs cluster count, plus
+//! the fully-parallel feasibility limit on the ZU9EG.
+
+use crate::hw::resources::{self, ResourceUse, ZU9EG};
+
+/// One rendered row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Row {
+    pub k: usize,
+    pub usage: ResourceUse,
+    pub fits: bool,
+}
+
+/// The paper's sweep.
+pub const KS: [usize; 6] = [2, 3, 4, 5, 10, 20];
+
+pub fn table1() -> Vec<Row> {
+    KS.iter()
+        .map(|&k| Row {
+            k,
+            usage: resources::utilization(k),
+            fits: resources::fits(k),
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut out = String::new();
+    out.push_str("== table1: resource utilization vs cluster size ==\n");
+    out.push_str(&format!(
+        "{:<16}{:>10}{:>12}{:>8}{:>8}{:>7}\n",
+        "Cluster Size", "LUTs", "Registers", "BRAMs", "DSPs", "fits"
+    ));
+    for row in table1() {
+        out.push_str(&format!(
+            "{:<16}{:>10}{:>12}{:>8}{:>8}{:>7}\n",
+            row.k,
+            row.usage.luts,
+            row.usage.registers,
+            row.usage.brams,
+            row.usage.dsps,
+            if row.fits { "yes" } else { "NO" }
+        ));
+    }
+    out.push_str(&format!(
+        "{:<16}{:>10}{:>12}{:>8}{:>8}\n",
+        "Total Available", ZU9EG.luts, ZU9EG.registers, ZU9EG.brams, ZU9EG.dsps
+    ));
+    out.push_str(&format!(
+        "max fully-parallel clusters: {}\n",
+        resources::max_parallel_clusters()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_match_paper_values() {
+        let rows = table1();
+        assert_eq!(rows.len(), 6);
+        // Spot-check against Table 1.
+        assert_eq!(rows[0].usage.luts, 32_985);
+        assert_eq!(rows[3].usage.dsps, 344);
+        assert_eq!(rows[5].usage.registers, 287_951);
+        assert!(rows.iter().all(|r| r.fits));
+    }
+
+    #[test]
+    fn render_contains_totals() {
+        let s = render();
+        assert!(s.contains("274000"));
+        assert!(s.contains("2520"));
+        assert!(s.contains("max fully-parallel"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Clock domains.  The ZCU102 runs three of interest here: the A53 cluster
+//! (1.5 GHz), the R5 pair (600 MHz) and the PL fabric clock (300 MHz in
+//! our model).  Conversions round *up* to whole cycles — hardware cannot
+//! finish mid-cycle.
+
+use super::{Time, PS_PER_S};
+
+/// A fixed-frequency clock domain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClockDomain {
+    hz: f64,
+    /// Period in picoseconds.
+    period_ps: f64,
+}
+
+impl ClockDomain {
+    pub fn new(hz: f64) -> Self {
+        assert!(hz > 0.0, "clock frequency must be positive");
+        Self {
+            hz,
+            period_ps: PS_PER_S / hz,
+        }
+    }
+
+    #[inline]
+    pub fn hz(&self) -> f64 {
+        self.hz
+    }
+
+    /// Duration of `cycles` whole cycles.
+    #[inline]
+    pub fn cycles_to_ps(&self, cycles: u64) -> Time {
+        (cycles as f64 * self.period_ps).round() as Time
+    }
+
+    /// Fractional cycle count (used by cost models before rounding).
+    #[inline]
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.hz
+    }
+
+    /// Whole cycles needed to span `t` (rounded up).
+    #[inline]
+    pub fn ps_to_cycles(&self, t: Time) -> u64 {
+        (t as f64 / self.period_ps).ceil() as u64
+    }
+
+    /// Whole cycles needed to span `s` seconds (rounded up).
+    #[inline]
+    pub fn secs_to_cycles(&self, s: f64) -> u64 {
+        (s * self.hz).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        let pl = ClockDomain::new(300e6);
+        // 300 MHz period = 3333.3. ps
+        assert_eq!(pl.cycles_to_ps(3), 10_000);
+        assert_eq!(pl.ps_to_cycles(10_000), 3);
+        assert_eq!(pl.ps_to_cycles(10_001), 4); // rounds up
+        assert_eq!(pl.secs_to_cycles(1.0), 300_000_000);
+        assert!((pl.cycles_to_secs(300e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zcu102_domains() {
+        let a53 = ClockDomain::new(1.5e9);
+        let r5 = ClockDomain::new(600e6);
+        assert_eq!(a53.cycles_to_ps(3), 2_000);
+        assert_eq!(r5.cycles_to_ps(3), 5_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_hz_rejected() {
+        ClockDomain::new(0.0);
+    }
+}

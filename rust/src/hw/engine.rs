@@ -1,0 +1,161 @@
+//! Discrete-event simulation core: a time-ordered event queue with
+//! deterministic FIFO tie-breaking.
+//!
+//! The TLM components (`stream`, `dma`) drive their burst-level state
+//! machines off this queue; the coarser per-phase cost models (`pl`,
+//! `zynq`) do closed-form accounting and only use the queue where
+//! interleaving actually matters (producer/consumer overlap with finite
+//! buffering).
+
+use super::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A pending event: fires at `time` carrying a caller-defined payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Entry<K> {
+    time: Time,
+    seq: u64,
+    kind: K,
+}
+
+impl<K: Eq> Ord for Entry<K> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap via Reverse at the queue level; order by (time, seq) so
+        // same-time events fire in insertion order (determinism).
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl<K: Eq> PartialOrd for Entry<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Debug)]
+pub struct EventQueue<K: Eq> {
+    heap: BinaryHeap<Reverse<Entry<K>>>,
+    seq: u64,
+    now: Time,
+}
+
+impl<K: Eq> Default for EventQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq> EventQueue<K> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+        }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `kind` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: Time, kind: K) {
+        debug_assert!(
+            at >= self.now,
+            "cannot schedule into the past: {at} < {}",
+            self.now
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            time: at.max(self.now),
+            seq,
+            kind,
+        }));
+    }
+
+    /// Schedule `kind` `delay` after now.
+    pub fn schedule_in(&mut self, delay: Time, kind: K) {
+        self.schedule(self.now + delay, kind);
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(Time, K)> {
+        self.heap.pop().map(|Reverse(e)| {
+            self.now = e.time;
+            (e.time, e.kind)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq, Eq)]
+    enum Ev {
+        A(u32),
+        B,
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, Ev::A(3));
+        q.schedule(10, Ev::A(1));
+        q.schedule(20, Ev::B);
+        assert_eq!(q.pop(), Some((10, Ev::A(1))));
+        assert_eq!(q.now(), 10);
+        assert_eq!(q.pop(), Some((20, Ev::B)));
+        assert_eq!(q.pop(), Some((30, Ev::A(3))));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(5, Ev::A(1));
+        q.schedule(5, Ev::A(2));
+        q.schedule(5, Ev::A(3));
+        assert_eq!(q.pop().unwrap().1, Ev::A(1));
+        assert_eq!(q.pop().unwrap().1, Ev::A(2));
+        assert_eq!(q.pop().unwrap().1, Ev::A(3));
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(100, Ev::B);
+        q.pop();
+        q.schedule_in(50, Ev::A(0));
+        assert_eq!(q.pop(), Some((150, Ev::A(0))));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut q = EventQueue::new();
+            for i in 0..100u32 {
+                q.schedule(((i * 7) % 13) as Time, Ev::A(i));
+            }
+            let mut order = Vec::new();
+            while let Some((t, Ev::A(i))) = q.pop() {
+                order.push((t, i));
+            }
+            order
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,119 @@
+//! Bandwidth × latency channels: the TLM abstraction for PCIe, the AXI
+//! PS<->PL port and the DDR3 controller port.
+//!
+//! A [`Link`] is a serially-reusable resource: transfers queue behind each
+//! other (`busy_until`), each costing `latency + bytes/bandwidth`.  This is
+//! the standard "simple bus" TLM — enough to capture the contention and
+//! store-and-forward effects the paper's DMA design addresses, while
+//! burst-level interleaving is handled by `stream`.
+
+use super::{secs_to_ps, Time};
+
+/// A point-to-point channel with fixed bandwidth and per-transfer latency.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub name: &'static str,
+    bytes_per_s: f64,
+    latency_ps: Time,
+    busy_until: Time,
+    /// Total bytes carried (for utilization reports).
+    pub bytes_carried: u64,
+    /// Total time spent actually transferring.
+    pub busy_ps: Time,
+}
+
+impl Link {
+    pub fn new(name: &'static str, bytes_per_s: f64, latency_s: f64) -> Self {
+        assert!(bytes_per_s > 0.0);
+        Self {
+            name,
+            bytes_per_s,
+            latency_ps: secs_to_ps(latency_s),
+            busy_until: 0,
+            bytes_carried: 0,
+            busy_ps: 0,
+        }
+    }
+
+    /// Pure cost of moving `bytes` (no queueing).
+    #[inline]
+    pub fn transfer_ps(&self, bytes: u64) -> Time {
+        self.latency_ps + secs_to_ps(bytes as f64 / self.bytes_per_s)
+    }
+
+    /// Request a transfer that may start no earlier than `earliest`;
+    /// returns `(start, end)` after queueing behind in-flight traffic.
+    pub fn request(&mut self, earliest: Time, bytes: u64) -> (Time, Time) {
+        let start = earliest.max(self.busy_until);
+        let dur = self.transfer_ps(bytes);
+        let end = start + dur;
+        self.busy_until = end;
+        self.bytes_carried += bytes;
+        self.busy_ps += dur;
+        (start, end)
+    }
+
+    /// When the link frees up.
+    #[inline]
+    pub fn busy_until(&self) -> Time {
+        self.busy_until
+    }
+
+    /// Fraction of `[0, horizon]` spent transferring.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy_ps as f64 / horizon as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = 0;
+        self.bytes_carried = 0;
+        self.busy_ps = 0;
+    }
+
+    #[inline]
+    pub fn bytes_per_s(&self) -> f64 {
+        self.bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_is_latency_plus_bandwidth() {
+        // 1 GB/s, 1 µs latency: 1 MB costs 1µs + 1ms.
+        let l = Link::new("pcie", 1e9, 1e-6);
+        let ps = l.transfer_ps(1_000_000);
+        assert_eq!(ps, 1_000_000 + 1_000_000_000);
+    }
+
+    #[test]
+    fn queueing_serializes() {
+        let mut l = Link::new("axi", 1e9, 0.0);
+        let (s1, e1) = l.request(0, 1000); // 1 µs
+        let (s2, e2) = l.request(0, 1000); // queues behind
+        assert_eq!(s1, 0);
+        assert_eq!(e1, 1_000_000);
+        assert_eq!(s2, e1);
+        assert_eq!(e2, 2_000_000);
+        // A later-arriving request starts at its arrival.
+        let (s3, _) = l.request(10_000_000, 10);
+        assert_eq!(s3, 10_000_000);
+    }
+
+    #[test]
+    fn utilization_and_reset() {
+        let mut l = Link::new("ddr", 2e9, 0.0);
+        l.request(0, 2_000); // 1 µs busy
+        assert!((l.utilization(2_000_000) - 0.5).abs() < 1e-9);
+        assert_eq!(l.bytes_carried, 2000);
+        l.reset();
+        assert_eq!(l.busy_until(), 0);
+        assert_eq!(l.bytes_carried, 0);
+    }
+}

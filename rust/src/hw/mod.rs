@@ -1,0 +1,63 @@
+//! Transaction-level simulator of the paper's Zynq UltraScale+ platform.
+//!
+//! The reproduction band for this paper is hardware-gated (no ZCU102, no
+//! Vivado bitstream), so the platform is *simulated*: the clustering
+//! algorithms run functionally in `kmeans`/`coordinator` and report work
+//! counters ([`crate::kmeans::IterStats`]), and this module turns those
+//! counters into time on a modelled ZCU102 (DESIGN.md "Simulation
+//! substitutions" table).
+//!
+//! Components:
+//! - [`clock`]    — clock domains (A53 1.5 GHz / R5 600 MHz / PL 300 MHz).
+//! - [`engine`]   — a small discrete-event core (time-ordered event queue).
+//! - [`link`]     — bandwidth×latency channels (PCIe, AXI, DDR3 port).
+//! - [`stream`]   — event-driven producer/FIFO/consumer pipeline: models
+//!   the DDR3 → BRAM-FIFO → PL streaming path with finite buffering and
+//!   backpressure (paper section 4.2), burst by burst.
+//! - [`dma`]      — descriptor-based PCIe→DDR3 DMA engine (R5-managed).
+//! - [`pl`]       — the PL arithmetic-core array cost model (K×4 parallel
+//!   distance/compare/update pipelines).
+//! - [`resources`]— the Table 1 LUT/FF/BRAM/DSP utilization model.
+//! - [`zynq`]     — the composed platform used by `arch::*`.
+
+pub mod clock;
+pub mod dma;
+pub mod engine;
+pub mod link;
+pub mod pl;
+pub mod resources;
+pub mod stream;
+pub mod zynq;
+
+/// Simulation time in picoseconds (u64 wraps after ~5 months of simulated
+/// time — far beyond any run here).
+pub type Time = u64;
+
+/// Picoseconds per second.
+pub const PS_PER_S: f64 = 1e12;
+
+/// Convert seconds to [`Time`].
+#[inline]
+pub fn secs_to_ps(s: f64) -> Time {
+    debug_assert!(s >= 0.0);
+    (s * PS_PER_S).round() as Time
+}
+
+/// Convert [`Time`] to seconds.
+#[inline]
+pub fn ps_to_secs(t: Time) -> f64 {
+    t as f64 / PS_PER_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_round_trip() {
+        assert_eq!(secs_to_ps(1.0), 1_000_000_000_000);
+        assert_eq!(secs_to_ps(0.0), 0);
+        let t = secs_to_ps(3.25e-6);
+        assert!((ps_to_secs(t) - 3.25e-6).abs() < 1e-15);
+    }
+}

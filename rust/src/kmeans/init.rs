@@ -1,0 +1,152 @@
+//! Centroid initialization.
+//!
+//! The paper (section 5) distributes initial centroids "between data points
+//! uniformly" and Alg. 2 invokes Lloyd-style seeding per quarter; we
+//! provide uniform point sampling (the paper's method, default) plus
+//! k-means++ [Arthur & Vassilvitskii] as an extension for ablations.
+
+use super::Metric;
+use crate::data::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// Initialization strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// k distinct points sampled uniformly (the paper's scheme).
+    UniformSample,
+    /// k-means++ D²-weighted seeding (extension).
+    KmeansPlusPlus,
+}
+
+/// Pick `k` initial centroids from `data`.
+pub fn init_centroids(
+    data: &Dataset,
+    k: usize,
+    method: Init,
+    metric: Metric,
+    seed: u64,
+) -> Dataset {
+    assert!(k >= 1 && k <= data.len(), "k={} n={}", k, data.len());
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    match method {
+        Init::UniformSample => {
+            let idx = rng.sample_indices(data.len(), k);
+            data.gather(&idx)
+        }
+        Init::KmeansPlusPlus => kpp(data, k, metric, &mut rng),
+    }
+}
+
+fn kpp(data: &Dataset, k: usize, metric: Metric, rng: &mut Xoshiro256pp) -> Dataset {
+    let n = data.len();
+    let d = data.dims();
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    chosen.push(rng.below_usize(n));
+    // Distance of each point to the nearest chosen centroid so far.
+    let mut best: Vec<f32> = (0..n)
+        .map(|i| metric.dist(data.point(i), data.point(chosen[0])))
+        .collect();
+    while chosen.len() < k {
+        let total: f64 = best.iter().map(|&b| b as f64).sum();
+        let next = if total <= 0.0 {
+            // All remaining mass is zero (duplicate points): fall back to
+            // uniform choice among not-yet-chosen indices.
+            let mut i = rng.below_usize(n);
+            while chosen.contains(&i) && chosen.len() < n {
+                i = (i + 1) % n;
+            }
+            i
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &b) in best.iter().enumerate() {
+                target -= b as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        chosen.push(next);
+        let np = data.point(next).to_vec();
+        for i in 0..n {
+            let dd = metric.dist(data.point(i), &np);
+            if dd < best[i] {
+                best[i] = dd;
+            }
+        }
+    }
+    let _ = d;
+    data.gather(&chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+
+    #[test]
+    fn uniform_sample_picks_distinct_data_points() {
+        let s = generate_params(200, 3, 4, 0.2, 1.0, 1);
+        let c = init_centroids(&s.data, 10, Init::UniformSample, Metric::Euclid, 7);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.dims(), 3);
+        // Every centroid is an actual data point.
+        for cent in c.iter() {
+            assert!(s.data.iter().any(|p| p == cent));
+        }
+        // Distinct rows (sampling without replacement).
+        for i in 0..10 {
+            for j in i + 1..10 {
+                assert_ne!(c.point(i), c.point(j));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let s = generate_params(100, 2, 3, 0.1, 1.0, 2);
+        let a = init_centroids(&s.data, 5, Init::UniformSample, Metric::Euclid, 3);
+        let b = init_centroids(&s.data, 5, Init::UniformSample, Metric::Euclid, 3);
+        assert_eq!(a, b);
+        let c = init_centroids(&s.data, 5, Init::KmeansPlusPlus, Metric::Euclid, 3);
+        let d2 = init_centroids(&s.data, 5, Init::KmeansPlusPlus, Metric::Euclid, 3);
+        assert_eq!(c, d2);
+    }
+
+    #[test]
+    fn kpp_spreads_over_clusters() {
+        // Four well-separated planted clusters: k-means++ should seed in at
+        // least 3 distinct ones almost surely.
+        let s = generate_params(400, 2, 4, 0.01, 10.0, 5);
+        let c = init_centroids(&s.data, 4, Init::KmeansPlusPlus, Metric::Euclid, 11);
+        let mut hit = std::collections::BTreeSet::new();
+        for cent in c.iter() {
+            // nearest planted center
+            let mut best = (0usize, f32::INFINITY);
+            for (i, tc) in s.true_centroids.iter().enumerate() {
+                let d = Metric::Euclid.dist(cent, tc);
+                if d < best.1 {
+                    best = (i, d);
+                }
+            }
+            hit.insert(best.0);
+        }
+        assert!(hit.len() >= 3, "k-means++ hit only {hit:?}");
+    }
+
+    #[test]
+    fn kpp_handles_duplicate_points() {
+        let data = Dataset::from_flat(6, 1, vec![1.0; 6]);
+        let c = init_centroids(&data, 3, Init::KmeansPlusPlus, Metric::Euclid, 1);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        let data = Dataset::from_flat(2, 1, vec![0.0, 1.0]);
+        init_centroids(&data, 3, Init::UniformSample, Metric::Euclid, 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! Conventional Lloyd k-means (paper section 2).
+//!
+//! This is the algorithmic content of three of the paper's comparison
+//! points: the software-only solution, the "conventional FPGA-based"
+//! implementation (same work, PL-speed arithmetic) and the multi-core
+//! no-filtering architecture of [17].  The solver is instrumented so each
+//! iteration reports exactly `n * k` distance evaluations — the hardware
+//! models turn those counters into cycles.
+
+use super::{centroids_from_sums, max_sq_movement, metrics, IterStats, KmeansResult, Metric, RunStats};
+use crate::data::Dataset;
+
+/// Tunable knobs for a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydOpts {
+    pub metric: Metric,
+    /// Stop when max squared centroid movement drops below this.
+    pub tol: f32,
+    pub max_iters: usize,
+    /// Also accumulate the exact objective each iteration.
+    pub track_cost: bool,
+}
+
+impl Default for LloydOpts {
+    fn default() -> Self {
+        Self {
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            max_iters: 100,
+            track_cost: false,
+        }
+    }
+}
+
+/// Run Lloyd's algorithm from the given initial centroids.
+pub fn run(data: &Dataset, init: &Dataset, opts: &LloydOpts) -> KmeansResult {
+    assert_eq!(data.dims(), init.dims());
+    let n = data.len();
+    let d = data.dims();
+    let k = init.len();
+    let mut centroids = init.clone();
+    let mut assignments = vec![0u32; n];
+    let mut stats = RunStats::default();
+
+    let mut sums = vec![0f32; k * d];
+    let mut counts = vec![0u32; k];
+
+    for _ in 0..opts.max_iters {
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+        let mut cost = 0f64;
+
+        // Assignment + accumulation in one pass (the paper's PL does the
+        // same: distance, compare, update pipelines back to back).
+        for (i, p) in data.iter().enumerate() {
+            let (best, best_d) =
+                metrics::nearest(opts.metric, p, centroids.flat(), k, d);
+            assignments[i] = best as u32;
+            let row = &mut sums[best * d..(best + 1) * d];
+            for (j, &v) in p.iter().enumerate() {
+                row[j] += v;
+            }
+            counts[best] += 1;
+            if opts.track_cost {
+                cost += best_d as f64;
+            }
+        }
+
+        let next = centroids_from_sums(&sums, &counts, &centroids);
+        let moved = max_sq_movement(&centroids, &next);
+        centroids = next;
+
+        stats.iters.push(IterStats {
+            dist_evals: (n as u64) * (k as u64),
+            leaf_points: n as u64,
+            moved,
+            cost: opts.track_cost.then_some(cost),
+            ..Default::default()
+        });
+
+        if moved <= opts.tol {
+            stats.converged = true;
+            break;
+        }
+    }
+
+    KmeansResult {
+        centroids,
+        assignments,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::init::{init_centroids, Init};
+
+    fn well_separated() -> (crate::data::synthetic::Synthetic, Dataset) {
+        let s = generate_params(600, 2, 3, 0.05, 5.0, 7);
+        let init = init_centroids(&s.data, 3, Init::KmeansPlusPlus, Metric::Euclid, 3);
+        (s, init)
+    }
+
+    #[test]
+    fn converges_and_recovers_planted_centroids() {
+        let (s, init) = well_separated();
+        let r = run(&s.data, &init, &LloydOpts::default());
+        assert!(r.stats.converged, "did not converge");
+        assert!(r.stats.iterations() < 50);
+        // Each recovered centroid is near some planted center.
+        for c in r.centroids.iter() {
+            let best = s
+                .true_centroids
+                .iter()
+                .map(|t| metrics::sq_l2(c, t))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.05, "centroid {c:?} far from any planted center");
+        }
+    }
+
+    #[test]
+    fn counts_exact_work() {
+        let (s, init) = well_separated();
+        // tol = 0 can still converge early once movement is exactly 0.
+        let r = run(&s.data, &init, &LloydOpts { max_iters: 5, tol: 0.0, ..Default::default() });
+        assert!(r.stats.iterations() >= 1 && r.stats.iterations() <= 5);
+        for it in &r.stats.iters {
+            assert_eq!(it.dist_evals, 600 * 3);
+            assert_eq!(it.leaf_points, 600);
+            assert_eq!(it.node_visits, 0);
+        }
+        if r.stats.iterations() < 5 {
+            assert!(r.stats.converged);
+            assert_eq!(r.stats.iters.last().unwrap().moved, 0.0);
+        }
+    }
+
+    #[test]
+    fn cost_is_monotone_nonincreasing() {
+        let s = generate_params(500, 4, 6, 0.3, 1.0, 21);
+        let init = init_centroids(&s.data, 6, Init::UniformSample, Metric::Euclid, 9);
+        let r = run(
+            &s.data,
+            &init,
+            &LloydOpts {
+                track_cost: true,
+                max_iters: 40,
+                ..Default::default()
+            },
+        );
+        let costs: Vec<f64> = r.stats.iters.iter().map(|i| i.cost.unwrap()).collect();
+        for w in costs.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-6),
+                "objective increased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn manhattan_metric_runs() {
+        let s = generate_params(300, 3, 4, 0.2, 1.0, 5);
+        let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Manhattan, 2);
+        let r = run(
+            &s.data,
+            &init,
+            &LloydOpts {
+                metric: Metric::Manhattan,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.centroids.len(), 4);
+        assert_eq!(r.assignments.len(), 300);
+        assert!(r.sizes().iter().sum::<usize>() == 300);
+    }
+
+    #[test]
+    fn k_equals_one_assigns_everything() {
+        let s = generate_params(100, 2, 2, 0.5, 1.0, 8);
+        let init = s.data.gather(&[0]);
+        let r = run(&s.data, &init, &LloydOpts::default());
+        assert!(r.assignments.iter().all(|&a| a == 0));
+        // Centroid converges to the global mean.
+        let mut mean = vec![0f32; 2];
+        for p in s.data.iter() {
+            mean[0] += p[0];
+            mean[1] += p[1];
+        }
+        mean.iter_mut().for_each(|m| *m /= 100.0);
+        assert!(metrics::sq_l2(r.centroids.point(0), &mean) < 1e-6);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let s = generate_params(200, 2, 4, 0.4, 1.0, 10);
+        let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Euclid, 4);
+        let r = run(
+            &s.data,
+            &init,
+            &LloydOpts {
+                max_iters: 2,
+                tol: 0.0,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.stats.iterations(), 2);
+        assert!(!r.stats.converged);
+    }
+}

@@ -1,0 +1,149 @@
+//! Distance metrics.
+//!
+//! The paper's PL pipelines compute Manhattan distance (section 4 item 2);
+//! the kd-tree filtering analysis of Kanungo et al. [7] is stated for
+//! Euclidean.  Both are supported everywhere; Euclidean distances are kept
+//! *squared* end to end (monotone for arg-min and for the filtering
+//! `isFarther` test, and it spares the PL/kernel a sqrt — same trick the
+//! paper's fixed-point datapath uses).
+
+use std::str::FromStr;
+
+/// Supported distance metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Squared L2.
+    Euclid,
+    /// L1.
+    Manhattan,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Euclid => "euclid",
+            Metric::Manhattan => "manhattan",
+        }
+    }
+
+    /// Distance between two equal-length vectors.
+    #[inline]
+    pub fn dist(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::Euclid => sq_l2(a, b),
+            Metric::Manhattan => l1(a, b),
+        }
+    }
+}
+
+impl FromStr for Metric {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "euclid" | "euclidean" | "l2" => Ok(Metric::Euclid),
+            "manhattan" | "l1" => Ok(Metric::Manhattan),
+            other => anyhow::bail!("unknown metric `{other}` (euclid|manhattan)"),
+        }
+    }
+}
+
+/// Squared Euclidean distance. 4-way unrolled: this is the software
+/// baseline's inner loop, and the unroll is what a compiler would emit for
+/// the A53's dual-issue FPU — keeping the *software* cost model honest.
+#[inline]
+pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            let d = a[base + lane] - b[base + lane];
+            acc[lane] += d * d;
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// L1 (Manhattan) distance, same unroll structure.
+#[inline]
+pub fn l1(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            acc[lane] += (a[base + lane] - b[base + lane]).abs();
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += (a[i] - b[i]).abs();
+    }
+    s
+}
+
+/// Index and distance of the nearest centroid (first wins ties — matches
+/// the kernel's arg-min).
+#[inline]
+pub fn nearest(metric: Metric, p: &[f32], centroids: &[f32], k: usize, d: usize) -> (usize, f32) {
+    debug_assert_eq!(centroids.len(), k * d);
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let dist = metric.dist(p, &centroids[c * d..(c + 1) * d]);
+        if dist < best_d {
+            best_d = dist;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_values() {
+        assert_eq!(sq_l2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(l1(&[0.0, 0.0], &[3.0, -4.0]), 7.0);
+        assert_eq!(Metric::Euclid.dist(&[1.0], &[1.0]), 0.0);
+        assert_eq!(Metric::Manhattan.dist(&[1.0], &[-1.0]), 2.0);
+    }
+
+    #[test]
+    fn unroll_matches_naive_for_odd_lengths() {
+        for len in 1..=13 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32 * 0.7 - 2.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+            let naive_l2: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let naive_l1: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!((sq_l2(&a, &b) - naive_l2).abs() < 1e-4, "len {len}");
+            assert!((l1(&a, &b) - naive_l1).abs() < 1e-4, "len {len}");
+        }
+    }
+
+    #[test]
+    fn nearest_picks_minimum_and_breaks_ties_low() {
+        let cents = [0.0f32, 0.0, 10.0, 0.0, 0.0, 0.0]; // c0 == c2
+        let (i, d) = nearest(Metric::Euclid, &[1.0, 0.0], &cents, 3, 2);
+        assert_eq!(i, 0);
+        assert_eq!(d, 1.0);
+    }
+
+    #[test]
+    fn metric_parsing() {
+        assert_eq!("euclid".parse::<Metric>().unwrap(), Metric::Euclid);
+        assert_eq!("l2".parse::<Metric>().unwrap(), Metric::Euclid);
+        assert_eq!("manhattan".parse::<Metric>().unwrap(), Metric::Manhattan);
+        assert!("chebyshev".parse::<Metric>().is_err());
+        assert_eq!(Metric::Euclid.name(), "euclid");
+    }
+}

@@ -1,0 +1,245 @@
+//! K-means clustering algorithms (paper sections 2–4).
+//!
+//! Four interchangeable solvers over the same [`Dataset`] substrate:
+//!
+//! - [`lloyd`]     — conventional Lloyd iteration (the "software-only" and
+//!   "FPGA without optimization" baselines compute exactly this work).
+//! - [`filtering`] — the kd-tree filtering algorithm of Kanungo et al. [7]
+//!   (paper Alg. 1), in both a recursive form and a level-batched form
+//!   whose distance panels can be offloaded (to the PJRT "PL").
+//! - [`elkan`]     — triangle-inequality accelerated Lloyd [8], the
+//!   related-work baseline of [15].
+//! - [`twolevel`]  — the paper's contribution (Alg. 2): 4-way partition,
+//!   per-quarter filtering k-means, centroid merge, second-level pass.
+//!
+//! Every solver records per-iteration *work counters* ([`IterStats`]) —
+//! distance evaluations, kd-node visits, pruned subtree assignments — which
+//! are exactly what the hardware simulator charges cycles for.  This keeps
+//! "what the algorithm did" (measured) separate from "what the platform
+//! would take" (modelled), so the same run feeds both the functional
+//! results and the Fig. 2/3 timing reproductions.
+
+pub mod elkan;
+pub mod filtering;
+pub mod init;
+pub mod lloyd;
+pub mod metrics;
+pub mod twolevel;
+
+pub use metrics::Metric;
+
+use crate::data::Dataset;
+
+/// Work performed at one kd-tree depth during a filtering pass — the
+/// level-batched offload ships one distance-panel batch per level, and the
+/// BRAM/FIFO model sizes transfers from these histograms (paper section 4.2
+/// sizes its bridge "for each level of tree traversal ... separately").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LevelWork {
+    /// Interior-node visits at this depth (one midpoint job each).
+    pub interior_jobs: u64,
+    /// Leaf point jobs at this depth.
+    pub leaf_jobs: u64,
+    /// Total candidate distance evaluations across the level's jobs.
+    pub cand_evals: u64,
+    /// `is_farther` pruning tests at this depth (each costs a pair of
+    /// point-to-vertex distance evaluations — floating-point work the
+    /// paper's PL performs, like all other distance arithmetic).
+    pub prune_tests: u64,
+}
+
+impl LevelWork {
+    pub fn absorb(&mut self, other: &LevelWork) {
+        self.interior_jobs += other.interior_jobs;
+        self.leaf_jobs += other.leaf_jobs;
+        self.cand_evals += other.cand_evals;
+        self.prune_tests += other.prune_tests;
+    }
+}
+
+/// Work performed in one clustering iteration — the currency the hardware
+/// cost models consume.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IterStats {
+    /// Point-to-centroid distance evaluations (each `D` subtract/abs/mul +
+    /// accumulate chains) — the PL-offloadable arithmetic.
+    pub dist_evals: u64,
+    /// kd-tree nodes visited (pointer/bookkeeping work on the PS).
+    pub node_visits: u64,
+    /// Points handled individually at leaves.
+    pub leaf_points: u64,
+    /// Points assigned wholesale via a pruned-to-one-candidate subtree.
+    pub interior_assigns: u64,
+    /// `is_farther` pruning tests evaluated (PS comparator work).
+    pub prune_tests: u64,
+    /// Max squared centroid movement this iteration (convergence measure).
+    pub moved: f32,
+    /// Exact objective value if the solver computed one this iteration.
+    pub cost: Option<f64>,
+    /// Per-tree-depth work histogram (tree-based solvers only; empty for
+    /// Lloyd/Elkan).
+    pub levels: Vec<LevelWork>,
+}
+
+impl IterStats {
+    /// Merge counters from a parallel worker.
+    pub fn absorb(&mut self, other: &IterStats) {
+        self.dist_evals += other.dist_evals;
+        self.node_visits += other.node_visits;
+        self.leaf_points += other.leaf_points;
+        self.interior_assigns += other.interior_assigns;
+        self.prune_tests += other.prune_tests;
+        self.moved = self.moved.max(other.moved);
+        self.cost = match (self.cost, other.cost) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, b) => a.or(b),
+        };
+        if self.levels.len() < other.levels.len() {
+            self.levels.resize(other.levels.len(), LevelWork::default());
+        }
+        for (mine, theirs) in self.levels.iter_mut().zip(other.levels.iter()) {
+            mine.absorb(theirs);
+        }
+    }
+}
+
+/// Full-run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub iters: Vec<IterStats>,
+    pub converged: bool,
+}
+
+impl RunStats {
+    pub fn iterations(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn total_dist_evals(&self) -> u64 {
+        self.iters.iter().map(|i| i.dist_evals).sum()
+    }
+
+    pub fn total_node_visits(&self) -> u64 {
+        self.iters.iter().map(|i| i.node_visits).sum()
+    }
+}
+
+/// Result of a clustering run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    /// Final centroids, `[k, d]`.
+    pub centroids: Dataset,
+    /// Final assignment of every point to a centroid index.
+    pub assignments: Vec<u32>,
+    pub stats: RunStats,
+}
+
+impl KmeansResult {
+    /// Exact k-means objective (sum over points of distance to assigned
+    /// centroid) — used by tests to compare solvers.
+    pub fn objective(&self, data: &Dataset, metric: Metric) -> f64 {
+        let d = data.dims();
+        let mut acc = 0f64;
+        for (i, p) in data.iter().enumerate() {
+            let c = self.centroids.point(self.assignments[i] as usize);
+            acc += metric.dist(p, c) as f64;
+        }
+        let _ = d;
+        acc
+    }
+
+    /// Cluster sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.centroids.len()];
+        for &a in &self.assignments {
+            s[a as usize] += 1;
+        }
+        s
+    }
+}
+
+/// Convergence test shared by all solvers: max squared centroid movement
+/// (in squared-L2, regardless of assignment metric) below `tol`.
+pub(crate) fn max_sq_movement(old: &Dataset, new: &Dataset) -> f32 {
+    debug_assert_eq!(old.len(), new.len());
+    let mut worst = 0f32;
+    for i in 0..old.len() {
+        let m = metrics::sq_l2(old.point(i), new.point(i));
+        if m > worst {
+            worst = m;
+        }
+    }
+    worst
+}
+
+/// Recompute centroids from per-cluster sums/counts, keeping the previous
+/// centroid for empty clusters (the standard Lloyd rule; the paper's
+/// updater does the same — an empty cluster's register bank is not
+/// refreshed).
+pub(crate) fn centroids_from_sums(
+    sums: &[f32],
+    counts: &[u32],
+    prev: &Dataset,
+) -> Dataset {
+    let k = prev.len();
+    let d = prev.dims();
+    debug_assert_eq!(sums.len(), k * d);
+    let mut out = Vec::with_capacity(k * d);
+    for c in 0..k {
+        if counts[c] == 0 {
+            out.extend_from_slice(prev.point(c));
+        } else {
+            let inv = 1.0 / counts[c] as f32;
+            out.extend(sums[c * d..(c + 1) * d].iter().map(|&s| s * inv));
+        }
+    }
+    Dataset::from_flat(k, d, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterstats_absorb_merges() {
+        let mut a = IterStats {
+            dist_evals: 10,
+            node_visits: 5,
+            moved: 0.5,
+            cost: Some(1.0),
+            ..Default::default()
+        };
+        let b = IterStats {
+            dist_evals: 7,
+            node_visits: 2,
+            moved: 0.9,
+            cost: Some(2.5),
+            leaf_points: 3,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.dist_evals, 17);
+        assert_eq!(a.node_visits, 7);
+        assert_eq!(a.leaf_points, 3);
+        assert_eq!(a.moved, 0.9);
+        assert_eq!(a.cost, Some(3.5));
+    }
+
+    #[test]
+    fn centroids_from_sums_handles_empty_clusters() {
+        let prev = Dataset::from_flat(2, 2, vec![1.0, 1.0, 9.0, 9.0]);
+        let sums = vec![4.0, 6.0, 0.0, 0.0];
+        let counts = vec![2, 0];
+        let next = centroids_from_sums(&sums, &counts, &prev);
+        assert_eq!(next.point(0), &[2.0, 3.0]);
+        assert_eq!(next.point(1), &[9.0, 9.0]); // kept
+    }
+
+    #[test]
+    fn movement_metric() {
+        let a = Dataset::from_flat(2, 2, vec![0.0, 0.0, 1.0, 1.0]);
+        let b = Dataset::from_flat(2, 2, vec![0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(max_sq_movement(&a, &b), 1.0);
+        assert_eq!(max_sq_movement(&a, &a), 0.0);
+    }
+}

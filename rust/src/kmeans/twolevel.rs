@@ -1,0 +1,457 @@
+//! The paper's contribution: two-level k-clustering over 4 parallel
+//! kd-trees (Alg. 2).
+//!
+//! Level 1 — `Quarter`: the dataset is split four ways.  Two strategies:
+//!
+//! - [`Partition::RoundRobin`] (default): rows are dealt out modulo 4, so
+//!   each quarter is an i.i.d. sample of the full distribution.  The
+//!   paper's `Combine` step ("combine a cluster in each sub-group with
+//!   three clusters in other sub-groups with the nearest centroids") is
+//!   statistically consistent under this split: the four per-quarter
+//!   centroid sets are four noisy estimates of the *same* k centers, and
+//!   nearest-matching + count-weighted averaging de-noises them — which is
+//!   what makes the paper's "level 2 converges in very few iterations"
+//!   claim hold.
+//! - [`Partition::KdTop`]: the four grandchild subtrees of the full
+//!   kd-tree root (the paper's "dividing the original data-set ... at the
+//!   top of the kd-tree" reading).  Spatially coherent quarters make the
+//!   *level-1* trees cheaper, but per-quarter centroids then describe
+//!   different regions, so the merge is a weaker seed.  Kept as an
+//!   ablation (`bench ablate_partition` quantifies the gap).
+//!
+//! Each quarter gets its own kd-tree and an independent k-cluster
+//! filtering run (on one Cortex-A53 core each, in the real system).
+//!
+//! Merge — `Combine`: the 4×k level-1 centroids are merged back to k by
+//! greedy nearest-centroid matching across quarters (one cluster from each
+//! quarter per group), count-weighted averaging, exactly the
+//! "combine ... with the nearest centroids ... then update" step the paper
+//! describes.
+//!
+//! Level 2: a short filtering run over the *full* dataset tree seeded with
+//! the merged centroids — "the second level ... has initial values that
+//! are considerably close to the final result", so it converges in a few
+//! iterations.
+//!
+//! This module is the *sequential reference*; `coordinator::` runs the same
+//! phases across real worker threads with the PL offload.  Both call the
+//! same building blocks so they cannot drift.
+
+use super::filtering::{self, FilterOpts};
+use super::init::{init_centroids, Init};
+use super::{KmeansResult, Metric, RunStats};
+use crate::data::Dataset;
+use crate::kdtree::KdTree;
+
+/// Number of level-1 partitions — 4 in the paper (one per Cortex-A53).
+pub const QUARTERS: usize = 4;
+
+/// How `Quarter` splits the dataset (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Deal rows out modulo 4 (i.i.d. quarters; default).
+    RoundRobin,
+    /// The four depth-2 subtrees of the full kd-tree (spatial quarters).
+    KdTop,
+}
+
+#[derive(Clone, Debug)]
+pub struct TwoLevelOpts {
+    pub metric: Metric,
+    pub tol: f32,
+    /// Iteration cap for each level-1 run.
+    pub level1_max_iters: usize,
+    /// Iteration cap for the level-2 refinement.
+    pub level2_max_iters: usize,
+    pub init: Init,
+    pub partition: Partition,
+    pub seed: u64,
+}
+
+impl Default for TwoLevelOpts {
+    fn default() -> Self {
+        Self {
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            level1_max_iters: 100,
+            level2_max_iters: 100,
+            init: Init::UniformSample,
+            partition: Partition::RoundRobin,
+            seed: 1,
+        }
+    }
+}
+
+/// Everything a two-level run produces (the coordinator and the hardware
+/// models consume the per-phase statistics).
+#[derive(Clone, Debug)]
+pub struct TwoLevelResult {
+    /// Final clustering (level-2 output, over the full dataset).
+    pub result: KmeansResult,
+    /// Per-quarter level-1 statistics (these ran in parallel).
+    pub level1_stats: Vec<RunStats>,
+    /// Row count of each quarter.
+    pub quarter_sizes: Vec<usize>,
+    /// Level-2 statistics.
+    pub level2_stats: RunStats,
+    /// The merged (post-`Combine`) centroids that seeded level 2.
+    pub merged_centroids: Dataset,
+}
+
+/// `Quarter` (round-robin): deal rows out modulo `QUARTERS`.
+pub fn quarter_round_robin(data: &Dataset) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    let mut ids: Vec<Vec<u32>> = vec![Vec::with_capacity(data.len() / QUARTERS + 1); QUARTERS];
+    for i in 0..data.len() {
+        ids[i % QUARTERS].push(i as u32);
+    }
+    let datasets = ids
+        .iter()
+        .map(|rows| {
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            data.gather(&rows_usize)
+        })
+        .collect();
+    (datasets, ids)
+}
+
+/// `Quarter` (kd-top): the dataset split into `QUARTERS` spatially-coherent
+/// parts using the top of a kd-tree.  Returns per-quarter datasets and
+/// the original row index of every quartered row.
+pub fn quarter(data: &Dataset, tree: &KdTree) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    // The 4 subtrees two levels below the root; if the tree is too shallow
+    // (tiny or degenerate data), fall back to contiguous ranges.
+    let mut fronts: Vec<u32> = vec![0];
+    for _ in 0..2 {
+        let mut next = Vec::with_capacity(fronts.len() * 2);
+        for &ni in &fronts {
+            let n = &tree.nodes[ni as usize];
+            if n.is_leaf() {
+                next.push(ni);
+            } else {
+                next.push(n.left);
+                next.push(n.right);
+            }
+        }
+        fronts = next;
+    }
+
+    if fronts.len() < QUARTERS {
+        // Degenerate: pad by splitting contiguous ranges instead.
+        let (parts, offsets) = data.split_contiguous(QUARTERS);
+        let ids = offsets
+            .iter()
+            .zip(parts.iter())
+            .map(|(&o, p)| (o as u32..(o + p.len()) as u32).collect())
+            .collect();
+        return (parts, ids);
+    }
+
+    let mut datasets = Vec::with_capacity(QUARTERS);
+    let mut ids = Vec::with_capacity(QUARTERS);
+    for &ni in fronts.iter().take(QUARTERS) {
+        let node = &tree.nodes[ni as usize];
+        let rows: Vec<u32> = tree.node_points(node).to_vec();
+        let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+        datasets.push(data.gather(&rows_usize));
+        ids.push(rows);
+    }
+    (datasets, ids)
+}
+
+/// `Combine`: merge `QUARTERS` sets of k centroids down to k by greedy
+/// nearest matching (quarter 0's centroids anchor the groups) with
+/// count-weighted averaging.
+pub fn combine(
+    centroids: &[Dataset],
+    counts: &[Vec<usize>],
+    metric: Metric,
+) -> Dataset {
+    let q = centroids.len();
+    assert!(q >= 1);
+    let k = centroids[0].len();
+    let d = centroids[0].dims();
+    assert!(counts.iter().zip(centroids).all(|(c, ds)| c.len() == ds.len()));
+
+    let mut out = Vec::with_capacity(k * d);
+    // Used-markers per non-anchor quarter.
+    let mut used: Vec<Vec<bool>> = centroids.iter().map(|c| vec![false; c.len()]).collect();
+
+    for a in 0..k {
+        let anchor = centroids[0].point(a);
+        let mut wsum: Vec<f64> = anchor
+            .iter()
+            .map(|&v| v as f64 * counts[0][a] as f64)
+            .collect();
+        let mut wtot = counts[0][a] as f64;
+        for qi in 1..q {
+            // Nearest unused centroid of quarter qi to the anchor.
+            let mut best: Option<(usize, f32)> = None;
+            for c in 0..centroids[qi].len() {
+                if used[qi][c] {
+                    continue;
+                }
+                let dd = metric.dist(anchor, centroids[qi].point(c));
+                if best.map_or(true, |(_, bd)| dd < bd) {
+                    best = Some((c, dd));
+                }
+            }
+            if let Some((c, _)) = best {
+                used[qi][c] = true;
+                let w = counts[qi][c] as f64;
+                for (j, &v) in centroids[qi].point(c).iter().enumerate() {
+                    wsum[j] += v as f64 * w;
+                }
+                wtot += w;
+            }
+        }
+        if wtot <= 0.0 {
+            out.extend_from_slice(anchor);
+        } else {
+            out.extend(wsum.iter().map(|&v| (v / wtot) as f32));
+        }
+    }
+    Dataset::from_flat(k, d, out)
+}
+
+/// Run the full two-level algorithm (sequential reference).
+pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> TwoLevelResult {
+    assert!(k >= 1 && k <= data.len());
+    let full_tree = KdTree::build(data);
+    let (quarters, _ids) = match opts.partition {
+        Partition::RoundRobin => quarter_round_robin(data),
+        Partition::KdTop => quarter(data, &full_tree),
+    };
+
+    // Tiny-data guard: if any quarter can't host k clusters, the two-level
+    // scheme degenerates to a plain filtering run (the paper's regime is
+    // always n >> 4k).
+    if quarters.iter().any(|q| q.len() < k) {
+        let init = init_centroids(data, k, opts.init, opts.metric, opts.seed);
+        let result = filtering::run(
+            data,
+            &full_tree,
+            &init,
+            &FilterOpts {
+                metric: opts.metric,
+                tol: opts.tol,
+                max_iters: opts.level2_max_iters,
+            },
+        );
+        let level2_stats = result.stats.clone();
+        let merged = result.centroids.clone();
+        return TwoLevelResult {
+            result,
+            level1_stats: vec![RunStats::default(); QUARTERS],
+            quarter_sizes: quarters.iter().map(|q| q.len()).collect(),
+            level2_stats,
+            merged_centroids: merged,
+        };
+    }
+
+    // ---- Level 1: independent k-clustering per quarter -------------------
+    let fopts = FilterOpts {
+        metric: opts.metric,
+        tol: opts.tol,
+        max_iters: opts.level1_max_iters,
+    };
+    let mut l1_centroids: Vec<Dataset> = Vec::with_capacity(QUARTERS);
+    let mut l1_counts: Vec<Vec<usize>> = Vec::with_capacity(QUARTERS);
+    let mut level1_stats = Vec::with_capacity(QUARTERS);
+    for (qi, qdata) in quarters.iter().enumerate() {
+        let tree = KdTree::build(qdata);
+        let init = init_centroids(
+            qdata,
+            k,
+            opts.init,
+            opts.metric,
+            opts.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9),
+        );
+        let r = filtering::run(qdata, &tree, &init, &fopts);
+        l1_counts.push(r.sizes());
+        l1_centroids.push(r.centroids);
+        level1_stats.push(r.stats);
+    }
+
+    // ---- Combine ----------------------------------------------------------
+    let merged = combine(&l1_centroids, &l1_counts, opts.metric);
+
+    // ---- Level 2: refine over the full dataset ----------------------------
+    let result = filtering::run(
+        data,
+        &full_tree,
+        &merged,
+        &FilterOpts {
+            metric: opts.metric,
+            tol: opts.tol,
+            max_iters: opts.level2_max_iters,
+        },
+    );
+    let level2_stats = result.stats.clone();
+
+    TwoLevelResult {
+        result,
+        level1_stats,
+        quarter_sizes: quarters.iter().map(|q| q.len()).collect(),
+        level2_stats,
+        merged_centroids: merged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::lloyd::{self, LloydOpts};
+
+    #[test]
+    fn quarter_partitions_everything() {
+        let s = generate_params(1000, 3, 4, 0.3, 1.0, 11);
+        let tree = KdTree::build(&s.data);
+        let (parts, ids) = quarter(&s.data, &tree);
+        assert_eq!(parts.len(), QUARTERS);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 1000);
+        // ids form a partition of 0..n
+        let mut all: Vec<u32> = ids.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<u32>>());
+        // gathered rows match original data
+        for (p, id) in parts.iter().zip(ids.iter()) {
+            for (row, &orig) in id.iter().enumerate() {
+                assert_eq!(p.point(row), s.data.point(orig as usize));
+            }
+        }
+        // Quarters are spatially coherent: each has a smaller bbox extent
+        // than the full data on the first split dimension.
+        let (full_min, full_max) = s.data.bounds();
+        let full_ext: f32 = full_min
+            .iter()
+            .zip(&full_max)
+            .map(|(a, b)| b - a)
+            .fold(0.0, f32::max);
+        let mut smaller = 0;
+        for p in &parts {
+            let (mn, mx) = p.bounds();
+            let ext: f32 = mn.iter().zip(&mx).map(|(a, b)| b - a).fold(0.0, f32::max);
+            if ext < full_ext * 0.95 {
+                smaller += 1;
+            }
+        }
+        assert!(smaller >= 2, "kd-quartering should shrink extents");
+    }
+
+    #[test]
+    fn quarter_degenerate_small_data() {
+        let s = generate_params(3, 2, 1, 0.1, 1.0, 1);
+        let tree = KdTree::build(&s.data);
+        let (parts, ids) = quarter(&s.data, &tree);
+        assert_eq!(parts.len(), QUARTERS);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 3);
+        let mut all: Vec<u32> = ids.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn combine_weighted_average() {
+        // Two quarters, k=2, trivially matched.
+        let c0 = Dataset::from_flat(2, 1, vec![0.0, 10.0]);
+        let c1 = Dataset::from_flat(2, 1, vec![2.0, 12.0]);
+        let merged = combine(
+            &[c0, c1],
+            &[vec![1, 3], vec![3, 1]],
+            Metric::Euclid,
+        );
+        // group 0: (0*1 + 2*3)/4 = 1.5 ; group 1: (10*3 + 12*1)/4 = 10.5
+        assert_eq!(merged.point(0), &[1.5]);
+        assert_eq!(merged.point(1), &[10.5]);
+    }
+
+    #[test]
+    fn combine_uses_each_centroid_once() {
+        // Quarter 1 has both centroids near anchor 0; greedy must not
+        // assign the same one twice.
+        let c0 = Dataset::from_flat(2, 1, vec![0.0, 1.0]);
+        let c1 = Dataset::from_flat(2, 1, vec![0.1, 0.2]);
+        let merged = combine(&[c0, c1], &[vec![1, 1], vec![1, 1]], Metric::Euclid);
+        // anchor 0 takes 0.1; anchor 1 must take 0.2 (not 0.1 again).
+        assert_eq!(merged.point(0), &[0.05]);
+        assert_eq!(merged.point(1), &[0.6]);
+    }
+
+    #[test]
+    fn two_level_recovers_planted_clusters() {
+        let s = generate_params(4000, 3, 6, 0.05, 5.0, 17);
+        // k-means++ seeding per quarter: uniform seeding can hit a local
+        // optimum that misses a planted cluster (true of any Lloyd
+        // variant, not a two-level artifact).
+        let r = run(
+            &s.data,
+            6,
+            &TwoLevelOpts { seed: 3, init: Init::KmeansPlusPlus, ..Default::default() },
+        );
+        assert!(r.result.stats.converged);
+        // Every planted center has a recovered centroid nearby.
+        for t in s.true_centroids.iter() {
+            let best = r
+                .result
+                .centroids
+                .iter()
+                .map(|c| Metric::Euclid.dist(c, t))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.1, "planted center {t:?} missed (best {best})");
+        }
+    }
+
+    #[test]
+    fn level2_converges_faster_than_cold_start() {
+        // The paper's claim: level-2 starts near the answer, so it needs
+        // (much) fewer iterations than clustering from scratch.  Judged
+        // over several seeds since k-means iteration counts are noisy.
+        let mut l2_total = 0usize;
+        let mut cold_total = 0usize;
+        for seed in [5u64, 6, 7, 8, 9] {
+            let s = generate_params(6000, 4, 8, 0.1, 3.0, seed * 13 + 1);
+            let r = run(&s.data, 8, &TwoLevelOpts { seed, ..Default::default() });
+            let cold_init =
+                init_centroids(&s.data, 8, Init::UniformSample, Metric::Euclid, seed);
+            let cold = lloyd::run(
+                &s.data,
+                &cold_init,
+                &LloydOpts { tol: 1e-6, max_iters: 100, ..Default::default() },
+            );
+            l2_total += r.level2_stats.iterations();
+            cold_total += cold.stats.iterations();
+        }
+        assert!(
+            l2_total < cold_total,
+            "level2 {l2_total} total iters vs cold {cold_total}"
+        );
+    }
+
+    #[test]
+    fn two_level_objective_close_to_lloyd() {
+        let s = generate_params(3000, 3, 5, 0.2, 2.0, 29);
+        let r = run(&s.data, 5, &TwoLevelOpts { seed: 7, ..Default::default() });
+        let init = init_centroids(&s.data, 5, Init::KmeansPlusPlus, Metric::Euclid, 7);
+        let l = lloyd::run(&s.data, &init, &LloydOpts::default());
+        let obj_t = r.result.objective(&s.data, Metric::Euclid);
+        let obj_l = l.objective(&s.data, Metric::Euclid);
+        // Same ballpark (k-means is non-convex; both are local optima).
+        assert!(
+            obj_t <= obj_l * 1.5,
+            "two-level objective {obj_t} far worse than lloyd {obj_l}"
+        );
+    }
+
+    #[test]
+    fn tiny_dataset_falls_back() {
+        let s = generate_params(10, 2, 2, 0.1, 1.0, 31);
+        let r = run(&s.data, 5, &TwoLevelOpts::default());
+        assert_eq!(r.result.centroids.len(), 5);
+        assert_eq!(r.result.assignments.len(), 10);
+        // Fallback leaves level-1 stats empty.
+        assert!(r.level1_stats.iter().all(|s| s.iterations() == 0));
+    }
+}

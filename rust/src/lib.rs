@@ -1,0 +1,29 @@
+//! # muchswift — MUCH-SWIFT reproduction
+//!
+//! A full-system reproduction of *"Using Multi-Core HW/SW Co-design
+//! Architecture for Accelerating K-means Clustering Algorithm"* (Kamali,
+//! 2018): the kd-tree filtering algorithm, the two-level 4-way parallel
+//! clustering scheme, and a transaction-level simulator of the paper's
+//! Zynq UltraScale+ platform, with the distance/compare/update arithmetic
+//! offloaded to AOT-compiled JAX/Pallas kernels executed through PJRT
+//! (the `xla` crate) — Python never runs at request time.
+//!
+//! Layering (see DESIGN.md):
+//! - `util`, `config`, `data` — substrates (offline toolchain gaps included)
+//! - `kdtree`, `kmeans` — the algorithms (Alg. 1 / Alg. 2 + baselines)
+//! - `hw` — the ZCU102 platform model (clock domains, DMA, DDR3, BRAM, PL)
+//! - `runtime` — PJRT artifact loading & execution (the "PL" compute)
+//! - `coordinator` — the deployable system: leader + 4 workers + offload
+//! - `arch` — the paper's comparison architectures as cost models
+//! - `experiments` — regenerates every figure/table of the evaluation
+
+pub mod config;
+pub mod data;
+pub mod kdtree;
+pub mod kmeans;
+pub mod util;
+pub mod hw;
+pub mod runtime;
+pub mod coordinator;
+pub mod arch;
+pub mod experiments;

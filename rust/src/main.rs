@@ -1,0 +1,247 @@
+//! `muchswift` — CLI for the MUCH-SWIFT reproduction.
+//!
+//! Subcommands:
+//!   cluster     run the coordinator (two-level k-means) on synthetic/CSV data
+//!   simulate    evaluate an architecture's ZCU102-scale time on a workload
+//!   experiment  regenerate a paper figure/table (fig2a|fig2b|fig3a|fig3b|table1|headline|all)
+//!   gen-data    write a synthetic dataset to CSV
+//!   info        platform, resource model and artifact capabilities
+
+use muchswift::arch::{self, ArchKind};
+use muchswift::config::{PlatformConfig, WorkloadConfig};
+use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::data::{csv, synthetic};
+use muchswift::experiments::{fig2, fig3, table1};
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::twolevel::Partition;
+use muchswift::kmeans::Metric;
+use muchswift::runtime::{self, PjrtRuntime};
+use muchswift::util::cli::Command;
+use muchswift::util::logger;
+use std::path::Path;
+use std::sync::Arc;
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("cluster", "run two-level k-means through the coordinator")
+            .opt("n", "100000", "synthetic points (ignored with an input file)")
+            .opt("d", "15", "dimensions")
+            .opt("k", "8", "clusters")
+            .opt("sigma", "0.15", "cluster stddev")
+            .opt("seed", "42", "rng seed")
+            .opt("metric", "euclid", "euclid|manhattan")
+            .opt("backend", "pjrt", "pjrt|cpu (panel compute substrate)")
+            .opt("partition", "round-robin", "round-robin|kd-top")
+            .opt("init", "uniform", "uniform|kmeans++")
+            .pos("input", "optional CSV dataset (overrides synthetic)"),
+        Command::new("simulate", "evaluate an architecture cost model")
+            .req("arch", "sw-lloyd|sw-filter|sw-elkan|fpga-lloyd-single|fpga-filter-single|fpga-lloyd-multi|much-swift|all")
+            .opt("n", "1000000", "points")
+            .opt("d", "15", "dimensions")
+            .opt("k", "20", "clusters")
+            .opt("sigma", "0.15", "cluster stddev")
+            .opt("seed", "42", "rng seed"),
+        Command::new("experiment", "regenerate a paper figure/table")
+            .pos("id", "fig2a|fig2b|fig3a|fig3b|table1|headline|all"),
+        Command::new("gen-data", "write a synthetic dataset to CSV")
+            .opt("n", "10000", "points")
+            .opt("d", "3", "dimensions")
+            .opt("k", "8", "planted clusters")
+            .opt("sigma", "0.15", "cluster stddev")
+            .opt("seed", "42", "rng seed")
+            .pos("output", "output CSV path"),
+        Command::new("info", "platform + artifact capabilities"),
+    ]
+}
+
+fn usage(cmds: &[Command]) -> String {
+    let mut s = String::from("muchswift — MUCH-SWIFT reproduction\n\ncommands:\n");
+    for c in cmds {
+        s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+    }
+    s.push_str("\nuse `muchswift <command> --help` for options\n");
+    s
+}
+
+fn main() {
+    logger::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmds = commands();
+    let Some(cmd_name) = args.first() else {
+        print!("{}", usage(&cmds));
+        return Ok(());
+    };
+    if cmd_name == "--help" || cmd_name == "-h" {
+        print!("{}", usage(&cmds));
+        return Ok(());
+    }
+    let Some(cmd) = cmds.iter().find(|c| c.name == cmd_name) else {
+        anyhow::bail!("unknown command `{cmd_name}` (try --help)");
+    };
+    let rest = &args[1..];
+    if rest.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let m = cmd.parse(rest)?;
+
+    match m.command {
+        "cluster" => {
+            let metric: Metric = m.str("metric").parse()?;
+            let data = if let Some(path) = &m.positional {
+                println!("loading {path} ...");
+                csv::load(Path::new(path))?
+            } else {
+                let w = WorkloadConfig {
+                    n: m.usize("n")?,
+                    d: m.usize("d")?,
+                    k: m.usize("k")?,
+                    true_k: m.usize("k")?,
+                    sigma: m.f64("sigma")? as f32,
+                    seed: m.u64("seed")?,
+                    metric,
+                    ..Default::default()
+                };
+                w.validate()?;
+                synthetic::generate(&w).data
+            };
+            let backend = match m.str("backend") {
+                "cpu" => Backend::Cpu,
+                "pjrt" => {
+                    let rt = PjrtRuntime::load(&runtime::default_artifact_dir())?;
+                    Backend::Pjrt(Arc::new(rt))
+                }
+                other => anyhow::bail!("unknown backend `{other}`"),
+            };
+            let opts = CoordinatorOpts {
+                k: m.usize("k")?,
+                metric,
+                partition: match m.str("partition") {
+                    "round-robin" => Partition::RoundRobin,
+                    "kd-top" => Partition::KdTop,
+                    other => anyhow::bail!("unknown partition `{other}`"),
+                },
+                init: match m.str("init") {
+                    "uniform" => Init::UniformSample,
+                    "kmeans++" => Init::KmeansPlusPlus,
+                    other => anyhow::bail!("unknown init `{other}`"),
+                },
+                seed: m.u64("seed")?,
+                ..Default::default()
+            };
+            let coord = Coordinator::new(backend);
+            let out = coord.run(&data, &opts);
+            println!("converged: {}", out.result.stats.converged);
+            println!(
+                "level-1 iterations per quarter: {:?}",
+                out.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
+            );
+            println!("level-2 iterations: {}", out.level2_stats.iterations());
+            println!("cluster sizes: {:?}", out.result.sizes());
+            println!(
+                "objective: {:.6e}",
+                out.result.objective(&data, metric)
+            );
+            println!("{}", out.metrics.summary());
+        }
+        "simulate" => {
+            let w = WorkloadConfig {
+                n: m.usize("n")?,
+                d: m.usize("d")?,
+                k: m.usize("k")?,
+                true_k: m.usize("k")?,
+                sigma: m.f64("sigma")? as f32,
+                seed: m.u64("seed")?,
+                max_iters: 60,
+                ..Default::default()
+            };
+            w.validate()?;
+            let archs: Vec<ArchKind> = if m.str("arch") == "all" {
+                ArchKind::all().to_vec()
+            } else {
+                vec![ArchKind::parse(m.str("arch"))?]
+            };
+            for a in archs {
+                println!("{}", arch::evaluate(a, &w).row());
+            }
+        }
+        "experiment" => {
+            let id = m.positional.as_deref().unwrap_or("all");
+            run_experiment(id)?;
+        }
+        "gen-data" => {
+            let out = m
+                .positional
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("gen-data needs an output path"))?;
+            let s = synthetic::generate_params(
+                m.usize("n")?,
+                m.usize("d")?,
+                m.usize("k")?,
+                m.f64("sigma")? as f32,
+                1.0,
+                m.u64("seed")?,
+            );
+            csv::save(&s.data, Path::new(&out))?;
+            println!("wrote {} points to {out}", s.data.len());
+        }
+        "info" => {
+            let cfg = PlatformConfig::zcu102();
+            println!("platform: {} ({} A53 @ {:.1} GHz, {} R5 @ {:.0} MHz, PL @ {:.0} MHz)",
+                cfg.name, cfg.a53_cores, cfg.a53_freq_hz / 1e9, cfg.r5_cores,
+                cfg.r5_freq_hz / 1e6, cfg.pl_freq_hz / 1e6);
+            println!("{}", table1::render());
+            match runtime::PjrtRuntime::load(&runtime::default_artifact_dir()) {
+                Ok(rt) => {
+                    println!("artifacts ({}):", rt.manifest().entries.len());
+                    for a in &rt.manifest().entries {
+                        println!(
+                            "  {:<36} kind={:?} metric={} n={} d={} k={}",
+                            a.name, a.kind, a.metric.name(), a.n, a.d, a.k
+                        );
+                    }
+                }
+                Err(e) => println!("artifacts: unavailable ({e})"),
+            }
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn run_experiment(id: &str) -> anyhow::Result<()> {
+    let run_one = |id: &str| -> anyhow::Result<()> {
+        match id {
+            "fig2a" => print!("{}", fig2::fig2a().render()),
+            "fig2b" => print!("{}", fig2::fig2b().render()),
+            "fig3a" => print!("{}", fig3::fig3a().render()),
+            "fig3b" => print!("{}", fig3::fig3b().render()),
+            "table1" => print!("{}", table1::render()),
+            "headline" => {
+                let (sw, ms, speedup) = fig2::headline();
+                println!("== headline: much-swift vs software-only Lloyd ==");
+                println!("software-only: {sw:.3} s");
+                println!("much-swift:    {ms:.4} s");
+                println!("speedup:       {speedup:.0}x   (paper: ~330x)");
+            }
+            other => anyhow::bail!("unknown experiment `{other}`"),
+        }
+        Ok(())
+    };
+    if id == "all" {
+        for e in ["table1", "fig2a", "fig2b", "fig3a", "fig3b", "headline"] {
+            run_one(e)?;
+            println!();
+        }
+    } else {
+        run_one(id)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! The manifest (`artifacts/manifest.json`) lists every AOT-lowered HLO
+//! module with its kind, metric and padded shape.  The runtime picks the
+//! *smallest* variant a request fits into after padding (N up with
+//! zero-weight rows, D up with zero columns, K up with sentinel centroid
+//! rows — the contract tested end-to-end in `python/tests`).
+
+use crate::kmeans::Metric;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Padded-centroid sentinel — must match `ref.PAD_SENTINEL` on the python
+/// side (the manifest carries it so drift is caught at load time).
+pub const PAD_SENTINEL: f32 = 1.0e17;
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Full Lloyd iteration: (points, centroids, weights) ->
+    /// (assignments, sums, counts, cost).
+    Lloyd,
+    /// Filtering distance panels: (mids, cands) -> dists.
+    Filter,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: Kind,
+    pub metric: Metric,
+    /// Block size (points for Lloyd, jobs for Filter).
+    pub n: usize,
+    /// Padded dimensionality.
+    pub d: usize,
+    /// Padded cluster/candidate count.
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<Artifact>,
+    pub pad_sentinel: f32,
+}
+
+impl Manifest {
+    /// Load from `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let mpath = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&mpath).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            )
+        })?;
+        Self::parse(&src, dir)
+    }
+
+    /// Parse manifest JSON; `dir` anchors relative artifact paths.
+    pub fn parse(src: &str, dir: &Path) -> anyhow::Result<Self> {
+        let root = Json::parse(src)?;
+        let version = root
+            .req("format_version")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bad format_version"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let pad_sentinel = root.req("pad_sentinel")?.as_f64().unwrap_or(0.0) as f32;
+        anyhow::ensure!(
+            (pad_sentinel - PAD_SENTINEL).abs() / PAD_SENTINEL < 1e-6,
+            "pad sentinel drift: manifest {pad_sentinel} vs runtime {PAD_SENTINEL}"
+        );
+        let mut entries = Vec::new();
+        for e in root
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("entries must be an array"))?
+        {
+            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+            let kind = match e.req("kind")?.as_str() {
+                Some("lloyd") => Kind::Lloyd,
+                Some("filter") => Kind::Filter,
+                other => anyhow::bail!("unknown artifact kind {other:?} in `{name}`"),
+            };
+            let metric: Metric = e
+                .req("metric")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("metric must be a string"))?
+                .parse()?;
+            let n = e.req("n")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad n"))?;
+            let d = e.req("d")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad d"))?;
+            let k = e.req("k")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad k"))?;
+            let file = e
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("bad file"))?;
+            entries.push(Artifact {
+                name,
+                kind,
+                metric,
+                n,
+                d,
+                k,
+                path: dir.join(file),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no artifacts");
+        Ok(Self {
+            entries,
+            pad_sentinel,
+        })
+    }
+
+    /// Smallest variant of `kind`/`metric` that fits `(d, k)` after
+    /// padding (block size `n` is always padded/looped by the caller).
+    /// Among equal (d, k), prefers the smallest block.
+    pub fn select(&self, kind: Kind, metric: Metric, d: usize, k: usize) -> Option<&Artifact> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == kind && a.metric == metric && a.d >= d && a.k >= k)
+            .min_by_key(|a| (a.d * a.k, a.d, a.k, a.n))
+    }
+
+    /// Like [`select`](Self::select) but block-size aware (§Perf L1-1):
+    /// among the fitting (d, k) variants, pick the largest block not
+    /// exceeding `jobs` (amortizing per-execution overhead), falling back
+    /// to the smallest available block for small batches.
+    pub fn select_block(
+        &self,
+        kind: Kind,
+        metric: Metric,
+        d: usize,
+        k: usize,
+        jobs: usize,
+    ) -> Option<&Artifact> {
+        let best = self.select(kind, metric, d, k)?;
+        let (bd, bk) = (best.d, best.k);
+        self.entries
+            .iter()
+            .filter(|a| a.kind == kind && a.metric == metric && a.d == bd && a.k == bk)
+            .filter(|a| a.n <= jobs)
+            .max_by_key(|a| a.n)
+            .or(Some(best))
+    }
+
+    /// All `(d, k)` capability corners for a kind/metric (for reports).
+    pub fn capabilities(&self, kind: Kind, metric: Metric) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == kind && a.metric == metric)
+            .map(|a| (a.d, a.k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "format_version": 1,
+          "pad_sentinel": 1e+17,
+          "entries": [
+            {"name": "lloyd_euclid_n1024_d4_k8", "kind": "lloyd", "metric": "euclid",
+             "n": 1024, "d": 4, "k": 8, "file": "a.hlo.txt"},
+            {"name": "lloyd_euclid_n1024_d16_k32", "kind": "lloyd", "metric": "euclid",
+             "n": 1024, "d": 16, "k": 32, "file": "b.hlo.txt"},
+            {"name": "lloyd_euclid_n1024_d16_k128", "kind": "lloyd", "metric": "euclid",
+             "n": 1024, "d": 16, "k": 128, "file": "c.hlo.txt"},
+            {"name": "filter_manhattan_j256_d16_k32", "kind": "filter", "metric": "manhattan",
+             "n": 256, "d": 16, "k": 32, "file": "d.hlo.txt"}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn select_block_prefers_largest_fitting() {
+        let src = r#"{
+          "format_version": 1,
+          "pad_sentinel": 1e+17,
+          "entries": [
+            {"name": "f256", "kind": "filter", "metric": "euclid",
+             "n": 256, "d": 16, "k": 32, "file": "a"},
+            {"name": "f1024", "kind": "filter", "metric": "euclid",
+             "n": 1024, "d": 16, "k": 32, "file": "b"}
+          ]
+        }"#;
+        let m = Manifest::parse(src, Path::new("/x")).unwrap();
+        // Big batch: take the 1024 block.
+        assert_eq!(m.select_block(Kind::Filter, Metric::Euclid, 15, 20, 5000).unwrap().name, "f1024");
+        // Mid batch: 1024 doesn't fit under jobs, take 256.
+        assert_eq!(m.select_block(Kind::Filter, Metric::Euclid, 15, 20, 600).unwrap().name, "f256");
+        // Tiny batch: smallest block is the fallback.
+        assert_eq!(m.select_block(Kind::Filter, Metric::Euclid, 15, 20, 10).unwrap().name, "f256");
+        // plain select prefers the small block on ties.
+        assert_eq!(m.select(Kind::Filter, Metric::Euclid, 15, 20).unwrap().name, "f256");
+    }
+
+    #[test]
+    fn parse_and_select_smallest_fit() {
+        let m = Manifest::parse(sample(), Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        let a = m.select(Kind::Lloyd, Metric::Euclid, 3, 5).unwrap();
+        assert_eq!(a.name, "lloyd_euclid_n1024_d4_k8");
+        let a = m.select(Kind::Lloyd, Metric::Euclid, 15, 20).unwrap();
+        assert_eq!(a.name, "lloyd_euclid_n1024_d16_k32");
+        let a = m.select(Kind::Lloyd, Metric::Euclid, 15, 100).unwrap();
+        assert_eq!(a.name, "lloyd_euclid_n1024_d16_k128");
+        // No euclid filter in this manifest.
+        assert!(m.select(Kind::Filter, Metric::Euclid, 4, 4).is_none());
+        // Too big to fit anything.
+        assert!(m.select(Kind::Lloyd, Metric::Euclid, 100, 8).is_none());
+        // Paths are anchored at the artifact dir.
+        assert_eq!(a.path, Path::new("/tmp/artifacts").join("c.hlo.txt"));
+    }
+
+    #[test]
+    fn sentinel_drift_detected() {
+        let bad = sample().replace("1e+17", "1e+9");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_kinds() {
+        let bad = sample().replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+        let bad = sample().replace("\"kind\": \"lloyd\"", "\"kind\": \"conv\"");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+        assert!(Manifest::parse("{}", Path::new("/x")).is_err());
+    }
+}

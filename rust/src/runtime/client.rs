@@ -1,0 +1,263 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client — the functional stand-in for the paper's PL.
+//!
+//! Lifecycle: `PjrtRuntime::load` compiles every needed artifact **once**
+//! at startup (the analogue of bitstream configuration); the request path
+//! then only pads buffers and calls `execute`.  Python is never involved —
+//! the HLO text is self-contained.
+
+use super::artifacts::{Artifact, Kind, Manifest, PAD_SENTINEL};
+use crate::data::Dataset;
+use crate::kmeans::Metric;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Outputs of one Lloyd block execution (valid region only).
+#[derive(Clone, Debug)]
+pub struct LloydBlockOut {
+    pub assignments: Vec<i32>,
+    pub sums: Vec<f32>,
+    pub counts: Vec<f32>,
+    pub cost: f32,
+}
+
+/// Execution statistics (for perf reports and the coordinator metrics).
+/// Atomic so the runtime can be shared across worker threads.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: AtomicU64,
+    pub blocks_padded: AtomicU64,
+    /// Accumulated execution seconds, stored as f64 bits.
+    exec_ns: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn record(&self, elapsed: std::time::Duration, padded: bool) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        if padded {
+            self.blocks_padded.fetch_add(1, Ordering::Relaxed);
+        }
+        self.exec_ns
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn exec_seconds(&self) -> f64 {
+        self.exec_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+}
+
+/// A compiled artifact plus its shape info.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    art: Artifact,
+}
+
+/// The PJRT-backed "PL".
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: HashMap<String, Loaded>,
+    pub stats: RuntimeStats,
+}
+
+// SAFETY: the `xla` crate wraps raw PJRT pointers without auto traits, but
+// the underlying XLA CPU objects are documented thread-safe:
+// `PjRtLoadedExecutable::Execute` and `PjRtClient` may be called from
+// multiple threads, and after `load` the maps are never mutated.  The
+// coordinator additionally serializes access through a single PL-service
+// thread (see `coordinator::offload`), mirroring the paper's single DMA
+// manager.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Load every artifact in `dir`'s manifest and compile it on the CPU
+    /// PJRT client.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "pjrt: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut loaded = HashMap::new();
+        for art in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log::debug!("pjrt: compiled {}", art.name);
+            loaded.insert(art.name.clone(), Loaded { exe, art: art.clone() });
+        }
+        Ok(Self {
+            client,
+            manifest,
+            loaded,
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn pick(&self, kind: Kind, metric: Metric, d: usize, k: usize) -> anyhow::Result<&Loaded> {
+        let art = self.manifest.select(kind, metric, d, k).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact covers kind={kind:?} metric={} d={d} k={k} — \
+                 extend the variant grid in python/compile/aot.py",
+                metric.name()
+            )
+        })?;
+        Ok(&self.loaded[&art.name])
+    }
+
+    /// One Lloyd iteration over `data` (any N) against `centroids`,
+    /// blocked through the padded artifact.  Returns merged valid-region
+    /// outputs: per-point assignments, per-cluster sums/counts, total cost.
+    pub fn lloyd_step(
+        &self,
+        data: &Dataset,
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> anyhow::Result<LloydBlockOut> {
+        let d = data.dims();
+        let k = centroids.len();
+        let lo = self.pick(Kind::Lloyd, metric, d, k)?;
+        let (bn, dp, kp) = (lo.art.n, lo.art.d, lo.art.k);
+
+        // Padded centroid panel (shared across blocks).
+        let mut cpad = vec![PAD_SENTINEL; kp * dp];
+        for c in 0..k {
+            let row = &mut cpad[c * dp..c * dp + dp];
+            row.fill(0.0);
+            row[..d].copy_from_slice(centroids.point(c));
+        }
+        let cents_lit = xla::Literal::vec1(&cpad).reshape(&[kp as i64, dp as i64])?;
+
+        let n = data.len();
+        let mut out = LloydBlockOut {
+            assignments: Vec::with_capacity(n),
+            sums: vec![0.0; k * d],
+            counts: vec![0.0; k],
+            cost: 0.0,
+        };
+
+        let mut xpad = vec![0f32; bn * dp];
+        let mut wpad = vec![0f32; bn];
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(bn);
+            xpad.fill(0.0);
+            wpad.fill(0.0);
+            for i in 0..take {
+                let p = data.point(start + i);
+                xpad[i * dp..i * dp + d].copy_from_slice(p);
+                wpad[i] = 1.0;
+            }
+            let x = xla::Literal::vec1(&xpad).reshape(&[bn as i64, dp as i64])?;
+            let w = xla::Literal::vec1(&wpad);
+
+            let t0 = std::time::Instant::now();
+            let result = lo.exe.execute::<&xla::Literal>(&[&x, &cents_lit, &w])?[0][0]
+                .to_literal_sync()?;
+            self.stats.record(t0.elapsed(), take < bn);
+
+            let (idx, sums, counts, cost) = result.to_tuple4()?;
+            let idx = idx.to_vec::<i32>()?;
+            let sums = sums.to_vec::<f32>()?;
+            let counts = counts.to_vec::<f32>()?;
+            let cost = cost.to_vec::<f32>()?[0];
+
+            out.assignments.extend_from_slice(&idx[..take]);
+            for c in 0..k {
+                for j in 0..d {
+                    out.sums[c * d + j] += sums[c * dp + j];
+                }
+                out.counts[c] += counts[c];
+            }
+            out.cost += cost;
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Distance panels for a batch of filtering jobs: `mids` is `[jobs, d]`
+    /// flat, `cand_idx[j]` the candidate centroid rows of job `j`.
+    /// Returns per-job distance vectors aligned with `cand_idx`.
+    pub fn filter_panels(
+        &self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let d = centroids.dims();
+        let jobs = cand_idx.len();
+        debug_assert_eq!(mids.len(), jobs * d);
+        let kmax = cand_idx.iter().map(|c| c.len()).max().unwrap_or(0);
+        if jobs == 0 || kmax == 0 {
+            return Ok(vec![Vec::new(); jobs]);
+        }
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(jobs);
+        let mut mpad: Vec<f32> = Vec::new();
+        let mut cpad: Vec<f32> = Vec::new();
+        let mut start = 0usize;
+        while start < jobs {
+            // §Perf L1-1: re-pick per chunk so large levels use the big
+            // block and the tail falls back to the small one.
+            let art = self
+                .manifest
+                .select_block(Kind::Filter, metric, d, kmax, jobs - start)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no filter artifact covers metric={} d={d} k={kmax}",
+                        metric.name()
+                    )
+                })?;
+            let lo = &self.loaded[&art.name];
+            let (bj, dp, kp) = (lo.art.n, lo.art.d, lo.art.k);
+            mpad.clear();
+            mpad.resize(bj * dp, 0.0);
+            cpad.clear();
+            cpad.resize(bj * kp * dp, PAD_SENTINEL);
+            let take = (jobs - start).min(bj);
+            for j in 0..take {
+                mpad[j * dp..j * dp + d].copy_from_slice(&mids[(start + j) * d..(start + j + 1) * d]);
+                for (slot, &c) in cand_idx[start + j].iter().enumerate() {
+                    let row = &mut cpad[(j * kp + slot) * dp..(j * kp + slot) * dp + dp];
+                    row.fill(0.0);
+                    row[..d].copy_from_slice(centroids.point(c as usize));
+                }
+            }
+            let m = xla::Literal::vec1(&mpad).reshape(&[bj as i64, dp as i64])?;
+            let c = xla::Literal::vec1(&cpad).reshape(&[bj as i64, kp as i64, dp as i64])?;
+
+            let t0 = std::time::Instant::now();
+            let result =
+                lo.exe.execute::<&xla::Literal>(&[&m, &c])?[0][0].to_literal_sync()?;
+            self.stats.record(t0.elapsed(), take < bj);
+            let dists = result.to_tuple1()?.to_vec::<f32>()?;
+            for j in 0..take {
+                let cands = &cand_idx[start + j];
+                out.push(
+                    (0..cands.len())
+                        .map(|slot| dists[j * kp + slot])
+                        .collect(),
+                );
+            }
+            start += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime layer: AOT artifact manifest, compiled-executable cache,
+//! and the [`PanelBackend`](crate::kmeans::filtering::PanelBackend)
+//! adapter the coordinator uses to offload distance arithmetic.
+//!
+//! Python runs only at build time (`make artifacts`); this module loads
+//! the resulting HLO text through the `xla` crate's PJRT CPU client.
+
+pub mod artifacts;
+pub mod client;
+pub mod panels;
+
+pub use artifacts::{Artifact, Kind, Manifest, PAD_SENTINEL};
+pub use client::{LloydBlockOut, PjrtRuntime};
+pub use panels::PjrtPanels;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$MUCHSWIFT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("MUCHSWIFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,44 @@
+//! [`PanelBackend`] adapter: plugs the PJRT runtime into the batched
+//! filtering engine — the actual HW/SW seam of the reproduction.  The
+//! level-batched traversal (`kmeans::filtering::filter_iteration_batched`)
+//! ships each tree level's distance panels here; everything else stays on
+//! the coordinator ("PS") side.
+
+use super::client::PjrtRuntime;
+use crate::data::Dataset;
+use crate::kmeans::filtering::PanelBackend;
+use crate::kmeans::Metric;
+
+/// PJRT-offloaded panels.  Holds a shared reference to the runtime so the
+/// four worker threads can each own one (the runtime itself is used from
+/// one thread at a time per executable call; workers get their own
+/// `PjrtPanels` over an `Arc`).
+pub struct PjrtPanels<'rt> {
+    pub rt: &'rt PjrtRuntime,
+    /// Panels computed since construction (metrics).
+    pub jobs_offloaded: u64,
+}
+
+impl<'rt> PjrtPanels<'rt> {
+    pub fn new(rt: &'rt PjrtRuntime) -> Self {
+        Self {
+            rt,
+            jobs_offloaded: 0,
+        }
+    }
+}
+
+impl PanelBackend for PjrtPanels<'_> {
+    fn panels(
+        &mut self,
+        mids: &[f32],
+        cand_idx: &[Vec<u32>],
+        centroids: &Dataset,
+        metric: Metric,
+    ) -> Vec<Vec<f32>> {
+        self.jobs_offloaded += cand_idx.len() as u64;
+        self.rt
+            .filter_panels(mids, cand_idx, centroids, metric)
+            .expect("pjrt filter panel execution failed")
+    }
+}

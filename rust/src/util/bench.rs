@@ -1,0 +1,128 @@
+//! Minimal benchmarking harness (the offline crate set has no
+//! `criterion`).  `cargo bench` targets use `harness = false` and call
+//! [`Bench`]: warmup, adaptive iteration count targeting a wall-time
+//! budget, median + MAD + min reporting, and a machine-readable line for
+//! EXPERIMENTS.md extraction.
+
+use super::stats::{fmt_secs, mad, median};
+use std::time::{Duration, Instant};
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Minimum measured samples.
+    pub min_samples: usize,
+    /// Maximum measured samples.
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(3),
+            min_samples: 5,
+            max_samples: 100,
+        }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<40} median {:>12}  mad {:>12}  min {:>12}  ({} samples)",
+            self.name,
+            fmt_secs(self.median_s),
+            fmt_secs(self.mad_s),
+            fmt_secs(self.min_s),
+            self.samples
+        )
+    }
+}
+
+impl Bench {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            budget: Duration::from_secs(2),
+            min_samples: 3,
+            max_samples: 20,
+        }
+    }
+
+    /// Measure `f`, which performs one unit of work per call.  The return
+    /// value of `f` is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup: one call, then estimate per-call cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed();
+
+        let est = first.max(Duration::from_nanos(100));
+        let planned = (self.budget.as_secs_f64() / est.as_secs_f64()).ceil() as usize;
+        let samples = planned.clamp(self.min_samples, self.max_samples);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            samples,
+            median_s: median(&times),
+            mad_s: mad(&times),
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", r.line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bench {
+            budget: Duration::from_millis(50),
+            min_samples: 3,
+            max_samples: 10,
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.samples >= 3 && r.samples <= 10);
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn fast_functions_hit_max_samples() {
+        let b = Bench {
+            budget: Duration::from_millis(20),
+            min_samples: 2,
+            max_samples: 7,
+        };
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.samples, 7);
+    }
+}

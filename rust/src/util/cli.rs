@@ -1,0 +1,304 @@
+//! Tiny declarative CLI argument parser (the offline crate set has no
+//! `clap`).  Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option `{0}` (try --help)")]
+    UnknownOption(String),
+    #[error("option `--{0}` expects a value")]
+    MissingValue(String),
+    #[error("invalid value for `--{0}`: `{1}` ({2})")]
+    BadValue(String, String, String),
+    #[error("unexpected positional argument `{0}`")]
+    UnexpectedPositional(String),
+}
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative command: name, description, options.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Option<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+            positional: None,
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional = Some((name, help));
+        self
+    }
+
+    /// Parse `args` (without the program/subcommand prefix).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional = None;
+
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(a.clone()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue(
+                            key.clone(),
+                            inline.unwrap(),
+                            "flag takes no value".into(),
+                        ));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else if self.positional.is_some() && positional.is_none() {
+                positional = Some(a.clone());
+            } else {
+                return Err(CliError::UnexpectedPositional(a.clone()));
+            }
+            i += 1;
+        }
+
+        // Required options (no default) must be present.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(CliError::MissingValue(o.name.to_string()));
+            }
+        }
+
+        Ok(Matches {
+            command: self.name,
+            values,
+            flags,
+            positional,
+        })
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        if let Some((p, h)) = self.positional {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        for o in &self.opts {
+            let d = match (o.is_flag, o.default) {
+                (true, _) => "".to_string(),
+                (_, Some(d)) => format!(" [default: {d}]"),
+                (_, None) => " [required]".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+}
+
+/// Parsed results with typed accessors.
+#[derive(Debug)]
+pub struct Matches {
+    pub command: &'static str,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Option<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse::<T>()
+            .map_err(|e| CliError::BadValue(name.to_string(), raw.to_string(), e.to_string()))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Comma-separated list of T.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<T>().map_err(|e| {
+                    CliError::BadValue(name.to_string(), s.to_string(), e.to_string())
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("cluster", "run clustering")
+            .opt("n", "1000", "number of points")
+            .opt("k", "8", "clusters")
+            .req("arch", "architecture")
+            .flag("verbose", "chatty output")
+            .pos("input", "input file")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = cmd().parse(&args(&["--arch", "muchswift"])).unwrap();
+        assert_eq!(m.usize("n").unwrap(), 1000);
+        assert_eq!(m.str("arch"), "muchswift");
+        assert!(!m.flag("verbose"));
+
+        let m = cmd()
+            .parse(&args(&["--arch=sw", "--n", "42", "--verbose", "file.csv"]))
+            .unwrap();
+        assert_eq!(m.usize("n").unwrap(), 42);
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional.as_deref(), Some("file.csv"));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(matches!(
+            cmd().parse(&args(&["--arch", "x", "--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&args(&[])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&args(&["--arch"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&args(&["--arch", "x", "--n", "abc"]))
+                .and_then(|m| m.usize("n")),
+            Err(CliError::BadValue(..))
+        ));
+        assert!(matches!(
+            cmd().parse(&args(&["--arch", "x", "a.csv", "b.csv"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+    }
+
+    #[test]
+    fn lists() {
+        let c = Command::new("x", "y").opt("ks", "2,4,8", "cluster sweep");
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.list::<usize>("ks").unwrap(), vec![2, 4, 8]);
+        let m = c.parse(&args(&["--ks", "1, 3 ,5"])).unwrap();
+        assert_eq!(m.list::<usize>("ks").unwrap(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn help_mentions_everything() {
+        let h = cmd().help();
+        for needle in ["--n", "--arch", "--verbose", "<input>", "required", "default: 1000"] {
+            assert!(h.contains(needle), "help missing {needle}: {h}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no `rand`, `serde`, `clap`, `proptest`, `criterion`), so this module
+//! implements the pieces the rest of the crate needs from scratch — each
+//! documented in DESIGN.md under "Offline-toolchain substitutions".
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

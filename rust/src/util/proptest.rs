@@ -1,0 +1,176 @@
+//! Seeded property-testing runner (the offline crate set has no `proptest`).
+//!
+//! Provides the shape the coordinator/kd-tree invariant tests need:
+//! a deterministic RNG per case, a configurable case count, and on failure a
+//! "shrinking-lite" pass that retries the failing case with progressively
+//! smaller size hints so the reported counterexample is small.
+//!
+//! ```ignore
+//! proptest(64, |g| {
+//!     let n = g.size(1, 500);
+//!     let pts = g.vec_f32(n * 2, -10.0, 10.0);
+//!     // ... assert invariant, returning Err(String) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Xoshiro256pp;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+    /// Size multiplier in (0, 1]; shrink passes lower it.
+    pub scale: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// A size in `[lo, hi]`, scaled down during shrinking.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.scale).ceil() as usize;
+        lo + self.rng.below_usize(scaled.max(1).min(span + 1))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_f32(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop` with a fixed master seed.
+///
+/// Panics with the case seed and message on the first failure, after
+/// attempting to reproduce it at smaller sizes (shrinking-lite): the
+/// smallest scale that still fails is what gets reported.
+pub fn proptest<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    proptest_seeded(0xC0FFEE, cases, prop)
+}
+
+/// Like [`proptest`] but with an explicit master seed (so a failing seed
+/// printed by a previous run can be replayed directly).
+pub fn proptest_seeded<F>(master_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = master_seed ^ ((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let run = |scale: f64| -> Result<(), String> {
+            let mut g = Gen {
+                rng: Xoshiro256pp::seed_from_u64(case_seed),
+                scale,
+                case,
+            };
+            prop(&mut g)
+        };
+        if let Err(first_msg) = run(1.0) {
+            // Shrinking-lite: same seed, smaller size hints.
+            let mut best = (1.0, first_msg);
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Err(msg) = run(scale) {
+                    best = (scale, msg);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, scale {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        proptest(32, |g| {
+            **counter.borrow_mut() += 1;
+            let n = g.size(1, 100);
+            if n >= 1 && n <= 100 {
+                Ok(())
+            } else {
+                Err(format!("size out of bounds: {n}"))
+            }
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        proptest(16, |g| {
+            let n = g.size(1, 1000);
+            if n < 900 {
+                Ok(())
+            } else {
+                Err(format!("n too big: {n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_reported_size() {
+        // Capture the panic message and check the scale went below 1.
+        let result = std::panic::catch_unwind(|| {
+            proptest_seeded(7, 8, |g| {
+                let n = g.size(1, 10_000);
+                if n == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("always fails, n={n}"))
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("scale 0.01"), "expected smallest scale: {msg}");
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        proptest(64, |g| {
+            let v = g.f32_in(-2.0, 2.0);
+            if !(-2.0..2.0).contains(&v) {
+                return Err(format!("f32_in out of range: {v}"));
+            }
+            let u = g.usize_in(3, 9);
+            if !(3..=9).contains(&u) {
+                return Err(format!("usize_in out of range: {u}"));
+            }
+            let xs = g.vec_f32(10, 0.0, 1.0);
+            if xs.len() != 10 {
+                return Err("vec len".into());
+            }
+            let choice = *g.pick(&[1, 2, 3]);
+            if !(1..=3).contains(&choice) {
+                return Err("pick".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,266 @@
+//! Property-based invariant tests across the coordinator's building
+//! blocks (seeded in-crate property runner — see `util::proptest`).
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::hw::engine::EventQueue;
+use muchswift::hw::stream::{simulate, StreamParams};
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::filtering::{self, CpuPanels, PanelBackend};
+use muchswift::kmeans::init::{init_centroids, Init};
+use muchswift::kmeans::twolevel::{combine, quarter, quarter_round_robin, QUARTERS};
+use muchswift::kmeans::Metric;
+use muchswift::util::proptest::proptest;
+use muchswift::util::rng::Xoshiro256pp;
+
+/// Both Quarter strategies produce a disjoint, complete partition with
+/// rows faithful to the original data.
+#[test]
+fn prop_quarter_is_a_partition() {
+    proptest(40, |g| {
+        let n = g.size(1, 3000).max(1);
+        let d = g.usize_in(1, 6);
+        let s = generate_params(n, d, g.usize_in(1, 4), 0.3, 1.0, g.case as u64);
+        let tree = KdTree::build(&s.data);
+        for (parts, ids) in [quarter_round_robin(&s.data), quarter(&s.data, &tree)] {
+            if parts.len() != QUARTERS {
+                return Err(format!("expected {QUARTERS} parts, got {}", parts.len()));
+            }
+            let mut seen = vec![false; n];
+            for (p, id) in parts.iter().zip(ids.iter()) {
+                if p.len() != id.len() {
+                    return Err("part/id length mismatch".into());
+                }
+                for (row, &orig) in id.iter().enumerate() {
+                    if seen[orig as usize] {
+                        return Err(format!("row {orig} appears twice"));
+                    }
+                    seen[orig as usize] = true;
+                    if p.point(row) != s.data.point(orig as usize) {
+                        return Err("gathered row differs from original".into());
+                    }
+                }
+            }
+            if !seen.iter().all(|&b| b) {
+                return Err("partition drops rows".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Combine: each merged centroid lies inside the bounding box of its
+/// source centroids, and total weight is conserved in the weighting.
+#[test]
+fn prop_combine_stays_in_hull_bbox() {
+    proptest(60, |g| {
+        let k = g.usize_in(1, 8);
+        let d = g.usize_in(1, 5);
+        let q = g.usize_in(1, 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64 ^ 0xBEEF);
+        let cents: Vec<Dataset> = (0..q)
+            .map(|_| {
+                Dataset::from_flat(
+                    k,
+                    d,
+                    (0..k * d).map(|_| rng.uniform_f32(-5.0, 5.0)).collect(),
+                )
+            })
+            .collect();
+        let counts: Vec<Vec<usize>> = (0..q)
+            .map(|_| (0..k).map(|_| 1 + rng.below_usize(100)).collect())
+            .collect();
+        let merged = combine(&cents, &counts, Metric::Euclid);
+        if merged.len() != k || merged.dims() != d {
+            return Err("merged shape wrong".into());
+        }
+        // Global bbox over all source centroids bounds every merged point
+        // (weighted means cannot escape the hull, hence not the bbox).
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for c in &cents {
+            for p in c.iter() {
+                for j in 0..d {
+                    lo[j] = lo[j].min(p[j]);
+                    hi[j] = hi[j].max(p[j]);
+                }
+            }
+        }
+        for p in merged.iter() {
+            for j in 0..d {
+                if p[j] < lo[j] - 1e-4 || p[j] > hi[j] + 1e-4 {
+                    return Err(format!("merged coord {} outside bbox [{}, {}]", p[j], lo[j], hi[j]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The two filtering engines agree on counts/assignments for arbitrary
+/// shapes, metrics and leaf sizes (single pass, identical inputs).
+#[test]
+fn prop_engines_agree() {
+    proptest(25, |g| {
+        let n = g.size(10, 800).max(10);
+        let d = g.usize_in(1, 5);
+        let k = g.usize_in(1, 7).min(n);
+        let leaf = g.usize_in(1, 12);
+        let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+        let s = generate_params(n, d, k, g.f32_in(0.05, 0.6), 1.5, g.case as u64);
+        let tree = KdTree::build_with(&s.data, leaf);
+        let init = init_centroids(&s.data, k, Init::UniformSample, metric, g.case as u64 ^ 3);
+        let mut a1 = vec![0u32; n];
+        let mut a2 = vec![0u32; n];
+        let (_, c1, s1) = filtering::filter_iteration(&tree, &s.data, &init, metric, &mut a1);
+        let (_, c2, s2) = filtering::filter_iteration_batched(
+            &tree, &s.data, &init, metric, &mut CpuPanels, &mut a2,
+        );
+        if a1 != a2 {
+            return Err(format!("assignments diverge (n={n} d={d} k={k} leaf={leaf})"));
+        }
+        if c1 != c2 {
+            return Err("counts diverge".into());
+        }
+        if s1.dist_evals != s2.dist_evals || s1.prune_tests != s2.prune_tests {
+            return Err("work counters diverge".into());
+        }
+        Ok(())
+    });
+}
+
+/// Conservation through the filtering pass: counts sum to n, every point
+/// assigned a valid cluster, interior+leaf assignment covers each point
+/// exactly once.
+#[test]
+fn prop_filtering_conserves_points() {
+    proptest(30, |g| {
+        let n = g.size(5, 1500).max(5);
+        let d = g.usize_in(1, 4);
+        let k = g.usize_in(1, 6).min(n);
+        let s = generate_params(n, d, k, 0.25, 1.0, g.case as u64 ^ 0x51);
+        let tree = KdTree::build_with(&s.data, g.usize_in(1, 10));
+        let init = init_centroids(&s.data, k, Init::UniformSample, Metric::Euclid, 1);
+        let mut assign = vec![u32::MAX; n];
+        let (_, counts, st) =
+            filtering::filter_iteration(&tree, &s.data, &init, Metric::Euclid, &mut assign);
+        if counts.iter().sum::<u32>() as usize != n {
+            return Err(format!("counts sum {} != n {n}", counts.iter().sum::<u32>()));
+        }
+        if assign.iter().any(|&a| a as usize >= k) {
+            return Err("unassigned or out-of-range point".into());
+        }
+        if st.leaf_points + st.interior_assigns != n as u64 {
+            return Err(format!(
+                "coverage: leaf {} + interior {} != {n}",
+                st.leaf_points, st.interior_assigns
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The offload panel path (batching through a backend) is equivalent to
+/// direct CPU computation for arbitrary ragged batches.
+#[test]
+fn prop_panel_backend_equivalence() {
+    proptest(40, |g| {
+        let d = g.usize_in(1, 8);
+        let k = g.usize_in(1, 10);
+        let jobs = g.size(1, 200).max(1);
+        let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64 ^ 0x77);
+        let cents = Dataset::from_flat(
+            k,
+            d,
+            (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
+        );
+        let mids: Vec<f32> = (0..jobs * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect();
+        let cand_idx: Vec<Vec<u32>> = (0..jobs)
+            .map(|_| {
+                let len = 1 + rng.below_usize(k);
+                let mut c: Vec<u32> = (0..k as u32).collect();
+                rng.shuffle(&mut c);
+                c.truncate(len);
+                c
+            })
+            .collect();
+        let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+        let got = CpuPanels.panels(&mids, &cand_idx, &cents, metric);
+        for (j, cands) in cand_idx.iter().enumerate() {
+            for (slot, &c) in cands.iter().enumerate() {
+                let want = metric.dist(&mids[j * d..(j + 1) * d], cents.point(c as usize));
+                if (got[j][slot] - want).abs() > 1e-5 * (1.0 + want.abs()) {
+                    return Err(format!("panel mismatch job {j} cand {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Stream pipeline: finish time is bounded below by both pure-producer
+/// and pure-consumer times and above by their serial sum (+latency).
+#[test]
+fn prop_stream_bounds() {
+    proptest(60, |g| {
+        let total = (g.size(1, 1 << 22)).max(1) as u64;
+        let prod = g.f32_in(0.5, 20.0) as f64 * 1e9;
+        let cons = g.f32_in(0.5, 20.0) as f64 * 1e9;
+        let fifo = 1024u64 << g.usize_in(0, 8);
+        let p = StreamParams {
+            total_bytes: total,
+            burst_bytes: 1024.min(fifo),
+            producer_bytes_per_s: prod,
+            producer_latency_ps: g.usize_in(0, 1_000_000) as u64,
+            consumer_bytes_per_s: cons,
+            fifo_bytes: fifo,
+        };
+        let r = simulate(&p);
+        let t_prod = total as f64 / prod * 1e12 + p.producer_latency_ps as f64;
+        let t_cons = total as f64 / cons * 1e12;
+        let lower = t_prod.max(t_cons) * 0.999;
+        let upper = (t_prod + t_cons) * 1.001 + 1e6;
+        let f = r.finish_ps as f64;
+        if f < lower {
+            return Err(format!("finish {f} below lower bound {lower}"));
+        }
+        if f > upper {
+            return Err(format!("finish {f} above serial bound {upper}"));
+        }
+        if r.high_water_bytes > fifo {
+            return Err("fifo overflow".into());
+        }
+        Ok(())
+    });
+}
+
+/// DES event queue: arbitrary schedules pop in nondecreasing time order
+/// with FIFO ties.
+#[test]
+fn prop_event_queue_ordering() {
+    proptest(50, |g| {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        let events = g.size(1, 500).max(1);
+        let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64);
+        let mut expected: Vec<(u64, usize)> = Vec::new();
+        for i in 0..events {
+            let t = rng.below(1000);
+            q.schedule(t, i);
+            expected.push((t, i));
+        }
+        expected.sort_by_key(|&(t, i)| (t, i)); // seq == insertion order
+        let mut got = Vec::new();
+        let mut last = 0u64;
+        while let Some((t, i)) = q.pop() {
+            if t < last {
+                return Err("time went backwards".into());
+            }
+            last = t;
+            got.push((t, i));
+        }
+        if got != expected {
+            return Err("pop order != (time, insertion) order".into());
+        }
+        Ok(())
+    });
+}

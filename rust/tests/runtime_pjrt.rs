@@ -1,0 +1,159 @@
+//! Integration: the AOT artifacts load through PJRT and compute the same
+//! numbers as the Rust reference implementations — the L1/L2/L3 seam.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::filtering::{self, CpuPanels, FilterOpts};
+use muchswift::kmeans::init::{init_centroids, Init};
+use muchswift::kmeans::metrics::{self, Metric};
+use muchswift::runtime::{PjrtPanels, PjrtRuntime};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn artifact_dir() -> PathBuf {
+    let mut dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    dir.push("artifacts");
+    dir
+}
+
+fn runtime() -> &'static PjrtRuntime {
+    static RT: OnceLock<PjrtRuntime> = OnceLock::new();
+    RT.get_or_init(|| {
+        PjrtRuntime::load(&artifact_dir())
+            .expect("artifacts missing — run `make artifacts` before `cargo test`")
+    })
+}
+
+#[test]
+fn lloyd_step_matches_rust_reference() {
+    let rt = runtime();
+    for (metric, n, d, k) in [
+        (Metric::Euclid, 1500, 3, 5),
+        (Metric::Euclid, 1024, 15, 20),
+        (Metric::Euclid, 300, 15, 100),
+        (Metric::Euclid, 512, 33, 6),
+        (Metric::Manhattan, 700, 3, 5),
+        (Metric::Manhattan, 700, 15, 20),
+    ] {
+        let s = generate_params(n, d, k, 0.3, 1.0, 99);
+        let init = init_centroids(&s.data, k, Init::UniformSample, metric, 7);
+        let out = rt.lloyd_step(&s.data, &init, metric).unwrap();
+
+        // Reference: plain Rust assignment + accumulation.
+        let mut sums = vec![0f32; k * d];
+        let mut counts = vec![0f32; k];
+        let mut cost = 0f64;
+        for (i, p) in s.data.iter().enumerate() {
+            let (best, bd) = metrics::nearest(metric, p, init.flat(), k, d);
+            assert_eq!(
+                out.assignments[i], best as i32,
+                "assignment mismatch at point {i} ({metric:?} n={n} d={d} k={k})"
+            );
+            for j in 0..d {
+                sums[best * d + j] += p[j];
+            }
+            counts[best] += 1.0;
+            cost += bd as f64;
+        }
+        assert_eq!(out.counts, counts, "counts ({metric:?} d={d} k={k})");
+        for (a, b) in out.sums.iter().zip(sums.iter()) {
+            assert!(
+                (a - b).abs() < 2e-2 * (1.0 + b.abs()),
+                "sums: {a} vs {b} ({metric:?} d={d} k={k})"
+            );
+        }
+        assert!(
+            (out.cost as f64 - cost).abs() < 2e-3 * (1.0 + cost.abs()),
+            "cost: {} vs {cost}",
+            out.cost
+        );
+    }
+}
+
+#[test]
+fn filter_panels_match_cpu() {
+    let rt = runtime();
+    let s = generate_params(200, 15, 4, 0.3, 1.0, 5);
+    let cents = init_centroids(&s.data, 24, Init::UniformSample, Metric::Euclid, 3);
+    // Ragged candidate sets, job count not a multiple of the block.
+    let jobs = 301usize;
+    let d = 15;
+    let mut mids = Vec::with_capacity(jobs * d);
+    let mut cand_idx: Vec<Vec<u32>> = Vec::with_capacity(jobs);
+    for j in 0..jobs {
+        mids.extend_from_slice(s.data.point(j % s.data.len()));
+        let len = 1 + (j % 24);
+        cand_idx.push((0..len as u32).collect());
+    }
+    let got = rt
+        .filter_panels(&mids, &cand_idx, &cents, Metric::Euclid)
+        .unwrap();
+    assert_eq!(got.len(), jobs);
+    for j in 0..jobs {
+        assert_eq!(got[j].len(), cand_idx[j].len());
+        let q = &mids[j * d..(j + 1) * d];
+        for (slot, &c) in cand_idx[j].iter().enumerate() {
+            let want = Metric::Euclid.dist(q, cents.point(c as usize));
+            let have = got[j][slot];
+            assert!(
+                (have - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "job {j} cand {c}: {have} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_filtering_through_pjrt_matches_cpu_run() {
+    let rt = runtime();
+    let s = generate_params(900, 3, 6, 0.2, 1.0, 11);
+    let tree = KdTree::build(&s.data);
+    let init = init_centroids(&s.data, 6, Init::UniformSample, Metric::Euclid, 2);
+    let opts = FilterOpts { metric: Metric::Euclid, tol: 1e-6, max_iters: 15 };
+
+    let cpu = filtering::run_batched(&s.data, &tree, &init, &opts, &mut CpuPanels);
+    let mut panels = PjrtPanels::new(rt);
+    let hw = filtering::run_batched(&s.data, &tree, &init, &opts, &mut panels);
+
+    assert!(panels.jobs_offloaded > 0, "offload path must actually run");
+    // XLA math (interpret-mode Pallas) vs Rust f32: same formulae, ulp-level
+    // differences allowed; trajectories must agree.
+    for (ca, cb) in cpu.centroids.iter().zip(hw.centroids.iter()) {
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            assert!((x - y).abs() < 5e-3, "centroid drift: {x} vs {y}");
+        }
+    }
+    let same = cpu
+        .assignments
+        .iter()
+        .zip(hw.assignments.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(same as f64 >= 0.99 * 900.0, "assignments: {same}/900 agree");
+}
+
+#[test]
+fn oversized_request_fails_cleanly() {
+    let rt = runtime();
+    let data = Dataset::zeros(8, 200); // d=200 exceeds every artifact
+    let cents = Dataset::zeros(2, 200);
+    let err = rt.lloyd_step(&data, &cents, Metric::Euclid).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("no artifact"), "unexpected error: {msg}");
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let rt = runtime();
+    let before = rt.stats.executions();
+    let s = generate_params(2500, 3, 4, 0.3, 1.0, 1);
+    let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Euclid, 1);
+    rt.lloyd_step(&s.data, &init, Metric::Euclid).unwrap();
+    // 2500 points / 1024 block = 3 executions, last one padded.
+    assert_eq!(rt.stats.executions() - before, 3);
+    assert!(rt.stats.exec_seconds() > 0.0);
+    assert!(rt.stats.blocks_padded.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration + failure injection (no PJRT here;
+//! `runtime_pjrt.rs` covers the artifact path).
+
+use muchswift::arch::{evaluate, ArchKind};
+use muchswift::config::{toml::Doc, PlatformConfig, WorkloadConfig};
+use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::data::{csv, synthetic, Dataset};
+use muchswift::hw::dma::DmaEngine;
+use muchswift::hw::resources;
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::Metric;
+use muchswift::runtime::Manifest;
+use std::path::Path;
+
+/// Config file -> platform -> simulator -> evaluation, end to end.
+#[test]
+fn config_to_simulation_pipeline() {
+    let doc = Doc::parse(
+        r#"
+        name = "slow-board"
+        [pl]
+        freq_hz = 100e6
+        [io]
+        pcie_bytes_per_s = 0.4e9
+        "#,
+    )
+    .unwrap();
+    let slow = PlatformConfig::from_doc(&doc);
+    slow.validate().unwrap();
+    assert_eq!(slow.name, "slow-board");
+
+    // Slower board => slower ingest, in proportion.
+    let fast = PlatformConfig::zcu102();
+    let bytes = 8 << 20;
+    let mut d_slow = DmaEngine::new(&slow);
+    let mut d_fast = DmaEngine::new(&fast);
+    let t_slow = d_slow.ingest(0, bytes).finish_ps as f64;
+    let t_fast = d_fast.ingest(0, bytes).finish_ps as f64;
+    let ratio = t_slow / t_fast;
+    assert!((3.0..5.0).contains(&ratio), "pcie 4x slower -> ~4x ingest, got {ratio:.2}");
+}
+
+/// CSV round trip feeds the coordinator identically to in-memory data.
+#[test]
+fn csv_to_coordinator_round_trip() {
+    let s = synthetic::generate_params(800, 3, 3, 0.1, 2.0, 99);
+    let dir = std::env::temp_dir().join("muchswift_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipeline.csv");
+    csv::save(&s.data, &path).unwrap();
+    let loaded = csv::load(&path).unwrap();
+    assert_eq!(loaded, s.data);
+
+    let coord = Coordinator::new(Backend::Cpu);
+    let opts = CoordinatorOpts {
+        k: 3,
+        seed: 5,
+        init: Init::KmeansPlusPlus,
+        ..Default::default()
+    };
+    let a = coord.run(&s.data, &opts);
+    let b = coord.run(&loaded, &opts);
+    assert_eq!(a.result.assignments, b.result.assignments);
+    assert_eq!(a.result.centroids, b.result.centroids);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The paper's qualitative ordering holds on a mid-size workload:
+/// software-only slowest, MUCH-SWIFT fastest, everything else between.
+#[test]
+fn architecture_ordering_is_stable() {
+    let w = WorkloadConfig {
+        n: 100_000,
+        d: 15,
+        k: 10,
+        true_k: 10,
+        sigma: 0.15,
+        seed: 31,
+        max_iters: 50,
+        ..Default::default()
+    };
+    let t = |k: ArchKind| evaluate(k, &w).total_s;
+    let ms = t(ArchKind::MuchSwift);
+    let sw = t(ArchKind::SwLloyd);
+    let conv = t(ArchKind::FpgaLloydSingle);
+    let w13 = t(ArchKind::FpgaFilterSingle);
+    let w17 = t(ArchKind::FpgaLloydMulti);
+    let swf = t(ArchKind::SwFilter);
+    assert!(ms < w13 && ms < w17 && ms < conv && ms < sw, "much-swift must win");
+    assert!(swf < sw, "software filtering beats software lloyd");
+    assert!(w13 < conv, "[13] beats the unoptimized FPGA");
+    // Filtering on FPGA beats parallel-but-unfiltered hardware at this K.
+    assert!(w13 < w17, "[13] {w13} vs [17] {w17}");
+}
+
+/// Deterministic: same workload/seed -> identical evaluation twice.
+#[test]
+fn evaluation_is_deterministic() {
+    let w = WorkloadConfig {
+        n: 50_000,
+        d: 8,
+        k: 6,
+        true_k: 6,
+        seed: 77,
+        max_iters: 40,
+        ..Default::default()
+    };
+    let a = evaluate(ArchKind::MuchSwift, &w);
+    let b = evaluate(ArchKind::MuchSwift, &w);
+    assert_eq!(a.total_s, b.total_s);
+    assert_eq!(a.iterations, b.iterations);
+}
+
+/// Section 4.2 capacity claim: the paper's N=100000, K=1024 example fits
+/// the 1 GB DDR3 with room to spare, and Table-1 feasibility limits K for
+/// the fully-parallel PL build.
+#[test]
+fn ddr3_capacity_and_resource_limits() {
+    let w = WorkloadConfig {
+        n: 100_000,
+        d: 15,
+        k: 1024,
+        true_k: 8,
+        ..Default::default()
+    };
+    let cfg = PlatformConfig::zcu102();
+    assert!(w.dataset_bytes() * 4 < cfg.ddr3_capacity, "dataset (+tree) must fit DDR3");
+    assert!(!resources::fits(1024), "K=1024 cannot be fully parallel");
+    assert!(resources::fits(20), "K=20 is the paper's feasible point");
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifest_failures_are_clean_errors() {
+    let dir = Path::new("/tmp/muchswift_missing_artifacts");
+    let err = Manifest::load(dir).unwrap_err();
+    assert!(format!("{err}").contains("make artifacts"), "{err}");
+
+    // Corrupted JSON.
+    let bad = Manifest::parse("{not json", dir);
+    assert!(bad.is_err());
+    // Valid JSON, wrong schema.
+    let bad = Manifest::parse(r#"{"format_version": 1, "pad_sentinel": 1e17, "entries": [{}]}"#, dir);
+    assert!(bad.is_err());
+    // Empty entry list.
+    let bad = Manifest::parse(r#"{"format_version": 1, "pad_sentinel": 1e17, "entries": []}"#, dir);
+    assert!(bad.is_err());
+}
+
+#[test]
+fn degenerate_datasets_do_not_crash() {
+    // All-identical points.
+    let data = Dataset::from_flat(64, 3, vec![1.5; 192]);
+    let coord = Coordinator::new(Backend::Cpu);
+    let out = coord.run(
+        &data,
+        &CoordinatorOpts { k: 4, seed: 1, ..Default::default() },
+    );
+    assert_eq!(out.result.assignments.len(), 64);
+    // One cluster gets everything; the rest stay empty.
+    let sizes = out.result.sizes();
+    assert_eq!(sizes.iter().sum::<usize>(), 64);
+    assert_eq!(sizes.iter().filter(|&&s| s > 0).count(), 1);
+
+    // Single point, k=1.
+    let single = Dataset::from_flat(1, 2, vec![3.0, 4.0]);
+    let out = coord.run(&single, &CoordinatorOpts { k: 1, ..Default::default() });
+    assert_eq!(out.result.centroids.point(0), &[3.0, 4.0]);
+
+    // Manhattan end to end.
+    let s = synthetic::generate_params(500, 2, 3, 0.2, 1.0, 8);
+    let out = coord.run(
+        &s.data,
+        &CoordinatorOpts { k: 3, metric: Metric::Manhattan, ..Default::default() },
+    );
+    assert!(out.result.stats.converged);
+}
+
+#[test]
+#[should_panic(expected = "k out of range")]
+fn k_larger_than_n_is_rejected() {
+    let data = Dataset::from_flat(3, 1, vec![1.0, 2.0, 3.0]);
+    let coord = Coordinator::new(Backend::Cpu);
+    coord.run(&data, &CoordinatorOpts { k: 10, ..Default::default() });
+}
+
+#[test]
+fn workload_validation_rejects_nonsense() {
+    for bad in [
+        "[workload]\nn = 0",
+        "[workload]\nd = 0",
+        "[workload]\nn = 5\nk = 9",
+        "[workload]\nmax_iters = 0",
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        assert!(WorkloadConfig::from_doc(&doc).is_err(), "should reject: {bad}");
+    }
+}
+
+/// The shipped config files parse and match the built-in profiles.
+#[test]
+fn shipped_configs_parse_and_match_profiles() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let zcu = PlatformConfig::from_toml_file(&root.join("configs/zcu102.toml")).unwrap();
+    assert_eq!(zcu, PlatformConfig::zcu102());
+    let w13 = PlatformConfig::from_toml_file(&root.join("configs/fpl13_winterstein.toml")).unwrap();
+    assert_eq!(w13, PlatformConfig::winterstein_fpl13());
+    let c16 = PlatformConfig::from_toml_file(&root.join("configs/fpl16_canilho.toml")).unwrap();
+    assert_eq!(c16, PlatformConfig::canilho_fpl16());
+    let wl = WorkloadConfig::from_toml_file(&root.join("configs/workload_fig3.toml")).unwrap();
+    assert_eq!(wl.n, 1_000_000);
+    assert_eq!(wl.d, 15);
+    assert_eq!(wl.k, 20);
+}

@@ -1,0 +1,143 @@
+//! Minimal offline subset of the `anyhow` crate (see crates/README.md).
+//!
+//! Provides the surface the workspace uses: [`Error`] (an opaque boxed
+//! error), [`Result`], and the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros.  Like the real crate, `Error` deliberately does **not**
+//! implement `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the identity
+//! `From<Error>` used by `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: any `std::error::Error + Send + Sync` boxed up, or an
+/// ad-hoc message built by [`anyhow!`].
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Borrow the underlying boxed error.
+    pub fn as_dyn(&self) -> &(dyn StdError + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug prints the human-readable message (+ source chain), which
+        // is what `expect`/`unwrap` surface in a panic.
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        while let Some(s) = source {
+            write!(f, "\n\ncaused by: {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Message-only error payload behind [`Error::msg`].
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        assert!(fails().is_err());
+
+        // `?` converts std errors.
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+
+        // ensure! passes and fails.
+        fn check(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(30).is_err());
+    }
+
+    #[test]
+    fn identity_question_mark() {
+        fn outer() -> Result<()> {
+            fails()?;
+            Ok(())
+        }
+        let msg = format!("{}", outer().unwrap_err());
+        assert_eq!(msg, "boom 42");
+    }
+}

@@ -1,0 +1,144 @@
+//! Typed stub of the PJRT binding surface `muchswift::runtime` consumes
+//! (see crates/README.md).
+//!
+//! The offline build environment has no XLA/PJRT shared library, so this
+//! crate provides the exact type/method surface `runtime::client` calls —
+//! enough for the whole workspace (including `Backend::Pjrt` plumbing) to
+//! compile and for CPU-backed paths to run end to end.  Every fallible
+//! entry point fails with a clear, actionable message; because artifact
+//! loading is the first PJRT touchpoint, callers see the failure at
+//! `PjrtRuntime::load` and fall back (or skip) exactly as they do when
+//! `make artifacts` has not been run.
+//!
+//! Swapping this path dependency for a real PJRT binding requires no
+//! changes elsewhere in the workspace.
+
+use std::fmt;
+
+/// Stub error: always "backend not available".
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend not available in this build (offline `xla` stub — \
+         see crates/README.md; use the CPU backend instead)"
+    ))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding opens the CPU PJRT plugin; the stub fails fast.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub).  Shape-only construction succeeds so padding code
+/// type-checks; anything that would need real device data fails.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple4"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().map(|_| ()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT backend not available"), "{msg}");
+        assert!(msg.contains("crates/README.md"), "{msg}");
+    }
+
+    #[test]
+    fn literal_shape_ops_succeed() {
+        let l = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}

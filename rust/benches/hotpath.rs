@@ -1,48 +1,140 @@
-//! Hot-path micro-benchmarks (the §Perf working set): kd-tree build, the
-//! two filtering engines, the software Lloyd inner loop, and the
-//! coordinator end-to-end on the CPU backend.
+//! Hot-path micro-benchmarks (the §Perf working set): kd-tree build
+//! (sequential vs parallel), the two filtering engines, the panel-engine
+//! backends (flat scalar / blocked / multi-threaded), the software Lloyd
+//! inner loop, and the coordinator end-to-end on the CPU backend.
 //!
 //! `cargo bench --bench hotpath`
+//!
+//! Knobs (CI smoke run): `MUCHSWIFT_BENCH_BUDGET_MS` caps the per-bench
+//! measurement budget, `MUCHSWIFT_BENCH_N` overrides the dataset size.
+//! Bench names embed the *actual* dataset scale (e.g. `_n20k`), so a
+//! smoke-sized artifact can never masquerade as full-scale evidence.
+//!
+//! Besides the human-readable lines, the run writes the machine-readable
+//! `BENCH_hotpath.json` (name → median/mad/min ns) at the repo root —
+//! the perf-trajectory evidence tracked across PRs.  The acceptance
+//! numbers are the `_n100k` entries (the default size).
 
 use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
 use muchswift::data::synthetic::generate_params;
-use muchswift::kdtree::KdTree;
-use muchswift::kmeans::filtering::{self, CpuPanels};
+use muchswift::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
+use muchswift::kmeans::filtering::{self, CpuPanels, FilterScratch, ParCpuPanels};
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::lloyd::{self, LloydOpts};
+use muchswift::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
 use muchswift::kmeans::Metric;
-use muchswift::util::bench::Bench;
+use muchswift::util::bench::{self, Bench, BenchResult};
+use std::path::PathBuf;
+use std::time::Duration;
 
 fn main() {
-    let b = Bench::default();
-    let n = 100_000;
+    let b = Bench {
+        budget: bench::env_budget(Duration::from_secs(3)),
+        ..Bench::default()
+    };
+    let quick = Bench {
+        budget: bench::env_budget(Duration::from_secs(2)),
+        ..Bench::quick()
+    };
+    let n: usize = std::env::var("MUCHSWIFT_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
     let d = 15;
     let k = 20;
+    // Scale tag baked into every bench name, e.g. "n100k".
+    let tag = format!("n{}k", (n + 500) / 1000);
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(8);
+    println!("hotpath: n={n} d={d} k={k} workers={workers}");
+
     let s = generate_params(n, d, k, 0.15, 1.0, 42);
     let init = init_centroids(&s.data, k, Init::UniformSample, Metric::Euclid, 7);
+    let mut results: Vec<BenchResult> = Vec::new();
 
-    b.run("kdtree_build_100k_d15", || KdTree::build(&s.data));
+    results.push(b.run(&format!("kdtree_build_seq_{tag}_d15"), || {
+        KdTree::build_par(&s.data, DEFAULT_LEAF_SIZE, 0)
+    }));
+    // Explicit hand-off depth: `KdTree::build` would silently fall back to
+    // sequential below its size threshold, turning this into a no-op
+    // comparison at smoke sizes.
+    results.push(b.run(&format!("kdtree_build_par_{tag}_d15"), || {
+        KdTree::build_par(&s.data, DEFAULT_LEAF_SIZE, 2)
+    }));
 
     let tree = KdTree::build(&s.data);
     let mut assignments = vec![0u32; n];
 
-    b.run("filter_iteration_recursive_100k", || {
+    results.push(b.run(&format!("filter_iteration_recursive_{tag}"), || {
         filtering::filter_iteration(&tree, &s.data, &init, Metric::Euclid, &mut assignments)
-    });
+    }));
 
-    b.run("filter_iteration_batched_cpu_100k", || {
-        filtering::filter_iteration_batched(
+    // The seed baseline path: scalar panels, single thread (now flat).
+    let mut scratch = FilterScratch::new();
+    results.push(b.run(&format!("filter_iteration_batched_cpu_{tag}"), || {
+        filtering::filter_iteration_batched_scratch(
             &tree,
             &s.data,
             &init,
             Metric::Euclid,
             &mut CpuPanels,
             &mut assignments,
+            &mut scratch,
         )
-    });
+    }));
 
-    let quick = Bench::quick();
-    quick.run("lloyd_full_run_100k_k20", || {
+    // Blocked kernel, single thread: isolates the kernel win.
+    let mut blocked = ParCpuPanels::with_kernel(1, filtering::PanelKernel::Blocked);
+    results.push(b.run(&format!("filter_iteration_batched_blocked_{tag}"), || {
+        filtering::filter_iteration_batched_scratch(
+            &tree,
+            &s.data,
+            &init,
+            Metric::Euclid,
+            &mut blocked,
+            &mut assignments,
+            &mut scratch,
+        )
+    }));
+
+    // The production profile: blocked kernel across all cores.
+    let mut par = ParCpuPanels::new(workers);
+    results.push(b.run(&format!("filter_iteration_batched_par_{tag}"), || {
+        filtering::filter_iteration_batched_scratch(
+            &tree,
+            &s.data,
+            &init,
+            Metric::Euclid,
+            &mut par,
+            &mut assignments,
+            &mut scratch,
+        )
+    }));
+
+    // Raw panel throughput on a dense leaf-level-like batch.
+    {
+        let jobs_n = (n / 10).max(1);
+        let mut jobs = PanelJobs::new();
+        jobs.clear(d);
+        let cands: Vec<u32> = (0..k as u32).collect();
+        for j in 0..jobs_n {
+            jobs.push(s.data.point(j % n), &cands);
+        }
+        let mut out = PanelSet::new();
+        let mut par_panels = ParCpuPanels::new(workers);
+        par_panels.begin_pass(&init, Metric::Euclid);
+        results.push(b.run(&format!("panel_dense_{jobs_n}j_k20_par"), || {
+            par_panels.panels(&jobs, &init, Metric::Euclid, &mut out);
+        }));
+        let mut scalar_panels = CpuPanels;
+        results.push(b.run(&format!("panel_dense_{jobs_n}j_k20_scalar"), || {
+            scalar_panels.panels(&jobs, &init, Metric::Euclid, &mut out);
+        }));
+    }
+
+    results.push(quick.run(&format!("lloyd_full_run_{tag}_k20"), || {
         lloyd::run(
             &s.data,
             &init,
@@ -52,10 +144,10 @@ fn main() {
                 ..Default::default()
             },
         )
-    });
+    }));
 
     let coord = Coordinator::new(Backend::Cpu);
-    quick.run("coordinator_cpu_100k_k20", || {
+    results.push(quick.run(&format!("coordinator_cpu_{tag}_k20"), || {
         coord.run(
             &s.data,
             &CoordinatorOpts {
@@ -64,5 +156,29 @@ fn main() {
                 ..Default::default()
             },
         )
-    });
+    }));
+
+    // Headline ratio for the perf trajectory.
+    let med = |name: String| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median_s)
+            .unwrap_or(f64::NAN)
+    };
+    let base = med(format!("filter_iteration_batched_cpu_{tag}"));
+    let fast = med(format!("filter_iteration_batched_par_{tag}"));
+    if base.is_finite() && fast.is_finite() && fast > 0.0 {
+        println!(
+            "speedup filter_iteration_batched par-vs-scalar-cpu at {tag}: {:.2}x",
+            base / fast
+        );
+    }
+
+    // Machine-readable trajectory artifact at the repo root.
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    match bench::write_json(&out_path, &results) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
 }

@@ -25,9 +25,11 @@ use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::filtering::{self, FilterOpts};
 use crate::kmeans::init::{init_centroids, Init};
+use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
 use crate::kmeans::twolevel::{combine, quarter, quarter_round_robin, Partition, QUARTERS};
 use crate::kmeans::{KmeansResult, Metric, RunStats};
 use metrics::Stopwatch;
+use offload::OffloadStats;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -73,22 +75,91 @@ pub struct CoordOutcome {
     pub metrics: CoordMetrics,
 }
 
+/// A worker-side panel backend: either local CPU math (no channel — the
+/// software-only deployment computes panels in place, scalar per level-1
+/// worker, multi-threaded for the single-threaded level-2 phase) or the
+/// PL offload service.  Local variants count batches/jobs into the shared
+/// [`OffloadStats`]; the service counts its own.
+enum SystemPanels {
+    LocalScalar(CpuPanels, Arc<OffloadStats>),
+    LocalPar(ParCpuPanels, Arc<OffloadStats>),
+    Remote(offload::RemotePanels),
+}
+
+impl PanelBackend for SystemPanels {
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        match self {
+            SystemPanels::LocalScalar(b, _) => b.begin_pass(centroids, metric),
+            SystemPanels::LocalPar(b, _) => b.begin_pass(centroids, metric),
+            SystemPanels::Remote(b) => b.begin_pass(centroids, metric),
+        }
+    }
+
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        match self {
+            SystemPanels::LocalScalar(b, stats) => {
+                stats.record(jobs.len() as u64);
+                b.panels(jobs, centroids, metric, out);
+            }
+            SystemPanels::LocalPar(b, stats) => {
+                stats.record(jobs.len() as u64);
+                b.panels(jobs, centroids, metric, out);
+            }
+            SystemPanels::Remote(b) => b.panels(jobs, centroids, metric, out),
+        }
+    }
+}
+
 /// The system entry point.
 pub struct Coordinator {
-    service: OffloadService,
+    /// Spawned only for the PJRT backend — the software-only system keeps
+    /// panel math inside the worker threads.
+    service: Option<OffloadService>,
     pjrt: Option<Arc<crate::runtime::PjrtRuntime>>,
 }
 
 impl Coordinator {
     /// Build with an explicit backend.
     pub fn new(backend: Backend) -> Self {
-        let pjrt = match &backend {
-            Backend::Pjrt(rt) => Some(Arc::clone(rt)),
-            Backend::Cpu => None,
-        };
-        Self {
-            service: OffloadService::spawn(backend),
-            pjrt,
+        match backend {
+            Backend::Cpu => Self {
+                service: None,
+                pjrt: None,
+            },
+            Backend::Pjrt(rt) => Self {
+                service: Some(OffloadService::spawn(Backend::Pjrt(Arc::clone(&rt)))),
+                pjrt: Some(rt),
+            },
+        }
+    }
+
+    /// Panel backend for one level-1 worker (runs on that worker's thread).
+    fn worker_panels(&self, local_stats: &Arc<OffloadStats>) -> SystemPanels {
+        match &self.service {
+            Some(svc) => SystemPanels::Remote(offload::RemotePanels {
+                handle: svc.handle(),
+            }),
+            None => SystemPanels::LocalScalar(CpuPanels, Arc::clone(local_stats)),
+        }
+    }
+
+    /// Panel backend for the single-threaded level-2 phase: on CPU it
+    /// fans the panel arithmetic across `workers` threads.
+    fn level2_panels(&self, workers: usize, local_stats: &Arc<OffloadStats>) -> SystemPanels {
+        match &self.service {
+            Some(svc) => SystemPanels::Remote(offload::RemotePanels {
+                handle: svc.handle(),
+            }),
+            None => SystemPanels::LocalPar(
+                ParCpuPanels::scalar(workers),
+                Arc::clone(local_stats),
+            ),
         }
     }
 
@@ -99,6 +170,9 @@ impl Coordinator {
         let mut sw = Stopwatch::start();
         let total_sw = Stopwatch::start();
         let mut m = CoordMetrics::default();
+        // Batch/job counters for locally-computed (CPU) panels; the PJRT
+        // path counts inside the offload service instead.
+        let local_stats = Arc::new(OffloadStats::default());
         let pjrt_exec0 = self.pjrt.as_ref().map(|rt| rt.stats.executions()).unwrap_or(0);
         let pjrt_secs0 = self.pjrt.as_ref().map(|rt| rt.stats.exec_seconds()).unwrap_or(0.0);
 
@@ -132,13 +206,20 @@ impl Coordinator {
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for (qi, qdata) in quarters.iter().enumerate() {
-                    let handle = self.service.handle();
+                    let mut panels = self.worker_panels(&local_stats);
                     let fopts = fopts.clone();
                     let opts = opts.clone();
                     handles.push((
                         qi,
                         scope.spawn(move || {
-                            let tree = KdTree::build(qdata);
+                            // Sequential build: this already runs on one of
+                            // `QUARTERS` concurrent workers — nested build
+                            // threads would oversubscribe the cores.
+                            let tree = KdTree::build_par(
+                                qdata,
+                                crate::kdtree::DEFAULT_LEAF_SIZE,
+                                0,
+                            );
                             let init = init_centroids(
                                 qdata,
                                 opts.k,
@@ -146,7 +227,6 @@ impl Coordinator {
                                 opts.metric,
                                 opts.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9),
                             );
-                            let mut panels = offload::RemotePanels { handle };
                             filtering::run_batched(qdata, &tree, &init, &fopts, &mut panels)
                         }),
                     ));
@@ -172,9 +252,7 @@ impl Coordinator {
         m.combine_s = sw.lap();
 
         // ---- Level 2 ----------------------------------------------------------
-        let mut panels = offload::RemotePanels {
-            handle: self.service.handle(),
-        };
+        let mut panels = self.level2_panels(opts.workers, &local_stats);
         let result = filtering::run_batched(
             data,
             &full_tree,
@@ -189,9 +267,20 @@ impl Coordinator {
         m.level2_s = sw.lap();
 
         m.total_s = total_sw.elapsed().as_secs_f64();
-        let st = self.service.handle();
-        m.offload_batches = st.stats().batches.load(Ordering::Relaxed);
-        m.offload_jobs = st.stats().jobs.load(Ordering::Relaxed);
+        let (batches, jobs_served) = match &self.service {
+            Some(svc) => {
+                let st = svc.handle();
+                let batches = st.stats().batches.load(Ordering::Relaxed);
+                let jobs = st.stats().jobs.load(Ordering::Relaxed);
+                (batches, jobs)
+            }
+            None => (
+                local_stats.batches.load(Ordering::Relaxed),
+                local_stats.jobs.load(Ordering::Relaxed),
+            ),
+        };
+        m.offload_batches = batches;
+        m.offload_jobs = jobs_served;
         if let Some(rt) = &self.pjrt {
             m.pjrt_executions = rt.stats.executions() - pjrt_exec0;
             m.pjrt_exec_s = rt.stats.exec_seconds() - pjrt_secs0;

@@ -6,9 +6,14 @@
 //! touch the PL directly — a single manager (one Cortex-R5 in MUCH-SWIFT)
 //! owns the DMA/PL interface and serializes batches into it.  It also
 //! keeps the `xla` FFI usage single-threaded regardless of worker count.
+//!
+//! The wire format is the flat panel representation of
+//! [`crate::kmeans::panel`]: three arenas per request (`mids`, candidate
+//! indices, ragged offsets) and one [`PanelSet`] arena per reply — no
+//! nested `Vec`s cross the channel.
 
 use crate::data::Dataset;
-use crate::kmeans::filtering::{CpuPanels, PanelBackend};
+use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet};
 use crate::kmeans::Metric;
 use crate::runtime::PjrtRuntime;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,20 +35,27 @@ enum Msg {
     Shutdown,
 }
 
-/// One panel batch request.
+/// One panel batch request (flat wire format).
 struct Request {
-    mids: Vec<f32>,
-    cand_idx: Vec<Vec<u32>>,
+    jobs: PanelJobs,
     centroids: Dataset,
     metric: Metric,
-    reply: Sender<Vec<Vec<f32>>>,
+    reply: Sender<PanelSet>,
 }
 
-/// Service-side counters.
+/// Panel-service counters (batches and jobs served).
 #[derive(Debug, Default)]
 pub struct OffloadStats {
     pub batches: AtomicU64,
     pub jobs: AtomicU64,
+}
+
+impl OffloadStats {
+    #[inline]
+    pub fn record(&self, jobs: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(jobs, Ordering::Relaxed);
+    }
 }
 
 /// Handle the workers use; cloneable.
@@ -55,18 +67,12 @@ pub struct OffloadHandle {
 
 impl OffloadHandle {
     /// Synchronously compute one panel batch through the service.
-    pub fn panels(
-        &self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
-        centroids: &Dataset,
-        metric: Metric,
-    ) -> Vec<Vec<f32>> {
+    pub fn panels(&self, jobs: &PanelJobs, centroids: &Dataset, metric: Metric) -> PanelSet {
         let (reply_tx, reply_rx) = channel();
+        let (d, mids, cand, cand_off) = jobs.parts();
         self.tx
             .send(Msg::Panels(Request {
-                mids: mids.to_vec(),
-                cand_idx: cand_idx.to_vec(),
+                jobs: PanelJobs::from_parts(d, mids.to_vec(), cand.to_vec(), cand_off.to_vec()),
                 centroids: centroids.clone(),
                 metric,
                 reply: reply_tx,
@@ -94,24 +100,25 @@ impl OffloadService {
         let join = std::thread::Builder::new()
             .name("pl-offload".into())
             .spawn(move || {
+                // The CPU fallback serves the scalar oracle kernel so the
+                // service path stays bit-identical to the reference.
                 let mut cpu = CpuPanels;
                 while let Ok(msg) = rx.recv() {
                     let req = match msg {
                         Msg::Panels(r) => r,
                         Msg::Shutdown => break,
                     };
-                    svc_stats.batches.fetch_add(1, Ordering::Relaxed);
-                    svc_stats
-                        .jobs
-                        .fetch_add(req.cand_idx.len() as u64, Ordering::Relaxed);
-                    let out = match &backend {
+                    svc_stats.record(req.jobs.len() as u64);
+                    let mut out = PanelSet::new();
+                    match &backend {
                         Backend::Cpu => {
-                            cpu.panels(&req.mids, &req.cand_idx, &req.centroids, req.metric)
+                            cpu.begin_pass(&req.centroids, req.metric);
+                            cpu.panels(&req.jobs, &req.centroids, req.metric, &mut out);
                         }
                         Backend::Pjrt(rt) => rt
-                            .filter_panels(&req.mids, &req.cand_idx, &req.centroids, req.metric)
+                            .filter_panels(&req.jobs, &req.centroids, req.metric, &mut out)
                             .expect("pjrt panel execution failed"),
-                    };
+                    }
                     // Receiver may have given up (worker panic); ignore.
                     let _ = req.reply.send(out);
                 }
@@ -148,12 +155,12 @@ pub struct RemotePanels {
 impl PanelBackend for RemotePanels {
     fn panels(
         &mut self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
+        jobs: &PanelJobs,
         centroids: &Dataset,
         metric: Metric,
-    ) -> Vec<Vec<f32>> {
-        self.handle.panels(mids, cand_idx, centroids, metric)
+        out: &mut PanelSet,
+    ) {
+        *out = self.handle.panels(jobs, centroids, metric);
     }
 }
 
@@ -167,15 +174,17 @@ mod tests {
         let svc = OffloadService::spawn(Backend::Cpu);
         let s = generate_params(50, 3, 2, 0.2, 1.0, 1);
         let cents = s.data.gather(&[0, 1, 2]);
-        let mids: Vec<f32> = s.data.flat()[..6].to_vec(); // 2 jobs, d=3
-        let cand = vec![vec![0u32, 1, 2], vec![1u32]];
-        let got = svc.handle().panels(&mids, &cand, &cents, Metric::Euclid);
+        let mut jobs = PanelJobs::new();
+        jobs.clear(3);
+        jobs.push(s.data.point(0), &[0, 1, 2]);
+        jobs.push(s.data.point(1), &[1]);
+        let got = svc.handle().panels(&jobs, &cents, Metric::Euclid);
         assert_eq!(got.len(), 2);
-        assert_eq!(got[0].len(), 3);
-        assert_eq!(got[1].len(), 1);
+        assert_eq!(got.row(0).len(), 3);
+        assert_eq!(got.row(1).len(), 1);
         // Distances match direct computation.
-        let want = Metric::Euclid.dist(&mids[0..3], cents.point(1));
-        assert!((got[0][1] - want).abs() < 1e-6);
+        let want = Metric::Euclid.dist(s.data.point(0), cents.point(1));
+        assert!((got.row(0)[1] - want).abs() < 1e-6);
         assert_eq!(svc.handle().stats().batches.load(Ordering::Relaxed), 1);
         assert_eq!(svc.handle().stats().jobs.load(Ordering::Relaxed), 2);
     }
@@ -191,10 +200,12 @@ mod tests {
             let cents = Arc::clone(&cents);
             let data = s.data.clone();
             joins.push(std::thread::spawn(move || {
+                let mut jobs = PanelJobs::new();
                 for i in 0..20 {
-                    let p = data.point((w * 20 + i) % 100).to_vec();
-                    let out = h.panels(&p, &[vec![0, 1, 2]], &cents, Metric::Manhattan);
-                    assert_eq!(out[0].len(), 3);
+                    jobs.clear(2);
+                    jobs.push(data.point((w * 20 + i) % 100), &[0, 1, 2]);
+                    let out = h.panels(&jobs, &cents, Metric::Manhattan);
+                    assert_eq!(out.row(0).len(), 3);
                 }
             }));
         }

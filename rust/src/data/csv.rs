@@ -6,14 +6,36 @@ use super::dataset::Dataset;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CsvError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("empty dataset")]
     Empty,
+}
+
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvError::Io(e) => write!(f, "io error: {e}"),
+            CsvError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            CsvError::Empty => write!(f, "empty dataset"),
+        }
+    }
+}
+
+impl std::error::Error for CsvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CsvError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CsvError {
+    fn from(e: std::io::Error) -> Self {
+        CsvError::Io(e)
+    }
 }
 
 /// Load a dataset; every non-comment line must have the same number of

@@ -62,18 +62,61 @@ pub struct KdTree {
 /// Default leaf bucket size (see module docs).
 pub const DEFAULT_LEAF_SIZE: usize = 8;
 
+/// Below this many points a build stays single-threaded — the spawn and
+/// merge overhead of the parallel build would exceed the split work.
+pub const PAR_BUILD_MIN_POINTS: usize = 1 << 15;
+
+/// Split-phase work item: node index + covered permutation range.
+struct Work {
+    node: u32,
+    start: usize,
+    len: usize,
+    depth: u16,
+}
+
+/// Default parallel hand-off depth for `n` points on this machine:
+/// 0 (sequential) for small inputs, otherwise deep enough to give each
+/// available core a subtree (capped at depth 2 = 4 subtrees, the paper's
+/// quad-A53 analogue).
+fn auto_par_depth(n: usize) -> usize {
+    if n < PAR_BUILD_MIN_POINTS {
+        return 0;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    match cores {
+        0 | 1 => 0,
+        2 | 3 => 1,
+        _ => 2,
+    }
+}
+
 impl KdTree {
     /// Build over all points of `data` with the default leaf size.
     pub fn build(data: &Dataset) -> Self {
         Self::build_with(data, DEFAULT_LEAF_SIZE)
     }
 
-    /// Build with an explicit leaf bucket capacity (>= 1).
+    /// Build with an explicit leaf bucket capacity (>= 1).  Large inputs
+    /// are built in parallel (see [`KdTree::build_par`]); the resulting
+    /// tree geometry is identical to a sequential build — the split rule
+    /// is deterministic and threads own disjoint permutation ranges — only
+    /// the node arena order differs.
+    pub fn build_with(data: &Dataset, leaf_size: usize) -> Self {
+        Self::build_par(data, leaf_size, auto_par_depth(data.len()))
+    }
+
+    /// Build with an explicit parallel hand-off depth: the split phase
+    /// runs single-threaded down to `par_depth`, then every surviving
+    /// subtree at that depth is built by its own `std::thread::scope`
+    /// worker on a disjoint slice of the permutation.  `par_depth == 0`
+    /// is the fully sequential build.
     ///
     /// Split rule: median split (via quickselect) on the widest dimension
     /// of the node's tight bounding box — guarantees both children are
     /// non-empty and depth is O(log n) regardless of data skew.
-    pub fn build_with(data: &Dataset, leaf_size: usize) -> Self {
+    pub fn build_par(data: &Dataset, leaf_size: usize, par_depth: usize) -> Self {
         assert!(leaf_size >= 1);
         assert!(!data.is_empty(), "cannot build a kd-tree over zero points");
         let d = data.dims();
@@ -82,23 +125,15 @@ impl KdTree {
         // Arena capacity estimate: ~2 * ceil(n / leaf) internal+leaf nodes.
         let mut nodes: Vec<Node> = Vec::with_capacity(2 * (n / leaf_size + 2));
 
-        // Explicit work stack (node index, range, depth) to avoid deep
-        // recursion on adversarial data.
-        struct Work {
-            node: u32,
-            start: usize,
-            len: usize,
-            depth: u16,
-        }
-
-        // Create root placeholder.
-        nodes.push(Self::make_node(data, &perm, 0, n, 0));
+        // ---- top phase: sequential splits above the hand-off depth -----
+        nodes.push(Self::make_node_seg(data, &perm, 0, n, 0, 0));
         let mut stack = vec![Work {
             node: 0,
             start: 0,
             len: n,
             depth: 0,
         }];
+        let mut frontier: Vec<Work> = Vec::new();
 
         while let Some(w) = stack.pop() {
             if w.len <= leaf_size {
@@ -107,6 +142,10 @@ impl KdTree {
             let (dim, extent) = nodes[w.node as usize].bbox.widest_dim();
             if extent <= 0.0 {
                 // All points identical: cannot split meaningfully.
+                continue;
+            }
+            if par_depth > 0 && w.depth as usize >= par_depth {
+                frontier.push(w);
                 continue;
             }
             let seg = &mut perm[w.start..w.start + w.len];
@@ -121,13 +160,14 @@ impl KdTree {
             });
 
             let left_idx = nodes.len() as u32;
-            nodes.push(Self::make_node(data, &perm, w.start, mid, w.depth + 1));
+            nodes.push(Self::make_node_seg(data, &perm, w.start, mid, 0, w.depth + 1));
             let right_idx = nodes.len() as u32;
-            nodes.push(Self::make_node(
+            nodes.push(Self::make_node_seg(
                 data,
                 &perm,
                 w.start + mid,
                 w.len - mid,
+                0,
                 w.depth + 1,
             ));
             let node = &mut nodes[w.node as usize];
@@ -147,6 +187,49 @@ impl KdTree {
             });
         }
 
+        // ---- parallel phase: one worker per frontier subtree -----------
+        if !frontier.is_empty() {
+            // Deterministic order (the stack pops right-first); each item
+            // covers a disjoint contiguous range of `perm`.
+            frontier.sort_by_key(|w| w.start);
+            let mut results: Vec<Vec<Node>> = Vec::with_capacity(frontier.len());
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(frontier.len());
+                let mut rest: &mut [u32] = &mut perm[..];
+                let mut consumed = 0usize;
+                for w in &frontier {
+                    let (_, tail) = rest.split_at_mut(w.start - consumed);
+                    let (seg, tail) = tail.split_at_mut(w.len);
+                    rest = tail;
+                    consumed = w.start + w.len;
+                    let root = nodes[w.node as usize].clone();
+                    let (abs_start, depth) = (w.start, w.depth);
+                    handles.push(scope.spawn(move || {
+                        Self::build_subtree(data, seg, abs_start, depth, leaf_size, root)
+                    }));
+                }
+                for h in handles {
+                    results.push(h.join().expect("kd-tree build worker panicked"));
+                }
+            });
+            // Merge, remapping subtree-local indices into the shared arena
+            // (local 0 is the frontier node itself, already in place).
+            for (w, local) in frontier.iter().zip(results) {
+                let base = nodes.len() as u32;
+                for (li, mut node) in local.into_iter().enumerate() {
+                    if node.left != NIL {
+                        node.left = base + node.left - 1;
+                        node.right = base + node.right - 1;
+                    }
+                    if li == 0 {
+                        nodes[w.node as usize] = node;
+                    } else {
+                        nodes.push(node);
+                    }
+                }
+            }
+        }
+
         Self {
             nodes,
             perm,
@@ -155,7 +238,80 @@ impl KdTree {
         }
     }
 
-    fn make_node(data: &Dataset, perm: &[u32], start: usize, len: usize, depth: u16) -> Node {
+    /// Build one subtree over a disjoint permutation segment into a local
+    /// arena (indices local; entry 0 is `root`).  `abs_start` anchors the
+    /// segment's absolute position so `Node::start` stays global.
+    fn build_subtree(
+        data: &Dataset,
+        seg: &mut [u32],
+        abs_start: usize,
+        depth0: u16,
+        leaf_size: usize,
+        root: Node,
+    ) -> Vec<Node> {
+        let mut nodes = vec![root];
+        let mut stack = vec![Work {
+            node: 0,
+            start: 0,
+            len: seg.len(),
+            depth: depth0,
+        }];
+        while let Some(w) = stack.pop() {
+            if w.len <= leaf_size {
+                continue;
+            }
+            let (dim, extent) = nodes[w.node as usize].bbox.widest_dim();
+            if extent <= 0.0 {
+                continue;
+            }
+            let sub = &mut seg[w.start..w.start + w.len];
+            let mid = w.len / 2;
+            sub.select_nth_unstable_by(mid, |&a, &b| {
+                let va = data.point(a as usize)[dim];
+                let vb = data.point(b as usize)[dim];
+                va.total_cmp(&vb)
+            });
+
+            let left_idx = nodes.len() as u32;
+            nodes.push(Self::make_node_seg(data, seg, w.start, mid, abs_start, w.depth + 1));
+            let right_idx = nodes.len() as u32;
+            nodes.push(Self::make_node_seg(
+                data,
+                seg,
+                w.start + mid,
+                w.len - mid,
+                abs_start,
+                w.depth + 1,
+            ));
+            let node = &mut nodes[w.node as usize];
+            node.left = left_idx;
+            node.right = right_idx;
+            stack.push(Work {
+                node: left_idx,
+                start: w.start,
+                len: mid,
+                depth: w.depth + 1,
+            });
+            stack.push(Work {
+                node: right_idx,
+                start: w.start + mid,
+                len: w.len - mid,
+                depth: w.depth + 1,
+            });
+        }
+        nodes
+    }
+
+    /// Make a node over `seg[lo..lo+len]`; `abs_start + lo` is the range's
+    /// absolute position in the full permutation.
+    fn make_node_seg(
+        data: &Dataset,
+        seg: &[u32],
+        lo: usize,
+        len: usize,
+        abs_start: usize,
+        depth: u16,
+    ) -> Node {
         let d = data.dims();
         // Single fused pass over the subtree's points for bbox min/max and
         // the weighted-centroid sum (§Perf L3-1: the build walks every
@@ -164,7 +320,7 @@ impl KdTree {
         let mut min = vec![f32::INFINITY; d];
         let mut max = vec![f32::NEG_INFINITY; d];
         let mut wgt = vec![0f32; d];
-        for &i in &perm[start..start + len] {
+        for &i in &seg[lo..lo + len] {
             let p = data.point(i as usize);
             for j in 0..d {
                 let v = p[j];
@@ -183,7 +339,7 @@ impl KdTree {
             count: len as u32,
             left: NIL,
             right: NIL,
-            start: start as u32,
+            start: (abs_start + lo) as u32,
             len: len as u32,
             depth,
         }
@@ -328,5 +484,50 @@ mod tests {
         let tree = KdTree::build_with(&s.data, 1);
         // Median splits: depth == ceil(log2(4096)) = 12 (+1 slack).
         assert!(tree.depth() <= 13, "depth {}", tree.depth());
+    }
+
+    /// The parallel build produces the same tree geometry as the
+    /// sequential build — identical permutation and identical node set
+    /// (order in the arena may differ).
+    #[test]
+    fn parallel_build_matches_sequential_geometry() {
+        for (n, d, leaf, par_depth) in
+            [(2000, 3, 8, 2), (513, 2, 1, 3), (64, 4, 4, 2), (40, 2, 16, 2)]
+        {
+            let s = generate_params(n, d, 4, 0.25, 1.0, 77);
+            let seq = KdTree::build_par(&s.data, leaf, 0);
+            let par = KdTree::build_par(&s.data, leaf, par_depth);
+            check_invariants(&par, &s.data);
+            assert_eq!(seq.perm, par.perm, "n={n} leaf={leaf}");
+            assert_eq!(seq.nodes.len(), par.nodes.len());
+            assert_eq!(seq.depth(), par.depth());
+            assert_eq!(seq.leaves(), par.leaves());
+            let key = |t: &KdTree| {
+                let mut v: Vec<(u32, u32, u16, bool)> = t
+                    .nodes
+                    .iter()
+                    .map(|nd| (nd.start, nd.len, nd.depth, nd.is_leaf()))
+                    .collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(key(&seq), key(&par), "node multiset differs (n={n})");
+        }
+    }
+
+    /// Degenerate data through the parallel path: unsplittable subtrees
+    /// stay leaves, invariants hold.
+    #[test]
+    fn parallel_build_degenerate_data() {
+        let mut flat = vec![1.0f32; 400];
+        // Two distinct columns so the root splits once, then each half is
+        // constant along every axis.
+        for v in flat.iter_mut().skip(200) {
+            *v = 2.0;
+        }
+        let data = Dataset::from_flat(200, 2, flat);
+        let tree = KdTree::build_par(&data, 4, 2);
+        check_invariants(&tree, &data);
+        assert_eq!(tree.root().count, 200);
     }
 }

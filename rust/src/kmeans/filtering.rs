@@ -17,7 +17,33 @@
 //! Both engines produce identical assignments/centroids up to f32
 //! accumulation order (verified against each other and against Lloyd in
 //! the tests — the filtering algorithm is *exact*, not approximate).
+//!
+//! # Panel engine
+//!
+//! The batched engine's distance arithmetic lives in
+//! [`crate::kmeans::panel`].  The shapes on the seam:
+//!
+//! - [`PanelJobs`] — one tree level's job batch, flat: `mids` is the
+//!   `[jobs, d]` row-major query arena (cell midpoints and leaf points),
+//!   candidates are a single `u32` arena with ragged offsets.
+//! - [`PanelSet`] — the distance panels coming back, one `f32` arena with
+//!   the same ragged offsets (`PanelSet { dists, offsets }`).
+//! - [`PanelBackend`] — `begin_pass` once per iteration (backends cache
+//!   per-centroid state, e.g. squared norms), `panels` once per level.
+//!
+//! All of it is arena-backed and owned by a [`FilterScratch`], which
+//! [`run_batched`] allocates **once per run** and recycles across levels
+//! and iterations — the steady-state traversal performs no heap
+//! allocation.  Candidate sets in the wave are shared: a split node pushes
+//! its surviving candidates once and both children reference the same
+//! range.
+//!
+//! Backends: [`CpuPanels`] (scalar oracle, bit-identical to the recursive
+//! engine), [`ParCpuPanels`] (multi-threaded, optionally blocked kernels —
+//! the software "PL"), and `runtime::PjrtPanels` / the coordinator's
+//! offload service for the real PJRT seam.
 
+use super::panel::{PanelJobs, PanelSet};
 use super::{
     centroids_from_sums, max_sq_movement, IterStats, KmeansResult, LevelWork, Metric,
     RunStats,
@@ -25,51 +51,7 @@ use super::{
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
 
-/// Distance-panel provider for the batched engine.
-///
-/// One *job* is a query point (cell midpoint or leaf point) plus a set of
-/// candidate centroid indices; the backend returns, for each job, the
-/// distance from the query to every candidate.  Implementations: CPU
-/// ([`CpuPanels`]) and PJRT offload (`runtime::PjrtPanels`).
-pub trait PanelBackend {
-    /// `mids` is `[jobs, d]` flat; `cand_idx[j]` lists candidate centroid
-    /// rows (into `centroids`) of job `j`.  Returns, per job, a `Vec` of
-    /// distances aligned with `cand_idx[j]`.
-    fn panels(
-        &mut self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
-        centroids: &Dataset,
-        metric: Metric,
-    ) -> Vec<Vec<f32>>;
-}
-
-/// Plain-CPU panel backend (software baseline / tests).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct CpuPanels;
-
-impl PanelBackend for CpuPanels {
-    fn panels(
-        &mut self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
-        centroids: &Dataset,
-        metric: Metric,
-    ) -> Vec<Vec<f32>> {
-        let d = centroids.dims();
-        cand_idx
-            .iter()
-            .enumerate()
-            .map(|(j, cands)| {
-                let q = &mids[j * d..(j + 1) * d];
-                cands
-                    .iter()
-                    .map(|&c| metric.dist(q, centroids.point(c as usize)))
-                    .collect()
-            })
-            .collect()
-    }
-}
+pub use super::panel::{CpuPanels, PanelBackend, PanelKernel, ParCpuPanels};
 
 /// Options shared by both engines.
 #[derive(Clone, Debug)]
@@ -263,8 +245,47 @@ fn recurse(
 // Level-batched engine (the HW/SW split)
 // ---------------------------------------------------------------------------
 
+/// One alive node in the breadth-first wave: the node index plus its
+/// candidate range in the wave's candidate arena.  Sibling nodes produced
+/// by the same split share one range.
+#[derive(Clone, Copy, Debug)]
+struct WaveNode {
+    node: u32,
+    cand_start: u32,
+    cand_len: u32,
+}
+
+/// What a panel job resolves to on the PS side.
+#[derive(Clone, Copy, Debug)]
+enum JobKind {
+    Interior { wave_slot: u32 },
+    LeafPoint { point: u32 },
+}
+
+/// Arenas for the level-batched engine, allocated once per run and
+/// recycled across tree levels **and** solver iterations (§Panel engine in
+/// the module docs).  Steady-state traversal allocates nothing.
+#[derive(Debug, Default)]
+pub struct FilterScratch {
+    jobs: PanelJobs,
+    panels: PanelSet,
+    kinds: Vec<JobKind>,
+    wave: Vec<WaveNode>,
+    next_wave: Vec<WaveNode>,
+    cand: Vec<u32>,
+    next_cand: Vec<u32>,
+}
+
+impl FilterScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One filtering pass, breadth-first, with distance panels computed by
-/// `backend` one tree level at a time.
+/// `backend` one tree level at a time.  Allocates fresh scratch arenas;
+/// iterating callers should use [`filter_iteration_batched_scratch`] (as
+/// [`run_batched`] does) to recycle them.
 pub fn filter_iteration_batched<B: PanelBackend>(
     tree: &KdTree,
     data: &Dataset,
@@ -273,13 +294,47 @@ pub fn filter_iteration_batched<B: PanelBackend>(
     backend: &mut B,
     assignments: &mut [u32],
 ) -> (Vec<f32>, Vec<u32>, IterStats) {
+    let mut scratch = FilterScratch::new();
+    filter_iteration_batched_scratch(tree, data, centroids, metric, backend, assignments, &mut scratch)
+}
+
+/// [`filter_iteration_batched`] with caller-owned arenas.
+#[allow(clippy::too_many_arguments)]
+pub fn filter_iteration_batched_scratch<B: PanelBackend>(
+    tree: &KdTree,
+    data: &Dataset,
+    centroids: &Dataset,
+    metric: Metric,
+    backend: &mut B,
+    assignments: &mut [u32],
+    arena: &mut FilterScratch,
+) -> (Vec<f32>, Vec<u32>, IterStats) {
     let k = centroids.len();
     let d = data.dims();
     let mut scratch = Scratch::new(k, d);
     let mut stats = IterStats::default();
 
-    // Wave = all alive (node, candidates) pairs at one depth.
-    let mut wave: Vec<(u32, Vec<u32>)> = vec![(0, (0..k as u32).collect())];
+    backend.begin_pass(centroids, metric);
+
+    let FilterScratch {
+        jobs,
+        panels,
+        kinds,
+        wave,
+        next_wave,
+        cand,
+        next_cand,
+    } = arena;
+
+    // Root wave: every centroid is a candidate.
+    wave.clear();
+    cand.clear();
+    cand.extend(0..k as u32);
+    wave.push(WaveNode {
+        node: 0,
+        cand_start: 0,
+        cand_len: k as u32,
+    });
     let mut depth = 0usize;
 
     while !wave.is_empty() {
@@ -289,45 +344,41 @@ pub fn filter_iteration_batched<B: PanelBackend>(
 
         // Assemble the level's job batch: one midpoint job per interior
         // node, one job per leaf point.
-        #[derive(Clone, Copy)]
-        enum JobKind {
-            Interior { wave_slot: usize },
-            LeafPoint { point: u32 },
-        }
-        let mut mids: Vec<f32> = Vec::new();
-        let mut cand_idx: Vec<Vec<u32>> = Vec::new();
-        let mut kinds: Vec<JobKind> = Vec::new();
-
-        for (slot, (node_idx, cand)) in wave.iter().enumerate() {
-            let node = &tree.nodes[*node_idx as usize];
+        jobs.clear(d);
+        kinds.clear();
+        for (slot, wn) in wave.iter().enumerate() {
+            let node = &tree.nodes[wn.node as usize];
+            let cands =
+                &cand[wn.cand_start as usize..(wn.cand_start + wn.cand_len) as usize];
             stats.node_visits += 1;
             if node.is_leaf() {
                 for &pi in tree.node_points(node) {
-                    mids.extend_from_slice(data.point(pi as usize));
-                    cand_idx.push(cand.clone());
+                    jobs.push(data.point(pi as usize), cands);
                     kinds.push(JobKind::LeafPoint { point: pi });
                     stats.levels[depth].leaf_jobs += 1;
-                    stats.levels[depth].cand_evals += cand.len() as u64;
+                    stats.levels[depth].cand_evals += cands.len() as u64;
                 }
             } else {
-                mids.extend_from_slice(&node.bbox.midpoint());
-                cand_idx.push(cand.clone());
-                kinds.push(JobKind::Interior { wave_slot: slot });
+                jobs.push_with(cands, |mid| node.bbox.midpoint_into(mid));
+                kinds.push(JobKind::Interior {
+                    wave_slot: slot as u32,
+                });
                 stats.levels[depth].interior_jobs += 1;
-                stats.levels[depth].cand_evals += cand.len() as u64;
+                stats.levels[depth].cand_evals += cands.len() as u64;
             }
         }
 
         // The offloaded arithmetic: one panel batch for the whole level.
-        let panels = backend.panels(&mids, &cand_idx, centroids, metric);
+        backend.panels(jobs, centroids, metric, panels);
         debug_assert_eq!(panels.len(), kinds.len());
 
         // PS-side consumption of the panels.
-        let mut next_wave: Vec<(u32, Vec<u32>)> = Vec::new();
+        next_wave.clear();
+        next_cand.clear();
         for (j, kind) in kinds.iter().enumerate() {
-            let cand = &cand_idx[j];
-            let dists = &panels[j];
-            stats.dist_evals += cand.len() as u64;
+            let cands = jobs.cands(j);
+            let dists = panels.row(j);
+            stats.dist_evals += cands.len() as u64;
             // arg-min with first-wins tie-break (matches recursive engine).
             let mut best_slot = 0usize;
             for (s, &dist) in dists.iter().enumerate() {
@@ -335,7 +386,7 @@ pub fn filter_iteration_batched<B: PanelBackend>(
                     best_slot = s;
                 }
             }
-            let best = cand[best_slot];
+            let best = cands[best_slot];
 
             match *kind {
                 JobKind::LeafPoint { point } => {
@@ -345,13 +396,15 @@ pub fn filter_iteration_batched<B: PanelBackend>(
                     stats.leaf_points += 1;
                 }
                 JobKind::Interior { wave_slot } => {
-                    let (node_idx, _) = wave[wave_slot];
+                    let node_idx = wave[wave_slot as usize].node;
                     let node = &tree.nodes[node_idx as usize];
                     let z_star = best;
-                    let mut keep: Vec<u32> = Vec::with_capacity(cand.len());
-                    for &c in cand {
+                    // Survivors go into the next wave's arena; both
+                    // children share the range.
+                    let keep_start = next_cand.len();
+                    for &c in cands {
                         if c == z_star {
-                            keep.push(c);
+                            next_cand.push(c);
                             continue;
                         }
                         stats.prune_tests += 1;
@@ -361,24 +414,35 @@ pub fn filter_iteration_batched<B: PanelBackend>(
                             centroids.point(z_star as usize),
                             metric,
                         ) {
-                            keep.push(c);
+                            next_cand.push(c);
                         }
                     }
-                    if keep.len() == 1 {
+                    let keep_len = next_cand.len() - keep_start;
+                    if keep_len == 1 {
+                        next_cand.truncate(keep_start);
                         scratch.add_subtree(z_star as usize, &node.wgt_cent, node.count, d);
                         stats.interior_assigns += node.count as u64;
                         for &pi in tree.node_points(node) {
                             assignments[pi as usize] = z_star;
                         }
                     } else {
-                        next_wave.push((node.left, keep.clone()));
-                        next_wave.push((node.right, keep));
+                        next_wave.push(WaveNode {
+                            node: node.left,
+                            cand_start: keep_start as u32,
+                            cand_len: keep_len as u32,
+                        });
+                        next_wave.push(WaveNode {
+                            node: node.right,
+                            cand_start: keep_start as u32,
+                            cand_len: keep_len as u32,
+                        });
                     }
                 }
             }
         }
 
-        wave = next_wave;
+        std::mem::swap(wave, next_wave);
+        std::mem::swap(cand, next_cand);
         depth += 1;
     }
 
@@ -416,13 +480,21 @@ fn run_impl<B: PanelBackend>(
     let mut centroids = init.clone();
     let mut assignments = vec![0u32; data.len()];
     let mut stats = RunStats::default();
+    // One arena set for the whole run — recycled every iteration.
+    let mut scratch = FilterScratch::new();
 
     for _ in 0..opts.max_iters {
         let (sums, counts, mut iter_stats) = match backend.as_deref_mut() {
             None => filter_iteration(tree, data, &centroids, opts.metric, &mut assignments),
-            Some(b) => {
-                filter_iteration_batched(tree, data, &centroids, opts.metric, b, &mut assignments)
-            }
+            Some(b) => filter_iteration_batched_scratch(
+                tree,
+                data,
+                &centroids,
+                opts.metric,
+                b,
+                &mut assignments,
+                &mut scratch,
+            ),
         };
         let next = centroids_from_sums(&sums, &counts, &centroids);
         iter_stats.moved = max_sq_movement(&centroids, &next);

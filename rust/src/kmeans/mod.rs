@@ -24,6 +24,7 @@ pub mod filtering;
 pub mod init;
 pub mod lloyd;
 pub mod metrics;
+pub mod panel;
 pub mod twolevel;
 
 pub use metrics::Metric;
@@ -138,13 +139,11 @@ impl KmeansResult {
     /// Exact k-means objective (sum over points of distance to assigned
     /// centroid) — used by tests to compare solvers.
     pub fn objective(&self, data: &Dataset, metric: Metric) -> f64 {
-        let d = data.dims();
         let mut acc = 0f64;
         for (i, p) in data.iter().enumerate() {
             let c = self.centroids.point(self.assignments[i] as usize);
             acc += metric.dist(p, c) as f64;
         }
-        let _ = d;
         acc
     }
 

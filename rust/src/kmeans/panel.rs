@@ -1,0 +1,692 @@
+//! The distance-panel engine: flat, arena-backed panel batches and the
+//! blocked, multi-threaded CPU kernels that fill them.
+//!
+//! One *job* is a query point (kd-cell midpoint or leaf point) plus a set
+//! of candidate centroid indices; a *panel* is the job's distance row
+//! (query → every candidate).  The level-batched filtering traversal
+//! ([`crate::kmeans::filtering::filter_iteration_batched`]) assembles one
+//! job batch per tree level and ships it through a [`PanelBackend`] —
+//! the software analogue of the paper's PS→PL BRAM bridge.
+//!
+//! Everything here is *flat*:
+//!
+//! - [`PanelJobs`] holds the whole batch in three arenas (`mids` row-major,
+//!   candidates + ragged offsets) — no per-job `Vec`s;
+//! - [`PanelSet`] holds every distance row in one arena with the same
+//!   ragged offsets — allocated once per run and recycled across levels
+//!   and iterations (see `FilterScratch`).
+//!
+//! Backends:
+//!
+//! - [`CpuPanels`] — the scalar reference: one [`Metric::dist`] call per
+//!   (job, candidate), bit-identical to the recursive engine's arithmetic.
+//!   This is the semantic oracle the equivalence tests pin.
+//! - [`ParCpuPanels`] — the production CPU backend: splits the job list
+//!   across `std::thread::scope` workers (each writing a disjoint slice of
+//!   the output arena) and, with [`PanelKernel::Blocked`], computes
+//!   squared-L2 via the `‖q−c‖² = ‖q‖² − 2·q·c + ‖c‖²` decomposition with
+//!   per-pass cached centroid norms and 8-wide manually unrolled inner
+//!   loops (the shape the autovectorizer turns into SIMD).  The blocked
+//!   kernel matches the scalar one to f32 rounding (≤ ~1e-4 relative),
+//!   which the property tests in `tests/panel_engine.rs` enforce.
+
+use super::Metric;
+use crate::data::Dataset;
+
+// ---------------------------------------------------------------------------
+// Flat batch containers
+// ---------------------------------------------------------------------------
+
+/// A flat batch of panel jobs: query points plus ragged candidate lists.
+///
+/// Arena-backed: `clear` + `push` recycle the allocations, so steady-state
+/// traversal allocates nothing per level.  Offsets are `u32` (a single
+/// level batch is capped at 2^32 candidate evaluations — far beyond the
+/// BRAM-bridge scale this models).
+#[derive(Clone, Debug)]
+pub struct PanelJobs {
+    d: usize,
+    mids: Vec<f32>,
+    cand: Vec<u32>,
+    cand_off: Vec<u32>,
+}
+
+impl Default for PanelJobs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PanelJobs {
+    pub fn new() -> Self {
+        Self {
+            d: 0,
+            mids: Vec::new(),
+            cand: Vec::new(),
+            cand_off: vec![0],
+        }
+    }
+
+    /// Reuse an existing (possibly filled) batch for a new set of jobs of
+    /// dimensionality `d`.  Keeps the arena capacity.
+    pub fn clear(&mut self, d: usize) {
+        debug_assert!(d > 0);
+        self.d = d;
+        self.mids.clear();
+        self.cand.clear();
+        self.cand_off.clear();
+        self.cand_off.push(0);
+    }
+
+    /// Rebuild from raw parts (the offload-service wire format).
+    pub fn from_parts(d: usize, mids: Vec<f32>, cand: Vec<u32>, cand_off: Vec<u32>) -> Self {
+        debug_assert!(!cand_off.is_empty() && cand_off[0] == 0);
+        debug_assert_eq!(mids.len(), (cand_off.len() - 1) * d);
+        debug_assert_eq!(*cand_off.last().unwrap() as usize, cand.len());
+        Self {
+            d,
+            mids,
+            cand,
+            cand_off,
+        }
+    }
+
+    /// Append one job with an explicit query point.
+    #[inline]
+    pub fn push(&mut self, mid: &[f32], cands: &[u32]) {
+        debug_assert_eq!(mid.len(), self.d);
+        self.mids.extend_from_slice(mid);
+        self.push_cands(cands);
+    }
+
+    /// Append one job whose query point is written in place by `fill`
+    /// (used for kd-cell midpoints — no temporary buffer).
+    #[inline]
+    pub fn push_with(&mut self, cands: &[u32], fill: impl FnOnce(&mut [f32])) {
+        let start = self.mids.len();
+        self.mids.resize(start + self.d, 0.0);
+        fill(&mut self.mids[start..]);
+        self.push_cands(cands);
+    }
+
+    #[inline]
+    fn push_cands(&mut self, cands: &[u32]) {
+        self.cand.extend_from_slice(cands);
+        debug_assert!(self.cand.len() <= u32::MAX as usize);
+        self.cand_off.push(self.cand.len() as u32);
+    }
+
+    /// Number of jobs in the batch.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cand_off.len() - 1
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Query dimensionality.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Query point of job `j`.
+    #[inline]
+    pub fn mid(&self, j: usize) -> &[f32] {
+        &self.mids[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Candidate centroid rows of job `j`.
+    #[inline]
+    pub fn cands(&self, j: usize) -> &[u32] {
+        &self.cand[self.cand_off[j] as usize..self.cand_off[j + 1] as usize]
+    }
+
+    /// Total candidate evaluations across the batch.
+    #[inline]
+    pub fn total_cands(&self) -> usize {
+        *self.cand_off.last().unwrap() as usize
+    }
+
+    /// Largest candidate list in the batch.
+    pub fn max_cands(&self) -> usize {
+        self.cand_off
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The flat arenas (wire format for the offload service).
+    pub fn parts(&self) -> (usize, &[f32], &[u32], &[u32]) {
+        (self.d, &self.mids, &self.cand, &self.cand_off)
+    }
+}
+
+/// A flat set of distance panels: one arena of distances plus ragged
+/// offsets mirroring the job batch's candidate lists.
+///
+/// `reset_from` re-shapes the set for a new batch while keeping the arena
+/// allocation — the whole filtering run reuses a single `PanelSet`.
+#[derive(Clone, Debug)]
+pub struct PanelSet {
+    pub(crate) dists: Vec<f32>,
+    pub(crate) offsets: Vec<u32>,
+}
+
+impl Default for PanelSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PanelSet {
+    pub fn new() -> Self {
+        Self {
+            dists: Vec::new(),
+            offsets: vec![0],
+        }
+    }
+
+    /// Shape this set for `jobs` (row `j` gets exactly `jobs.cands(j).len()`
+    /// slots), recycling the arenas.
+    pub fn reset_from(&mut self, jobs: &PanelJobs) {
+        let (_, _, _, cand_off) = jobs.parts();
+        self.offsets.clear();
+        self.offsets.extend_from_slice(cand_off);
+        let total = jobs.total_cands();
+        // Backends overwrite every slot, so surviving values need no
+        // zeroing — only growth pays the fill.
+        if self.dists.len() > total {
+            self.dists.truncate(total);
+        } else {
+            self.dists.resize(total, 0.0);
+        }
+    }
+
+    /// Number of panel rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distance row of job `j`, aligned with its candidate list.
+    #[inline]
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.dists[self.offsets[j] as usize..self.offsets[j + 1] as usize]
+    }
+
+    /// Mutable distance row of job `j`.
+    #[inline]
+    pub fn row_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.dists[self.offsets[j] as usize..self.offsets[j + 1] as usize]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend contract
+// ---------------------------------------------------------------------------
+
+/// Distance-panel provider for the batched filtering engine.
+///
+/// The engine calls [`begin_pass`](PanelBackend::begin_pass) once per
+/// filtering iteration (fixed centroids), then
+/// [`panels`](PanelBackend::panels) once per tree level.  Backends may
+/// precompute per-centroid state (e.g. squared norms) in `begin_pass`;
+/// `panels` must only be called after a `begin_pass` with the same
+/// centroids/metric.
+pub trait PanelBackend {
+    /// Per-iteration hook; default is a no-op.
+    fn begin_pass(&mut self, _centroids: &Dataset, _metric: Metric) {}
+
+    /// Compute every job's distance panel into `out` (re-shaped by the
+    /// implementation via [`PanelSet::reset_from`]).
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    );
+}
+
+/// Which inner kernel fills the rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanelKernel {
+    /// One `Metric::dist` per (job, candidate) — bit-identical to the
+    /// recursive reference engine.
+    Scalar,
+    /// Norm-decomposition squared-L2 / 8-wide L1 — equal to `Scalar` up to
+    /// f32 rounding (≤ ~1e-4 relative), measurably faster.
+    Blocked,
+}
+
+/// Plain-CPU scalar panel backend (software baseline, semantic oracle).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuPanels;
+
+impl PanelBackend for CpuPanels {
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        out.reset_from(jobs);
+        fill_range(
+            jobs,
+            centroids,
+            metric,
+            PanelKernel::Scalar,
+            &[],
+            0,
+            jobs.len(),
+            &mut out.dists,
+            0,
+        );
+    }
+}
+
+/// Multi-threaded CPU panel backend: the job list is split into
+/// candidate-count-balanced chunks, one `std::thread::scope` worker per
+/// chunk, each writing a disjoint slice of the output arena.
+#[derive(Clone, Debug)]
+pub struct ParCpuPanels {
+    workers: usize,
+    kernel: PanelKernel,
+    /// Squared centroid norms (Blocked + Euclid only).
+    cnorms: Vec<f32>,
+    /// Identity (buffer address + length, as usizes so the backend stays
+    /// `Send`) of the centroid set `begin_pass` cached norms for; `None`
+    /// when nothing is cached.  `panels` reuses the cache only when its
+    /// centroids have this exact identity and recomputes otherwise.
+    cnorms_key: Option<(usize, usize)>,
+}
+
+/// Cache key for a centroid set: buffer address + length.  Distinguishes
+/// any two simultaneously-live buffers; a freed-and-reallocated buffer at
+/// the same address/length (with `begin_pass` never re-called, violating
+/// its documented contract) is the one case it cannot see.
+fn centroid_key(centroids: &Dataset) -> (usize, usize) {
+    (centroids.flat().as_ptr() as usize, centroids.flat().len())
+}
+
+/// Below this many candidate evaluations a batch is filled inline — the
+/// spawn overhead would dominate (upper tree levels have 1–2 jobs).
+const PAR_MIN_EVALS: usize = 4096;
+
+impl ParCpuPanels {
+    /// Blocked kernel across `workers` threads (the production profile).
+    pub fn new(workers: usize) -> Self {
+        Self::with_kernel(workers, PanelKernel::Blocked)
+    }
+
+    /// Scalar kernel across `workers` threads — bit-identical results to
+    /// [`CpuPanels`] regardless of thread count (each row's arithmetic is
+    /// independent), for consumers that pin exact equivalence.
+    pub fn scalar(workers: usize) -> Self {
+        Self::with_kernel(workers, PanelKernel::Scalar)
+    }
+
+    pub fn with_kernel(workers: usize, kernel: PanelKernel) -> Self {
+        Self {
+            workers: workers.max(1),
+            kernel,
+            cnorms: Vec::new(),
+            cnorms_key: None,
+        }
+    }
+
+    fn needs_cnorms(&self, metric: Metric) -> bool {
+        self.kernel == PanelKernel::Blocked && metric == Metric::Euclid
+    }
+
+    fn compute_cnorms(&mut self, centroids: &Dataset) {
+        self.cnorms.clear();
+        self.cnorms.reserve(centroids.len());
+        for c in centroids.iter() {
+            self.cnorms.push(dot8(c, c));
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn kernel(&self) -> PanelKernel {
+        self.kernel
+    }
+}
+
+impl PanelBackend for ParCpuPanels {
+    /// Caches centroid norms for the pass.  Subsequent `panels` calls
+    /// reuse the cache only for this exact centroid buffer — callers that
+    /// mutate or replace centroids between passes must call `begin_pass`
+    /// again (the batched engine does this every iteration).
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        self.cnorms_key = None;
+        self.cnorms.clear();
+        if self.needs_cnorms(metric) {
+            self.compute_cnorms(centroids);
+            self.cnorms_key = Some(centroid_key(centroids));
+        }
+    }
+
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        out.reset_from(jobs);
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        // No begin_pass for this exact centroid buffer → compute fresh
+        // norms for this call; a caller that skips begin_pass just loses
+        // the per-pass reuse (see `centroid_key` for the one caveat).
+        if self.needs_cnorms(metric) && self.cnorms_key != Some(centroid_key(centroids)) {
+            self.compute_cnorms(centroids);
+            self.cnorms_key = None;
+        }
+        let total = jobs.total_cands();
+        let workers = self.workers.min(n);
+        if workers <= 1 || total < PAR_MIN_EVALS {
+            fill_range(
+                jobs,
+                centroids,
+                metric,
+                self.kernel,
+                &self.cnorms,
+                0,
+                n,
+                &mut out.dists,
+                0,
+            );
+            return;
+        }
+
+        // Chunk boundaries balanced by candidate evaluations, aligned to
+        // whole jobs.
+        let (_, _, _, off) = jobs.parts();
+        let target = total.div_ceil(workers);
+        let mut bounds = Vec::with_capacity(workers + 1);
+        bounds.push(0usize);
+        let mut acc = 0usize;
+        for j in 0..n {
+            acc += (off[j + 1] - off[j]) as usize;
+            if acc >= target && bounds.len() < workers {
+                bounds.push(j + 1);
+                acc = 0;
+            }
+        }
+        bounds.push(n);
+
+        let kernel = self.kernel;
+        let cnorms = &self.cnorms;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f32] = &mut out.dists;
+            let mut consumed = 0usize;
+            for t in 0..bounds.len() - 1 {
+                let (j0, j1) = (bounds[t], bounds[t + 1]);
+                if j0 == j1 {
+                    continue;
+                }
+                let end = off[j1] as usize;
+                let (seg, tail) = rest.split_at_mut(end - consumed);
+                rest = tail;
+                let base = consumed;
+                consumed = end;
+                scope.spawn(move || {
+                    fill_range(jobs, centroids, metric, kernel, cnorms, j0, j1, seg, base);
+                });
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// Fill rows `[j0, j1)` of the batch into `seg`, which is the output arena
+/// slice covering exactly those rows (`base` = arena offset of `seg[0]`).
+#[allow(clippy::too_many_arguments)]
+fn fill_range(
+    jobs: &PanelJobs,
+    centroids: &Dataset,
+    metric: Metric,
+    kernel: PanelKernel,
+    cnorms: &[f32],
+    j0: usize,
+    j1: usize,
+    seg: &mut [f32],
+    base: usize,
+) {
+    let (_, _, _, off) = jobs.parts();
+    for j in j0..j1 {
+        let lo = off[j] as usize - base;
+        let hi = off[j + 1] as usize - base;
+        let row = &mut seg[lo..hi];
+        let q = jobs.mid(j);
+        let cands = jobs.cands(j);
+        match (kernel, metric) {
+            (PanelKernel::Scalar, _) => {
+                for (slot, &c) in cands.iter().enumerate() {
+                    row[slot] = metric.dist(q, centroids.point(c as usize));
+                }
+            }
+            (PanelKernel::Blocked, Metric::Euclid) => {
+                euclid_row_blocked(q, centroids, cands, cnorms, row);
+            }
+            (PanelKernel::Blocked, Metric::Manhattan) => {
+                for (slot, &c) in cands.iter().enumerate() {
+                    row[slot] = l1_8(q, centroids.point(c as usize));
+                }
+            }
+        }
+    }
+}
+
+/// Squared-L2 row via the norm decomposition: `‖q‖²` once per job,
+/// `‖c‖²` from the per-pass cache, one 8-wide dot product per candidate.
+#[inline]
+fn euclid_row_blocked(
+    q: &[f32],
+    centroids: &Dataset,
+    cands: &[u32],
+    cnorms: &[f32],
+    row: &mut [f32],
+) {
+    let qn = dot8(q, q);
+    for (slot, &c) in cands.iter().enumerate() {
+        let ci = c as usize;
+        let d = qn - 2.0 * dot8(q, centroids.point(ci)) + cnorms[ci];
+        // The decomposition can round slightly negative near zero.
+        row[slot] = d.max(0.0);
+    }
+}
+
+/// 8-wide manually unrolled dot product — eight independent accumulator
+/// lanes so the autovectorizer emits one FMA vector op per chunk.
+#[inline]
+pub(crate) fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for lane in 0..8 {
+            acc[lane] += xa[lane] * xb[lane];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// 8-wide manually unrolled L1 distance (same lane structure as [`dot8`]).
+#[inline]
+pub(crate) fn l1_8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for lane in 0..8 {
+            acc[lane] += (xa[lane] - xb[lane]).abs();
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += (x - y).abs();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_problem(
+        seed: u64,
+        jobs: usize,
+        d: usize,
+        k: usize,
+    ) -> (PanelJobs, Dataset) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let cents = Dataset::from_flat(
+            k,
+            d,
+            (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
+        );
+        let mut batch = PanelJobs::new();
+        batch.clear(d);
+        let mut mid = vec![0f32; d];
+        for _ in 0..jobs {
+            for m in mid.iter_mut() {
+                *m = rng.uniform_f32(-3.0, 3.0);
+            }
+            let len = 1 + rng.below_usize(k);
+            let mut c: Vec<u32> = (0..k as u32).collect();
+            rng.shuffle(&mut c);
+            c.truncate(len);
+            batch.push(&mid, &c);
+        }
+        (batch, cents)
+    }
+
+    #[test]
+    fn panel_jobs_layout() {
+        let mut b = PanelJobs::new();
+        b.clear(2);
+        b.push(&[1.0, 2.0], &[0, 3]);
+        b.push_with(&[1], |m| {
+            m[0] = 5.0;
+            m[1] = 6.0;
+        });
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.dims(), 2);
+        assert_eq!(b.mid(0), &[1.0, 2.0]);
+        assert_eq!(b.mid(1), &[5.0, 6.0]);
+        assert_eq!(b.cands(0), &[0, 3]);
+        assert_eq!(b.cands(1), &[1]);
+        assert_eq!(b.total_cands(), 3);
+        assert_eq!(b.max_cands(), 2);
+        // clear recycles.
+        b.clear(3);
+        assert!(b.is_empty());
+        assert_eq!(b.total_cands(), 0);
+    }
+
+    #[test]
+    fn panel_set_shapes_match_jobs() {
+        let (batch, cents) = random_problem(1, 17, 3, 5);
+        let mut out = PanelSet::new();
+        CpuPanels.panels(&batch, &cents, Metric::Euclid, &mut out);
+        assert_eq!(out.len(), batch.len());
+        for j in 0..batch.len() {
+            assert_eq!(out.row(j).len(), batch.cands(j).len());
+            for (slot, &c) in batch.cands(j).iter().enumerate() {
+                let want = Metric::Euclid.dist(batch.mid(j), cents.point(c as usize));
+                assert_eq!(out.row(j)[slot], want, "scalar backend must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn unrolled_kernels_match_naive() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        for len in 1..=33 {
+            let a: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+            let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let l1: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!((dot8(&a, &b) - dot).abs() < 1e-4 * (1.0 + dot.abs()), "len {len}");
+            assert!((l1_8(&a, &b) - l1).abs() < 1e-4 * (1.0 + l1.abs()), "len {len}");
+        }
+    }
+
+    #[test]
+    fn par_scalar_is_bit_identical_to_cpu() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let (batch, cents) = random_problem(7, 300, 15, 20);
+            let mut a = PanelSet::new();
+            let mut b = PanelSet::new();
+            CpuPanels.begin_pass(&cents, metric);
+            CpuPanels.panels(&batch, &cents, metric, &mut a);
+            let mut par = ParCpuPanels::scalar(4);
+            par.begin_pass(&cents, metric);
+            par.panels(&batch, &cents, metric, &mut b);
+            assert_eq!(a.dists, b.dists, "{metric:?}");
+            assert_eq!(a.offsets, b.offsets);
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_close_to_scalar() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            for d in [1usize, 3, 7, 8, 15, 16, 31] {
+                let (batch, cents) = random_problem(d as u64 ^ 0xA5, 60, d, 9);
+                let mut a = PanelSet::new();
+                let mut b = PanelSet::new();
+                CpuPanels.panels(&batch, &cents, metric, &mut a);
+                let mut blk = ParCpuPanels::with_kernel(3, PanelKernel::Blocked);
+                blk.begin_pass(&cents, metric);
+                blk.panels(&batch, &cents, metric, &mut b);
+                for (x, y) in a.dists.iter().zip(b.dists.iter()) {
+                    assert!(
+                        (x - y).abs() <= 1e-4 * (1.0 + x.abs()),
+                        "{metric:?} d={d}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut b = PanelJobs::new();
+        b.clear(4);
+        let cents = Dataset::from_flat(2, 4, vec![0.0; 8]);
+        let mut out = PanelSet::new();
+        let mut par = ParCpuPanels::new(4);
+        par.begin_pass(&cents, Metric::Euclid);
+        par.panels(&b, &cents, Metric::Euclid, &mut out);
+        assert!(out.is_empty());
+    }
+}

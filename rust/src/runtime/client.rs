@@ -8,6 +8,7 @@
 
 use super::artifacts::{Artifact, Kind, Manifest, PAD_SENTINEL};
 use crate::data::Dataset;
+use crate::kmeans::panel::{PanelJobs, PanelSet};
 use crate::kmeans::Metric;
 use std::collections::HashMap;
 use std::path::Path;
@@ -192,33 +193,33 @@ impl PjrtRuntime {
         Ok(out)
     }
 
-    /// Distance panels for a batch of filtering jobs: `mids` is `[jobs, d]`
-    /// flat, `cand_idx[j]` the candidate centroid rows of job `j`.
-    /// Returns per-job distance vectors aligned with `cand_idx`.
+    /// Distance panels for a batch of filtering jobs in the flat
+    /// [`PanelJobs`] representation; rows are written into `out` (re-shaped
+    /// via [`PanelSet::reset_from`], aligned with each job's candidates).
     pub fn filter_panels(
         &self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
+        jobs: &PanelJobs,
         centroids: &Dataset,
         metric: Metric,
-    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        out: &mut PanelSet,
+    ) -> anyhow::Result<()> {
         let d = centroids.dims();
-        let jobs = cand_idx.len();
-        debug_assert_eq!(mids.len(), jobs * d);
-        let kmax = cand_idx.iter().map(|c| c.len()).max().unwrap_or(0);
-        if jobs == 0 || kmax == 0 {
-            return Ok(vec![Vec::new(); jobs]);
+        debug_assert_eq!(jobs.dims(), d);
+        let njobs = jobs.len();
+        let kmax = jobs.max_cands();
+        out.reset_from(jobs);
+        if njobs == 0 || kmax == 0 {
+            return Ok(());
         }
-        let mut out: Vec<Vec<f32>> = Vec::with_capacity(jobs);
         let mut mpad: Vec<f32> = Vec::new();
         let mut cpad: Vec<f32> = Vec::new();
         let mut start = 0usize;
-        while start < jobs {
+        while start < njobs {
             // §Perf L1-1: re-pick per chunk so large levels use the big
             // block and the tail falls back to the small one.
             let art = self
                 .manifest
-                .select_block(Kind::Filter, metric, d, kmax, jobs - start)
+                .select_block(Kind::Filter, metric, d, kmax, njobs - start)
                 .ok_or_else(|| {
                     anyhow::anyhow!(
                         "no filter artifact covers metric={} d={d} k={kmax}",
@@ -231,10 +232,10 @@ impl PjrtRuntime {
             mpad.resize(bj * dp, 0.0);
             cpad.clear();
             cpad.resize(bj * kp * dp, PAD_SENTINEL);
-            let take = (jobs - start).min(bj);
+            let take = (njobs - start).min(bj);
             for j in 0..take {
-                mpad[j * dp..j * dp + d].copy_from_slice(&mids[(start + j) * d..(start + j + 1) * d]);
-                for (slot, &c) in cand_idx[start + j].iter().enumerate() {
+                mpad[j * dp..j * dp + d].copy_from_slice(jobs.mid(start + j));
+                for (slot, &c) in jobs.cands(start + j).iter().enumerate() {
                     let row = &mut cpad[(j * kp + slot) * dp..(j * kp + slot) * dp + dp];
                     row.fill(0.0);
                     row[..d].copy_from_slice(centroids.point(c as usize));
@@ -249,15 +250,13 @@ impl PjrtRuntime {
             self.stats.record(t0.elapsed(), take < bj);
             let dists = result.to_tuple1()?.to_vec::<f32>()?;
             for j in 0..take {
-                let cands = &cand_idx[start + j];
-                out.push(
-                    (0..cands.len())
-                        .map(|slot| dists[j * kp + slot])
-                        .collect(),
-                );
+                let row = out.row_mut(start + j);
+                for (slot, slot_out) in row.iter_mut().enumerate() {
+                    *slot_out = dists[j * kp + slot];
+                }
             }
             start += take;
         }
-        Ok(out)
+        Ok(())
     }
 }

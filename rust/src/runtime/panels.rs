@@ -1,12 +1,12 @@
 //! [`PanelBackend`] adapter: plugs the PJRT runtime into the batched
 //! filtering engine — the actual HW/SW seam of the reproduction.  The
 //! level-batched traversal (`kmeans::filtering::filter_iteration_batched`)
-//! ships each tree level's distance panels here; everything else stays on
-//! the coordinator ("PS") side.
+//! ships each tree level's flat [`PanelJobs`] batch here; everything else
+//! stays on the coordinator ("PS") side.
 
 use super::client::PjrtRuntime;
 use crate::data::Dataset;
-use crate::kmeans::filtering::PanelBackend;
+use crate::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
 use crate::kmeans::Metric;
 
 /// PJRT-offloaded panels.  Holds a shared reference to the runtime so the
@@ -31,14 +31,14 @@ impl<'rt> PjrtPanels<'rt> {
 impl PanelBackend for PjrtPanels<'_> {
     fn panels(
         &mut self,
-        mids: &[f32],
-        cand_idx: &[Vec<u32>],
+        jobs: &PanelJobs,
         centroids: &Dataset,
         metric: Metric,
-    ) -> Vec<Vec<f32>> {
-        self.jobs_offloaded += cand_idx.len() as u64;
+        out: &mut PanelSet,
+    ) {
+        self.jobs_offloaded += jobs.len() as u64;
         self.rt
-            .filter_panels(mids, cand_idx, centroids, metric)
-            .expect("pjrt filter panel execution failed")
+            .filter_panels(jobs, centroids, metric, out)
+            .expect("pjrt filter panel execution failed");
     }
 }

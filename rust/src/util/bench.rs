@@ -4,7 +4,9 @@
 //! budget, median + MAD + min reporting, and a machine-readable line for
 //! EXPERIMENTS.md extraction.
 
+use super::json::Json;
 use super::stats::{fmt_secs, mad, median};
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Benchmark runner configuration.
@@ -49,6 +51,48 @@ impl BenchResult {
             self.samples
         )
     }
+
+    /// Machine-readable form (times in integer nanoseconds).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("median_ns", Json::num((self.median_s * 1e9).round())),
+            ("mad_ns", Json::num((self.mad_s * 1e9).round())),
+            ("min_ns", Json::num((self.min_s * 1e9).round())),
+            ("samples", Json::num(self.samples as f64)),
+        ])
+    }
+}
+
+/// Write a bench run as a machine-readable JSON report (name → stats) —
+/// the perf-trajectory artifact `benches/hotpath.rs` checks in as
+/// `BENCH_hotpath.json`.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    let benches = Json::Obj(
+        results
+            .iter()
+            .map(|r| (r.name.clone(), r.to_json()))
+            .collect(),
+    );
+    let root = Json::obj(vec![
+        ("format_version", Json::num(1.0)),
+        ("unit", Json::str("ns")),
+        ("benches", benches),
+    ]);
+    std::fs::write(path, format!("{root}\n"))
+}
+
+/// Measurement-budget override from `MUCHSWIFT_BENCH_BUDGET_MS` (the CI
+/// smoke run sets 200 ms), falling back to `default`.
+pub fn env_budget(default: Duration) -> Duration {
+    parse_budget_ms(std::env::var("MUCHSWIFT_BENCH_BUDGET_MS").ok().as_deref(), default)
+}
+
+/// Pure parsing core of [`env_budget`] (unit-testable without touching
+/// the process environment, which is unsafe to mutate in threaded tests).
+fn parse_budget_ms(val: Option<&str>, default: Duration) -> Duration {
+    val.and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(default)
 }
 
 impl Bench {
@@ -113,6 +157,38 @@ mod tests {
         assert!(r.median_s > 0.0);
         assert!(r.min_s <= r.median_s);
         assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn json_report_is_parseable() {
+        let r = BenchResult {
+            name: "unit_bench".into(),
+            samples: 3,
+            median_s: 1.5e-3,
+            mad_s: 1e-5,
+            min_s: 1.4e-3,
+        };
+        let dir = std::env::temp_dir().join("muchswift_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        write_json(&path, &[r]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("format_version").unwrap().as_usize().unwrap(), 1);
+        let b = parsed.get("benches").unwrap().get("unit_bench").unwrap();
+        assert_eq!(b.get("median_ns").unwrap().as_f64().unwrap(), 1.5e6);
+        assert_eq!(b.get("samples").unwrap().as_usize().unwrap(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn budget_parsing_reads_override_and_falls_back() {
+        // Exercises the pure core — mutating the real environment from a
+        // threaded test harness races glibc's getenv.
+        let default = Duration::from_millis(123);
+        assert_eq!(parse_budget_ms(Some("57"), default), Duration::from_millis(57));
+        assert_eq!(parse_budget_ms(Some("not-a-number"), default), default);
+        assert_eq!(parse_budget_ms(Some(""), default), default);
+        assert_eq!(parse_budget_ms(None, default), default);
     }
 
     #[test]

@@ -4,17 +4,30 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option `{0}` (try --help)")]
     UnknownOption(String),
-    #[error("option `--{0}` expects a value")]
     MissingValue(String),
-    #[error("invalid value for `--{0}`: `{1}` ({2})")]
     BadValue(String, String, String),
-    #[error("unexpected positional argument `{0}`")]
     UnexpectedPositional(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option `{o}` (try --help)"),
+            CliError::MissingValue(o) => write!(f, "option `--{o}` expects a value"),
+            CliError::BadValue(o, v, why) => {
+                write!(f, "invalid value for `--{o}`: `{v}` ({why})")
+            }
+            CliError::UnexpectedPositional(a) => {
+                write!(f, "unexpected positional argument `{a}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// One declared option.
 #[derive(Clone, Debug)]

@@ -1,0 +1,198 @@
+//! Property tests pinning the panel engine (ISSUE 1 acceptance):
+//!
+//! 1. `ParCpuPanels` (scalar + blocked kernels, 1..4 workers) produces
+//!    panels equal to the scalar `CpuPanels` oracle within 1e-4 for both
+//!    metrics on arbitrary ragged batches.
+//! 2. `filter_iteration_batched` driven by the blocked multi-threaded
+//!    backend still matches `filter_iteration` (the recursive reference)
+//!    and a hand-rolled Lloyd step on assignments and objective for random
+//!    datasets with odd dims (d ∈ {1, 3, 7, 15}) — any assignment
+//!    disagreement must be a genuine floating-point tie.
+//!
+//! The scratch arenas are deliberately shared across property cases to
+//! exercise the recycle path (`FilterScratch` reuse across runs).
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::filtering::{self, FilterScratch};
+use muchswift::kmeans::init::{init_centroids, Init};
+use muchswift::kmeans::panel::{
+    CpuPanels, PanelBackend, PanelJobs, PanelKernel, PanelSet, ParCpuPanels,
+};
+use muchswift::kmeans::Metric;
+use muchswift::util::proptest::proptest;
+use muchswift::util::rng::Xoshiro256pp;
+use std::cell::RefCell;
+
+#[test]
+fn prop_par_and_blocked_panels_match_scalar_oracle() {
+    proptest(60, |g| {
+        let d = *g.pick(&[1usize, 2, 3, 7, 8, 15, 16]);
+        let k = g.usize_in(1, 24);
+        let jobs_n = g.size(1, 400).max(1);
+        let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let kernel = *g.pick(&[PanelKernel::Scalar, PanelKernel::Blocked]);
+
+        let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64 ^ 0x00A7_E155);
+        let cents = Dataset::from_flat(
+            k,
+            d,
+            (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
+        );
+        let mut jobs = PanelJobs::new();
+        jobs.clear(d);
+        let mut mid = vec![0f32; d];
+        for _ in 0..jobs_n {
+            for m in mid.iter_mut() {
+                *m = rng.uniform_f32(-3.0, 3.0);
+            }
+            let len = 1 + rng.below_usize(k);
+            let mut c: Vec<u32> = (0..k as u32).collect();
+            rng.shuffle(&mut c);
+            c.truncate(len);
+            jobs.push(&mid, &c);
+        }
+
+        let mut want = PanelSet::new();
+        CpuPanels.begin_pass(&cents, metric);
+        CpuPanels.panels(&jobs, &cents, metric, &mut want);
+
+        let mut par = ParCpuPanels::with_kernel(workers, kernel);
+        par.begin_pass(&cents, metric);
+        let mut got = PanelSet::new();
+        par.panels(&jobs, &cents, metric, &mut got);
+
+        for j in 0..jobs.len() {
+            let (a, b) = (want.row(j), got.row(j));
+            if a.len() != b.len() {
+                return Err(format!("row {j} length {} vs {}", a.len(), b.len()));
+            }
+            for (slot, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                if kernel == PanelKernel::Scalar {
+                    if x != y {
+                        return Err(format!(
+                            "scalar kernel must be exact: job {j} slot {slot}: {x} vs {y}"
+                        ));
+                    }
+                } else if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
+                    return Err(format!(
+                        "blocked kernel drift: job {j} slot {slot} ({metric:?} d={d}): {x} vs {y}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_parallel_engine_matches_recursive_and_lloyd() {
+    let scratch = RefCell::new(FilterScratch::new());
+    proptest(40, |g| {
+        let d = *g.pick(&[1usize, 3, 7, 15]);
+        let n = g.size(30, 600).max(30);
+        let k = g.usize_in(1, 8).min(n);
+        let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let s = generate_params(n, d, k, g.f32_in(0.05, 0.5), 1.0, g.case as u64 ^ 0x9D);
+        let tree = KdTree::build_with(&s.data, g.usize_in(1, 10));
+        let init = init_centroids(&s.data, k, Init::UniformSample, metric, g.case as u64 ^ 3);
+
+        // Reference: recursive engine (scalar arithmetic).
+        let mut a_ref = vec![0u32; n];
+        let (_, counts_ref, st_ref) =
+            filtering::filter_iteration(&tree, &s.data, &init, metric, &mut a_ref);
+
+        // Engine under test: blocked kernels across threads, recycled
+        // arenas.
+        let mut backend = ParCpuPanels::with_kernel(workers, PanelKernel::Blocked);
+        let mut a_blk = vec![0u32; n];
+        let (_, counts_blk, st_blk) = filtering::filter_iteration_batched_scratch(
+            &tree,
+            &s.data,
+            &init,
+            metric,
+            &mut backend,
+            &mut a_blk,
+            &mut scratch.borrow_mut(),
+        );
+
+        if counts_ref.iter().sum::<u32>() != n as u32
+            || counts_blk.iter().sum::<u32>() != n as u32
+        {
+            return Err("counts do not conserve points".into());
+        }
+        if st_ref.leaf_points + st_ref.interior_assigns != n as u64 {
+            return Err("reference engine coverage broken".into());
+        }
+        if st_blk.leaf_points + st_blk.interior_assigns != n as u64 {
+            return Err("blocked engine coverage broken".into());
+        }
+
+        // Any assignment disagreement must be a floating-point tie: the
+        // two centroids are equidistant from the point up to f32 rounding.
+        let mut obj_ref = 0f64;
+        let mut obj_blk = 0f64;
+        let mut obj_lloyd = 0f64;
+        for (i, p) in s.data.iter().enumerate() {
+            let dr = metric.dist(p, init.point(a_ref[i] as usize));
+            let db = metric.dist(p, init.point(a_blk[i] as usize));
+            obj_ref += dr as f64;
+            obj_blk += db as f64;
+            let (_, best_d) =
+                muchswift::kmeans::metrics::nearest(metric, p, init.flat(), k, d);
+            obj_lloyd += best_d as f64;
+            if a_ref[i] != a_blk[i] && (dr - db).abs() > 1e-3 * (1.0 + dr.abs().min(db.abs())) {
+                return Err(format!(
+                    "point {i} ({metric:?} d={d} k={k} w={workers}): engines disagree \
+                     beyond tie tolerance: ref c{} at {dr} vs blk c{} at {db}",
+                    a_ref[i], a_blk[i]
+                ));
+            }
+        }
+        // Both engines must realize the Lloyd-step objective (exact
+        // nearest assignment) up to rounding.
+        for (name, obj) in [("recursive", obj_ref), ("blocked", obj_blk)] {
+            if (obj - obj_lloyd).abs() > 1e-3 * (1.0 + obj_lloyd.abs()) {
+                return Err(format!(
+                    "{name} objective {obj} vs lloyd {obj_lloyd} (d={d} k={k})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-run equivalence: iterating the blocked multi-threaded engine to
+/// convergence stays on the recursive reference's trajectory.
+#[test]
+fn blocked_parallel_full_run_tracks_reference() {
+    for (metric, d) in [(Metric::Euclid, 15), (Metric::Manhattan, 7)] {
+        let s = generate_params(1200, d, 6, 0.15, 1.0, 21);
+        let tree = KdTree::build(&s.data);
+        let init = init_centroids(&s.data, 6, Init::UniformSample, metric, 4);
+        let opts = filtering::FilterOpts {
+            metric,
+            tol: 1e-6,
+            max_iters: 25,
+        };
+        let a = filtering::run(&s.data, &tree, &init, &opts);
+        let mut backend = ParCpuPanels::new(4);
+        let b = filtering::run_batched(&s.data, &tree, &init, &opts, &mut backend);
+        let obj_a = a.objective(&s.data, metric);
+        let obj_b = b.objective(&s.data, metric);
+        assert!(
+            (obj_a - obj_b).abs() <= 0.02 * (1.0 + obj_a.abs()),
+            "{metric:?}: objective {obj_a} vs {obj_b}"
+        );
+        let same = a
+            .assignments
+            .iter()
+            .zip(b.assignments.iter())
+            .filter(|(x, y)| x == y)
+            .count();
+        assert!(same >= 1080, "{metric:?}: assignments diverge: {same}/1200");
+    }
+}

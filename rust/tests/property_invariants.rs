@@ -6,7 +6,8 @@ use muchswift::data::Dataset;
 use muchswift::hw::engine::EventQueue;
 use muchswift::hw::stream::{simulate, StreamParams};
 use muchswift::kdtree::KdTree;
-use muchswift::kmeans::filtering::{self, CpuPanels, PanelBackend};
+use muchswift::kmeans::filtering::{self, CpuPanels};
+use muchswift::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::twolevel::{combine, quarter, quarter_round_robin, QUARTERS};
 use muchswift::kmeans::Metric;
@@ -174,22 +175,27 @@ fn prop_panel_backend_equivalence() {
             d,
             (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
         );
-        let mids: Vec<f32> = (0..jobs * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect();
-        let cand_idx: Vec<Vec<u32>> = (0..jobs)
-            .map(|_| {
-                let len = 1 + rng.below_usize(k);
-                let mut c: Vec<u32> = (0..k as u32).collect();
-                rng.shuffle(&mut c);
-                c.truncate(len);
-                c
-            })
-            .collect();
+        let mut batch = PanelJobs::new();
+        batch.clear(d);
+        let mut mid = vec![0f32; d];
+        for _ in 0..jobs {
+            for m in mid.iter_mut() {
+                *m = rng.uniform_f32(-3.0, 3.0);
+            }
+            let len = 1 + rng.below_usize(k);
+            let mut c: Vec<u32> = (0..k as u32).collect();
+            rng.shuffle(&mut c);
+            c.truncate(len);
+            batch.push(&mid, &c);
+        }
         let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
-        let got = CpuPanels.panels(&mids, &cand_idx, &cents, metric);
-        for (j, cands) in cand_idx.iter().enumerate() {
-            for (slot, &c) in cands.iter().enumerate() {
-                let want = metric.dist(&mids[j * d..(j + 1) * d], cents.point(c as usize));
-                if (got[j][slot] - want).abs() > 1e-5 * (1.0 + want.abs()) {
+        let mut got = PanelSet::new();
+        CpuPanels.panels(&batch, &cents, metric, &mut got);
+        for j in 0..batch.len() {
+            let row = got.row(j);
+            for (slot, &c) in batch.cands(j).iter().enumerate() {
+                let want = metric.dist(batch.mid(j), cents.point(c as usize));
+                if (row[slot] - want).abs() > 1e-5 * (1.0 + want.abs()) {
                     return Err(format!("panel mismatch job {j} cand {c}"));
                 }
             }

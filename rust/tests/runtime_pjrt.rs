@@ -1,7 +1,9 @@
 //! Integration: the AOT artifacts load through PJRT and compute the same
 //! numbers as the Rust reference implementations — the L1/L2/L3 seam.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires `make artifacts` and a real PJRT-backed `xla` crate; each test
+//! skips with a clear message otherwise (the offline workspace builds
+//! against the `xla` stub, where artifact loading always fails).
 
 use muchswift::data::synthetic::generate_params;
 use muchswift::data::Dataset;
@@ -9,6 +11,7 @@ use muchswift::kdtree::KdTree;
 use muchswift::kmeans::filtering::{self, CpuPanels, FilterOpts};
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::metrics::{self, Metric};
+use muchswift::kmeans::panel::{PanelJobs, PanelSet};
 use muchswift::runtime::{PjrtPanels, PjrtRuntime};
 use std::path::PathBuf;
 use std::sync::OnceLock;
@@ -19,17 +22,28 @@ fn artifact_dir() -> PathBuf {
     dir
 }
 
-fn runtime() -> &'static PjrtRuntime {
-    static RT: OnceLock<PjrtRuntime> = OnceLock::new();
-    RT.get_or_init(|| {
-        PjrtRuntime::load(&artifact_dir())
-            .expect("artifacts missing — run `make artifacts` before `cargo test`")
+/// `None` (with a skip notice) when the runtime cannot load — missing
+/// artifacts or the stub `xla` backend.  Real-hardware CI must export
+/// `MUCHSWIFT_REQUIRE_PJRT=1` so a genuine load regression fails the
+/// suite instead of silently skipping it.
+fn runtime() -> Option<&'static PjrtRuntime> {
+    static RT: OnceLock<Option<PjrtRuntime>> = OnceLock::new();
+    RT.get_or_init(|| match PjrtRuntime::load(&artifact_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            if std::env::var_os("MUCHSWIFT_REQUIRE_PJRT").is_some() {
+                panic!("MUCHSWIFT_REQUIRE_PJRT is set but the PJRT runtime failed to load: {e}");
+            }
+            eprintln!("skipping pjrt tests: {e}");
+            None
+        }
     })
+    .as_ref()
 }
 
 #[test]
 fn lloyd_step_matches_rust_reference() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     for (metric, n, d, k) in [
         (Metric::Euclid, 1500, 3, 5),
         (Metric::Euclid, 1024, 15, 20),
@@ -75,29 +89,29 @@ fn lloyd_step_matches_rust_reference() {
 
 #[test]
 fn filter_panels_match_cpu() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let s = generate_params(200, 15, 4, 0.3, 1.0, 5);
     let cents = init_centroids(&s.data, 24, Init::UniformSample, Metric::Euclid, 3);
     // Ragged candidate sets, job count not a multiple of the block.
-    let jobs = 301usize;
+    let jobs_n = 301usize;
     let d = 15;
-    let mut mids = Vec::with_capacity(jobs * d);
-    let mut cand_idx: Vec<Vec<u32>> = Vec::with_capacity(jobs);
-    for j in 0..jobs {
-        mids.extend_from_slice(s.data.point(j % s.data.len()));
+    let mut jobs = PanelJobs::new();
+    jobs.clear(d);
+    for j in 0..jobs_n {
         let len = 1 + (j % 24);
-        cand_idx.push((0..len as u32).collect());
+        let cands: Vec<u32> = (0..len as u32).collect();
+        jobs.push(s.data.point(j % s.data.len()), &cands);
     }
-    let got = rt
-        .filter_panels(&mids, &cand_idx, &cents, Metric::Euclid)
+    let mut got = PanelSet::new();
+    rt.filter_panels(&jobs, &cents, Metric::Euclid, &mut got)
         .unwrap();
-    assert_eq!(got.len(), jobs);
-    for j in 0..jobs {
-        assert_eq!(got[j].len(), cand_idx[j].len());
-        let q = &mids[j * d..(j + 1) * d];
-        for (slot, &c) in cand_idx[j].iter().enumerate() {
+    assert_eq!(got.len(), jobs_n);
+    for j in 0..jobs_n {
+        assert_eq!(got.row(j).len(), jobs.cands(j).len());
+        let q = jobs.mid(j);
+        for (slot, &c) in jobs.cands(j).iter().enumerate() {
             let want = Metric::Euclid.dist(q, cents.point(c as usize));
-            let have = got[j][slot];
+            let have = got.row(j)[slot];
             assert!(
                 (have - want).abs() < 1e-2 * (1.0 + want.abs()),
                 "job {j} cand {c}: {have} vs {want}"
@@ -108,7 +122,7 @@ fn filter_panels_match_cpu() {
 
 #[test]
 fn batched_filtering_through_pjrt_matches_cpu_run() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let s = generate_params(900, 3, 6, 0.2, 1.0, 11);
     let tree = KdTree::build(&s.data);
     let init = init_centroids(&s.data, 6, Init::UniformSample, Metric::Euclid, 2);
@@ -137,7 +151,7 @@ fn batched_filtering_through_pjrt_matches_cpu_run() {
 
 #[test]
 fn oversized_request_fails_cleanly() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let data = Dataset::zeros(8, 200); // d=200 exceeds every artifact
     let cents = Dataset::zeros(2, 200);
     let err = rt.lloyd_step(&data, &cents, Metric::Euclid).unwrap_err();
@@ -147,7 +161,7 @@ fn oversized_request_fails_cleanly() {
 
 #[test]
 fn runtime_stats_accumulate() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let before = rt.stats.executions();
     let s = generate_params(2500, 3, 4, 0.3, 1.0, 1);
     let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Euclid, 1);

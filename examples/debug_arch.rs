@@ -10,6 +10,9 @@ fn main() {
         println!("{}: iters={} dist_evals/iter={} node_visits={} leaf_points={} interior={} prune={} levels={}",
             kind.name(), m.stats.iterations(), it.dist_evals, it.node_visits, it.leaf_points,
             it.interior_assigns, it.prune_tests, it.levels.len());
+        println!("  run totals: dist_evals={} node_visits={} prune_tests={} leaf_points={} interior_assigns={}",
+            m.stats.total_dist_evals(), m.stats.total_node_visits(), m.stats.total_prune_tests(),
+            m.stats.total_leaf_points(), m.stats.total_interior_assigns());
         for (i, l) in it.levels.iter().enumerate() {
             if l.interior_jobs + l.leaf_jobs > 0 {
                 println!("  lvl {i}: interior={} leaf={} cand={} prune={}", l.interior_jobs, l.leaf_jobs, l.cand_evals, l.prune_tests);

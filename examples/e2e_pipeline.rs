@@ -16,10 +16,10 @@
 
 use muchswift::arch::{evaluate, ArchKind};
 use muchswift::config::WorkloadConfig;
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic;
-use muchswift::kmeans::init::{init_centroids, Init};
-use muchswift::kmeans::lloyd::{self, LloydOpts};
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
 use muchswift::kmeans::Metric;
 use muchswift::runtime::{self, PjrtRuntime};
 use std::sync::Arc;
@@ -59,12 +59,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let out = coord.run(
         &s.data,
-        &CoordinatorOpts {
-            k: w.k,
-            metric: w.metric,
-            seed: w.seed,
-            ..Default::default()
-        },
+        &KmeansSpec::two_level(w.k).metric(w.metric).seed(w.seed),
     );
     let host_wall = t0.elapsed().as_secs_f64();
     println!("      {}", out.metrics.summary());
@@ -84,9 +79,14 @@ fn main() -> anyhow::Result<()> {
     }
     println!("      planted centers recovered: {recovered}/{}", w.true_k);
 
-    // Quality check vs an independent software Lloyd run.
-    let init = init_centroids(&s.data, w.k, Init::KmeansPlusPlus, w.metric, 5);
-    let sw = lloyd::run(&s.data, &init, &LloydOpts::default());
+    // Quality check vs an independent software Lloyd run (same unified
+    // solver API, different strategy).
+    let sw = KmeansSpec::new(w.k)
+        .algo(Algo::Lloyd)
+        .metric(w.metric)
+        .init(Init::KmeansPlusPlus)
+        .seed(5)
+        .solve(&mut SolverCtx::new(&s.data));
     let obj_system = out.result.objective(&s.data, w.metric);
     let obj_sw = sw.objective(&s.data, w.metric);
     println!(

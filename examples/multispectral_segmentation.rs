@@ -9,7 +9,8 @@
 //!
 //!     cargo run --release --example multispectral_segmentation
 
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
+use muchswift::kmeans::solver::KmeansSpec;
 use muchswift::data::Dataset;
 use muchswift::kmeans::Metric;
 use muchswift::runtime::{self, PjrtRuntime};
@@ -87,13 +88,10 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(backend);
     let out = coord.run(
         &pixels,
-        &CoordinatorOpts {
-            k: MATERIALS,
-            metric: Metric::Euclid,
-            seed: 9,
-            init: muchswift::kmeans::init::Init::KmeansPlusPlus,
-            ..Default::default()
-        },
+        &KmeansSpec::two_level(MATERIALS)
+            .metric(Metric::Euclid)
+            .init(muchswift::kmeans::init::Init::KmeansPlusPlus)
+            .seed(9),
     );
 
     let acc = score(&out.result.assignments, &truth, MATERIALS);

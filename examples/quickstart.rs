@@ -1,13 +1,18 @@
-//! Quickstart: cluster a small synthetic dataset through the full
-//! MUCH-SWIFT stack (coordinator -> 4 workers -> PL offload via the
-//! AOT-compiled Pallas kernels on PJRT).
+//! Quickstart: cluster a small synthetic dataset through the unified
+//! solver API, then through the full MUCH-SWIFT stack (coordinator ->
+//! 4 workers -> PL offload via the AOT-compiled Pallas kernels on PJRT).
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Falls back to the CPU panel backend if artifacts are missing.
+//! Falls back to the CPU panel backend if artifacts are missing.  Every
+//! step *asserts* its outcome (convergence, objective parity, planted-
+//! center recovery), so building and running this example doubles as an
+//! API-stability check.
 
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic::generate_params;
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, KmeansSpec, SolverCtx};
 use muchswift::kmeans::Metric;
 use muchswift::runtime::{self, PjrtRuntime};
 use std::sync::Arc;
@@ -21,6 +26,37 @@ fn main() {
     let s = generate_params(n, d, k, 0.1, 2.0, 7);
     println!("dataset: {n} points x {d} dims, {k} planted clusters");
 
+    // One spec drives every algorithm.  k-means++ seeding: uniform
+    // sampling often lands in local optima with empty merged clusters at
+    // small k.
+    let spec = KmeansSpec::two_level(k)
+        .metric(Metric::Euclid)
+        .init(Init::KmeansPlusPlus)
+        .seed(1);
+
+    // ---- Unified solver API (single process), with a live observer ------
+    let iters = std::cell::Cell::new(0usize);
+    let out = spec.solve(&mut SolverCtx::new(&s.data).observe(|_ev: &IterEvent| {
+        iters.set(iters.get() + 1);
+        IterFlow::Continue
+    }));
+    assert!(out.stats.converged, "two-level solver did not converge");
+    assert!(iters.get() > 0, "observer saw no iterations");
+    let obj_twolevel = out.objective(&s.data, Metric::Euclid);
+    println!(
+        "solver API: converged in {} observed iterations, objective {obj_twolevel:.4e}",
+        iters.get()
+    );
+
+    // Lloyd through the same API as the quality baseline.
+    let baseline = spec.clone().algo(Algo::Lloyd).solve(&mut SolverCtx::new(&s.data));
+    let obj_lloyd = baseline.objective(&s.data, Metric::Euclid);
+    assert!(
+        obj_twolevel <= obj_lloyd * 1.25,
+        "two-level objective {obj_twolevel:.4e} regressed vs lloyd {obj_lloyd:.4e}"
+    );
+
+    // ---- The deployable system (threads + offload service) --------------
     let backend = match PjrtRuntime::load(&runtime::default_artifact_dir()) {
         Ok(rt) => {
             println!("backend: pjrt ({} artifacts loaded)", rt.manifest().entries.len());
@@ -31,29 +67,18 @@ fn main() {
             Backend::Cpu
         }
     };
-
     let coord = Coordinator::new(backend);
-    let out = coord.run(
-        &s.data,
-        &CoordinatorOpts {
-            k,
-            metric: Metric::Euclid,
-            seed: 1,
-            // k-means++ seeding per quarter: uniform sampling often lands
-            // in local optima with empty merged clusters at small k.
-            init: muchswift::kmeans::init::Init::KmeansPlusPlus,
-            ..Default::default()
-        },
-    );
-
-    println!("converged: {}", out.result.stats.converged);
-    println!("cluster sizes: {:?}", out.result.sizes());
-    println!("objective: {:.4e}", out.result.objective(&s.data, Metric::Euclid));
+    let sys = coord.run(&s.data, &spec);
+    assert!(sys.result.stats.converged, "coordinator did not converge");
+    assert_eq!(sys.result.assignments.len(), n);
+    assert_eq!(sys.result.sizes().iter().sum::<usize>(), n);
+    println!("system: converged, cluster sizes {:?}", sys.result.sizes());
+    println!("objective: {:.4e}", sys.result.objective(&s.data, Metric::Euclid));
 
     // How close did we land to the planted centers?
     let mut worst = 0f32;
     for t in s.true_centroids.iter() {
-        let best = out
+        let best = sys
             .result
             .centroids
             .iter()
@@ -61,6 +86,11 @@ fn main() {
             .fold(f32::INFINITY, f32::min);
         worst = worst.max(best);
     }
+    assert!(
+        worst < 1.0,
+        "planted-center recovery too loose: worst distance^2 {worst}"
+    );
     println!("worst planted-center recovery distance^2: {worst:.4}");
-    println!("{}", out.metrics.summary());
+    println!("{}", sys.metrics.summary());
+    println!("quickstart OK");
 }

@@ -14,7 +14,8 @@ use muchswift::data::synthetic::generate_params;
 use muchswift::hw::pl::PlArray;
 use muchswift::hw::zynq::ZynqSim;
 use muchswift::kmeans::init::Init;
-use muchswift::kmeans::twolevel::{self, Partition, TwoLevelOpts};
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use muchswift::kmeans::twolevel::Partition;
 use muchswift::kmeans::Metric;
 
 fn wl(n: usize, d: usize, k: usize) -> WorkloadConfig {
@@ -34,22 +35,18 @@ fn main() {
     println!("== ablation 1: partition strategy (level-2 iterations, objective) ==");
     for part in [Partition::RoundRobin, Partition::KdTop] {
         let s = generate_params(60_000, 15, 8, 0.15, 1.0, 5);
-        let r = twolevel::run(
-            &s.data,
-            8,
-            &TwoLevelOpts {
-                partition: part,
-                init: Init::UniformSample,
-                seed: 11,
-                ..Default::default()
-            },
-        );
+        let r = KmeansSpec::two_level(8)
+            .partition(part)
+            .init(Init::UniformSample)
+            .seed(11)
+            .solve(&mut SolverCtx::new(&s.data));
+        let ext = r.ext.two_level.as_ref().unwrap();
         println!(
             "  {:<12} level2_iters={:<4} objective={:.4e} l1_iters={:?}",
             format!("{part:?}"),
-            r.level2_stats.iterations(),
-            r.result.objective(&s.data, Metric::Euclid),
-            r.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
+            r.stats.iterations(),
+            r.objective(&s.data, Metric::Euclid),
+            ext.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
         );
     }
 
@@ -82,21 +79,19 @@ fn main() {
 
     println!("\n== ablation 4: two-level vs single-level filtering iterations ==");
     let s = generate_params(60_000, 15, 8, 0.15, 1.0, 5);
-    let two = twolevel::run(&s.data, 8, &TwoLevelOpts { seed: 11, ..Default::default() });
-    let tree = muchswift::kdtree::KdTree::build(&s.data);
-    let init = muchswift::kmeans::init::init_centroids(
-        &s.data, 8, Init::UniformSample, Metric::Euclid, 11,
-    );
-    let single = muchswift::kmeans::filtering::run(
-        &s.data,
-        &tree,
-        &init,
-        &muchswift::kmeans::filtering::FilterOpts::default(),
-    );
+    // One ctx: the full-dataset kd-tree is built once and shared by both
+    // solves through the unified API.
+    let mut ctx = SolverCtx::new(&s.data);
+    let two = KmeansSpec::two_level(8).seed(11).solve(&mut ctx);
+    let single = KmeansSpec::new(8)
+        .algo(Algo::Filter)
+        .seed(11)
+        .solve(&mut ctx);
+    let ext = two.ext.two_level.as_ref().unwrap();
     println!(
         "  two-level: l1(max)={} + l2={} | single-level: {}",
-        two.level1_stats.iter().map(|s| s.iterations()).max().unwrap_or(0),
-        two.level2_stats.iterations(),
+        ext.level1_stats.iter().map(|s| s.iterations()).max().unwrap_or(0),
+        two.stats.iterations(),
         single.stats.iterations()
     );
 

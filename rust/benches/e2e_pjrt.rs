@@ -4,7 +4,8 @@
 //!
 //! `cargo bench --bench e2e_pjrt`
 
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
+use muchswift::kmeans::solver::KmeansSpec;
 use muchswift::data::synthetic::generate_params;
 use muchswift::runtime::{self, PjrtRuntime};
 use muchswift::util::bench::Bench;
@@ -25,26 +26,13 @@ fn main() {
     let coord = Coordinator::new(Backend::Pjrt(Arc::clone(&rt)));
     let quick = Bench::quick();
 
+    let spec = KmeansSpec::two_level(k).seed(3);
     let r = quick.run("coordinator_pjrt_30k_d15_k8", || {
-        coord.run(
-            &s.data,
-            &CoordinatorOpts {
-                k,
-                seed: 3,
-                ..Default::default()
-            },
-        )
+        coord.run(&s.data, &spec)
     });
 
     // One instrumented run for the report.
-    let out = coord.run(
-        &s.data,
-        &CoordinatorOpts {
-            k,
-            seed: 3,
-            ..Default::default()
-        },
-    );
+    let out = coord.run(&s.data, &spec);
     println!("  {}", out.metrics.summary());
     println!(
         "  throughput: {:.1} kpoints/s (median)",
@@ -58,13 +46,6 @@ fn main() {
     // CPU backend same workload for comparison.
     let cpu = Coordinator::new(Backend::Cpu);
     quick.run("coordinator_cpu_30k_d15_k8", || {
-        cpu.run(
-            &s.data,
-            &CoordinatorOpts {
-                k,
-                seed: 3,
-                ..Default::default()
-            },
-        )
+        cpu.run(&s.data, &spec)
     });
 }

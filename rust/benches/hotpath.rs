@@ -15,12 +15,12 @@
 //! the perf-trajectory evidence tracked across PRs.  The acceptance
 //! numbers are the `_n100k` entries (the default size).
 
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic::generate_params;
 use muchswift::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
 use muchswift::kmeans::filtering::{self, CpuPanels, FilterScratch, ParCpuPanels};
 use muchswift::kmeans::init::{init_centroids, Init};
-use muchswift::kmeans::lloyd::{self, LloydOpts};
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
 use muchswift::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
 use muchswift::kmeans::Metric;
 use muchswift::util::bench::{self, Bench, BenchResult};
@@ -134,28 +134,19 @@ fn main() {
         }));
     }
 
+    let lloyd_spec = KmeansSpec::new(k)
+        .algo(Algo::Lloyd)
+        .max_iters(3)
+        .tol(0.0)
+        .start(init.clone());
     results.push(quick.run(&format!("lloyd_full_run_{tag}_k20"), || {
-        lloyd::run(
-            &s.data,
-            &init,
-            &LloydOpts {
-                max_iters: 3,
-                tol: 0.0,
-                ..Default::default()
-            },
-        )
+        lloyd_spec.solve(&mut SolverCtx::new(&s.data))
     }));
 
     let coord = Coordinator::new(Backend::Cpu);
+    let coord_spec = KmeansSpec::two_level(k).seed(3);
     results.push(quick.run(&format!("coordinator_cpu_{tag}_k20"), || {
-        coord.run(
-            &s.data,
-            &CoordinatorOpts {
-                k,
-                seed: 3,
-                ..Default::default()
-            },
-        )
+        coord.run(&s.data, &coord_spec)
     }));
 
     // Headline ratio for the perf trajectory.

@@ -28,10 +28,8 @@ use crate::config::{PlatformConfig, WorkloadConfig};
 use crate::data::synthetic;
 use crate::hw::pl::PlArray;
 use crate::hw::zynq::{PhaseTime, ZynqSim};
-use crate::kmeans::init::{init_centroids, Init};
-use crate::kmeans::twolevel::{self, TwoLevelOpts};
-use crate::kmeans::{elkan, filtering, lloyd, IterStats, RunStats};
-use crate::kdtree::KdTree;
+use crate::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use crate::kmeans::{IterStats, RunStats};
 
 /// Functional-measurement cap (points).  Extrapolation above this.
 pub const DEFAULT_MEASURE_CAP: usize = 65_536;
@@ -126,6 +124,7 @@ fn scale_stats(stats: &RunStats, f: f64) -> RunStats {
     RunStats {
         iters: stats.iters.iter().map(|it| scale_iter(it, f)).collect(),
         converged: stats.converged,
+        early_stopped: stats.early_stopped,
     }
 }
 
@@ -151,83 +150,41 @@ fn subsampled(w: &WorkloadConfig) -> (WorkloadConfig, f64) {
     }
 }
 
+/// The algorithm each architecture runs, in unified-solver terms.
+pub fn algo_for(kind: ArchKind) -> Algo {
+    match kind {
+        ArchKind::SwLloyd | ArchKind::FpgaLloydSingle | ArchKind::FpgaLloydMulti => Algo::Lloyd,
+        ArchKind::SwElkan => Algo::Elkan,
+        ArchKind::SwFilter | ArchKind::FpgaFilterSingle => Algo::Filter,
+        ArchKind::MuchSwift => Algo::TwoLevel,
+    }
+}
+
 /// Measure the algorithm an architecture runs, extrapolated to `w.n`.
+/// One code path for every architecture: a [`KmeansSpec`] driven through
+/// the unified solver API (the seed reproduces the pre-solver behaviour:
+/// uniform seeding at `w.seed ^ 0xA5`, same per-quarter xor inside
+/// two-level).
 pub fn measure(kind: ArchKind, w: &WorkloadConfig) -> Measured {
     let (wm, f) = subsampled(w);
     let s = synthetic::generate(&wm);
-    let init = init_centroids(&s.data, wm.k, Init::UniformSample, wm.metric, wm.seed ^ 0xA5);
-    match kind {
-        ArchKind::SwLloyd | ArchKind::FpgaLloydSingle | ArchKind::FpgaLloydMulti => {
-            let r = lloyd::run(
-                &s.data,
-                &init,
-                &lloyd::LloydOpts {
-                    metric: wm.metric,
-                    tol: wm.tol,
-                    max_iters: wm.max_iters,
-                    track_cost: false,
-                },
-            );
-            Measured {
-                stats: scale_stats(&r.stats, f),
-                level1: None,
-            }
-        }
-        ArchKind::SwElkan => {
-            let r = elkan::run(
-                &s.data,
-                &init,
-                &elkan::ElkanOpts {
-                    metric: wm.metric,
-                    tol: wm.tol,
-                    max_iters: wm.max_iters,
-                },
-            );
-            Measured {
-                stats: scale_stats(&r.stats, f),
-                level1: None,
-            }
-        }
-        ArchKind::SwFilter | ArchKind::FpgaFilterSingle => {
-            let tree = KdTree::build(&s.data);
-            let r = filtering::run(
-                &s.data,
-                &tree,
-                &init,
-                &filtering::FilterOpts {
-                    metric: wm.metric,
-                    tol: wm.tol,
-                    max_iters: wm.max_iters,
-                },
-            );
-            Measured {
-                stats: scale_stats(&r.stats, f),
-                level1: None,
-            }
-        }
-        ArchKind::MuchSwift => {
-            let r = twolevel::run(
-                &s.data,
-                wm.k,
-                &TwoLevelOpts {
-                    metric: wm.metric,
-                    tol: wm.tol,
-                    level1_max_iters: wm.max_iters,
-                    level2_max_iters: wm.max_iters,
-                    seed: wm.seed ^ 0xA5,
-                    ..Default::default()
-                },
-            );
-            Measured {
-                stats: scale_stats(&r.level2_stats, f),
-                level1: Some(
-                    r.level1_stats
-                        .iter()
-                        .map(|st| scale_stats(st, f))
-                        .collect(),
-                ),
-            }
-        }
+    let spec = KmeansSpec::new(wm.k)
+        .algo(algo_for(kind))
+        .metric(wm.metric)
+        .tol(wm.tol)
+        .max_iters(wm.max_iters)
+        .level2_max_iters(wm.max_iters)
+        .seed(wm.seed ^ 0xA5);
+    let r = spec.solve(&mut SolverCtx::new(&s.data));
+    let level1 = r.ext.two_level.as_ref().map(|ext| {
+        ext.level1_stats
+            .iter()
+            .map(|st| scale_stats(st, f))
+            .collect()
+    });
+    Measured {
+        stats: scale_stats(&r.stats, f),
+        level1,
     }
 }
 

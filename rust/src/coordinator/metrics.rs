@@ -19,6 +19,11 @@ pub struct CoordMetrics {
     /// PJRT executions + seconds (zero for CPU backend).
     pub pjrt_executions: u64,
     pub pjrt_exec_s: f64,
+    /// Iterations / distance evaluations streamed live through the
+    /// workers' [`IterObserver`](crate::kmeans::solver::IterObserver)
+    /// subscriptions (all phases) — the serving-path progress feed.
+    pub observed_iters: u64,
+    pub observed_dist_evals: u64,
 }
 
 impl CoordMetrics {
@@ -26,7 +31,7 @@ impl CoordMetrics {
         format!(
             "total {:.3}s = partition {:.3}s + trees {:.3}s + level1 {:.3}s + \
              combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
-             pjrt: {} execs / {:.3}s",
+             pjrt: {} execs / {:.3}s | observed: {} iters / {} evals",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -37,6 +42,8 @@ impl CoordMetrics {
             self.offload_jobs,
             self.pjrt_executions,
             self.pjrt_exec_s,
+            self.observed_iters,
+            self.observed_dist_evals,
         )
     }
 }

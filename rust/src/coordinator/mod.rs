@@ -6,10 +6,17 @@
 //! Phase structure (leader):
 //! 1. `Quarter`   — partition the dataset (round-robin or kd-top).
 //! 2. Level 1     — four workers, each: build kd-tree over its quarter,
-//!    seed k centroids, run batched filtering through the offload service.
+//!    then run an [`Algo::FilterBatched`] solver through the unified
+//!    [`KmeansSpec`]/[`SolverCtx`] API with its panel backend injected
+//!    (local CPU math or the offload service).
 //! 3. `Combine`   — greedy nearest-centroid merge, count-weighted.
 //! 4. Level 2     — batched filtering over the full tree from the merged
-//!    seeds (few iterations).
+//!    seeds (few iterations), same solver API.
+//!
+//! Every worker subscribes an [`IterObserver`] to its solve — the
+//! coordinator streams per-iteration work counters into [`CoordMetrics`]
+//! live (and `log::trace!`s them), which is the seam a serving path would
+//! use for progress reporting.
 //!
 //! The *algorithmic* building blocks are shared with
 //! [`crate::kmeans::twolevel`] (the sequential reference), so the threaded
@@ -23,55 +30,22 @@ pub use offload::{Backend, OffloadService};
 
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
-use crate::kmeans::filtering::{self, FilterOpts};
-use crate::kmeans::init::{init_centroids, Init};
+use crate::kmeans::init::init_centroids;
 use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
+use crate::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
 use crate::kmeans::twolevel::{combine, quarter, quarter_round_robin, Partition, QUARTERS};
-use crate::kmeans::{KmeansResult, Metric, RunStats};
+use crate::kmeans::{KmeansResult, Metric, Phase, RunStats, TwoLevelExt};
 use metrics::Stopwatch;
 use offload::OffloadStats;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Coordinator configuration.
-#[derive(Clone, Debug)]
-pub struct CoordinatorOpts {
-    pub k: usize,
-    pub metric: Metric,
-    pub tol: f32,
-    pub level1_max_iters: usize,
-    pub level2_max_iters: usize,
-    pub init: Init,
-    pub partition: Partition,
-    pub seed: u64,
-    /// Worker threads (defaults to the paper's 4 A53 cores).
-    pub workers: usize,
-}
-
-impl Default for CoordinatorOpts {
-    fn default() -> Self {
-        Self {
-            k: 8,
-            metric: Metric::Euclid,
-            tol: 1e-6,
-            level1_max_iters: 100,
-            level2_max_iters: 100,
-            init: Init::UniformSample,
-            partition: Partition::RoundRobin,
-            seed: 1,
-            workers: QUARTERS,
-        }
-    }
-}
-
-/// Everything a coordinated run produces.
+/// Everything a coordinated run produces.  The clustering result carries
+/// the two-level extension ([`TwoLevelExt`]) exactly like the sequential
+/// reference's, so consumers read one shape regardless of which system ran.
 #[derive(Clone, Debug)]
 pub struct CoordOutcome {
     pub result: KmeansResult,
-    pub level1_stats: Vec<RunStats>,
-    pub level2_stats: RunStats,
-    pub merged_centroids: Dataset,
-    pub quarter_sizes: Vec<usize>,
     pub metrics: CoordMetrics,
 }
 
@@ -113,6 +87,36 @@ impl PanelBackend for SystemPanels {
             }
             SystemPanels::Remote(b) => b.panels(jobs, centroids, metric, out),
         }
+    }
+}
+
+/// Live counters the per-worker observers stream into (Relaxed atomics —
+/// monitoring data, not synchronization).
+#[derive(Debug, Default)]
+struct LiveIters {
+    iters: AtomicU64,
+    dist_evals: AtomicU64,
+}
+
+/// The coordinator's [`IterObserver`]: one per worker solve, tagging
+/// events with the system phase the worker is executing.
+struct LiveObserver {
+    live: Arc<LiveIters>,
+    phase: Phase,
+}
+
+impl IterObserver for LiveObserver {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        self.live.iters.fetch_add(1, Ordering::Relaxed);
+        self.live.dist_evals.fetch_add(ev.stats.dist_evals, Ordering::Relaxed);
+        log::trace!(
+            "coordinator {:?} iter {}: dist_evals={} moved={:.3e}",
+            self.phase,
+            ev.iter,
+            ev.stats.dist_evals,
+            ev.stats.moved
+        );
+        IterFlow::Continue
     }
 }
 
@@ -163,71 +167,72 @@ impl Coordinator {
         }
     }
 
-    /// Run the full two-level clustering over `data`.
-    pub fn run(&self, data: &Dataset, opts: &CoordinatorOpts) -> CoordOutcome {
-        assert!(opts.k >= 1 && opts.k <= data.len(), "k out of range");
-        assert!(opts.workers >= 1);
+    /// Run the full two-level clustering over `data`.  The spec's `algo`
+    /// field is not consulted — this *is* the two-level system; everything
+    /// else (`k`, metric, tol, caps, init, partition, seed, workers)
+    /// drives the run exactly as it drives [`crate::kmeans::twolevel`].
+    pub fn run(&self, data: &Dataset, spec: &KmeansSpec) -> CoordOutcome {
+        assert!(spec.k >= 1 && spec.k <= data.len(), "k out of range");
+        assert!(spec.workers >= 1);
         let mut sw = Stopwatch::start();
         let total_sw = Stopwatch::start();
         let mut m = CoordMetrics::default();
         // Batch/job counters for locally-computed (CPU) panels; the PJRT
         // path counts inside the offload service instead.
         let local_stats = Arc::new(OffloadStats::default());
+        let live = Arc::new(LiveIters::default());
         let pjrt_exec0 = self.pjrt.as_ref().map(|rt| rt.stats.executions()).unwrap_or(0);
         let pjrt_secs0 = self.pjrt.as_ref().map(|rt| rt.stats.exec_seconds()).unwrap_or(0.0);
 
         // ---- Quarter -------------------------------------------------------
-        let full_tree = KdTree::build(data);
+        let full_tree = Arc::new(KdTree::build(data));
         m.tree_build_s += sw.lap();
-        let (quarters, _ids) = match opts.partition {
+        let (quarters, _ids) = match spec.partition {
             Partition::RoundRobin => quarter_round_robin(data),
             Partition::KdTop => quarter(data, &full_tree),
         };
         m.partition_s = sw.lap();
 
-        let fallback = quarters.iter().any(|q| q.len() < opts.k);
-        let fopts = FilterOpts {
-            metric: opts.metric,
-            tol: opts.tol,
-            max_iters: opts.level1_max_iters,
-        };
+        let fallback = quarters.iter().any(|q| q.len() < spec.k);
+        let quarter_sizes: Vec<usize> = quarters.iter().map(|q| q.len()).collect();
 
         // ---- Level 1 (parallel workers) -------------------------------------
-        let (l1_centroids, l1_counts, level1_stats, quarter_sizes) = if fallback {
-            (
-                Vec::new(),
-                Vec::new(),
-                vec![RunStats::default(); QUARTERS],
-                quarters.iter().map(|q| q.len()).collect::<Vec<_>>(),
-            )
+        let (l1_centroids, l1_counts, level1_stats) = if fallback {
+            (Vec::new(), Vec::new(), vec![RunStats::default(); QUARTERS])
         } else {
-            let sizes: Vec<usize> = quarters.iter().map(|q| q.len()).collect();
-            let mut results: Vec<Option<KmeansResult>> = (0..quarters.len()).map(|_| None).collect();
+            let mut results: Vec<Option<KmeansResult>> =
+                (0..quarters.len()).map(|_| None).collect();
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for (qi, qdata) in quarters.iter().enumerate() {
-                    let mut panels = self.worker_panels(&local_stats);
-                    let fopts = fopts.clone();
-                    let opts = opts.clone();
+                    let panels = self.worker_panels(&local_stats);
+                    let mut wspec = spec
+                        .clone()
+                        .algo(Algo::FilterBatched)
+                        .seed(spec.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9));
+                    // Level-1 seeds per quarter; never inherit explicit
+                    // start centroids from the caller's spec.
+                    wspec.start = None;
+                    let live = Arc::clone(&live);
                     handles.push((
                         qi,
                         scope.spawn(move || {
                             // Sequential build: this already runs on one of
                             // `QUARTERS` concurrent workers — nested build
                             // threads would oversubscribe the cores.
-                            let tree = KdTree::build_par(
+                            let tree = Arc::new(KdTree::build_par(
                                 qdata,
                                 crate::kdtree::DEFAULT_LEAF_SIZE,
                                 0,
-                            );
-                            let init = init_centroids(
-                                qdata,
-                                opts.k,
-                                opts.init,
-                                opts.metric,
-                                opts.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9),
-                            );
-                            filtering::run_batched(qdata, &tree, &init, &fopts, &mut panels)
+                            ));
+                            let mut ctx = SolverCtx::new(qdata)
+                                .with_tree(tree)
+                                .with_backend(panels)
+                                .with_observer(LiveObserver {
+                                    live,
+                                    phase: Phase::Level1 { quarter: qi },
+                                });
+                            wspec.solve(&mut ctx)
                         }),
                     ));
                 }
@@ -239,31 +244,33 @@ impl Coordinator {
             let counts: Vec<Vec<usize>> = results.iter().map(|r| r.sizes()).collect();
             let cents: Vec<Dataset> = results.iter().map(|r| r.centroids.clone()).collect();
             let stats: Vec<RunStats> = results.into_iter().map(|r| r.stats).collect();
-            (cents, counts, stats, sizes)
+            (cents, counts, stats)
         };
         m.level1_s = sw.lap();
 
         // ---- Combine ---------------------------------------------------------
         let merged = if fallback {
-            init_centroids(data, opts.k, opts.init, opts.metric, opts.seed)
+            init_centroids(data, spec.k, spec.init, spec.metric, spec.seed)
         } else {
-            combine(&l1_centroids, &l1_counts, opts.metric)
+            combine(&l1_centroids, &l1_counts, spec.metric)
         };
         m.combine_s = sw.lap();
 
         // ---- Level 2 ----------------------------------------------------------
-        let mut panels = self.level2_panels(opts.workers, &local_stats);
-        let result = filtering::run_batched(
-            data,
-            &full_tree,
-            &merged,
-            &FilterOpts {
-                metric: opts.metric,
-                tol: opts.tol,
-                max_iters: opts.level2_max_iters,
-            },
-            &mut panels,
-        );
+        let panels = self.level2_panels(spec.workers, &local_stats);
+        let l2spec = spec
+            .clone()
+            .algo(Algo::FilterBatched)
+            .max_iters(spec.level2_max_iters)
+            .start(merged.clone());
+        let mut ctx = SolverCtx::new(data)
+            .with_tree(Arc::clone(&full_tree))
+            .with_backend(panels)
+            .with_observer(LiveObserver {
+                live: Arc::clone(&live),
+                phase: Phase::Level2,
+            });
+        let mut result = l2spec.solve(&mut ctx);
         m.level2_s = sw.lap();
 
         m.total_s = total_sw.elapsed().as_secs_f64();
@@ -281,20 +288,19 @@ impl Coordinator {
         };
         m.offload_batches = batches;
         m.offload_jobs = jobs_served;
+        m.observed_iters = live.iters.load(Ordering::Relaxed);
+        m.observed_dist_evals = live.dist_evals.load(Ordering::Relaxed);
         if let Some(rt) = &self.pjrt {
             m.pjrt_executions = rt.stats.executions() - pjrt_exec0;
             m.pjrt_exec_s = rt.stats.exec_seconds() - pjrt_secs0;
         }
 
-        let level2_stats = result.stats.clone();
-        CoordOutcome {
-            result,
+        result.ext.two_level = Some(Box::new(TwoLevelExt {
             level1_stats,
-            level2_stats,
-            merged_centroids: merged,
             quarter_sizes,
-            metrics: m,
-        }
+            merged_centroids: merged,
+        }));
+        CoordOutcome { result, metrics: m }
     }
 }
 
@@ -308,12 +314,8 @@ mod tests {
     fn coordinator_matches_sequential_reference() {
         let s = generate_params(3000, 3, 5, 0.15, 2.0, 33);
         let coord = Coordinator::new(Backend::Cpu);
-        let opts = CoordinatorOpts {
-            k: 5,
-            seed: 9,
-            ..Default::default()
-        };
-        let c = coord.run(&s.data, &opts);
+        let spec = KmeansSpec::two_level(5).seed(9);
+        let c = coord.run(&s.data, &spec);
         let r = twolevel::run(
             &s.data,
             5,
@@ -325,25 +327,36 @@ mod tests {
         // Same seeds, same partition, same building blocks: identical
         // counts and near-identical centroids (threading does not change
         // per-quarter math; only f32 sum order inside combine/level2 can).
-        for (a, b) in c.result.centroids.iter().zip(r.result.centroids.iter()) {
+        for (a, b) in c.result.centroids.iter().zip(r.centroids.iter()) {
             for (x, y) in a.iter().zip(b.iter()) {
                 assert!((x - y).abs() < 1e-3, "{x} vs {y}");
             }
         }
-        assert_eq!(c.quarter_sizes, vec![750; 4]);
+        let ce = c.result.ext.two_level.as_ref().unwrap();
+        let re = r.ext.two_level.as_ref().unwrap();
+        assert_eq!(ce.quarter_sizes, vec![750; 4]);
         assert_eq!(
-            c.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
-            r.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
+            ce.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
+            re.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
         );
         assert!(c.metrics.offload_jobs > 0);
         assert!(c.metrics.total_s > 0.0);
+        // The observer subscription streamed every iteration of every phase.
+        let expect_iters: u64 = ce
+            .level1_stats
+            .iter()
+            .map(|s| s.iterations() as u64)
+            .sum::<u64>()
+            + c.result.stats.iterations() as u64;
+        assert_eq!(c.metrics.observed_iters, expect_iters);
+        assert!(c.metrics.observed_dist_evals > 0);
     }
 
     #[test]
     fn every_point_assigned() {
         let s = generate_params(1200, 2, 3, 0.2, 1.0, 7);
         let coord = Coordinator::new(Backend::Cpu);
-        let c = coord.run(&s.data, &CoordinatorOpts { k: 3, ..Default::default() });
+        let c = coord.run(&s.data, &KmeansSpec::two_level(3));
         assert_eq!(c.result.assignments.len(), 1200);
         assert!(c.result.assignments.iter().all(|&a| a < 3));
         let sizes = c.result.sizes();
@@ -354,9 +367,10 @@ mod tests {
     fn tiny_dataset_fallback() {
         let s = generate_params(12, 2, 2, 0.1, 1.0, 3);
         let coord = Coordinator::new(Backend::Cpu);
-        let c = coord.run(&s.data, &CoordinatorOpts { k: 6, ..Default::default() });
+        let c = coord.run(&s.data, &KmeansSpec::two_level(6));
         assert_eq!(c.result.centroids.len(), 6);
-        assert!(c.level1_stats.iter().all(|s| s.iterations() == 0));
+        let ext = c.result.ext.two_level.as_ref().unwrap();
+        assert!(ext.level1_stats.iter().all(|s| s.iterations() == 0));
     }
 
     #[test]
@@ -365,13 +379,18 @@ mod tests {
         let coord = Coordinator::new(Backend::Cpu);
         let c = coord.run(
             &s.data,
-            &CoordinatorOpts {
-                k: 4,
-                partition: Partition::KdTop,
-                ..Default::default()
-            },
+            &KmeansSpec::two_level(4).partition(Partition::KdTop),
         );
-        assert_eq!(c.quarter_sizes.iter().sum::<usize>(), 2000);
+        let ext = c.result.ext.two_level.as_ref().unwrap();
+        assert_eq!(ext.quarter_sizes.iter().sum::<usize>(), 2000);
         assert!(c.result.stats.converged);
+    }
+
+    #[test]
+    #[should_panic(expected = "k out of range")]
+    fn k_larger_than_n_is_rejected() {
+        let data = Dataset::from_flat(3, 1, vec![1.0, 2.0, 3.0]);
+        let coord = Coordinator::new(Backend::Cpu);
+        coord.run(&data, &KmeansSpec::two_level(10));
     }
 }

@@ -11,7 +11,10 @@
 //! L2 internally and squares only when reporting; Manhattan is a metric
 //! already.
 
-use super::{centroids_from_sums, max_sq_movement, metrics, IterStats, KmeansResult, Metric, RunStats};
+use super::{
+    centroids_from_sums, max_sq_movement, metrics, IterHook, IterStats, KmeansResult, Metric,
+    ResultExt, RunStats,
+};
 use crate::data::Dataset;
 
 #[derive(Clone, Debug)]
@@ -41,6 +44,17 @@ fn true_dist(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
 
 /// Run Elkan's algorithm from the given initial centroids.
 pub fn run(data: &Dataset, init: &Dataset, opts: &ElkanOpts) -> KmeansResult {
+    run_hooked(data, init, opts, None)
+}
+
+/// [`run`] with a per-iteration hook (what the unified solver layer calls;
+/// the hook returning `false` stops the run early).
+pub fn run_hooked(
+    data: &Dataset,
+    init: &Dataset,
+    opts: &ElkanOpts,
+    mut hook: Option<IterHook<'_>>,
+) -> KmeansResult {
     let n = data.len();
     let d = data.dims();
     let k = init.len();
@@ -175,8 +189,16 @@ pub fn run(data: &Dataset, init: &Dataset, opts: &ElkanOpts) -> KmeansResult {
         });
         dist_evals = 0;
 
+        let go = match hook.as_mut() {
+            Some(h) => h(stats.iters.len() - 1, stats.iters.last().unwrap(), &centroids),
+            None => true,
+        };
         if moved <= opts.tol {
             stats.converged = true;
+            break;
+        }
+        if !go {
+            stats.early_stopped = true;
             break;
         }
     }
@@ -185,6 +207,7 @@ pub fn run(data: &Dataset, init: &Dataset, opts: &ElkanOpts) -> KmeansResult {
         centroids,
         assignments: assign,
         stats,
+        ext: ResultExt::default(),
     }
 }
 

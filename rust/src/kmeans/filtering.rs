@@ -45,8 +45,8 @@
 
 use super::panel::{PanelJobs, PanelSet};
 use super::{
-    centroids_from_sums, max_sq_movement, IterStats, KmeansResult, LevelWork, Metric,
-    RunStats,
+    centroids_from_sums, max_sq_movement, IterHook, IterStats, KmeansResult, LevelWork, Metric,
+    ResultExt, RunStats,
 };
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
@@ -455,7 +455,7 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
 
 /// Iterate the recursive engine to convergence.
 pub fn run(data: &Dataset, tree: &KdTree, init: &Dataset, opts: &FilterOpts) -> KmeansResult {
-    run_impl(data, tree, init, opts, None::<&mut CpuPanels>)
+    run_impl(data, tree, init, opts, None::<&mut CpuPanels>, None)
 }
 
 /// Iterate the batched engine to convergence through `backend`.
@@ -466,7 +466,31 @@ pub fn run_batched<B: PanelBackend>(
     opts: &FilterOpts,
     backend: &mut B,
 ) -> KmeansResult {
-    run_impl(data, tree, init, opts, Some(backend))
+    run_impl(data, tree, init, opts, Some(backend), None)
+}
+
+/// [`run`] with a per-iteration hook (the unified solver layer's seam; the
+/// hook returning `false` stops the run early).
+pub fn run_hooked(
+    data: &Dataset,
+    tree: &KdTree,
+    init: &Dataset,
+    opts: &FilterOpts,
+    hook: Option<IterHook<'_>>,
+) -> KmeansResult {
+    run_impl(data, tree, init, opts, None::<&mut CpuPanels>, hook)
+}
+
+/// [`run_batched`] with a per-iteration hook.
+pub fn run_batched_hooked<B: PanelBackend>(
+    data: &Dataset,
+    tree: &KdTree,
+    init: &Dataset,
+    opts: &FilterOpts,
+    backend: &mut B,
+    hook: Option<IterHook<'_>>,
+) -> KmeansResult {
+    run_impl(data, tree, init, opts, Some(backend), hook)
 }
 
 fn run_impl<B: PanelBackend>(
@@ -475,6 +499,7 @@ fn run_impl<B: PanelBackend>(
     init: &Dataset,
     opts: &FilterOpts,
     mut backend: Option<&mut B>,
+    mut hook: Option<IterHook<'_>>,
 ) -> KmeansResult {
     assert_eq!(data.dims(), init.dims());
     let mut centroids = init.clone();
@@ -501,8 +526,16 @@ fn run_impl<B: PanelBackend>(
         centroids = next;
         let moved = iter_stats.moved;
         stats.iters.push(iter_stats);
+        let go = match hook.as_mut() {
+            Some(h) => h(stats.iters.len() - 1, stats.iters.last().unwrap(), &centroids),
+            None => true,
+        };
         if moved <= opts.tol {
             stats.converged = true;
+            break;
+        }
+        if !go {
+            stats.early_stopped = true;
             break;
         }
     }
@@ -511,6 +544,7 @@ fn run_impl<B: PanelBackend>(
         centroids,
         assignments,
         stats,
+        ext: ResultExt::default(),
     }
 }
 

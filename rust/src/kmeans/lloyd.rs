@@ -7,7 +7,10 @@
 //! iteration reports exactly `n * k` distance evaluations — the hardware
 //! models turn those counters into cycles.
 
-use super::{centroids_from_sums, max_sq_movement, metrics, IterStats, KmeansResult, Metric, RunStats};
+use super::{
+    centroids_from_sums, max_sq_movement, metrics, IterHook, IterStats, KmeansResult, Metric,
+    ResultExt, RunStats,
+};
 use crate::data::Dataset;
 
 /// Tunable knobs for a Lloyd run.
@@ -34,6 +37,17 @@ impl Default for LloydOpts {
 
 /// Run Lloyd's algorithm from the given initial centroids.
 pub fn run(data: &Dataset, init: &Dataset, opts: &LloydOpts) -> KmeansResult {
+    run_hooked(data, init, opts, None)
+}
+
+/// [`run`] with a per-iteration hook (what the unified solver layer calls;
+/// the hook returning `false` stops the run early).
+pub fn run_hooked(
+    data: &Dataset,
+    init: &Dataset,
+    opts: &LloydOpts,
+    mut hook: Option<IterHook<'_>>,
+) -> KmeansResult {
     assert_eq!(data.dims(), init.dims());
     let n = data.len();
     let d = data.dims();
@@ -78,8 +92,16 @@ pub fn run(data: &Dataset, init: &Dataset, opts: &LloydOpts) -> KmeansResult {
             ..Default::default()
         });
 
+        let go = match hook.as_mut() {
+            Some(h) => h(stats.iters.len() - 1, stats.iters.last().unwrap(), &centroids),
+            None => true,
+        };
         if moved <= opts.tol {
             stats.converged = true;
+            break;
+        }
+        if !go {
+            stats.early_stopped = true;
             break;
         }
     }
@@ -88,6 +110,7 @@ pub fn run(data: &Dataset, init: &Dataset, opts: &LloydOpts) -> KmeansResult {
         centroids,
         assignments,
         stats,
+        ext: ResultExt::default(),
     }
 }
 

@@ -12,6 +12,11 @@
 //! - [`twolevel`]  — the paper's contribution (Alg. 2): 4-way partition,
 //!   per-quarter filtering k-means, centroid merge, second-level pass.
 //!
+//! All four are driven through the unified solver API in [`solver`]
+//! (one [`KmeansSpec`], one [`Solver`] trait, pluggable panel backends,
+//! per-iteration observers); the modules above are the numeric kernels
+//! behind it.
+//!
 //! Every solver records per-iteration *work counters* ([`IterStats`]) —
 //! distance evaluations, kd-node visits, pruned subtree assignments — which
 //! are exactly what the hardware simulator charges cycles for.  This keeps
@@ -25,11 +30,36 @@ pub mod init;
 pub mod lloyd;
 pub mod metrics;
 pub mod panel;
+pub mod solver;
 pub mod twolevel;
 
 pub use metrics::Metric;
+pub use solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, Solver, SolverCtx};
 
 use crate::data::Dataset;
+
+/// Which stage of a (possibly multi-phase) solve an iteration belongs to.
+/// Single-level algorithms only ever report [`Phase::Main`]; the two-level
+/// scheme reports one [`Phase::Level1`] stream per quarter and a
+/// [`Phase::Level2`] stream for the full-dataset refinement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// The single iteration loop of Lloyd/Elkan/filtering.
+    Main,
+    /// Per-quarter level-1 clustering of the two-level scheme.
+    Level1 { quarter: usize },
+    /// The full-dataset level-2 refinement of the two-level scheme.
+    Level2,
+}
+
+/// Low-level per-iteration hook threaded through the engine loops:
+/// `(iteration index, that iteration's stats, post-update centroids)` →
+/// `true` to continue, `false` to stop early.  The [`solver`] layer adapts
+/// an [`IterObserver`] onto this; engines never see observers directly.
+pub type IterHook<'h> = &'h mut dyn FnMut(usize, &IterStats, &Dataset) -> bool;
+
+/// [`IterHook`] with a phase tag, for the multi-phase two-level engine.
+pub type PhasedHook<'h> = &'h mut dyn FnMut(Phase, usize, &IterStats, &Dataset) -> bool;
 
 /// Work performed at one kd-tree depth during a filtering pass — the
 /// level-batched offload ships one distance-panel batch per level, and the
@@ -109,6 +139,9 @@ impl IterStats {
 pub struct RunStats {
     pub iters: Vec<IterStats>,
     pub converged: bool,
+    /// An [`IterObserver`] (or raw hook) requested a stop before the
+    /// convergence test fired; mutually exclusive with `converged`.
+    pub early_stopped: bool,
 }
 
 impl RunStats {
@@ -123,6 +156,44 @@ impl RunStats {
     pub fn total_node_visits(&self) -> u64 {
         self.iters.iter().map(|i| i.node_visits).sum()
     }
+
+    /// Total `is_farther` pruning tests across the run (tree solvers only;
+    /// zero for Lloyd/Elkan) — the PS comparator work the hw cost models
+    /// charge.
+    pub fn total_prune_tests(&self) -> u64 {
+        self.iters.iter().map(|i| i.prune_tests).sum()
+    }
+
+    /// Total points handled individually at leaves across the run.
+    pub fn total_leaf_points(&self) -> u64 {
+        self.iters.iter().map(|i| i.leaf_points).sum()
+    }
+
+    /// Total points assigned wholesale at pruned interior nodes.
+    pub fn total_interior_assigns(&self) -> u64 {
+        self.iters.iter().map(|i| i.interior_assigns).sum()
+    }
+}
+
+/// Extra outputs of the two-level scheme, attached to its [`KmeansResult`]
+/// (the result's own `stats` are the level-2 refinement's).  Replaces the
+/// old parallel `TwoLevelResult` type: every solver now returns the same
+/// result shape, multi-phase solvers just carry more in `ext`.
+#[derive(Clone, Debug)]
+pub struct TwoLevelExt {
+    /// Per-quarter level-1 statistics (these ran independently).
+    pub level1_stats: Vec<RunStats>,
+    /// Row count of each quarter.
+    pub quarter_sizes: Vec<usize>,
+    /// The merged (post-`Combine`) centroids that seeded level 2.
+    pub merged_centroids: Dataset,
+}
+
+/// Solver-specific extensions riding on a [`KmeansResult`].
+#[derive(Clone, Debug, Default)]
+pub struct ResultExt {
+    /// Present when the result came from the two-level scheme.
+    pub two_level: Option<Box<TwoLevelExt>>,
 }
 
 /// Result of a clustering run.
@@ -133,6 +204,8 @@ pub struct KmeansResult {
     /// Final assignment of every point to a centroid index.
     pub assignments: Vec<u32>,
     pub stats: RunStats,
+    /// Solver-specific extensions (empty for single-level solvers).
+    pub ext: ResultExt,
 }
 
 impl KmeansResult {

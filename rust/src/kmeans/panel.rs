@@ -258,6 +258,41 @@ pub trait PanelBackend {
     );
 }
 
+// Forwarding impls so trait objects plug into the generic engine entry
+// points: `&mut dyn PanelBackend` / `Box<dyn PanelBackend>` are themselves
+// backends (what the `solver` layer's injected-backend seam relies on).
+impl<B: PanelBackend + ?Sized> PanelBackend for &mut B {
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        (**self).begin_pass(centroids, metric);
+    }
+
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        (**self).panels(jobs, centroids, metric, out);
+    }
+}
+
+impl<B: PanelBackend + ?Sized> PanelBackend for Box<B> {
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        (**self).begin_pass(centroids, metric);
+    }
+
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        (**self).panels(jobs, centroids, metric, out);
+    }
+}
+
 /// Which inner kernel fills the rows.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PanelKernel {

@@ -1,0 +1,817 @@
+//! The unified solver API: one spec, one trait, pluggable backends and
+//! per-iteration observers across all four k-means engines.
+//!
+//! The paper's framing is that one clustering problem can be driven
+//! through interchangeable execution strategies — software-only Lloyd,
+//! triangle-inequality Elkan, kd-tree filtering (recursive or
+//! level-batched/offloaded), and the two-level multi-core scheme.  This
+//! module makes that framing literal:
+//!
+//! - [`KmeansSpec`] — one builder owning every knob the five old option
+//!   structs duplicated (`k`, metric, tolerance, iteration caps, init,
+//!   seed, partition, workers) plus the [`Algo`] selection;
+//! - [`Solver`] — `fn run(&mut self, ctx: &mut SolverCtx) -> KmeansResult`,
+//!   implemented by one adapter per engine ([`LloydSolver`],
+//!   [`ElkanSolver`], [`FilterSolver`], [`BatchedFilterSolver`],
+//!   [`TwoLevelSolver`]);
+//! - [`SolverCtx`] — the shared substrate the old free-function
+//!   signatures threaded by hand: the dataset, a lazily-built-and-cached
+//!   [`KdTree`] (built once, shared across solvers via [`Arc`]), an
+//!   injected [`PanelBackend`] (CPU scalar, `ParCpuPanels`, or PJRT
+//!   through the coordinator's offload service), and an [`IterObserver`]
+//!   subscription.
+//!
+//! Observers receive every iteration's [`IterStats`] (plus phase and
+//! post-update centroids) and can stop a run early — this is the hook the
+//! coordinator's worker loop and any future serving path subscribe to for
+//! live logging and metrics streaming.
+//!
+//! ```no_run
+//! # use muchswift::data::synthetic::generate_params;
+//! # use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+//! let s = generate_params(10_000, 3, 8, 0.1, 2.0, 7);
+//! let spec = KmeansSpec::new(8).algo(Algo::FilterBatched).tol(1e-6).seed(1);
+//! let result = spec.solve(&mut SolverCtx::new(&s.data));
+//! assert!(result.stats.converged);
+//! ```
+
+use super::elkan::{self, ElkanOpts};
+use super::filtering::{self, FilterOpts};
+use super::init::{init_centroids, Init};
+use super::lloyd::{self, LloydOpts};
+use super::panel::{PanelBackend, ParCpuPanels};
+use super::twolevel::{self, Partition, TwoLevelOpts, QUARTERS};
+use super::{IterStats, KmeansResult, Metric, Phase};
+use crate::data::Dataset;
+use crate::kdtree::KdTree;
+use std::str::FromStr;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Algorithm selection
+// ---------------------------------------------------------------------------
+
+/// The interchangeable execution strategies (paper sections 2–4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Conventional Lloyd iteration (the software / unoptimized-FPGA work).
+    Lloyd,
+    /// Triangle-inequality accelerated Lloyd (Elkan [8]).
+    Elkan,
+    /// kd-tree filtering, depth-first recursive engine (Alg. 1).
+    Filter,
+    /// kd-tree filtering, level-batched engine with panel offload — the
+    /// HW/SW split; honors an injected [`PanelBackend`].
+    FilterBatched,
+    /// The paper's two-level 4-way scheme (Alg. 2).
+    TwoLevel,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Lloyd => "lloyd",
+            Algo::Elkan => "elkan",
+            Algo::Filter => "filter",
+            Algo::FilterBatched => "filter-batched",
+            Algo::TwoLevel => "two-level",
+        }
+    }
+
+    pub fn all() -> &'static [Algo] {
+        &[
+            Algo::Lloyd,
+            Algo::Elkan,
+            Algo::Filter,
+            Algo::FilterBatched,
+            Algo::TwoLevel,
+        ]
+    }
+
+    /// Does this strategy traverse a kd-tree (and therefore charge
+    /// `node_visits`/`prune_tests` work counters)?
+    pub fn uses_tree(self) -> bool {
+        matches!(self, Algo::Filter | Algo::FilterBatched | Algo::TwoLevel)
+    }
+}
+
+impl FromStr for Algo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "lloyd" => Algo::Lloyd,
+            "elkan" => Algo::Elkan,
+            "filter" | "filtering" => Algo::Filter,
+            "filter-batched" | "batched" => Algo::FilterBatched,
+            "two-level" | "twolevel" => Algo::TwoLevel,
+            other => anyhow::bail!(
+                "unknown algo `{other}` (lloyd|elkan|filter|filter-batched|two-level)"
+            ),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The spec
+// ---------------------------------------------------------------------------
+
+/// One clustering problem, fully specified.  Replaces the per-engine
+/// option structs (`LloydOpts`/`ElkanOpts`/`FilterOpts`/`TwoLevelOpts`/
+/// the old `CoordinatorOpts`) at every call site outside `kmeans/`; the
+/// engine-level structs survive only as internal knob carriers the
+/// adapters map onto.
+#[derive(Clone, Debug)]
+pub struct KmeansSpec {
+    pub k: usize,
+    pub algo: Algo,
+    pub metric: Metric,
+    /// Stop when max squared centroid movement drops below this.
+    pub tol: f32,
+    /// Iteration cap for the main loop (level-1 cap for [`Algo::TwoLevel`]).
+    pub max_iters: usize,
+    /// Iteration cap for the two-level refinement phase.
+    pub level2_max_iters: usize,
+    pub init: Init,
+    /// Quartering strategy ([`Algo::TwoLevel`] only).
+    pub partition: Partition,
+    pub seed: u64,
+    /// Worker threads for the default panel backend (and the coordinator's
+    /// level-2 fan-out).
+    pub workers: usize,
+    /// Also accumulate the exact objective each iteration (Lloyd only).
+    pub track_cost: bool,
+    /// Explicit initial centroids; overrides `init`/`seed` seeding.
+    /// Ignored by [`Algo::TwoLevel`], which seeds per quarter.
+    pub start: Option<Dataset>,
+}
+
+impl KmeansSpec {
+    /// A spec with the repo-wide defaults (Lloyd, squared-L2, `tol = 1e-6`,
+    /// 100 iterations, uniform seeding, round-robin quarters, 4 workers).
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            algo: Algo::Lloyd,
+            metric: Metric::Euclid,
+            tol: 1e-6,
+            max_iters: 100,
+            level2_max_iters: 100,
+            init: Init::UniformSample,
+            partition: Partition::RoundRobin,
+            seed: 1,
+            workers: QUARTERS,
+            track_cost: false,
+            start: None,
+        }
+    }
+
+    /// Shorthand for the paper's configuration: [`Algo::TwoLevel`].
+    pub fn two_level(k: usize) -> Self {
+        Self::new(k).algo(Algo::TwoLevel)
+    }
+
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    pub fn tol(mut self, tol: f32) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn level2_max_iters(mut self, cap: usize) -> Self {
+        self.level2_max_iters = cap;
+        self
+    }
+
+    pub fn init(mut self, init: Init) -> Self {
+        self.init = init;
+        self
+    }
+
+    pub fn partition(mut self, partition: Partition) -> Self {
+        self.partition = partition;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn track_cost(mut self, track: bool) -> Self {
+        self.track_cost = track;
+        self
+    }
+
+    /// Start from these centroids instead of seeding from `init`/`seed`.
+    pub fn start(mut self, centroids: Dataset) -> Self {
+        self.start = Some(centroids);
+        self
+    }
+
+    /// Panics (like the engines always did) if the spec cannot run on
+    /// `data`.
+    pub fn validate(&self, data: &Dataset) {
+        assert!(
+            self.k >= 1 && self.k <= data.len(),
+            "k out of range (k={} n={})",
+            self.k,
+            data.len()
+        );
+        assert!(self.max_iters >= 1, "max_iters must be >= 1");
+        if let Some(start) = &self.start {
+            assert_eq!(start.len(), self.k, "start centroids must have k rows");
+            assert_eq!(start.dims(), data.dims(), "start centroid dims mismatch");
+        }
+    }
+
+    /// The initial centroids this spec resolves to over `data`.
+    pub fn starting_centroids(&self, data: &Dataset) -> Dataset {
+        match &self.start {
+            Some(c) => c.clone(),
+            None => init_centroids(data, self.k, self.init, self.metric, self.seed),
+        }
+    }
+
+    /// Panel backend used when the ctx has none injected: scalar (oracle,
+    /// bit-identical to the recursive engine) for one worker, the blocked
+    /// multi-threaded kernel otherwise.
+    fn default_panels(&self) -> ParCpuPanels {
+        if self.workers > 1 {
+            ParCpuPanels::new(self.workers)
+        } else {
+            ParCpuPanels::scalar(1)
+        }
+    }
+
+    /// The [`Solver`] adapter for this spec's [`Algo`].
+    pub fn solver(&self) -> Box<dyn Solver> {
+        match self.algo {
+            Algo::Lloyd => Box::new(LloydSolver { spec: self.clone() }),
+            Algo::Elkan => Box::new(ElkanSolver { spec: self.clone() }),
+            Algo::Filter => Box::new(FilterSolver { spec: self.clone() }),
+            Algo::FilterBatched => Box::new(BatchedFilterSolver { spec: self.clone() }),
+            Algo::TwoLevel => Box::new(TwoLevelSolver { spec: self.clone() }),
+        }
+    }
+
+    /// Run this spec's solver in `ctx`.
+    pub fn solve(&self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        self.solver().run(ctx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observers
+// ---------------------------------------------------------------------------
+
+/// What an observer tells the solver after each iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterFlow {
+    Continue,
+    /// Stop the current phase's iteration loop after this iteration
+    /// (recorded as `RunStats::early_stopped`, not convergence).
+    Stop,
+}
+
+/// One iteration's observation: the work counters the hardware models
+/// consume plus where in the solve it happened.
+#[derive(Debug)]
+pub struct IterEvent<'a> {
+    pub algo: Algo,
+    pub phase: Phase,
+    /// Iteration index within the phase.
+    pub iter: usize,
+    pub stats: &'a IterStats,
+    /// Centroids after this iteration's update step.
+    pub centroids: &'a Dataset,
+}
+
+/// Per-iteration subscription: live logging, metrics streaming, early
+/// stop.  Implement it on a struct, or wrap a closure in [`ObserveFn`]
+/// (or use [`SolverCtx::observe`]).
+pub trait IterObserver {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow;
+}
+
+/// `&mut O` observes wherever `O` does — lets callers keep ownership of a
+/// stateful observer (e.g. an [`IterTally`]) across a solve.
+impl<O: IterObserver + ?Sized> IterObserver for &mut O {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        (**self).on_iter(ev)
+    }
+}
+
+/// Closure adapter for [`IterObserver`].
+pub struct ObserveFn<F>(pub F);
+
+impl<F> IterObserver for ObserveFn<F>
+where
+    F: FnMut(&IterEvent<'_>) -> IterFlow,
+{
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        (self.0)(ev)
+    }
+}
+
+/// Observer that logs every iteration at debug level.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterLog;
+
+impl IterObserver for IterLog {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        log::debug!(
+            "{} {:?} iter {}: dist_evals={} node_visits={} moved={:.3e}",
+            ev.algo.name(),
+            ev.phase,
+            ev.iter,
+            ev.stats.dist_evals,
+            ev.stats.node_visits,
+            ev.stats.moved
+        );
+        IterFlow::Continue
+    }
+}
+
+/// Observer that tallies the event stream (tests, live metrics) and can
+/// stop a run after a fixed number of events.
+#[derive(Clone, Debug, Default)]
+pub struct IterTally {
+    pub events: usize,
+    pub dist_evals: u64,
+    pub last_moved: f32,
+    /// Phase of every event, in arrival order.
+    pub phases: Vec<Phase>,
+    /// Request a stop once this many events have been seen.
+    pub stop_after: Option<usize>,
+}
+
+impl IterObserver for IterTally {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        self.events += 1;
+        self.dist_evals += ev.stats.dist_evals;
+        self.last_moved = ev.stats.moved;
+        self.phases.push(ev.phase);
+        match self.stop_after {
+            Some(cap) if self.events >= cap => IterFlow::Stop,
+            _ => IterFlow::Continue,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The context
+// ---------------------------------------------------------------------------
+
+/// The shared substrate a solver runs against: the dataset, a cached
+/// kd-tree, an optional injected panel backend, and an optional observer.
+/// Reusable across solves — the tree survives, so running Lloyd then
+/// filtering then two-level over the same ctx builds the tree once.
+pub struct SolverCtx<'a> {
+    data: &'a Dataset,
+    tree: Option<Arc<KdTree>>,
+    backend: Option<Box<dyn PanelBackend + 'a>>,
+    observer: Option<Box<dyn IterObserver + 'a>>,
+}
+
+impl<'a> SolverCtx<'a> {
+    pub fn new(data: &'a Dataset) -> Self {
+        Self {
+            data,
+            tree: None,
+            backend: None,
+            observer: None,
+        }
+    }
+
+    pub fn data(&self) -> &'a Dataset {
+        self.data
+    }
+
+    /// Inject a pre-built kd-tree (e.g. shared across quarters/solvers).
+    pub fn with_tree(mut self, tree: Arc<KdTree>) -> Self {
+        self.tree = Some(tree);
+        self
+    }
+
+    /// Inject the panel backend batched solvers compute distances through.
+    pub fn with_backend(mut self, backend: impl PanelBackend + 'a) -> Self {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Subscribe an observer to every iteration of subsequent solves.
+    pub fn with_observer(mut self, observer: impl IterObserver + 'a) -> Self {
+        self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// [`with_observer`](Self::with_observer) sugar for closures.
+    pub fn observe(self, f: impl FnMut(&IterEvent<'_>) -> IterFlow + 'a) -> Self {
+        self.with_observer(ObserveFn(f))
+    }
+
+    pub fn has_backend(&self) -> bool {
+        self.backend.is_some()
+    }
+
+    /// The full-dataset kd-tree, built on first use and cached.
+    pub fn tree(&mut self) -> Arc<KdTree> {
+        if self.tree.is_none() {
+            self.tree = Some(Arc::new(KdTree::build(self.data)));
+        }
+        Arc::clone(self.tree.as_ref().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait + adapters
+// ---------------------------------------------------------------------------
+
+/// One execution strategy, runnable against a [`SolverCtx`].
+pub trait Solver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult;
+}
+
+pub struct LloydSolver {
+    pub spec: KmeansSpec,
+}
+
+impl Solver for LloydSolver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        let spec = &self.spec;
+        spec.validate(ctx.data);
+        let data = ctx.data;
+        let init = spec.starting_centroids(data);
+        let opts = LloydOpts {
+            metric: spec.metric,
+            tol: spec.tol,
+            max_iters: spec.max_iters,
+            track_cost: spec.track_cost,
+        };
+        match ctx.observer.as_mut() {
+            Some(obs) => {
+                let mut hook = |i: usize, st: &IterStats, c: &Dataset| -> bool {
+                    obs.on_iter(&IterEvent {
+                        algo: Algo::Lloyd,
+                        phase: Phase::Main,
+                        iter: i,
+                        stats: st,
+                        centroids: c,
+                    }) == IterFlow::Continue
+                };
+                lloyd::run_hooked(data, &init, &opts, Some(&mut hook))
+            }
+            None => lloyd::run_hooked(data, &init, &opts, None),
+        }
+    }
+}
+
+pub struct ElkanSolver {
+    pub spec: KmeansSpec,
+}
+
+impl Solver for ElkanSolver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        let spec = &self.spec;
+        spec.validate(ctx.data);
+        let data = ctx.data;
+        let init = spec.starting_centroids(data);
+        let opts = ElkanOpts {
+            metric: spec.metric,
+            tol: spec.tol,
+            max_iters: spec.max_iters,
+        };
+        match ctx.observer.as_mut() {
+            Some(obs) => {
+                let mut hook = |i: usize, st: &IterStats, c: &Dataset| -> bool {
+                    obs.on_iter(&IterEvent {
+                        algo: Algo::Elkan,
+                        phase: Phase::Main,
+                        iter: i,
+                        stats: st,
+                        centroids: c,
+                    }) == IterFlow::Continue
+                };
+                elkan::run_hooked(data, &init, &opts, Some(&mut hook))
+            }
+            None => elkan::run_hooked(data, &init, &opts, None),
+        }
+    }
+}
+
+pub struct FilterSolver {
+    pub spec: KmeansSpec,
+}
+
+impl Solver for FilterSolver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        let spec = &self.spec;
+        spec.validate(ctx.data);
+        let data = ctx.data;
+        let tree = ctx.tree();
+        let init = spec.starting_centroids(data);
+        let opts = FilterOpts {
+            metric: spec.metric,
+            tol: spec.tol,
+            max_iters: spec.max_iters,
+        };
+        match ctx.observer.as_mut() {
+            Some(obs) => {
+                let mut hook = |i: usize, st: &IterStats, c: &Dataset| -> bool {
+                    obs.on_iter(&IterEvent {
+                        algo: Algo::Filter,
+                        phase: Phase::Main,
+                        iter: i,
+                        stats: st,
+                        centroids: c,
+                    }) == IterFlow::Continue
+                };
+                filtering::run_hooked(data, &tree, &init, &opts, Some(&mut hook))
+            }
+            None => filtering::run_hooked(data, &tree, &init, &opts, None),
+        }
+    }
+}
+
+pub struct BatchedFilterSolver {
+    pub spec: KmeansSpec,
+}
+
+impl Solver for BatchedFilterSolver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        let spec = &self.spec;
+        spec.validate(ctx.data);
+        let data = ctx.data;
+        let tree = ctx.tree();
+        let init = spec.starting_centroids(data);
+        let opts = FilterOpts {
+            metric: spec.metric,
+            tol: spec.tol,
+            max_iters: spec.max_iters,
+        };
+        let mut fallback: Option<ParCpuPanels> = None;
+        let mut backend: &mut dyn PanelBackend = match ctx.backend.as_mut() {
+            Some(b) => &mut **b,
+            None => fallback.insert(spec.default_panels()),
+        };
+        match ctx.observer.as_mut() {
+            Some(obs) => {
+                let mut hook = |i: usize, st: &IterStats, c: &Dataset| -> bool {
+                    obs.on_iter(&IterEvent {
+                        algo: Algo::FilterBatched,
+                        phase: Phase::Main,
+                        iter: i,
+                        stats: st,
+                        centroids: c,
+                    }) == IterFlow::Continue
+                };
+                filtering::run_batched_hooked(data, &tree, &init, &opts, &mut backend, Some(&mut hook))
+            }
+            None => filtering::run_batched_hooked(data, &tree, &init, &opts, &mut backend, None),
+        }
+    }
+}
+
+pub struct TwoLevelSolver {
+    pub spec: KmeansSpec,
+}
+
+impl Solver for TwoLevelSolver {
+    fn run(&mut self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
+        let spec = &self.spec;
+        spec.validate(ctx.data);
+        let data = ctx.data;
+        let tree = ctx.tree();
+        let opts = TwoLevelOpts {
+            metric: spec.metric,
+            tol: spec.tol,
+            level1_max_iters: spec.max_iters,
+            level2_max_iters: spec.level2_max_iters,
+            init: spec.init,
+            partition: spec.partition,
+            seed: spec.seed,
+        };
+        let backend: Option<&mut dyn PanelBackend> = match ctx.backend.as_mut() {
+            Some(b) => Some(&mut **b),
+            None => None,
+        };
+        match ctx.observer.as_mut() {
+            Some(obs) => {
+                let mut hook = |ph: Phase, i: usize, st: &IterStats, c: &Dataset| -> bool {
+                    obs.on_iter(&IterEvent {
+                        algo: Algo::TwoLevel,
+                        phase: ph,
+                        iter: i,
+                        stats: st,
+                        centroids: c,
+                    }) == IterFlow::Continue
+                };
+                twolevel::run_ext(data, spec.k, &opts, Some(&*tree), backend, Some(&mut hook))
+            }
+            None => twolevel::run_ext(data, spec.k, &opts, Some(&*tree), backend, None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::filtering::FilterOpts;
+    use crate::kmeans::lloyd::LloydOpts;
+
+    #[test]
+    fn algo_names_round_trip() {
+        for a in Algo::all() {
+            assert_eq!(a.name().parse::<Algo>().unwrap(), *a);
+        }
+        assert!("gpu".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn spec_builder_sets_fields() {
+        let spec = KmeansSpec::new(7)
+            .algo(Algo::Elkan)
+            .metric(Metric::Manhattan)
+            .tol(1e-4)
+            .max_iters(17)
+            .level2_max_iters(3)
+            .init(Init::KmeansPlusPlus)
+            .partition(Partition::KdTop)
+            .seed(99)
+            .workers(2)
+            .track_cost(true);
+        assert_eq!(spec.k, 7);
+        assert_eq!(spec.algo, Algo::Elkan);
+        assert_eq!(spec.metric, Metric::Manhattan);
+        assert_eq!(spec.tol, 1e-4);
+        assert_eq!(spec.max_iters, 17);
+        assert_eq!(spec.level2_max_iters, 3);
+        assert_eq!(spec.init, Init::KmeansPlusPlus);
+        assert_eq!(spec.partition, Partition::KdTop);
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.workers, 2);
+        assert!(spec.track_cost);
+    }
+
+    #[test]
+    fn lloyd_solver_matches_engine_exactly() {
+        let s = generate_params(600, 3, 4, 0.2, 1.0, 11);
+        let spec = KmeansSpec::new(4).seed(5);
+        let a = spec.solve(&mut SolverCtx::new(&s.data));
+        let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Euclid, 5);
+        let b = lloyd::run(&s.data, &init, &LloydOpts::default());
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.stats.iterations(), b.stats.iterations());
+    }
+
+    #[test]
+    fn filter_solver_matches_engine_exactly() {
+        let s = generate_params(700, 3, 5, 0.2, 1.0, 13);
+        let spec = KmeansSpec::new(5).algo(Algo::Filter).seed(4);
+        let a = spec.solve(&mut SolverCtx::new(&s.data));
+        let tree = KdTree::build(&s.data);
+        let init = init_centroids(&s.data, 5, Init::UniformSample, Metric::Euclid, 4);
+        let b = filtering::run(&s.data, &tree, &init, &FilterOpts::default());
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn batched_solver_honors_injected_backend() {
+        let s = generate_params(800, 4, 5, 0.2, 1.0, 3);
+        let spec = KmeansSpec::new(5).algo(Algo::FilterBatched).seed(8);
+        // Scalar injected backend == recursive reference trajectory.
+        let a = spec.solve(
+            &mut SolverCtx::new(&s.data).with_backend(ParCpuPanels::scalar(2)),
+        );
+        let b = spec.clone().algo(Algo::Filter).solve(&mut SolverCtx::new(&s.data));
+        let oa = a.objective(&s.data, Metric::Euclid);
+        let ob = b.objective(&s.data, Metric::Euclid);
+        assert!((oa - ob).abs() <= 1e-3 * (1.0 + ob.abs()), "{oa} vs {ob}");
+        // And the default (no injection) path also runs.
+        let c = spec.solve(&mut SolverCtx::new(&s.data));
+        assert_eq!(c.assignments.len(), 800);
+    }
+
+    #[test]
+    fn two_level_solver_matches_sequential_reference() {
+        let s = generate_params(3000, 3, 5, 0.15, 2.0, 33);
+        let spec = KmeansSpec::two_level(5).seed(9);
+        let a = spec.solve(&mut SolverCtx::new(&s.data));
+        let b = twolevel::run(
+            &s.data,
+            5,
+            &TwoLevelOpts {
+                seed: 9,
+                ..Default::default()
+            },
+        );
+        assert_eq!(a.centroids, b.centroids);
+        let ea = a.ext.two_level.as_ref().unwrap();
+        let eb = b.ext.two_level.as_ref().unwrap();
+        assert_eq!(ea.quarter_sizes, eb.quarter_sizes);
+        assert_eq!(
+            ea.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
+            eb.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn ctx_tree_is_built_once_and_shared() {
+        let s = generate_params(500, 2, 3, 0.2, 1.0, 7);
+        let mut ctx = SolverCtx::new(&s.data);
+        let t1 = ctx.tree();
+        let t2 = ctx.tree();
+        assert!(Arc::ptr_eq(&t1, &t2));
+        // Solvers run against the cached tree without rebuilding.
+        let spec = KmeansSpec::new(3).algo(Algo::Filter).seed(2);
+        let r = spec.solve(&mut ctx);
+        assert_eq!(r.assignments.len(), 500);
+        assert!(Arc::ptr_eq(&t1, &ctx.tree()));
+    }
+
+    #[test]
+    fn observer_sees_every_iteration() {
+        let s = generate_params(600, 3, 4, 0.3, 1.0, 19);
+        let spec = KmeansSpec::new(4).seed(6);
+        let mut tally = IterTally::default();
+        let r;
+        {
+            let mut ctx = SolverCtx::new(&s.data).with_observer(&mut tally);
+            r = spec.solve(&mut ctx);
+        }
+        assert_eq!(tally.events, r.stats.iterations());
+        assert_eq!(tally.dist_evals, r.stats.total_dist_evals());
+        assert_eq!(tally.last_moved, r.stats.iters.last().unwrap().moved);
+        assert!(tally.phases.iter().all(|p| *p == Phase::Main));
+    }
+
+    #[test]
+    fn observer_can_stop_early() {
+        let s = generate_params(800, 3, 5, 0.4, 1.0, 23);
+        let spec = KmeansSpec::new(5).seed(3).tol(0.0).max_iters(50);
+        let mut tally = IterTally {
+            stop_after: Some(2),
+            ..Default::default()
+        };
+        let r;
+        {
+            let mut ctx = SolverCtx::new(&s.data).with_observer(&mut tally);
+            r = spec.solve(&mut ctx);
+        }
+        assert_eq!(r.stats.iterations(), 2);
+        assert!(r.stats.early_stopped);
+        assert!(!r.stats.converged);
+    }
+
+    #[test]
+    fn closure_observer_and_two_level_phases() {
+        let s = generate_params(2000, 2, 3, 0.15, 2.0, 41);
+        let spec = KmeansSpec::two_level(3).seed(12);
+        let events = std::cell::RefCell::new(Vec::new());
+        let r = spec.solve(&mut SolverCtx::new(&s.data).observe(|ev: &IterEvent| {
+            events.borrow_mut().push(ev.phase);
+            IterFlow::Continue
+        }));
+        let events = events.into_inner();
+        assert!(!events.is_empty());
+        // All four quarters and the refinement phase report in.
+        for q in 0..QUARTERS {
+            assert!(
+                events.contains(&Phase::Level1 { quarter: q }),
+                "no events for quarter {q}: {events:?}"
+            );
+        }
+        assert!(events.contains(&Phase::Level2));
+        let l2_events = events.iter().filter(|p| **p == Phase::Level2).count();
+        assert_eq!(l2_events, r.stats.iterations());
+    }
+
+    #[test]
+    #[should_panic(expected = "k out of range")]
+    fn oversized_k_is_rejected() {
+        let s = generate_params(10, 2, 2, 0.2, 1.0, 1);
+        let _ = KmeansSpec::new(11).solve(&mut SolverCtx::new(&s.data));
+    }
+}

@@ -39,7 +39,10 @@
 
 use super::filtering::{self, FilterOpts};
 use super::init::{init_centroids, Init};
-use super::{KmeansResult, Metric, RunStats};
+use super::panel::PanelBackend;
+use super::{
+    IterHook, IterStats, KmeansResult, Metric, Phase, PhasedHook, RunStats, TwoLevelExt,
+};
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
 
@@ -80,22 +83,6 @@ impl Default for TwoLevelOpts {
             seed: 1,
         }
     }
-}
-
-/// Everything a two-level run produces (the coordinator and the hardware
-/// models consume the per-phase statistics).
-#[derive(Clone, Debug)]
-pub struct TwoLevelResult {
-    /// Final clustering (level-2 output, over the full dataset).
-    pub result: KmeansResult,
-    /// Per-quarter level-1 statistics (these ran in parallel).
-    pub level1_stats: Vec<RunStats>,
-    /// Row count of each quarter.
-    pub quarter_sizes: Vec<usize>,
-    /// Level-2 statistics.
-    pub level2_stats: RunStats,
-    /// The merged (post-`Combine`) centroids that seeded level 2.
-    pub merged_centroids: Dataset,
 }
 
 /// `Quarter` (round-robin): deal rows out modulo `QUARTERS`.
@@ -213,13 +200,77 @@ pub fn combine(
     Dataset::from_flat(k, d, out)
 }
 
-/// Run the full two-level algorithm (sequential reference).
-pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> TwoLevelResult {
+/// One filtering phase of the two-level scheme: recursive engine when no
+/// backend is injected, level-batched through `backend` otherwise, with
+/// the phased hook narrowed to the engine's plain per-iteration hook.
+/// Generic over backend and hook so callers reborrow plain `Option::as_mut`
+/// references between phases (`&mut dyn …` implements both traits).
+fn run_phase<B, H>(
+    data: &Dataset,
+    tree: &KdTree,
+    init: &Dataset,
+    fopts: &FilterOpts,
+    backend: Option<&mut B>,
+    phase: Phase,
+    hook: Option<&mut H>,
+) -> KmeansResult
+where
+    B: PanelBackend,
+    H: FnMut(Phase, usize, &IterStats, &Dataset) -> bool,
+{
+    let mut sub;
+    let h: Option<IterHook<'_>> = match hook {
+        Some(ph) => {
+            sub = move |i: usize, st: &IterStats, c: &Dataset| ph(phase, i, st, c);
+            Some(&mut sub)
+        }
+        None => None,
+    };
+    match backend {
+        Some(b) => filtering::run_batched_hooked(data, tree, init, fopts, b, h),
+        None => filtering::run_hooked(data, tree, init, fopts, h),
+    }
+}
+
+/// Run the full two-level algorithm (sequential reference).  The extra
+/// outputs (per-quarter stats, merged seed, quarter sizes) ride on the
+/// result's [`TwoLevelExt`] extension; the result's own `stats` are the
+/// level-2 refinement's.
+pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> KmeansResult {
+    run_ext(data, k, opts, None, None, None)
+}
+
+/// [`run`] with the unified-solver substrate injected: an optional
+/// pre-built full-dataset kd-tree (avoids a rebuild when the caller's
+/// `SolverCtx` already cached one), an optional panel backend (switches
+/// every filtering phase to the level-batched engine — the HW/SW split),
+/// and an optional phased per-iteration hook.
+pub fn run_ext(
+    data: &Dataset,
+    k: usize,
+    opts: &TwoLevelOpts,
+    full_tree: Option<&KdTree>,
+    mut backend: Option<&mut dyn PanelBackend>,
+    mut hook: Option<PhasedHook<'_>>,
+) -> KmeansResult {
     assert!(k >= 1 && k <= data.len());
-    let full_tree = KdTree::build(data);
+    let built;
+    let full_tree = match full_tree {
+        Some(t) => t,
+        None => {
+            built = KdTree::build(data);
+            &built
+        }
+    };
     let (quarters, _ids) = match opts.partition {
         Partition::RoundRobin => quarter_round_robin(data),
-        Partition::KdTop => quarter(data, &full_tree),
+        Partition::KdTop => quarter(data, full_tree),
+    };
+    let quarter_sizes: Vec<usize> = quarters.iter().map(|q| q.len()).collect();
+    let fopts_l2 = FilterOpts {
+        metric: opts.metric,
+        tol: opts.tol,
+        max_iters: opts.level2_max_iters,
     };
 
     // Tiny-data guard: if any quarter can't host k clusters, the two-level
@@ -227,25 +278,22 @@ pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> TwoLevelResult {
     // always n >> 4k).
     if quarters.iter().any(|q| q.len() < k) {
         let init = init_centroids(data, k, opts.init, opts.metric, opts.seed);
-        let result = filtering::run(
+        let mut result = run_phase(
             data,
-            &full_tree,
+            full_tree,
             &init,
-            &FilterOpts {
-                metric: opts.metric,
-                tol: opts.tol,
-                max_iters: opts.level2_max_iters,
-            },
+            &fopts_l2,
+            backend.as_mut(),
+            Phase::Level2,
+            hook.as_mut(),
         );
-        let level2_stats = result.stats.clone();
         let merged = result.centroids.clone();
-        return TwoLevelResult {
-            result,
+        result.ext.two_level = Some(Box::new(TwoLevelExt {
             level1_stats: vec![RunStats::default(); QUARTERS],
-            quarter_sizes: quarters.iter().map(|q| q.len()).collect(),
-            level2_stats,
+            quarter_sizes,
             merged_centroids: merged,
-        };
+        }));
+        return result;
     }
 
     // ---- Level 1: independent k-clustering per quarter -------------------
@@ -266,7 +314,15 @@ pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> TwoLevelResult {
             opts.metric,
             opts.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9),
         );
-        let r = filtering::run(qdata, &tree, &init, &fopts);
+        let r = run_phase(
+            qdata,
+            &tree,
+            &init,
+            &fopts,
+            backend.as_mut(),
+            Phase::Level1 { quarter: qi },
+            hook.as_mut(),
+        );
         l1_counts.push(r.sizes());
         l1_centroids.push(r.centroids);
         level1_stats.push(r.stats);
@@ -276,25 +332,21 @@ pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> TwoLevelResult {
     let merged = combine(&l1_centroids, &l1_counts, opts.metric);
 
     // ---- Level 2: refine over the full dataset ----------------------------
-    let result = filtering::run(
+    let mut result = run_phase(
         data,
-        &full_tree,
+        full_tree,
         &merged,
-        &FilterOpts {
-            metric: opts.metric,
-            tol: opts.tol,
-            max_iters: opts.level2_max_iters,
-        },
+        &fopts_l2,
+        backend.as_mut(),
+        Phase::Level2,
+        hook.as_mut(),
     );
-    let level2_stats = result.stats.clone();
-
-    TwoLevelResult {
-        result,
+    result.ext.two_level = Some(Box::new(TwoLevelExt {
         level1_stats,
-        quarter_sizes: quarters.iter().map(|q| q.len()).collect(),
-        level2_stats,
+        quarter_sizes,
         merged_centroids: merged,
-    }
+    }));
+    result
 }
 
 #[cfg(test)]
@@ -391,11 +443,13 @@ mod tests {
             6,
             &TwoLevelOpts { seed: 3, init: Init::KmeansPlusPlus, ..Default::default() },
         );
-        assert!(r.result.stats.converged);
+        assert!(r.stats.converged);
+        let ext = r.ext.two_level.as_ref().expect("two-level ext attached");
+        assert_eq!(ext.quarter_sizes.iter().sum::<usize>(), 4000);
+        assert!(ext.level1_stats.iter().all(|s| s.iterations() > 0));
         // Every planted center has a recovered centroid nearby.
         for t in s.true_centroids.iter() {
             let best = r
-                .result
                 .centroids
                 .iter()
                 .map(|c| Metric::Euclid.dist(c, t))
@@ -421,7 +475,7 @@ mod tests {
                 &cold_init,
                 &LloydOpts { tol: 1e-6, max_iters: 100, ..Default::default() },
             );
-            l2_total += r.level2_stats.iterations();
+            l2_total += r.stats.iterations();
             cold_total += cold.stats.iterations();
         }
         assert!(
@@ -436,7 +490,7 @@ mod tests {
         let r = run(&s.data, 5, &TwoLevelOpts { seed: 7, ..Default::default() });
         let init = init_centroids(&s.data, 5, Init::KmeansPlusPlus, Metric::Euclid, 7);
         let l = lloyd::run(&s.data, &init, &LloydOpts::default());
-        let obj_t = r.result.objective(&s.data, Metric::Euclid);
+        let obj_t = r.objective(&s.data, Metric::Euclid);
         let obj_l = l.objective(&s.data, Metric::Euclid);
         // Same ballpark (k-means is non-convex; both are local optima).
         assert!(
@@ -449,9 +503,10 @@ mod tests {
     fn tiny_dataset_falls_back() {
         let s = generate_params(10, 2, 2, 0.1, 1.0, 31);
         let r = run(&s.data, 5, &TwoLevelOpts::default());
-        assert_eq!(r.result.centroids.len(), 5);
-        assert_eq!(r.result.assignments.len(), 10);
+        assert_eq!(r.centroids.len(), 5);
+        assert_eq!(r.assignments.len(), 10);
         // Fallback leaves level-1 stats empty.
-        assert!(r.level1_stats.iter().all(|s| s.iterations() == 0));
+        let ext = r.ext.two_level.as_ref().unwrap();
+        assert!(ext.level1_stats.iter().all(|s| s.iterations() == 0));
     }
 }

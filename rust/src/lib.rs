@@ -8,9 +8,12 @@
 //! offloaded to AOT-compiled JAX/Pallas kernels executed through PJRT
 //! (the `xla` crate) — Python never runs at request time.
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see DESIGN.md at the repo root):
 //! - `util`, `config`, `data` — substrates (offline toolchain gaps included)
-//! - `kdtree`, `kmeans` — the algorithms (Alg. 1 / Alg. 2 + baselines)
+//! - `kdtree`, `kmeans` — the algorithms (Alg. 1 / Alg. 2 + baselines),
+//!   fronted by the unified solver API (`kmeans::solver`): one
+//!   `KmeansSpec`, one `Solver` trait, pluggable `PanelBackend`s and
+//!   per-iteration `IterObserver`s across all four engines
 //! - `hw` — the ZCU102 platform model (clock domains, DMA, DDR3, BRAM, PL)
 //! - `runtime` — PJRT artifact loading & execution (the "PL" compute)
 //! - `coordinator` — the deployable system: leader + 4 workers + offload

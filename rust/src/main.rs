@@ -1,7 +1,9 @@
 //! `muchswift` — CLI for the MUCH-SWIFT reproduction.
 //!
 //! Subcommands:
-//!   cluster     run the coordinator (two-level k-means) on synthetic/CSV data
+//!   cluster     cluster synthetic/CSV data via the unified solver API
+//!               (--algo lloyd|elkan|filter|filter-batched|two-level; the
+//!               two-level default runs through the threaded coordinator)
 //!   simulate    evaluate an architecture's ZCU102-scale time on a workload
 //!   experiment  regenerate a paper figure/table (fig2a|fig2b|fig3a|fig3b|table1|headline|all)
 //!   gen-data    write a synthetic dataset to CSV
@@ -9,13 +11,14 @@
 
 use muchswift::arch::{self, ArchKind};
 use muchswift::config::{PlatformConfig, WorkloadConfig};
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::{csv, synthetic};
 use muchswift::experiments::{fig2, fig3, table1};
 use muchswift::kmeans::init::Init;
+use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
 use muchswift::kmeans::twolevel::Partition;
-use muchswift::kmeans::Metric;
-use muchswift::runtime::{self, PjrtRuntime};
+use muchswift::kmeans::{KmeansResult, Metric};
+use muchswift::runtime::{self, PjrtPanels, PjrtRuntime};
 use muchswift::util::cli::Command;
 use muchswift::util::logger;
 use std::path::Path;
@@ -23,16 +26,21 @@ use std::sync::Arc;
 
 fn commands() -> Vec<Command> {
     vec![
-        Command::new("cluster", "run two-level k-means through the coordinator")
+        Command::new("cluster", "cluster a dataset through the unified solver API")
             .opt("n", "100000", "synthetic points (ignored with an input file)")
             .opt("d", "15", "dimensions")
             .opt("k", "8", "clusters")
             .opt("sigma", "0.15", "cluster stddev")
             .opt("seed", "42", "rng seed")
+            .opt("algo", "two-level", "lloyd|elkan|filter|filter-batched|two-level")
             .opt("metric", "euclid", "euclid|manhattan")
-            .opt("backend", "pjrt", "pjrt|cpu (panel compute substrate)")
-            .opt("partition", "round-robin", "round-robin|kd-top")
+            .opt("tol", "1e-6", "convergence tolerance (max squared centroid movement)")
+            .opt("max-iters", "100", "iteration cap (level-1 and level-2 for two-level)")
+            .opt("workers", "4", "worker threads (two-level) / panel threads (filter-batched)")
+            .opt("backend", "pjrt", "pjrt|cpu (panel substrate; two-level and filter-batched)")
+            .opt("partition", "round-robin", "round-robin|kd-top (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
+            .flag("trace", "stream per-iteration stats through an observer (runs two-level via the sequential solver)")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
         Command::new("simulate", "evaluate an architecture cost model")
             .req("arch", "sw-lloyd|sw-filter|sw-elkan|fpga-lloyd-single|fpga-filter-single|fpga-lloyd-multi|much-swift|all")
@@ -71,6 +79,57 @@ fn main() {
     }
 }
 
+/// `--trace`: stream every iteration to stdout through the observer seam.
+struct TraceObserver;
+
+impl IterObserver for TraceObserver {
+    fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
+        println!(
+            "  [{:?}] iter {:>3}: dist_evals={:<10} node_visits={:<8} moved={:.3e}",
+            ev.phase, ev.iter, ev.stats.dist_evals, ev.stats.node_visits, ev.stats.moved
+        );
+        IterFlow::Continue
+    }
+}
+
+/// Shared result report for the `cluster` subcommand (all algorithms and
+/// both execution paths produce the same [`KmeansResult`] shape).
+fn report_result(r: &KmeansResult, data: &muchswift::data::Dataset, metric: Metric) {
+    println!("converged: {}", r.stats.converged);
+    if let Some(ext) = &r.ext.two_level {
+        println!(
+            "level-1 iterations per quarter: {:?}",
+            ext.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
+        );
+        println!("level-2 iterations: {}", r.stats.iterations());
+    } else {
+        println!("iterations: {}", r.stats.iterations());
+    }
+    println!("cluster sizes: {:?}", r.sizes());
+    println!("objective: {:.6e}", r.objective(data, metric));
+    // Whole-run totals: for two-level, r.stats covers only the level-2
+    // refinement — fold in the per-quarter level-1 work so the counters
+    // are comparable across --algo choices.
+    let mut dist = r.stats.total_dist_evals();
+    let mut nodes = r.stats.total_node_visits();
+    let mut prunes = r.stats.total_prune_tests();
+    let mut leaves = r.stats.total_leaf_points();
+    let mut interior = r.stats.total_interior_assigns();
+    if let Some(ext) = &r.ext.two_level {
+        for l1 in &ext.level1_stats {
+            dist += l1.total_dist_evals();
+            nodes += l1.total_node_visits();
+            prunes += l1.total_prune_tests();
+            leaves += l1.total_leaf_points();
+            interior += l1.total_interior_assigns();
+        }
+    }
+    println!(
+        "work: {dist} dist evals, {nodes} node visits, {prunes} prune tests, \
+         {leaves} leaf points, {interior} interior assigns",
+    );
+}
+
 fn run() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmds = commands();
@@ -95,6 +154,14 @@ fn run() -> anyhow::Result<()> {
     match m.command {
         "cluster" => {
             let metric: Metric = m.str("metric").parse()?;
+            let algo: Algo = m.str("algo").parse()?;
+            let trace = m.flag("trace");
+            // Fail fast on a bad backend before paying for data loading.
+            let pjrt = match m.str("backend") {
+                "cpu" => false,
+                "pjrt" => true,
+                other => anyhow::bail!("unknown backend `{other}`"),
+            };
             let data = if let Some(path) = &m.positional {
                 println!("loading {path} ...");
                 csv::load(Path::new(path))?
@@ -112,44 +179,69 @@ fn run() -> anyhow::Result<()> {
                 w.validate()?;
                 synthetic::generate(&w).data
             };
-            let backend = match m.str("backend") {
-                "cpu" => Backend::Cpu,
-                "pjrt" => {
-                    let rt = PjrtRuntime::load(&runtime::default_artifact_dir())?;
-                    Backend::Pjrt(Arc::new(rt))
-                }
-                other => anyhow::bail!("unknown backend `{other}`"),
-            };
-            let opts = CoordinatorOpts {
-                k: m.usize("k")?,
-                metric,
-                partition: match m.str("partition") {
+            let spec = KmeansSpec::new(m.usize("k")?)
+                .algo(algo)
+                .metric(metric)
+                .tol(m.f64("tol")? as f32)
+                .max_iters(m.usize("max-iters")?)
+                .level2_max_iters(m.usize("max-iters")?)
+                .partition(match m.str("partition") {
                     "round-robin" => Partition::RoundRobin,
                     "kd-top" => Partition::KdTop,
                     other => anyhow::bail!("unknown partition `{other}`"),
-                },
-                init: match m.str("init") {
+                })
+                .init(match m.str("init") {
                     "uniform" => Init::UniformSample,
                     "kmeans++" => Init::KmeansPlusPlus,
                     other => anyhow::bail!("unknown init `{other}`"),
-                },
-                seed: m.u64("seed")?,
-                ..Default::default()
-            };
-            let coord = Coordinator::new(backend);
-            let out = coord.run(&data, &opts);
-            println!("converged: {}", out.result.stats.converged);
-            println!(
-                "level-1 iterations per quarter: {:?}",
-                out.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
-            );
-            println!("level-2 iterations: {}", out.level2_stats.iterations());
-            println!("cluster sizes: {:?}", out.result.sizes());
-            println!(
-                "objective: {:.6e}",
-                out.result.objective(&data, metric)
-            );
-            println!("{}", out.metrics.summary());
+                })
+                .seed(m.u64("seed")?)
+                .workers(m.usize("workers")?);
+
+            if algo == Algo::TwoLevel && !trace {
+                // The deployable multi-threaded system.
+                let backend = if pjrt {
+                    let rt = PjrtRuntime::load(&runtime::default_artifact_dir())?;
+                    Backend::Pjrt(Arc::new(rt))
+                } else {
+                    Backend::Cpu
+                };
+                let coord = Coordinator::new(backend);
+                let out = coord.run(&data, &spec);
+                report_result(&out.result, &data, metric);
+                println!("{}", out.metrics.summary());
+            } else {
+                // Single-process path through the unified solver (also the
+                // --trace path: the observer streams every iteration).
+                if algo == Algo::TwoLevel {
+                    // trace implies this path; be explicit that the threaded
+                    // coordinator (and with it --backend pjrt / --workers)
+                    // is not engaged here.
+                    println!(
+                        "note: --trace runs two-level through the sequential \
+                         solver (cpu, single process); drop --trace for the \
+                         threaded coordinator{}",
+                        if pjrt { " and the pjrt backend" } else { "" }
+                    );
+                }
+                // Declared before ctx so PJRT panels borrowing it outlive
+                // the solve.
+                let rt_holder: Option<PjrtRuntime> = if pjrt && algo == Algo::FilterBatched {
+                    Some(PjrtRuntime::load(&runtime::default_artifact_dir())?)
+                } else {
+                    None
+                };
+                let mut ctx = SolverCtx::new(&data);
+                if let Some(rt) = &rt_holder {
+                    println!("backend: pjrt ({} artifacts)", rt.manifest().entries.len());
+                    ctx = ctx.with_backend(PjrtPanels::new(rt));
+                }
+                if trace {
+                    ctx = ctx.with_observer(TraceObserver);
+                }
+                let out = spec.solve(&mut ctx);
+                report_result(&out, &data, metric);
+            }
         }
         "simulate" => {
             let w = WorkloadConfig {

@@ -299,6 +299,44 @@ mod tests {
     }
 
     #[test]
+    fn cluster_like_command_negative_paths() {
+        // Mirrors the real `cluster` surface (typed numeric opts + a
+        // flag) so the solver-spec flags have parse-level coverage.
+        let c = Command::new("cluster", "unified solver")
+            .opt("algo", "two-level", "algorithm")
+            .opt("tol", "1e-6", "tolerance")
+            .opt("max-iters", "100", "iteration cap")
+            .opt("workers", "4", "threads")
+            .flag("trace", "stream iterations");
+        // A flag given a value via `=` is rejected.
+        assert!(matches!(
+            c.parse(&args(&["--trace=yes"])),
+            Err(CliError::BadValue(..))
+        ));
+        // Dangling value at end of args.
+        assert!(matches!(
+            c.parse(&args(&["--tol"])),
+            Err(CliError::MissingValue(_))
+        ));
+        // Non-numeric values surface as BadValue from the typed accessors.
+        let m = c.parse(&args(&["--max-iters", "many"])).unwrap();
+        assert!(matches!(m.usize("max-iters"), Err(CliError::BadValue(..))));
+        let m = c.parse(&args(&["--tol", "tiny"])).unwrap();
+        assert!(matches!(m.f64("tol"), Err(CliError::BadValue(..))));
+        // Misspelled option names don't silently fall through.
+        assert!(matches!(
+            c.parse(&args(&["--algos", "lloyd"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        // Defaults survive partial overrides.
+        let m = c.parse(&args(&["--workers", "2"])).unwrap();
+        assert_eq!(m.usize("workers").unwrap(), 2);
+        assert_eq!(m.str("algo"), "two-level");
+        assert!((m.f64("tol").unwrap() - 1e-6).abs() < 1e-12);
+        assert!(!m.flag("trace"));
+    }
+
+    #[test]
     fn lists() {
         let c = Command::new("x", "y").opt("ks", "2,4,8", "cluster sweep");
         let m = c.parse(&args(&[])).unwrap();

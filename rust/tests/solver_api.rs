@@ -1,0 +1,172 @@
+//! The unified-solver acceptance suite:
+//!
+//! 1. Cross-solver golden test — every [`Algo`] variant, driven through
+//!    the same [`KmeansSpec`]/[`SolverCtx`], must reach the Lloyd
+//!    objective on a planted well-separated dataset, and its `RunStats`
+//!    totals must be non-zero for exactly the counters that algorithm is
+//!    documented to charge.
+//! 2. CLI round trip — `muchswift cluster --algo <variant>` end-to-end on
+//!    synthetic data for every variant, plus negative paths.
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use muchswift::kmeans::Metric;
+use std::process::Command;
+
+#[test]
+fn all_algos_reach_lloyd_objective_with_documented_counters() {
+    // Planted, well-separated clusters: every exact-or-better strategy
+    // must land on the same (global) optimum.
+    let s = generate_params(4000, 3, 5, 0.05, 5.0, 17);
+    let base = KmeansSpec::new(5)
+        .metric(Metric::Euclid)
+        .init(Init::KmeansPlusPlus)
+        .seed(9);
+
+    // One ctx for the whole sweep: the kd-tree is built once and shared
+    // across the tree-based solvers.
+    let mut ctx = SolverCtx::new(&s.data);
+    let lloyd = base.clone().algo(Algo::Lloyd).solve(&mut ctx);
+    assert!(lloyd.stats.converged);
+    let obj_lloyd = lloyd.objective(&s.data, Metric::Euclid);
+
+    for &algo in Algo::all() {
+        let r = base.clone().algo(algo).solve(&mut ctx);
+        assert!(r.stats.converged, "{algo:?} did not converge");
+        assert_eq!(r.assignments.len(), 4000, "{algo:?}");
+        assert_eq!(r.sizes().iter().sum::<usize>(), 4000, "{algo:?}");
+
+        let obj = r.objective(&s.data, Metric::Euclid);
+        assert!(
+            (obj - obj_lloyd).abs() <= 1e-3 * (1.0 + obj_lloyd.abs()),
+            "{algo:?} objective {obj} vs lloyd {obj_lloyd}"
+        );
+
+        // Counter golden rules: each algorithm charges exactly the work
+        // its docs say it does.
+        let st = &r.stats;
+        assert!(st.total_dist_evals() > 0, "{algo:?}: no distance work");
+        match algo {
+            Algo::Lloyd | Algo::Elkan => {
+                // Flat passes over the points; no tree bookkeeping.
+                assert!(st.total_leaf_points() > 0, "{algo:?}");
+                assert_eq!(st.total_node_visits(), 0, "{algo:?}");
+                assert_eq!(st.total_prune_tests(), 0, "{algo:?}");
+                assert_eq!(st.total_interior_assigns(), 0, "{algo:?}");
+            }
+            Algo::Filter | Algo::FilterBatched => {
+                assert!(st.total_node_visits() > 0, "{algo:?}");
+                assert!(st.total_prune_tests() > 0, "{algo:?}");
+                // With tight planted clusters most mass is assigned
+                // wholesale at pruned interior nodes.
+                assert!(st.total_interior_assigns() > 0, "{algo:?}");
+            }
+            Algo::TwoLevel => {
+                // The result's own stats are the level-2 refinement's
+                // (tree-based), and the extension carries per-quarter
+                // level-1 work.
+                assert!(st.total_node_visits() > 0, "{algo:?}");
+                let ext = r.ext.two_level.as_ref().expect("two-level ext");
+                assert_eq!(ext.quarter_sizes.iter().sum::<usize>(), 4000);
+                for (qi, l1) in ext.level1_stats.iter().enumerate() {
+                    assert!(
+                        l1.total_dist_evals() > 0,
+                        "quarter {qi} did no level-1 work"
+                    );
+                    assert!(l1.total_node_visits() > 0, "quarter {qi}");
+                }
+            }
+        }
+        // Lloyd does exactly n*k evals per iteration; every pruning
+        // strategy must beat that on this dataset.
+        if algo != Algo::Lloyd {
+            let lloyd_equiv = 4000u64 * 5 * st.iterations() as u64;
+            assert!(
+                st.total_dist_evals() < lloyd_equiv,
+                "{algo:?} did not prune: {} >= {lloyd_equiv}",
+                st.total_dist_evals()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI round trip
+// ---------------------------------------------------------------------------
+
+fn cluster_cmd(extra: &[&str]) -> std::process::Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_muchswift"));
+    cmd.args([
+        "cluster",
+        "--backend",
+        "cpu",
+        "--n",
+        "2000",
+        "--d",
+        "3",
+        "--k",
+        "4",
+        "--sigma",
+        "0.05",
+        "--seed",
+        "7",
+        "--max-iters",
+        "80",
+        "--tol",
+        "1e-6",
+        "--workers",
+        "2",
+    ]);
+    cmd.args(extra);
+    cmd.output().expect("failed to spawn muchswift binary")
+}
+
+#[test]
+fn cli_cluster_round_trips_every_algo() {
+    for algo in ["lloyd", "elkan", "filter", "filter-batched", "two-level"] {
+        let out = cluster_cmd(&["--algo", algo]);
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            out.status.success(),
+            "--algo {algo} failed\nstdout: {stdout}\nstderr: {stderr}"
+        );
+        assert!(stdout.contains("converged: true"), "--algo {algo}: {stdout}");
+        assert!(stdout.contains("objective:"), "--algo {algo}: {stdout}");
+        assert!(stdout.contains("dist evals"), "--algo {algo}: {stdout}");
+    }
+}
+
+#[test]
+fn cli_cluster_trace_streams_iterations() {
+    let out = cluster_cmd(&["--algo", "filter", "--trace"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("[Main] iter"), "no observer lines: {stdout}");
+    // --trace on two-level streams the phase structure too.
+    let out = cluster_cmd(&["--algo", "two-level", "--trace"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    assert!(
+        stdout.contains("Level1") && stdout.contains("[Level2] iter"),
+        "no phased observer lines: {stdout}"
+    );
+}
+
+#[test]
+fn cli_cluster_rejects_unknown_algo_and_backend() {
+    let out = cluster_cmd(&["--algo", "bogus"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown algo"), "{stderr}");
+
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_muchswift"));
+    let out = cmd
+        .args(["cluster", "--backend", "quantum"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown backend"), "{stderr}");
+}

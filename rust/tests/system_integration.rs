@@ -3,11 +3,12 @@
 
 use muchswift::arch::{evaluate, ArchKind};
 use muchswift::config::{toml::Doc, PlatformConfig, WorkloadConfig};
-use muchswift::coordinator::{Backend, Coordinator, CoordinatorOpts};
+use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::{csv, synthetic, Dataset};
 use muchswift::hw::dma::DmaEngine;
 use muchswift::hw::resources;
 use muchswift::kmeans::init::Init;
+use muchswift::kmeans::solver::KmeansSpec;
 use muchswift::kmeans::Metric;
 use muchswift::runtime::Manifest;
 use std::path::Path;
@@ -52,14 +53,9 @@ fn csv_to_coordinator_round_trip() {
     assert_eq!(loaded, s.data);
 
     let coord = Coordinator::new(Backend::Cpu);
-    let opts = CoordinatorOpts {
-        k: 3,
-        seed: 5,
-        init: Init::KmeansPlusPlus,
-        ..Default::default()
-    };
-    let a = coord.run(&s.data, &opts);
-    let b = coord.run(&loaded, &opts);
+    let spec = KmeansSpec::two_level(3).seed(5).init(Init::KmeansPlusPlus);
+    let a = coord.run(&s.data, &spec);
+    let b = coord.run(&loaded, &spec);
     assert_eq!(a.result.assignments, b.result.assignments);
     assert_eq!(a.result.centroids, b.result.centroids);
     std::fs::remove_file(&path).ok();
@@ -157,7 +153,7 @@ fn degenerate_datasets_do_not_crash() {
     let coord = Coordinator::new(Backend::Cpu);
     let out = coord.run(
         &data,
-        &CoordinatorOpts { k: 4, seed: 1, ..Default::default() },
+        &KmeansSpec::two_level(4).seed(1),
     );
     assert_eq!(out.result.assignments.len(), 64);
     // One cluster gets everything; the rest stay empty.
@@ -167,14 +163,14 @@ fn degenerate_datasets_do_not_crash() {
 
     // Single point, k=1.
     let single = Dataset::from_flat(1, 2, vec![3.0, 4.0]);
-    let out = coord.run(&single, &CoordinatorOpts { k: 1, ..Default::default() });
+    let out = coord.run(&single, &KmeansSpec::two_level(1));
     assert_eq!(out.result.centroids.point(0), &[3.0, 4.0]);
 
     // Manhattan end to end.
     let s = synthetic::generate_params(500, 2, 3, 0.2, 1.0, 8);
     let out = coord.run(
         &s.data,
-        &CoordinatorOpts { k: 3, metric: Metric::Manhattan, ..Default::default() },
+        &KmeansSpec::two_level(3).metric(Metric::Manhattan),
     );
     assert!(out.result.stats.converged);
 }
@@ -184,7 +180,7 @@ fn degenerate_datasets_do_not_crash() {
 fn k_larger_than_n_is_rejected() {
     let data = Dataset::from_flat(3, 1, vec![1.0, 2.0, 3.0]);
     let coord = Coordinator::new(Backend::Cpu);
-    coord.run(&data, &CoordinatorOpts { k: 10, ..Default::default() });
+    coord.run(&data, &KmeansSpec::two_level(10));
 }
 
 #[test]

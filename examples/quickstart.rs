@@ -12,9 +12,12 @@
 use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic::generate_params;
 use muchswift::kmeans::init::Init;
+use muchswift::kmeans::model::KmeansModel;
+use muchswift::kmeans::predict::Predictor;
 use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, KmeansSpec, SolverCtx};
 use muchswift::kmeans::Metric;
 use muchswift::runtime::{self, PjrtRuntime};
+use muchswift::serve::{ClusterService, ServeConfig};
 use std::sync::Arc;
 
 fn main() {
@@ -55,6 +58,31 @@ fn main() {
         obj_twolevel <= obj_lloyd * 1.25,
         "two-level objective {obj_twolevel:.4e} regressed vs lloyd {obj_lloyd:.4e}"
     );
+
+    // ---- Fit/predict split: model artifact + batched inference ----------
+    let model = spec.fit(&mut SolverCtx::new(&s.data));
+    let model_path = std::env::temp_dir().join("muchswift_quickstart_model.json");
+    model.save(&model_path).expect("model save");
+    let loaded = KmeansModel::load(&model_path).expect("model load");
+    assert_eq!(model.centroids, loaded.centroids, "round trip must be bitwise");
+    let fresh = generate_params(2_000, d, k, 0.1, 2.0, 99).data;
+    let labels_mem = Predictor::new(&model).assign(&fresh);
+    let labels_disk = Predictor::new(&loaded).assign(&fresh);
+    assert_eq!(labels_mem, labels_disk, "loaded model must predict identically");
+    println!(
+        "fit/predict: model round-tripped through {}, {} fresh points assigned",
+        model_path.display(),
+        fresh.len()
+    );
+    std::fs::remove_file(&model_path).ok();
+
+    // ---- Micro-batching service over the model ---------------------------
+    let svc = ClusterService::start(Arc::new(loaded), ServeConfig::default());
+    let reply = svc.predict(fresh.clone()).expect("serve predict");
+    assert_eq!(reply.labels.len(), fresh.len());
+    let serve_metrics = svc.shutdown();
+    assert_eq!(serve_metrics.requests, 1);
+    println!("{}", serve_metrics.summary());
 
     // ---- The deployable system (threads + offload service) --------------
     let backend = match PjrtRuntime::load(&runtime::default_artifact_dir()) {

@@ -103,6 +103,13 @@ impl OffloadService {
                 // The CPU fallback serves the scalar oracle kernel so the
                 // service path stays bit-identical to the reference.
                 let mut cpu = CpuPanels;
+                // Padded-centroid state for the PJRT path, reset per
+                // request below: requests clone centroids, and a freed
+                // clone can be reallocated at the same address, so the
+                // identity-key self-heal alone must not be relied on.
+                // The reset still amortizes padding across the chunks
+                // within one request.
+                let mut pass = crate::runtime::FilterPass::new();
                 while let Ok(msg) = rx.recv() {
                     let req = match msg {
                         Msg::Panels(r) => r,
@@ -115,9 +122,17 @@ impl OffloadService {
                             cpu.begin_pass(&req.centroids, req.metric);
                             cpu.panels(&req.jobs, &req.centroids, req.metric, &mut out);
                         }
-                        Backend::Pjrt(rt) => rt
-                            .filter_panels(&req.jobs, &req.centroids, req.metric, &mut out)
-                            .expect("pjrt panel execution failed"),
+                        Backend::Pjrt(rt) => {
+                            pass.reset(&req.centroids, req.metric);
+                            rt.filter_panels_in_pass(
+                                &req.jobs,
+                                &req.centroids,
+                                req.metric,
+                                &mut pass,
+                                &mut out,
+                            )
+                            .expect("pjrt panel execution failed");
+                        }
                     }
                     // Receiver may have given up (worker panic); ignore.
                     let _ = req.reply.send(out);

@@ -100,6 +100,37 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<(), CsvError> {
     Ok(())
 }
 
+/// Save cluster assignments (one `u32` label per line, `#` header) — the
+/// `cluster --out` / `predict --out` artifact.
+pub fn save_labels(labels: &[u32], path: &Path) -> Result<(), CsvError> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# muchswift assignments: n={}", labels.len())?;
+    for &l in labels {
+        writeln!(w, "{l}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load assignments written by [`save_labels`].
+pub fn load_labels(path: &Path) -> Result<Vec<u32>, CsvError> {
+    let file = std::fs::File::open(path)?;
+    let mut out = Vec::new();
+    for (ln, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        out.push(t.parse::<u32>().map_err(|_| CsvError::Parse {
+            line: ln + 1,
+            msg: format!("bad label `{t}`"),
+        })?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +166,22 @@ mod tests {
             read(Cursor::new("inf,1\n")),
             Err(CsvError::Parse { .. })
         ));
+    }
+
+    #[test]
+    fn labels_roundtrip_and_reject_garbage() {
+        let dir = std::env::temp_dir().join("muchswift_labels_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("labels.csv");
+        let labels = vec![0u32, 3, 1, 1, 7];
+        save_labels(&labels, &path).unwrap();
+        assert_eq!(load_labels(&path).unwrap(), labels);
+        std::fs::write(&path, "# h\n1\n-2\n").unwrap();
+        assert!(matches!(
+            load_labels(&path),
+            Err(CsvError::Parse { line: 3, .. })
+        ));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -125,6 +125,33 @@ impl BBox {
         }
     }
 
+    /// Distance from `p` to the nearest point of the box (0 inside) —
+    /// squared for [`Metric::Euclid`], matching the squared-L2-end-to-end
+    /// convention.  This is the classic branch-and-bound lower bound: for
+    /// every point `c` in the box, `min_dist(p) <= dist(p, c)`, so a
+    /// subtree whose box bound exceeds the current best can be skipped
+    /// (the predictor's kd-tree-over-centroids prune uses exactly this).
+    #[inline]
+    pub fn min_dist(&self, p: &[f32], metric: Metric) -> f32 {
+        debug_assert_eq!(p.len(), self.dims());
+        let mut acc = 0f32;
+        for j in 0..self.dims() {
+            let v = p[j];
+            let excess = if v < self.min[j] {
+                self.min[j] - v
+            } else if v > self.max[j] {
+                v - self.max[j]
+            } else {
+                0.0
+            };
+            acc += match metric {
+                Metric::Euclid => excess * excess,
+                Metric::Manhattan => excess,
+            };
+        }
+        acc
+    }
+
     /// Merge with another box (used when combining quarter kd-trees).
     pub fn union(&self, other: &BBox) -> BBox {
         let min = self
@@ -222,6 +249,52 @@ mod tests {
                     return Err(format!(
                         "pruned but a box point prefers z: z={z:?} z*={zs:?} box=({lo:?},{hi:?}) metric={metric:?}"
                     ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn min_dist_hand_values_and_lower_bound() {
+        let b = unit_box(2);
+        // Inside → 0 for both metrics.
+        assert_eq!(b.min_dist(&[0.5, 0.5], Metric::Euclid), 0.0);
+        assert_eq!(b.min_dist(&[0.5, 0.5], Metric::Manhattan), 0.0);
+        // Outside along one axis.
+        assert_eq!(b.min_dist(&[2.0, 0.5], Metric::Euclid), 1.0);
+        assert_eq!(b.min_dist(&[2.0, 0.5], Metric::Manhattan), 1.0);
+        // Corner: squared-L2 vs L1.
+        assert_eq!(b.min_dist(&[2.0, -1.0], Metric::Euclid), 2.0);
+        assert_eq!(b.min_dist(&[2.0, -1.0], Metric::Manhattan), 2.0);
+        // Lower-bound property against random box points.
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            proptest(100, |g| {
+                let d = g.usize_in(1, 4);
+                let mut lo = g.vec_f32(d, -2.0, 2.0);
+                let mut hi = g.vec_f32(d, -2.0, 2.0);
+                for j in 0..d {
+                    if lo[j] > hi[j] {
+                        std::mem::swap(&mut lo[j], &mut hi[j]);
+                    }
+                }
+                let b = BBox::new(lo.clone(), hi.clone());
+                let p = g.vec_f32(d, -4.0, 4.0);
+                let bound = b.min_dist(&p, metric);
+                let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64 ^ 0x5EED);
+                for _ in 0..100 {
+                    let v: Vec<f32> = (0..d)
+                        .map(|j| rng.uniform_f32(lo[j], hi[j].max(lo[j] + f32::EPSILON)))
+                        .collect();
+                    let dd = match metric {
+                        Metric::Euclid => sq_l2(&p, &v),
+                        Metric::Manhattan => l1(&p, &v),
+                    };
+                    if dd < bound - 1e-5 {
+                        return Err(format!(
+                            "min_dist not a lower bound: {bound} vs {dd} (p={p:?} box=({lo:?},{hi:?}) {metric:?})"
+                        ));
+                    }
                 }
                 Ok(())
             });

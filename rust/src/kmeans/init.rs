@@ -18,6 +18,29 @@ pub enum Init {
     KmeansPlusPlus,
 }
 
+impl Init {
+    /// Canonical name (round-trips through [`FromStr`](std::str::FromStr)
+    /// — the model artifact serializes specs by these names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Init::UniformSample => "uniform",
+            Init::KmeansPlusPlus => "kmeans++",
+        }
+    }
+}
+
+impl std::str::FromStr for Init {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "uniform" | "uniform-sample" => Ok(Init::UniformSample),
+            "kmeans++" | "kpp" | "plusplus" => Ok(Init::KmeansPlusPlus),
+            other => anyhow::bail!("unknown init `{other}` (uniform|kmeans++)"),
+        }
+    }
+}
+
 /// Pick `k` initial centroids from `data`.
 pub fn init_centroids(
     data: &Dataset,

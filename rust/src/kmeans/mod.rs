@@ -15,7 +15,11 @@
 //! All four are driven through the unified solver API in [`solver`]
 //! (one [`KmeansSpec`], one [`Solver`] trait, pluggable panel backends,
 //! per-iteration observers); the modules above are the numeric kernels
-//! behind it.
+//! behind it.  Training and serving are split: `KmeansSpec::fit` freezes
+//! a solve into a persistable [`model::KmeansModel`] artifact, and
+//! [`predict::Predictor`] answers batched assign/score queries against a
+//! model through the same panel seam (see also [`crate::serve`] for the
+//! micro-batching service on top).
 //!
 //! Every solver records per-iteration *work counters* ([`IterStats`]) —
 //! distance evaluations, kd-node visits, pruned subtree assignments — which
@@ -29,11 +33,15 @@ pub mod filtering;
 pub mod init;
 pub mod lloyd;
 pub mod metrics;
+pub mod model;
 pub mod panel;
+pub mod predict;
 pub mod solver;
 pub mod twolevel;
 
 pub use metrics::Metric;
+pub use model::{KmeansModel, TrainStats, MODEL_FORMAT_VERSION};
+pub use predict::Predictor;
 pub use solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, Solver, SolverCtx};
 
 use crate::data::Dataset;

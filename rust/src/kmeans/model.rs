@@ -1,0 +1,392 @@
+//! The trained-model artifact: the fit/predict split's "fit" output.
+//!
+//! A [`KmeansModel`] is what survives a training run: the final centroids
+//! (as a [`Dataset`]), the assignment metric, a snapshot of the
+//! [`KmeansSpec`] that produced it, and summary training statistics.  It
+//! is the serving-side contract — [`crate::kmeans::predict::Predictor`]
+//! and [`crate::serve::ClusterService`] consume models, never live
+//! `KmeansResult`s.
+//!
+//! Persistence goes through the in-tree [`crate::util::json`] writer
+//! (the offline crate set has no serde) with an explicit
+//! [`MODEL_FORMAT_VERSION`].  Round-trip is lossless: f32 centroid
+//! components widen exactly to f64, the JSON writer emits shortest
+//! round-trip decimal for f64, and loading narrows back — so
+//! `save` → `load` reproduces the centroid buffer *bitwise* (the
+//! guarantee `tests/model_predict.rs` pins, and what makes loaded-model
+//! predictions identical to in-memory ones).  The `seed` is carried as a
+//! string so full-width `u64` values survive the f64 number pipeline.
+
+use super::solver::KmeansSpec;
+use super::{KmeansResult, Metric};
+use crate::data::Dataset;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Version tag written into every model file; bump on schema change.
+pub const MODEL_FORMAT_VERSION: usize = 1;
+
+/// The `"kind"` discriminator in the JSON header.
+const MODEL_KIND: &str = "kmeans-model";
+
+/// Summary statistics of the training run that produced a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainStats {
+    /// Training-set size.
+    pub n: usize,
+    /// Iterations of the main loop (level-2 for the two-level scheme).
+    pub iterations: usize,
+    pub converged: bool,
+    pub early_stopped: bool,
+    /// Total distance evaluations, including level-1 work for two-level.
+    pub dist_evals: u64,
+    /// Exact k-means objective of the final model on the training set.
+    pub objective: Option<f64>,
+}
+
+/// A trained clustering model: centroids + metric + provenance.
+#[derive(Clone, Debug)]
+pub struct KmeansModel {
+    /// Final centroids, `[k, d]`.
+    pub centroids: Dataset,
+    /// Metric assignments were (and must be) computed under.
+    pub metric: Metric,
+    /// Snapshot of the spec that trained this model (its `start` seeds are
+    /// not persisted — a loaded spec re-fits from `init`/`seed`).
+    pub spec: KmeansSpec,
+    pub train: TrainStats,
+}
+
+impl KmeansModel {
+    /// Build the artifact from a finished solve.  Computes the exact
+    /// objective of the final centroids over `data` (one O(n·k·d) pass),
+    /// so the artifact carries its own quality evidence.
+    pub fn from_fit(data: &Dataset, result: &KmeansResult, spec: &KmeansSpec) -> Self {
+        // Whole-run distance work: the result's own stats cover only the
+        // level-2 refinement for two-level — fold level-1 in, same as the
+        // CLI report.
+        let mut dist_evals = result.stats.total_dist_evals();
+        if let Some(ext) = &result.ext.two_level {
+            for l1 in &ext.level1_stats {
+                dist_evals += l1.total_dist_evals();
+            }
+        }
+        Self {
+            centroids: result.centroids.clone(),
+            metric: spec.metric,
+            spec: spec.clone(),
+            train: TrainStats {
+                n: data.len(),
+                iterations: result.stats.iterations(),
+                converged: result.stats.converged,
+                early_stopped: result.stats.early_stopped,
+                dist_evals,
+                objective: Some(result.objective(data, spec.metric)),
+            },
+        }
+    }
+
+    /// Number of clusters.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Dimensionality the model expects of query points.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.centroids.dims()
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let cents: Vec<Json> = self
+            .centroids
+            .flat()
+            .iter()
+            .map(|&v| Json::num(v as f64))
+            .collect();
+        Json::obj(vec![
+            ("format_version", Json::num(MODEL_FORMAT_VERSION as f64)),
+            ("kind", Json::str(MODEL_KIND)),
+            ("k", Json::num(self.k() as f64)),
+            ("d", Json::num(self.dims() as f64)),
+            ("metric", Json::str(self.metric.name())),
+            ("centroids", Json::Arr(cents)),
+            ("spec", spec_to_json(&self.spec)),
+            ("train", train_to_json(&self.train)),
+        ])
+    }
+
+    pub fn from_json(root: &Json) -> anyhow::Result<Self> {
+        let version = root
+            .req("format_version")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bad format_version"))?;
+        anyhow::ensure!(
+            version == MODEL_FORMAT_VERSION,
+            "unsupported model format version {version} (this build reads {MODEL_FORMAT_VERSION})"
+        );
+        let kind = root.req("kind")?.as_str().unwrap_or_default();
+        anyhow::ensure!(kind == MODEL_KIND, "not a kmeans model file (kind=`{kind}`)");
+        let k = root.req("k")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad k"))?;
+        let d = root.req("d")?.as_usize().ok_or_else(|| anyhow::anyhow!("bad d"))?;
+        anyhow::ensure!(k >= 1 && d >= 1, "degenerate model shape k={k} d={d}");
+        let metric: Metric = root
+            .req("metric")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("metric must be a string"))?
+            .parse()?;
+        let arr = root
+            .req("centroids")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("centroids must be an array"))?;
+        anyhow::ensure!(
+            arr.len() == k * d,
+            "centroid buffer length {} != k*d = {}",
+            arr.len(),
+            k * d
+        );
+        let mut flat = Vec::with_capacity(k * d);
+        for v in arr {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric centroid component"))?
+                as f32;
+            anyhow::ensure!(x.is_finite(), "non-finite centroid component");
+            flat.push(x);
+        }
+        let spec = spec_from_json(root.req("spec")?)?;
+        anyhow::ensure!(spec.metric == metric, "spec/model metric disagree");
+        let train = train_from_json(root.req("train")?)?;
+        Ok(Self {
+            centroids: Dataset::from_flat(k, d, flat),
+            metric,
+            spec,
+            train,
+        })
+    }
+
+    /// Write the model to `path` (single JSON document).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.centroids.flat().iter().all(|v| v.is_finite()),
+            "refusing to save a model with non-finite centroids"
+        );
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("cannot write model {}: {e}", path.display()))
+    }
+
+    /// Load a model saved by [`save`](Self::save).
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read model {}: {e}", path.display()))?;
+        let root = Json::parse(&src)?;
+        Self::from_json(&root)
+    }
+}
+
+fn spec_to_json(spec: &KmeansSpec) -> Json {
+    Json::obj(vec![
+        ("algo", Json::str(spec.algo.name())),
+        ("k", Json::num(spec.k as f64)),
+        ("metric", Json::str(spec.metric.name())),
+        ("tol", Json::num(spec.tol as f64)),
+        ("max_iters", Json::num(spec.max_iters as f64)),
+        ("level2_max_iters", Json::num(spec.level2_max_iters as f64)),
+        ("init", Json::str(spec.init.name())),
+        ("partition", Json::str(spec.partition.name())),
+        // Stringly so full-width u64 seeds survive the f64 number path.
+        ("seed", Json::str(spec.seed.to_string())),
+        ("workers", Json::num(spec.workers as f64)),
+        ("track_cost", Json::Bool(spec.track_cost)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
+    let req_str = |key: &str| -> anyhow::Result<&str> {
+        j.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("spec field `{key}` must be a string"))
+    };
+    let req_usize = |key: &str| -> anyhow::Result<usize> {
+        j.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("spec field `{key}` must be a non-negative integer"))
+    };
+    let seed: u64 = req_str("seed")?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad spec seed: {e}"))?;
+    let tol = j
+        .req("tol")?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("spec field `tol` must be a number"))? as f32;
+    Ok(KmeansSpec::new(req_usize("k")?)
+        .algo(req_str("algo")?.parse()?)
+        .metric(req_str("metric")?.parse()?)
+        .tol(tol)
+        .max_iters(req_usize("max_iters")?)
+        .level2_max_iters(req_usize("level2_max_iters")?)
+        .init(req_str("init")?.parse()?)
+        .partition(req_str("partition")?.parse()?)
+        .seed(seed)
+        .workers(req_usize("workers")?)
+        .track_cost(j.req("track_cost")?.as_bool().unwrap_or(false)))
+}
+
+fn train_to_json(t: &TrainStats) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(t.n as f64)),
+        ("iterations", Json::num(t.iterations as f64)),
+        ("converged", Json::Bool(t.converged)),
+        ("early_stopped", Json::Bool(t.early_stopped)),
+        ("dist_evals", Json::num(t.dist_evals as f64)),
+        (
+            "objective",
+            match t.objective {
+                Some(o) => Json::num(o),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn train_from_json(j: &Json) -> anyhow::Result<TrainStats> {
+    let req_usize = |key: &str| -> anyhow::Result<usize> {
+        j.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("train field `{key}` must be a non-negative integer"))
+    };
+    Ok(TrainStats {
+        n: req_usize("n")?,
+        iterations: req_usize("iterations")?,
+        converged: j.req("converged")?.as_bool().unwrap_or(false),
+        early_stopped: j.req("early_stopped")?.as_bool().unwrap_or(false),
+        dist_evals: req_usize("dist_evals")? as u64,
+        objective: match j.req("objective")? {
+            Json::Null => None,
+            v => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("train objective must be a number or null"))?,
+            ),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::init::Init;
+    use crate::kmeans::solver::{Algo, SolverCtx};
+    use crate::kmeans::twolevel::Partition;
+
+    fn fitted(metric: Metric) -> (crate::data::synthetic::Synthetic, KmeansModel) {
+        let s = generate_params(600, 3, 4, 0.1, 2.0, 11);
+        let spec = KmeansSpec::new(4)
+            .metric(metric)
+            .init(Init::KmeansPlusPlus)
+            .partition(Partition::KdTop)
+            .seed(5)
+            .tol(1e-6);
+        let model = spec.fit(&mut SolverCtx::new(&s.data));
+        (s, model)
+    }
+
+    #[test]
+    fn fit_produces_consistent_artifact() {
+        let (s, model) = fitted(Metric::Euclid);
+        assert_eq!(model.k(), 4);
+        assert_eq!(model.dims(), 3);
+        assert_eq!(model.train.n, 600);
+        assert!(model.train.iterations >= 1);
+        assert!(model.train.dist_evals > 0);
+        let obj = model.train.objective.unwrap();
+        assert!(obj.is_finite() && obj >= 0.0);
+        // The recorded objective is the final centroids' objective.
+        let mut acc = 0f64;
+        for p in s.data.iter() {
+            let best = model
+                .centroids
+                .iter()
+                .map(|c| model.metric.dist(p, c) as f64)
+                .fold(f64::INFINITY, f64::min);
+            acc += best;
+        }
+        assert!((acc - obj).abs() <= 1e-6 * (1.0 + obj.abs()), "{acc} vs {obj}");
+    }
+
+    #[test]
+    fn json_round_trip_is_bitwise_for_both_metrics() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let (_, model) = fitted(metric);
+            let back = KmeansModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap())
+                .unwrap();
+            // The round-trip guarantee: centroid buffer is bit-identical.
+            assert_eq!(model.centroids, back.centroids, "{metric:?}");
+            assert_eq!(model.metric, back.metric);
+            assert_eq!(model.train, back.train);
+            assert_eq!(model.spec.k, back.spec.k);
+            assert_eq!(model.spec.algo, back.spec.algo);
+            assert_eq!(model.spec.metric, back.spec.metric);
+            assert_eq!(model.spec.tol, back.spec.tol);
+            assert_eq!(model.spec.init, back.spec.init);
+            assert_eq!(model.spec.partition, back.spec.partition);
+            assert_eq!(model.spec.seed, back.spec.seed);
+            assert_eq!(model.spec.workers, back.spec.workers);
+        }
+    }
+
+    #[test]
+    fn seed_survives_full_u64_width() {
+        let (_, mut model) = fitted(Metric::Euclid);
+        model.spec.seed = u64::MAX - 7;
+        let back =
+            KmeansModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.spec.seed, u64::MAX - 7);
+    }
+
+    #[test]
+    fn save_load_file_round_trip() {
+        let (_, model) = fitted(Metric::Manhattan);
+        let dir = std::env::temp_dir().join("muchswift_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        model.save(&path).unwrap();
+        let back = KmeansModel::load(&path).unwrap();
+        assert_eq!(model.centroids, back.centroids);
+        assert_eq!(model.metric, back.metric);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_documents() {
+        let (_, model) = fitted(Metric::Euclid);
+        let good = model.to_json().to_string();
+        // Wrong version.
+        let bad = good.replace("\"format_version\":1", "\"format_version\":9");
+        assert!(KmeansModel::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Wrong kind.
+        let bad = good.replace("kmeans-model", "resnet");
+        assert!(KmeansModel::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Truncated centroid buffer (k*d mismatch).
+        let bad = good.replace("\"k\":4", "\"k\":5");
+        assert!(KmeansModel::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Not JSON at all.
+        assert!(KmeansModel::load(Path::new("/nonexistent/model.json")).is_err());
+    }
+
+    #[test]
+    fn two_level_fit_folds_level1_work() {
+        let s = generate_params(2000, 3, 4, 0.1, 2.0, 3);
+        let spec = KmeansSpec::two_level(4).seed(2);
+        let mut ctx = SolverCtx::new(&s.data);
+        let r = spec.solve(&mut ctx);
+        let model = KmeansModel::from_fit(&s.data, &r, &spec);
+        assert_eq!(model.spec.algo, Algo::TwoLevel);
+        // dist_evals covers level-1 + level-2, so it exceeds the result's
+        // own (level-2-only) total.
+        assert!(model.train.dist_evals > r.stats.total_dist_evals());
+    }
+}

@@ -1,0 +1,381 @@
+//! Batched inference against a trained [`KmeansModel`]: the fit/predict
+//! split's "predict" half.
+//!
+//! A [`Predictor`] answers assign/score queries in *batches* through the
+//! same [`PanelBackend`] seam the training hot path uses: each query
+//! point becomes one panel job (query × candidate centroids), the whole
+//! batch ships through the backend's flat arenas, and the arg-min over
+//! each returned distance row is the label.  That means inference rides
+//! the identical blocked/multi-threaded kernels (or the PJRT "PL") as
+//! training — the serving story of the paper's PS→PL dispatch.
+//!
+//! For large `k` the candidate lists can be pruned through a kd-tree
+//! built over the *centroids* (KPynq-style assignment-time pruning): a
+//! greedy descent yields an upper bound, then every subtree whose
+//! bounding-box lower bound ([`BBox::min_dist`]) beats the (slightly
+//! inflated) bound contributes candidates.  The shortlist provably
+//! contains every *scalar-arithmetic* global minimizer, and candidates
+//! are sorted ascending before paneling, so with the scalar kernel
+//! (the default) pruned and unpruned labels are **identical** —
+//! including lowest-index tie-breaking, matching
+//! [`crate::kmeans::metrics::nearest`].  Under the blocked kernel the
+//! panel arithmetic differs from the scalar bound arithmetic by f32
+//! rounding (≤ ~1e-4 relative), so a near-exact tie can resolve
+//! differently with pruning on vs off; the assigned *distance* still
+//! agrees to that tolerance.
+
+use super::model::KmeansModel;
+use super::panel::{PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
+use super::Metric;
+use crate::data::Dataset;
+use crate::kdtree::KdTree;
+
+/// Auto-prune threshold: below this many centroids a flat panel over all
+/// of `k` beats tree bookkeeping.
+pub const PRUNE_MIN_K: usize = 32;
+
+/// Leaf bucket size of the centroid kd-tree (small: k is small).
+const CENTROID_LEAF: usize = 4;
+
+/// Jobs per internal chunk — bounds the panel arenas for huge query sets
+/// while leaving per-row arithmetic untouched (labels are chunk-invariant).
+const ASSIGN_CHUNK: usize = 8192;
+
+/// Relative slack on the branch-and-bound upper bound, absorbing f32
+/// summation-order differences between [`Metric::dist`]'s unrolled kernel
+/// and the plain [`BBox::min_dist`] loop.  Only ever *widens* the
+/// shortlist, so exactness is preserved.
+const BOUND_SLACK: f32 = 1e-5;
+
+/// Batched assign/score engine over a trained model.
+pub struct Predictor<'m> {
+    model: &'m KmeansModel,
+    backend: Box<dyn PanelBackend + Send + 'm>,
+    /// kd-tree over the centroids when pruning is active.
+    tree: Option<KdTree>,
+    // Recycled arenas (steady-state predict allocates nothing per batch).
+    jobs: PanelJobs,
+    panels: PanelSet,
+    all_cands: Vec<u32>,
+    shortlist: Vec<u32>,
+    stack: Vec<u32>,
+}
+
+impl<'m> Predictor<'m> {
+    /// Default predictor: scalar panel kernel across the machine's cores —
+    /// the *oracle* arithmetic, so labels are bit-identical to
+    /// [`crate::kmeans::metrics::nearest`] over the model centroids
+    /// regardless of worker count.  Pruning auto-enables at
+    /// [`PRUNE_MIN_K`] centroids.
+    pub fn new(model: &'m KmeansModel) -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1)
+            .min(8);
+        Self::with_backend(model, ParCpuPanels::scalar(workers))
+    }
+
+    /// Predictor over an explicit panel backend (blocked CPU kernel, PJRT,
+    /// the coordinator's offload handle — anything on the seam).
+    pub fn with_backend(model: &'m KmeansModel, backend: impl PanelBackend + Send + 'm) -> Self {
+        let mut p = Self {
+            model,
+            backend: Box::new(backend),
+            tree: None,
+            jobs: PanelJobs::new(),
+            panels: PanelSet::new(),
+            all_cands: (0..model.k() as u32).collect(),
+            shortlist: Vec::new(),
+            stack: Vec::new(),
+        };
+        if model.k() >= PRUNE_MIN_K {
+            p = p.prune(true);
+        }
+        p
+    }
+
+    /// Force the centroid kd-tree prune on or off (overrides the
+    /// [`PRUNE_MIN_K`] auto rule).
+    pub fn prune(mut self, on: bool) -> Self {
+        self.tree = if on {
+            Some(KdTree::build_with(&self.model.centroids, CENTROID_LEAF))
+        } else {
+            None
+        };
+        self
+    }
+
+    pub fn model(&self) -> &'m KmeansModel {
+        self.model
+    }
+
+    pub fn pruning(&self) -> bool {
+        self.tree.is_some()
+    }
+
+    /// Labels for a batch of query points.
+    pub fn assign(&mut self, queries: &Dataset) -> Vec<u32> {
+        let mut labels = Vec::with_capacity(queries.len());
+        self.assign_into(queries, &mut labels, None);
+        labels
+    }
+
+    /// Labels plus the distance to the assigned centroid (squared-L2 for
+    /// [`Metric::Euclid`], per the repo-wide convention).
+    pub fn assign_scored(&mut self, queries: &Dataset) -> (Vec<u32>, Vec<f32>) {
+        let mut labels = Vec::with_capacity(queries.len());
+        let mut dists = Vec::with_capacity(queries.len());
+        self.assign_into(queries, &mut labels, Some(&mut dists));
+        (labels, dists)
+    }
+
+    /// Exact k-means objective of the model on `data` (sum of assigned
+    /// distances) — the serving-side quality probe.
+    pub fn objective(&mut self, data: &Dataset) -> f64 {
+        let (_, dists) = self.assign_scored(data);
+        dists.iter().map(|&d| d as f64).sum()
+    }
+
+    fn assign_into(
+        &mut self,
+        queries: &Dataset,
+        labels: &mut Vec<u32>,
+        mut dists: Option<&mut Vec<f32>>,
+    ) {
+        assert_eq!(
+            queries.dims(),
+            self.model.dims(),
+            "query dims {} != model dims {}",
+            queries.dims(),
+            self.model.dims()
+        );
+        let d = self.model.dims();
+        let cents = &self.model.centroids;
+        let metric = self.model.metric;
+        self.backend.begin_pass(cents, metric);
+
+        let n = queries.len();
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(ASSIGN_CHUNK);
+            self.jobs.clear(d);
+            for i in start..start + take {
+                let q = queries.point(i);
+                match &self.tree {
+                    Some(tree) => {
+                        centroid_shortlist(
+                            tree,
+                            cents,
+                            q,
+                            metric,
+                            &mut self.shortlist,
+                            &mut self.stack,
+                        );
+                        // Ascending order ⇒ first-wins arg-min over the
+                        // shortlist picks the lowest-index global minimum.
+                        self.shortlist.sort_unstable();
+                        self.jobs.push(q, &self.shortlist);
+                    }
+                    None => self.jobs.push(q, &self.all_cands),
+                }
+            }
+            self.backend.panels(&self.jobs, cents, metric, &mut self.panels);
+            for j in 0..take {
+                let row = self.panels.row(j);
+                let cands = self.jobs.cands(j);
+                let mut best_slot = 0usize;
+                let mut best_d = f32::INFINITY;
+                for (slot, &dd) in row.iter().enumerate() {
+                    if dd < best_d {
+                        best_d = dd;
+                        best_slot = slot;
+                    }
+                }
+                labels.push(cands[best_slot]);
+                if let Some(out) = dists.as_mut() {
+                    out.push(best_d);
+                }
+            }
+            start += take;
+        }
+    }
+}
+
+/// Collect into `out` every centroid index whose subtree lower bound does
+/// not exceed the greedy-descent upper bound.  Guarantees every global
+/// nearest centroid of `q` is included (see module docs).
+fn centroid_shortlist(
+    tree: &KdTree,
+    cents: &Dataset,
+    q: &[f32],
+    metric: Metric,
+    out: &mut Vec<u32>,
+    stack: &mut Vec<u32>,
+) {
+    // Phase 1: greedy descent to the most promising leaf for an upper
+    // bound (a true distance to some centroid — never an underestimate).
+    let mut ni = 0usize;
+    loop {
+        let node = &tree.nodes[ni];
+        if node.is_leaf() {
+            break;
+        }
+        let l = &tree.nodes[node.left as usize];
+        let r = &tree.nodes[node.right as usize];
+        ni = if l.bbox.min_dist(q, metric) <= r.bbox.min_dist(q, metric) {
+            node.left as usize
+        } else {
+            node.right as usize
+        };
+    }
+    let mut ub = f32::INFINITY;
+    for &i in tree.node_points(&tree.nodes[ni]) {
+        let dd = metric.dist(q, cents.point(i as usize));
+        if dd < ub {
+            ub = dd;
+        }
+    }
+    let bound = ub * (1.0 + BOUND_SLACK);
+
+    // Phase 2: gather every subtree that can still hold a minimizer.
+    out.clear();
+    stack.clear();
+    stack.push(0);
+    while let Some(x) = stack.pop() {
+        let node = &tree.nodes[x as usize];
+        if node.bbox.min_dist(q, metric) > bound {
+            continue;
+        }
+        if node.is_leaf() {
+            out.extend_from_slice(tree.node_points(node));
+        } else {
+            stack.push(node.left);
+            stack.push(node.right);
+        }
+    }
+    debug_assert!(!out.is_empty());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::metrics::nearest;
+    use crate::kmeans::panel::PanelKernel;
+    use crate::kmeans::solver::{KmeansSpec, SolverCtx};
+
+    fn model(metric: Metric, k: usize, d: usize, seed: u64) -> KmeansModel {
+        let s = generate_params(400 + 8 * k, d, k, 0.2, 2.0, seed);
+        KmeansSpec::new(k)
+            .metric(metric)
+            .seed(seed)
+            .fit(&mut SolverCtx::new(&s.data))
+    }
+
+    #[test]
+    fn assign_matches_scalar_nearest_exactly() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let m = model(metric, 6, 5, 3);
+            let q = generate_params(500, 5, 6, 0.4, 2.0, 99).data;
+            let labels = Predictor::new(&m).assign(&q);
+            for (i, p) in q.iter().enumerate() {
+                let (want, _) = nearest(metric, p, m.centroids.flat(), m.k(), m.dims());
+                assert_eq!(labels[i] as usize, want, "{metric:?} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_is_label_identical_to_full_argmin_for_scalar_kernel() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let m = model(metric, 48, 4, 7);
+            let q = generate_params(600, 4, 8, 0.5, 2.0, 55).data;
+            let full = Predictor::with_backend(&m, ParCpuPanels::scalar(2))
+                .prune(false)
+                .assign(&q);
+            let mut pruned_pred =
+                Predictor::with_backend(&m, ParCpuPanels::scalar(2)).prune(true);
+            assert!(pruned_pred.pruning());
+            let pruned = pruned_pred.assign(&q);
+            assert_eq!(full, pruned, "{metric:?}");
+        }
+    }
+
+    #[test]
+    fn prune_under_blocked_kernel_agrees_to_rounding() {
+        // The shortlist bound uses scalar arithmetic while the blocked
+        // kernel rounds differently, so labels may flip only on
+        // near-exact ties — assigned distances must agree to f32
+        // rounding either way (see module docs).
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let m = model(metric, 48, 4, 7);
+            let q = generate_params(600, 4, 8, 0.5, 2.0, 55).data;
+            let blocked = ParCpuPanels::with_kernel(2, PanelKernel::Blocked);
+            let (_, full_d) = Predictor::with_backend(&m, blocked.clone())
+                .prune(false)
+                .assign_scored(&q);
+            let (_, pruned_d) = Predictor::with_backend(&m, blocked)
+                .prune(true)
+                .assign_scored(&q);
+            for (i, (a, b)) in full_d.iter().zip(pruned_d.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                    "{metric:?} point {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_prune_kicks_in_at_threshold() {
+        let small = model(Metric::Euclid, 4, 3, 1);
+        assert!(!Predictor::new(&small).pruning());
+        let big = model(Metric::Euclid, PRUNE_MIN_K, 3, 1);
+        assert!(Predictor::new(&big).pruning());
+    }
+
+    #[test]
+    fn scored_distances_are_the_assigned_distances() {
+        let m = model(Metric::Euclid, 5, 3, 9);
+        let q = generate_params(300, 3, 5, 0.3, 1.0, 21).data;
+        let mut p = Predictor::new(&m);
+        let (labels, dists) = p.assign_scored(&q);
+        for i in 0..q.len() {
+            let want = Metric::Euclid.dist(q.point(i), m.centroids.point(labels[i] as usize));
+            assert_eq!(dists[i], want, "point {i}");
+        }
+        // Objective is the sum of those distances.
+        let obj = p.objective(&q);
+        let want: f64 = dists.iter().map(|&x| x as f64).sum();
+        assert!((obj - want).abs() <= 1e-9 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn chunking_is_invisible() {
+        // More queries than one chunk: labels must match the per-point oracle.
+        let m = model(Metric::Euclid, 3, 2, 4);
+        let q = generate_params(ASSIGN_CHUNK + 37, 2, 3, 0.4, 1.0, 13).data;
+        let labels = Predictor::new(&m).assign(&q);
+        assert_eq!(labels.len(), q.len());
+        for (i, p) in q.iter().enumerate().step_by(997) {
+            let (want, _) = nearest(Metric::Euclid, p, m.centroids.flat(), 3, 2);
+            assert_eq!(labels[i] as usize, want);
+        }
+    }
+
+    #[test]
+    fn empty_query_batch_is_fine() {
+        let m = model(Metric::Euclid, 3, 2, 6);
+        let q = Dataset::from_flat(0, 2, vec![]);
+        let (labels, dists) = Predictor::new(&m).assign_scored(&q);
+        assert!(labels.is_empty() && dists.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "query dims")]
+    fn dim_mismatch_panics() {
+        let m = model(Metric::Euclid, 3, 2, 8);
+        let q = Dataset::from_flat(1, 3, vec![0.0; 3]);
+        let _ = Predictor::new(&m).assign(&q);
+    }
+}

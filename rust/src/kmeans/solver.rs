@@ -277,6 +277,16 @@ impl KmeansSpec {
     pub fn solve(&self, ctx: &mut SolverCtx<'_>) -> KmeansResult {
         self.solver().run(ctx)
     }
+
+    /// Train and package: solve in `ctx`, then freeze the outcome into a
+    /// [`KmeansModel`](super::model::KmeansModel) artifact (centroids +
+    /// metric + spec snapshot + train stats, including the exact training
+    /// objective).  This is the fit half of the fit/predict split — pair
+    /// it with [`Predictor`](super::predict::Predictor) for inference.
+    pub fn fit(&self, ctx: &mut SolverCtx<'_>) -> super::model::KmeansModel {
+        let result = self.solve(ctx);
+        super::model::KmeansModel::from_fit(ctx.data(), &result, self)
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -58,6 +58,29 @@ pub enum Partition {
     KdTop,
 }
 
+impl Partition {
+    /// Canonical name (round-trips through [`FromStr`](std::str::FromStr)
+    /// — the model artifact serializes specs by these names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Partition::RoundRobin => "round-robin",
+            Partition::KdTop => "kd-top",
+        }
+    }
+}
+
+impl std::str::FromStr for Partition {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "round-robin" | "roundrobin" => Ok(Partition::RoundRobin),
+            "kd-top" | "kdtop" => Ok(Partition::KdTop),
+            other => anyhow::bail!("unknown partition `{other}` (round-robin|kd-top)"),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TwoLevelOpts {
     pub metric: Metric,

@@ -17,6 +17,9 @@
 //! - `hw` — the ZCU102 platform model (clock domains, DMA, DDR3, BRAM, PL)
 //! - `runtime` — PJRT artifact loading & execution (the "PL" compute)
 //! - `coordinator` — the deployable system: leader + 4 workers + offload
+//! - `serve` — the online half of the fit/predict split: `KmeansModel`
+//!   artifacts (`kmeans::model`), batched inference (`kmeans::predict`)
+//!   and the micro-batching `ClusterService`
 //! - `arch` — the paper's comparison architectures as cost models
 //! - `experiments` — regenerates every figure/table of the evaluation
 
@@ -28,5 +31,6 @@ pub mod util;
 pub mod hw;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod arch;
 pub mod experiments;

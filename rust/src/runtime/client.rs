@@ -58,6 +58,67 @@ struct Loaded {
     art: Artifact,
 }
 
+/// Per-iteration centroid state for the filter offload: the `d`→`dp`
+/// zero-padded centroid rows, built once per pass instead of re-padded by
+/// every chunk.  Keyed by centroid-buffer identity (address + length,
+/// same scheme as `ParCpuPanels`' norm cache) so a stale pass self-heals
+/// instead of producing wrong panels; keyed by `dp` because different
+/// tree levels can select different artifact shapes within one pass.
+#[derive(Debug, Default)]
+pub struct FilterPass {
+    key: Option<(usize, usize)>,
+    metric: Option<Metric>,
+    /// `(dp, k*dp padded row bank)` per artifact dimensionality.
+    banks: Vec<(usize, Vec<f32>)>,
+}
+
+/// Centroid-buffer identity (see `kmeans::panel::centroid_key` for the
+/// reallocation caveat — a `reset` per iteration sidesteps it).
+fn centroid_pass_key(centroids: &Dataset) -> (usize, usize) {
+    (centroids.flat().as_ptr() as usize, centroids.flat().len())
+}
+
+impl FilterPass {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a pass over fixed `centroids`: drop stale banks, remember the
+    /// buffer identity.  Banks themselves are built lazily per `dp` on
+    /// first use, so a pass only pays for the artifact shapes it touches.
+    pub fn reset(&mut self, centroids: &Dataset, metric: Metric) {
+        self.key = Some(centroid_pass_key(centroids));
+        self.metric = Some(metric);
+        self.banks.clear();
+    }
+
+    /// Re-key if `centroids`/`metric` are not the ones this pass was reset
+    /// for (the self-heal path for callers that skip `begin_pass`).
+    fn ensure(&mut self, centroids: &Dataset, metric: Metric) {
+        if self.key != Some(centroid_pass_key(centroids)) || self.metric != Some(metric) {
+            self.reset(centroids, metric);
+        }
+    }
+
+    /// The padded row bank for artifact dimensionality `dp` (each of the
+    /// `k` centroid rows zero-extended from `d` to `dp`), building it on
+    /// first request within the pass.
+    fn bank(&mut self, centroids: &Dataset, dp: usize) -> &[f32] {
+        debug_assert!(dp >= centroids.dims());
+        if let Some(pos) = self.banks.iter().position(|(w, _)| *w == dp) {
+            return &self.banks[pos].1;
+        }
+        let d = centroids.dims();
+        let k = centroids.len();
+        let mut rows = vec![0f32; k * dp];
+        for c in 0..k {
+            rows[c * dp..c * dp + d].copy_from_slice(centroids.point(c));
+        }
+        self.banks.push((dp, rows));
+        &self.banks.last().unwrap().1
+    }
+}
+
 /// The PJRT-backed "PL".
 pub struct PjrtRuntime {
     #[allow(dead_code)]
@@ -196,11 +257,37 @@ impl PjrtRuntime {
     /// Distance panels for a batch of filtering jobs in the flat
     /// [`PanelJobs`] representation; rows are written into `out` (re-shaped
     /// via [`PanelSet::reset_from`], aligned with each job's candidates).
+    ///
+    /// One-shot form: pads the centroid panel from scratch.  Iteration
+    /// loops should hold a [`FilterPass`] and call
+    /// [`filter_panels_in_pass`](Self::filter_panels_in_pass) so the
+    /// centroid padding is done once per pass, not once per chunk.
     pub fn filter_panels(
         &self,
         jobs: &PanelJobs,
         centroids: &Dataset,
         metric: Metric,
+        out: &mut PanelSet,
+    ) -> anyhow::Result<()> {
+        let mut pass = FilterPass::new();
+        pass.reset(centroids, metric);
+        self.filter_panels_in_pass(jobs, centroids, metric, &mut pass, out)
+    }
+
+    /// [`filter_panels`](Self::filter_panels) with per-pass centroid
+    /// reuse: the `d`→`dp` padded centroid rows are built once per
+    /// [`FilterPass`] (i.e. once per solver iteration) and every chunk's
+    /// candidate gather becomes a straight row memcpy from that bank —
+    /// the slimmed first step of the ROADMAP's "ship the centroid panel
+    /// once per iteration, not once per chunk" follow-up (the device-side
+    /// persistent panel needs a gather-shaped artifact signature and
+    /// stays future work).
+    pub fn filter_panels_in_pass(
+        &self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        pass: &mut FilterPass,
         out: &mut PanelSet,
     ) -> anyhow::Result<()> {
         let d = centroids.dims();
@@ -211,6 +298,9 @@ impl PjrtRuntime {
         if njobs == 0 || kmax == 0 {
             return Ok(());
         }
+        // Self-heal if the caller forgot begin_pass for these centroids —
+        // the cost is per-pass padding, never wrong results.
+        pass.ensure(centroids, metric);
         let mut mpad: Vec<f32> = Vec::new();
         let mut cpad: Vec<f32> = Vec::new();
         let mut start = 0usize;
@@ -228,6 +318,8 @@ impl PjrtRuntime {
                 })?;
             let lo = &self.loaded[&art.name];
             let (bj, dp, kp) = (lo.art.n, lo.art.d, lo.art.k);
+            // Padded centroid rows for this dp, built at most once per pass.
+            let bank = pass.bank(centroids, dp);
             mpad.clear();
             mpad.resize(bj * dp, 0.0);
             cpad.clear();
@@ -236,9 +328,9 @@ impl PjrtRuntime {
             for j in 0..take {
                 mpad[j * dp..j * dp + d].copy_from_slice(jobs.mid(start + j));
                 for (slot, &c) in jobs.cands(start + j).iter().enumerate() {
-                    let row = &mut cpad[(j * kp + slot) * dp..(j * kp + slot) * dp + dp];
-                    row.fill(0.0);
-                    row[..d].copy_from_slice(centroids.point(c as usize));
+                    let ci = c as usize;
+                    cpad[(j * kp + slot) * dp..(j * kp + slot + 1) * dp]
+                        .copy_from_slice(&bank[ci * dp..(ci + 1) * dp]);
                 }
             }
             let m = xla::Literal::vec1(&mpad).reshape(&[bj as i64, dp as i64])?;
@@ -258,5 +350,36 @@ impl PjrtRuntime {
             start += take;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_pass_banks_pad_lazily_and_rekey() {
+        let c1 = Dataset::from_flat(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut pass = FilterPass::new();
+        pass.reset(&c1, Metric::Euclid);
+        assert!(pass.banks.is_empty(), "banks are lazy");
+        let bank = pass.bank(&c1, 4).to_vec();
+        assert_eq!(bank, vec![1.0, 2.0, 3.0, 0.0, 4.0, 5.0, 6.0, 0.0]);
+        // Same dp → cached; another dp → second bank.
+        let _ = pass.bank(&c1, 4);
+        assert_eq!(pass.banks.len(), 1);
+        let _ = pass.bank(&c1, 8);
+        assert_eq!(pass.banks.len(), 2);
+        // Same buffer, same metric → ensure keeps the banks.
+        pass.ensure(&c1, Metric::Euclid);
+        assert_eq!(pass.banks.len(), 2);
+        // Metric flip or a different centroid buffer re-keys the pass.
+        pass.ensure(&c1, Metric::Manhattan);
+        assert!(pass.banks.is_empty());
+        let _ = pass.bank(&c1, 4);
+        let c2 = Dataset::from_flat(2, 3, vec![9.0; 6]);
+        pass.ensure(&c2, Metric::Manhattan);
+        assert!(pass.banks.is_empty());
+        assert_eq!(pass.bank(&c2, 3), c2.flat(), "dp == d pads nothing");
     }
 }

@@ -10,7 +10,7 @@ pub mod client;
 pub mod panels;
 
 pub use artifacts::{Artifact, Kind, Manifest, PAD_SENTINEL};
-pub use client::{LloydBlockOut, PjrtRuntime};
+pub use client::{FilterPass, LloydBlockOut, PjrtRuntime};
 pub use panels::PjrtPanels;
 
 use std::path::PathBuf;

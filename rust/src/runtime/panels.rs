@@ -4,7 +4,7 @@
 //! ships each tree level's flat [`PanelJobs`] batch here; everything else
 //! stays on the coordinator ("PS") side.
 
-use super::client::PjrtRuntime;
+use super::client::{FilterPass, PjrtRuntime};
 use crate::data::Dataset;
 use crate::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
 use crate::kmeans::Metric;
@@ -13,10 +13,17 @@ use crate::kmeans::Metric;
 /// four worker threads can each own one (the runtime itself is used from
 /// one thread at a time per executable call; workers get their own
 /// `PjrtPanels` over an `Arc`).
+///
+/// The engine's `begin_pass` (once per iteration, fixed centroids) resets
+/// the backend-local [`FilterPass`], so the `d`→`dp` centroid padding is
+/// done once per iteration and every chunk gathers candidate rows by
+/// straight memcpy from the padded bank.
 pub struct PjrtPanels<'rt> {
     pub rt: &'rt PjrtRuntime,
     /// Panels computed since construction (metrics).
     pub jobs_offloaded: u64,
+    /// Per-iteration padded-centroid state.
+    pass: FilterPass,
 }
 
 impl<'rt> PjrtPanels<'rt> {
@@ -24,11 +31,16 @@ impl<'rt> PjrtPanels<'rt> {
         Self {
             rt,
             jobs_offloaded: 0,
+            pass: FilterPass::new(),
         }
     }
 }
 
 impl PanelBackend for PjrtPanels<'_> {
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        self.pass.reset(centroids, metric);
+    }
+
     fn panels(
         &mut self,
         jobs: &PanelJobs,
@@ -38,7 +50,7 @@ impl PanelBackend for PjrtPanels<'_> {
     ) {
         self.jobs_offloaded += jobs.len() as u64;
         self.rt
-            .filter_panels(jobs, centroids, metric, out)
+            .filter_panels_in_pass(jobs, centroids, metric, &mut self.pass, out)
             .expect("pjrt filter panel execution failed");
     }
 }

@@ -1,0 +1,223 @@
+//! Serving metrics: what the micro-batching [`super::ClusterService`]
+//! measures about itself — request/point/batch counts, coalescing
+//! quality, wall vs busy time, and end-to-end latency percentiles.
+//!
+//! The recorder is a single mutex'd accumulator written once per *batch*
+//! (not per request) by the dispatcher thread, so contention with the
+//! submit path is negligible; snapshots compute percentiles on demand.
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile_sorted, Accum};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Rolling latency window: beyond this many samples new latencies
+/// overwrite old ones round-robin, bounding memory for long-lived
+/// services while keeping percentiles representative.
+const LATENCY_WINDOW: usize = 1 << 18;
+
+/// Point-in-time snapshot of a service's performance counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Predict requests fulfilled.
+    pub requests: u64,
+    /// Query points across all fulfilled requests.
+    pub points: u64,
+    /// Panel batches executed (each coalesces >= 1 request).
+    pub batches: u64,
+    /// Mean requests coalesced per batch (the micro-batching win).
+    pub mean_batch_requests: f64,
+    /// Largest number of requests coalesced into one batch.
+    pub max_batch_requests: u64,
+    /// Largest number of points in one batch.
+    pub max_batch_points: u64,
+    /// Wall-clock seconds since the service started.
+    pub wall_s: f64,
+    /// Seconds the dispatcher spent inside panel execution.
+    pub busy_s: f64,
+    /// End-to-end request latency percentiles (submit → reply), ms.
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_max_ms: f64,
+    /// Fulfilled points per wall second.
+    pub throughput_pps: f64,
+    /// Fulfilled requests per wall second.
+    pub throughput_rps: f64,
+}
+
+impl ServeMetrics {
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy) | \
+             {:.1} req/batch (max {}) | {:.0} pts/s, {:.0} req/s | \
+             latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
+            self.requests,
+            self.points,
+            self.batches,
+            self.wall_s,
+            self.busy_s,
+            self.mean_batch_requests,
+            self.max_batch_requests,
+            self.throughput_pps,
+            self.throughput_rps,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms,
+            self.latency_max_ms,
+        )
+    }
+
+    /// Machine-readable form (the `BENCH_serve.json` payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("points", Json::num(self.points as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch_requests", Json::num(self.mean_batch_requests)),
+            ("max_batch_requests", Json::num(self.max_batch_requests as f64)),
+            ("max_batch_points", Json::num(self.max_batch_points as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("latency_p50_ms", Json::num(self.latency_p50_ms)),
+            ("latency_p95_ms", Json::num(self.latency_p95_ms)),
+            ("latency_p99_ms", Json::num(self.latency_p99_ms)),
+            ("latency_max_ms", Json::num(self.latency_max_ms)),
+            ("throughput_pps", Json::num(self.throughput_pps)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct State {
+    requests: u64,
+    points: u64,
+    batches: u64,
+    batch_requests: Accum,
+    max_batch_points: u64,
+    busy_s: f64,
+    /// Rolling window of request latencies (seconds).
+    latencies: Vec<f64>,
+    /// Total latencies ever recorded (drives the rolling overwrite).
+    recorded: u64,
+}
+
+/// Shared recorder: dispatcher writes, snapshots read.
+#[derive(Debug)]
+pub(crate) struct Recorder {
+    state: Mutex<State>,
+    started: Instant,
+}
+
+impl Recorder {
+    pub(crate) fn new() -> Self {
+        Self {
+            state: Mutex::new(State::default()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one executed batch: how many requests/points it coalesced,
+    /// panel-execution seconds, and the per-request end-to-end latencies.
+    pub(crate) fn record_batch(&self, points: u64, busy_s: f64, latencies_s: &[f64]) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.requests += latencies_s.len() as u64;
+        st.points += points;
+        st.batches += 1;
+        st.batch_requests.add(latencies_s.len() as f64);
+        st.max_batch_points = st.max_batch_points.max(points);
+        st.busy_s += busy_s;
+        for &l in latencies_s {
+            if st.latencies.len() < LATENCY_WINDOW {
+                st.latencies.push(l);
+            } else {
+                let slot = (st.recorded as usize) % LATENCY_WINDOW;
+                st.latencies[slot] = l;
+            }
+            st.recorded += 1;
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> ServeMetrics {
+        // Copy everything out under the lock, then release it before the
+        // O(n log n) sort so a metrics poll never stalls the dispatcher's
+        // record_batch behind a quarter-million-sample sort.
+        let st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let (requests, points, batches) = (st.requests, st.points, st.batches);
+        let (mean_batch_requests, max_batch_requests) =
+            (st.batch_requests.mean(), st.batch_requests.max as u64);
+        let (max_batch_points, busy_s) = (st.max_batch_points, st.busy_s);
+        let mut lat = st.latencies.clone();
+        drop(st);
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let ms = 1e3;
+        // One copy + one sort serves every percentile (and the max).
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ServeMetrics {
+            requests,
+            points,
+            batches,
+            mean_batch_requests,
+            max_batch_requests,
+            max_batch_points,
+            wall_s,
+            busy_s,
+            latency_p50_ms: percentile_sorted(&lat, 50.0) * ms,
+            latency_p95_ms: percentile_sorted(&lat, 95.0) * ms,
+            latency_p99_ms: percentile_sorted(&lat, 99.0) * ms,
+            latency_max_ms: lat.last().copied().unwrap_or(0.0) * ms,
+            throughput_pps: if wall_s > 0.0 { points as f64 / wall_s } else { 0.0 },
+            throughput_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_accumulates_and_snapshots() {
+        let r = Recorder::new();
+        r.record_batch(30, 0.01, &[0.001, 0.002, 0.003]);
+        r.record_batch(10, 0.02, &[0.004]);
+        let m = r.snapshot();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.points, 40);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.max_batch_requests, 3);
+        assert_eq!(m.max_batch_points, 30);
+        assert!((m.mean_batch_requests - 2.0).abs() < 1e-12);
+        assert!((m.busy_s - 0.03).abs() < 1e-12);
+        assert!(m.latency_max_ms >= m.latency_p99_ms);
+        assert!(m.latency_p99_ms >= m.latency_p50_ms);
+        assert!((m.latency_max_ms - 4.0).abs() < 1e-9);
+        assert!(m.wall_s >= 0.0);
+        assert!(m.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn summary_and_json_carry_the_headline_numbers() {
+        let r = Recorder::new();
+        r.record_batch(64, 0.5, &[0.010; 8]);
+        let m = r.snapshot();
+        let s = m.summary();
+        assert!(s.contains("8 reqs"), "{s}");
+        assert!(s.contains("64 pts"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("points").unwrap().as_usize().unwrap(), 64);
+        assert!(j.get("latency_p50_ms").unwrap().as_f64().unwrap() > 9.0);
+    }
+
+    #[test]
+    fn empty_recorder_snapshot_is_zeroed() {
+        let m = Recorder::new().snapshot();
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.batches, 0);
+        assert_eq!(m.latency_p50_ms, 0.0);
+        assert_eq!(m.throughput_pps, 0.0);
+    }
+}

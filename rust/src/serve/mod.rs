@@ -1,0 +1,17 @@
+//! Serving layer: the fit/predict split's online half.
+//!
+//! [`ClusterService`] owns a trained [`crate::kmeans::KmeansModel`] and a
+//! bounded request queue; a dispatcher thread micro-batches concurrent
+//! predict requests into single distance-panel batches executed across
+//! `std::thread::scope` workers (via the [`crate::kmeans::predict`]
+//! engine) — the software mirror of the paper's PS→multi-core-PL
+//! dispatch, pointed at the ROADMAP's "heavy traffic" north star.
+//! [`ServeMetrics`] reports throughput, coalescing quality and latency
+//! percentiles; the CLI's `serve-bench` subcommand drives a closed-loop
+//! load through it and emits `BENCH_serve.json`.
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::ServeMetrics;
+pub use service::{ClusterService, PredictReply, ServeConfig, ServeError, Ticket};

@@ -1,0 +1,433 @@
+//! The micro-batching cluster service: a bounded request queue, a
+//! dispatcher thread that coalesces concurrent predict requests into one
+//! panel batch, and `std::thread::scope` panel workers doing the distance
+//! arithmetic — the software mirror of the paper's PS core dispatching
+//! batched work to multiple PL cores.
+//!
+//! Control flow:
+//!
+//! ```text
+//! clients ──submit()──> bounded queue ──drain_batch()──> dispatcher ("PS")
+//!                                                            │ one PanelJobs batch
+//!                                                            ▼
+//!                                             Predictor → ParCpuPanels
+//!                                             (scope workers = "PL cores")
+//!                                                            │ split rows per request
+//!                                                            ▼
+//! clients <──Ticket::wait()── reply channels <──────── fulfilled replies
+//! ```
+//!
+//! Backpressure is real: `submit` blocks while the queue holds
+//! `queue_cap` requests (`try_submit` refuses instead), and shutdown
+//! drains the queue before the dispatcher exits, so every accepted
+//! request is answered.
+
+use super::metrics::{Recorder, ServeMetrics};
+use crate::data::Dataset;
+use crate::kmeans::model::KmeansModel;
+use crate::kmeans::panel::{PanelKernel, ParCpuPanels};
+use crate::kmeans::predict::Predictor;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bounded queue capacity, in requests; `submit` blocks when full.
+    pub queue_cap: usize,
+    /// Micro-batcher point budget: queued requests are coalesced into one
+    /// panel batch until the next request would push past this many query
+    /// points (a single larger request is still served, alone).
+    pub max_batch_points: usize,
+    /// Panel worker threads (the "PL core" count).
+    pub workers: usize,
+    /// Panel kernel; `Blocked` is the production profile, `Scalar` the
+    /// oracle arithmetic (bit-identical to training-side assignment).
+    pub kernel: PanelKernel,
+    /// Centroid kd-tree prune override; `None` = the predictor's
+    /// model-size auto rule.
+    pub prune: Option<bool>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: 256,
+            max_batch_points: 4096,
+            workers: std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+                .min(8),
+            kernel: PanelKernel::Blocked,
+            prune: None,
+        }
+    }
+}
+
+/// Why a request was not accepted / answered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The service is shut down.
+    Closed,
+    /// Query dimensionality does not match the model.
+    DimMismatch { expected: usize, got: usize },
+    /// Bounded queue is full (only from [`ClusterService::try_submit`]).
+    Full,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Closed => write!(f, "cluster service is shut down"),
+            ServeError::DimMismatch { expected, got } => {
+                write!(f, "query dims {got} != model dims {expected}")
+            }
+            ServeError::Full => write!(f, "request queue is full"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One fulfilled predict request.
+#[derive(Clone, Debug)]
+pub struct PredictReply {
+    /// Assigned centroid index per query point.
+    pub labels: Vec<u32>,
+    /// Distance to the assigned centroid per query point (squared-L2 for
+    /// Euclid, per the repo convention).
+    pub distances: Vec<f32>,
+    /// How many requests shared this request's panel batch (>= 1; larger
+    /// means micro-batching coalesced concurrent clients).
+    pub batched_with: usize,
+}
+
+/// Handle to one in-flight request; `wait` blocks until the reply lands.
+/// Same one-shot mpsc reply-mailbox idiom as the coordinator's offload
+/// service.
+#[must_use = "a Ticket must be waited on, or its reply is lost"]
+pub struct Ticket {
+    rx: Receiver<PredictReply>,
+}
+
+impl Ticket {
+    /// Block until the service answers.  Accepted requests are normally
+    /// always answered (shutdown drains the queue before the dispatcher
+    /// exits); [`ServeError::Closed`] is returned only if the dispatcher
+    /// died abnormally (panicked) with this request still queued.
+    pub fn wait(self) -> Result<PredictReply, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Closed)
+    }
+}
+
+/// A queued request.
+struct Pending {
+    points: Dataset,
+    reply: Sender<PredictReply>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl Shared {
+    /// Lock the queue state, recovering from poison: a dispatcher panic
+    /// must degrade to [`ServeError::Closed`] on the client side, not
+    /// cascade `lock().unwrap()` panics into every caller.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wait_on<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueState>,
+    ) -> MutexGuard<'a, QueueState> {
+        cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Dropped by the dispatcher thread on *any* exit — normal or panic.
+/// Marks the service shut down and clears the queue so queued reply
+/// senders drop (turning blocked `Ticket::wait`s into
+/// `ServeError::Closed`) and blocked submitters wake into the closed
+/// path instead of waiting forever.
+struct DispatcherExitGuard(Arc<Shared>);
+
+impl Drop for DispatcherExitGuard {
+    fn drop(&mut self) {
+        let mut st = self.0.lock_state();
+        st.shutdown = true;
+        st.queue.clear();
+        drop(st);
+        self.0.not_empty.notify_all();
+        self.0.not_full.notify_all();
+    }
+}
+
+/// Pop a micro-batch off the queue: consecutive requests until the point
+/// budget is hit (a single over-budget request still ships alone).
+fn drain_batch(queue: &mut VecDeque<Pending>, max_points: usize) -> Vec<Pending> {
+    let mut out = Vec::new();
+    let mut pts = 0usize;
+    while let Some(front) = queue.front() {
+        let take = front.points.len();
+        if !out.is_empty() && pts + take > max_points {
+            break;
+        }
+        pts += take;
+        out.push(queue.pop_front().unwrap());
+        if pts >= max_points {
+            break;
+        }
+    }
+    out
+}
+
+/// The running micro-batching service; see module docs.
+pub struct ClusterService {
+    model: Arc<KmeansModel>,
+    cfg: ServeConfig,
+    shared: Arc<Shared>,
+    recorder: Arc<Recorder>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl ClusterService {
+    /// Start the dispatcher over a trained model.
+    pub fn start(model: Arc<KmeansModel>, cfg: ServeConfig) -> Self {
+        assert!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        assert!(cfg.max_batch_points >= 1, "max_batch_points must be >= 1");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState::default()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        });
+        let recorder = Arc::new(Recorder::new());
+
+        let svc_shared = Arc::clone(&shared);
+        let svc_recorder = Arc::clone(&recorder);
+        let svc_model = Arc::clone(&model);
+        let svc_cfg = cfg.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("cluster-serve".into())
+            .spawn(move || {
+                let _exit_guard = DispatcherExitGuard(Arc::clone(&svc_shared));
+                let mut predictor = Predictor::with_backend(
+                    svc_model.as_ref(),
+                    ParCpuPanels::with_kernel(svc_cfg.workers, svc_cfg.kernel),
+                );
+                if let Some(on) = svc_cfg.prune {
+                    predictor = predictor.prune(on);
+                }
+                let d = svc_model.dims();
+                loop {
+                    let batch = {
+                        let mut st = svc_shared.lock_state();
+                        while st.queue.is_empty() && !st.shutdown {
+                            st = svc_shared.wait_on(&svc_shared.not_empty, st);
+                        }
+                        if st.queue.is_empty() {
+                            break; // shutdown requested and queue drained
+                        }
+                        let b = drain_batch(&mut st.queue, svc_cfg.max_batch_points);
+                        svc_shared.not_full.notify_all();
+                        b
+                    };
+                    let nreq = batch.len();
+                    let total: usize = batch.iter().map(|p| p.points.len()).sum();
+                    let mut flat = Vec::with_capacity(total * d);
+                    for p in &batch {
+                        flat.extend_from_slice(p.points.flat());
+                    }
+                    let queries = Dataset::from_flat(total, d, flat);
+                    let t0 = Instant::now();
+                    let (labels, dists) = predictor.assign_scored(&queries);
+                    let busy = t0.elapsed().as_secs_f64();
+                    let mut latencies = Vec::with_capacity(nreq);
+                    let mut off = 0usize;
+                    for p in batch {
+                        let n = p.points.len();
+                        // Receiver may have given up (client panic); ignore.
+                        let _ = p.reply.send(PredictReply {
+                            labels: labels[off..off + n].to_vec(),
+                            distances: dists[off..off + n].to_vec(),
+                            batched_with: nreq,
+                        });
+                        off += n;
+                        latencies.push(p.enqueued.elapsed().as_secs_f64());
+                    }
+                    svc_recorder.record_batch(total as u64, busy, &latencies);
+                }
+            })
+            .expect("cannot spawn cluster-serve dispatcher");
+
+        Self {
+            model,
+            cfg,
+            shared,
+            recorder,
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    pub fn model(&self) -> &Arc<KmeansModel> {
+        &self.model
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    fn check_dims(&self, points: &Dataset) -> Result<(), ServeError> {
+        if points.dims() != self.model.dims() {
+            return Err(ServeError::DimMismatch {
+                expected: self.model.dims(),
+                got: points.dims(),
+            });
+        }
+        Ok(())
+    }
+
+    fn enqueue(&self, points: Dataset, block: bool) -> Result<Ticket, ServeError> {
+        self.check_dims(&points)?;
+        let (reply_tx, reply_rx) = channel();
+        let pending = Pending {
+            points,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        };
+        let mut st = self.shared.lock_state();
+        loop {
+            if st.shutdown {
+                return Err(ServeError::Closed);
+            }
+            if st.queue.len() < self.cfg.queue_cap {
+                break;
+            }
+            if !block {
+                return Err(ServeError::Full);
+            }
+            st = self.shared.wait_on(&self.shared.not_full, st);
+        }
+        st.queue.push_back(pending);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(Ticket { rx: reply_rx })
+    }
+
+    /// Enqueue a predict request, blocking while the queue is full
+    /// (backpressure).  The returned [`Ticket`] resolves to the reply.
+    pub fn submit(&self, points: Dataset) -> Result<Ticket, ServeError> {
+        self.enqueue(points, true)
+    }
+
+    /// Non-blocking [`submit`](Self::submit): fails with
+    /// [`ServeError::Full`] instead of waiting.
+    pub fn try_submit(&self, points: Dataset) -> Result<Ticket, ServeError> {
+        self.enqueue(points, false)
+    }
+
+    /// Submit and wait — the closed-loop client call.
+    pub fn predict(&self, points: Dataset) -> Result<PredictReply, ServeError> {
+        self.submit(points)?.wait()
+    }
+
+    /// Current performance counters (callable while serving).
+    pub fn metrics(&self) -> ServeMetrics {
+        self.recorder.snapshot()
+    }
+
+    fn finish(&mut self) {
+        {
+            let mut st = self.shared.lock_state();
+            st.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, join the dispatcher and
+    /// return the final metrics snapshot.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.finish();
+        self.recorder.snapshot()
+    }
+}
+
+impl Drop for ClusterService {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(n: usize, d: usize) -> Pending {
+        let (tx, _rx) = channel();
+        Pending {
+            points: Dataset::zeros(n, d),
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn drain_batch_respects_point_budget() {
+        let mut q: VecDeque<Pending> =
+            [3, 4, 5, 10].into_iter().map(|n| pending(n, 2)).collect();
+        // 3 + 4 fit in 8; 5 would overflow.
+        let b = drain_batch(&mut q, 8);
+        assert_eq!(b.iter().map(|p| p.points.len()).collect::<Vec<_>>(), [3, 4]);
+        // 5 fits alone; 10 would overflow.
+        let b = drain_batch(&mut q, 8);
+        assert_eq!(b.iter().map(|p| p.points.len()).collect::<Vec<_>>(), [5]);
+        // Oversized request still ships, alone.
+        let b = drain_batch(&mut q, 8);
+        assert_eq!(b.iter().map(|p| p.points.len()).collect::<Vec<_>>(), [10]);
+        assert!(q.is_empty());
+        assert!(drain_batch(&mut q, 8).is_empty());
+    }
+
+    #[test]
+    fn drain_batch_stops_exactly_at_budget() {
+        let mut q: VecDeque<Pending> = (0..4).map(|_| pending(4, 2)).collect();
+        let b = drain_batch(&mut q, 8);
+        assert_eq!(b.len(), 2, "4 + 4 hits the budget exactly; stop there");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn ticket_round_trip() {
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || {
+            tx.send(PredictReply {
+                labels: vec![1, 2],
+                distances: vec![0.5, 0.25],
+                batched_with: 1,
+            })
+            .unwrap();
+        });
+        let r = Ticket { rx }.wait().unwrap();
+        h.join().unwrap();
+        assert_eq!(r.labels, vec![1, 2]);
+        assert_eq!(r.batched_with, 1);
+    }
+}

@@ -337,6 +337,52 @@ mod tests {
     }
 
     #[test]
+    fn metric_and_solver_enum_values_negative_paths() {
+        // Test-only reach up into `kmeans` (production code in `util`
+        // never imports it): pins that every enum the `cluster`/`fit`/
+        // `predict` surfaces parse through `parse_as` rejects bad values
+        // as `BadValue` with the offending token, not a panic.
+        use crate::kmeans::init::Init;
+        use crate::kmeans::solver::Algo;
+        use crate::kmeans::twolevel::Partition;
+        use crate::kmeans::Metric;
+        let c = Command::new("fit", "fit/predict surface")
+            .opt("metric", "euclid", "euclid|l2|manhattan|l1")
+            .opt("algo", "lloyd", "algorithm")
+            .opt("init", "uniform", "seeding")
+            .opt("partition", "round-robin", "quartering")
+            .opt("out", "", "labels path");
+        // The l1/l2 aliases the CLI documents parse to the right metrics.
+        let m = c.parse(&args(&["--metric", "l2"])).unwrap();
+        assert_eq!(m.parse_as::<Metric>("metric").unwrap(), Metric::Euclid);
+        let m = c.parse(&args(&["--metric=l1"])).unwrap();
+        assert_eq!(m.parse_as::<Metric>("metric").unwrap(), Metric::Manhattan);
+        // Bad metric: BadValue carrying option name, token and reason.
+        let m = c.parse(&args(&["--metric", "cosine"])).unwrap();
+        match m.parse_as::<Metric>("metric") {
+            Err(CliError::BadValue(name, val, why)) => {
+                assert_eq!(name, "metric");
+                assert_eq!(val, "cosine");
+                assert!(why.contains("unknown metric"), "{why}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        // Same shape for the other solver enums.
+        let m = c.parse(&args(&["--algo", "gpu"])).unwrap();
+        assert!(matches!(m.parse_as::<Algo>("algo"), Err(CliError::BadValue(..))));
+        let m = c.parse(&args(&["--init", "random"])).unwrap();
+        assert!(matches!(m.parse_as::<Init>("init"), Err(CliError::BadValue(..))));
+        let m = c.parse(&args(&["--partition", "octants"])).unwrap();
+        assert!(matches!(
+            m.parse_as::<Partition>("partition"),
+            Err(CliError::BadValue(..))
+        ));
+        // The empty-string default for --out (the "skip" sentinel) survives.
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.str("out"), "");
+    }
+
+    #[test]
     fn lists() {
         let c = Command::new("x", "y").opt("ks", "2,4,8", "cluster sweep");
         let m = c.parse(&args(&[])).unwrap();

@@ -354,7 +354,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // `-0.0` must not take the integer fast path (`as i64`
+                // yields 0, destroying the sign bit the model artifact's
+                // bitwise round-trip guarantee relies on); "-0" is valid
+                // JSON and parses back to -0.0.
+                if n.fract() == 0.0 && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -448,6 +452,17 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let emitted = v.to_string();
         assert_eq!(Json::parse(&emitted).unwrap(), v);
+    }
+
+    #[test]
+    fn negative_zero_survives_round_trip() {
+        let v = Json::Num(-0.0);
+        assert_eq!(v.to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back, 0.0); // f64 equality: -0.0 == 0.0 ...
+        assert!(back.is_sign_negative()); // ... but the sign bit survived
+        // Positive zero still takes the integer fast path.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -60,18 +60,24 @@ pub fn geomean(xs: &[f64]) -> f64 {
 
 /// Percentile via linear interpolation, p in [0, 100].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// [`percentile`] over an already-ascending-sorted slice — callers
+/// reading several percentiles sort once and use this.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -181,6 +187,14 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        // The pre-sorted form agrees with the sorting form.
+        let unsorted = [5.0, 1.0, 9.0, 3.0];
+        let mut sorted = unsorted.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&unsorted, p), percentile_sorted(&sorted, p));
+        }
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 
     #[test]

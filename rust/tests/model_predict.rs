@@ -1,0 +1,252 @@
+//! Fit/predict acceptance suite:
+//!
+//! 1. Model round-trip — save → load → `Predictor::assign` produces
+//!    bitwise-identical labels to the in-memory model, across both
+//!    metrics and both CPU panel backends.
+//! 2. Training-set parity — on a fully converged fit, the batched
+//!    predictor reproduces `KmeansResult::assignments` exactly.
+//! 3. CLI round trip — `gen-data` → `fit` → `predict` end to end, label
+//!    files agree, and negative paths fail loudly.
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::{csv, Dataset};
+use muchswift::kmeans::model::KmeansModel;
+use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
+use muchswift::kmeans::predict::Predictor;
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use muchswift::kmeans::Metric;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("muchswift_mp_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn saved_model_predicts_bitwise_identically_to_in_memory() {
+    let dir = temp_dir("roundtrip");
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let s = generate_params(1500, 6, 7, 0.2, 2.0, 23);
+        let spec = KmeansSpec::new(7).metric(metric).seed(4);
+        let model = spec.fit(&mut SolverCtx::new(&s.data));
+        let path = dir.join(format!("model_{}.json", metric.name()));
+        model.save(&path).unwrap();
+        let loaded = KmeansModel::load(&path).unwrap();
+        // The artifact round-trips bitwise.
+        assert_eq!(model.centroids, loaded.centroids, "{metric:?}");
+        assert_eq!(model.metric, loaded.metric);
+        assert_eq!(model.train, loaded.train);
+
+        // Fresh query set (not the training data) through both CPU panel
+        // backends: in-memory and loaded models must agree bit-for-bit.
+        let q = generate_params(900, 6, 7, 0.5, 2.0, 77).data;
+        for kernel in [PanelKernel::Scalar, PanelKernel::Blocked] {
+            let a = Predictor::with_backend(&model, ParCpuPanels::with_kernel(3, kernel))
+                .assign(&q);
+            let b = Predictor::with_backend(&loaded, ParCpuPanels::with_kernel(3, kernel))
+                .assign(&q);
+            assert_eq!(a, b, "{metric:?} {kernel:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn predictor_reproduces_training_assignments_exactly() {
+    // tol = 0 runs Lloyd to an exact fixpoint: the final assignments are
+    // the arg-min against the final centroids, so the scalar-kernel
+    // predictor must reproduce them bit-for-bit.  Extreme separation +
+    // k-means++ seeding make the fixpoint land within a few iterations
+    // for both metrics (L1 + mean update has no descent guarantee in
+    // general, but trivially stabilizes on planted well-separated data).
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let s = generate_params(1200, 4, 5, 0.02, 10.0, 31);
+        let spec = KmeansSpec::new(5)
+            .metric(metric)
+            .algo(Algo::Lloyd)
+            .init(muchswift::kmeans::init::Init::KmeansPlusPlus)
+            .tol(0.0)
+            .max_iters(300)
+            .seed(6);
+        let mut ctx = SolverCtx::new(&s.data);
+        let r = spec.solve(&mut ctx);
+        assert!(r.stats.converged, "{metric:?}: fixpoint not reached");
+        assert_eq!(r.stats.iters.last().unwrap().moved, 0.0);
+        let model = KmeansModel::from_fit(&s.data, &r, &spec);
+        let labels = Predictor::new(&model).assign(&s.data);
+        assert_eq!(labels, r.assignments, "{metric:?}");
+    }
+}
+
+#[test]
+fn fit_convenience_equals_solve_plus_package() {
+    let s = generate_params(800, 3, 4, 0.15, 2.0, 9);
+    let spec = KmeansSpec::new(4).seed(12);
+    let model = spec.fit(&mut SolverCtx::new(&s.data));
+    let r = spec.solve(&mut SolverCtx::new(&s.data));
+    // Deterministic spec ⇒ fit() packaged exactly the solve() outcome.
+    assert_eq!(model.centroids, r.centroids);
+    assert_eq!(model.train.iterations, r.stats.iterations());
+    assert_eq!(model.train.converged, r.stats.converged);
+}
+
+#[test]
+fn two_level_model_serves_predictions() {
+    // The paper's own algorithm through the new surface: fit two-level,
+    // persist, predict — labels must be valid and deterministic.
+    let s = generate_params(3000, 3, 5, 0.1, 3.0, 41);
+    let spec = KmeansSpec::two_level(5).seed(3);
+    let model = spec.fit(&mut SolverCtx::new(&s.data));
+    assert_eq!(model.spec.algo, Algo::TwoLevel);
+    let dir = temp_dir("twolevel");
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    let loaded = KmeansModel::load(&path).unwrap();
+    let a = Predictor::new(&model).assign(&s.data);
+    let b = Predictor::new(&loaded).assign(&s.data);
+    assert_eq!(a, b);
+    assert!(a.iter().all(|&l| (l as usize) < model.k()));
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// CLI round trip
+// ---------------------------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_muchswift"))
+}
+
+#[test]
+fn cli_fit_predict_round_trip() {
+    let dir = temp_dir("cli");
+    let data_csv = dir.join("data.csv");
+    let model_json = dir.join("model.json");
+    let fit_labels = dir.join("fit_labels.csv");
+    let pred_labels = dir.join("pred_labels.csv");
+
+    // gen-data → CSV.
+    let out = bin()
+        .args(["gen-data", "--n", "1500", "--d", "4", "--k", "5", "--seed", "3"])
+        .arg(&data_csv)
+        .output()
+        .expect("spawn gen-data");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // fit with the l2 alias, writing model + training labels.
+    let out = bin()
+        .args(["fit", "--k", "5", "--metric", "l2", "--seed", "3", "--tol", "0"])
+        .args(["--model", model_json.to_str().unwrap()])
+        .args(["--out", fit_labels.to_str().unwrap()])
+        .arg(&data_csv)
+        .output()
+        .expect("spawn fit");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "fit failed\nstdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("wrote model"), "{stdout}");
+    assert!(model_json.exists());
+
+    // The model file is a versioned kmeans-model JSON document.
+    let model = KmeansModel::load(&model_json).unwrap();
+    assert_eq!(model.k(), 5);
+    assert_eq!(model.dims(), 4);
+
+    // predict against the same dataset.
+    let out = bin()
+        .args(["predict", "--model", model_json.to_str().unwrap()])
+        .args(["--out", pred_labels.to_str().unwrap()])
+        .arg(&data_csv)
+        .output()
+        .expect("spawn predict");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "predict failed\nstdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("objective"), "{stdout}");
+
+    // Both label files exist and agree exactly: fit's training labels are
+    // produced by the same predictor serving uses.
+    let a = csv::load_labels(&fit_labels).unwrap();
+    let b = csv::load_labels(&pred_labels).unwrap();
+    assert_eq!(a.len(), 1500);
+    assert_eq!(a, b);
+
+    // And they match an in-process predict over the same artifacts.
+    let data = csv::load(&data_csv).unwrap();
+    let want = Predictor::new(&model).assign(&data);
+    assert_eq!(a, want);
+
+    for f in [&data_csv, &model_json, &fit_labels, &pred_labels] {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+#[test]
+fn cli_cluster_out_writes_assignments() {
+    let dir = temp_dir("cluster_out");
+    let labels_csv = dir.join("labels.csv");
+    let out = bin()
+        .args([
+            "cluster", "--backend", "cpu", "--algo", "lloyd", "--n", "800", "--d", "3",
+            "--k", "4", "--seed", "5",
+        ])
+        .args(["--out", labels_csv.to_str().unwrap()])
+        .output()
+        .expect("spawn cluster");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let labels = csv::load_labels(&labels_csv).unwrap();
+    assert_eq!(labels.len(), 800);
+    assert!(labels.iter().all(|&l| l < 4));
+    std::fs::remove_file(&labels_csv).ok();
+}
+
+#[test]
+fn cli_rejects_bad_metric_kernel_and_missing_model() {
+    // Unknown metric on fit (the satellite's negative path).
+    let out = bin()
+        .args(["fit", "--metric", "cosine"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown metric"), "{stderr}");
+
+    // Unknown kernel on predict.
+    let dir = temp_dir("neg");
+    let data_csv = dir.join("d.csv");
+    csv::save(&Dataset::from_flat(2, 2, vec![0.0, 0.0, 1.0, 1.0]), &data_csv).unwrap();
+    let out = bin()
+        .args(["predict", "--model", "nope.json", "--kernel", "warp"])
+        .arg(&data_csv)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown kernel"), "{stderr}");
+
+    // Missing model file is a clean error, not a panic.
+    let out = bin()
+        .args(["predict", "--model", "/nonexistent/model.json"])
+        .arg(&data_csv)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("cannot read model"), "{stderr}");
+
+    // predict without an input dataset.
+    let out = bin()
+        .args(["predict", "--model", "/nonexistent/model.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_file(&data_csv).ok();
+}

@@ -1,0 +1,162 @@
+//! ClusterService acceptance: concurrent multi-client predict batches
+//! through the micro-batching dispatcher must be correct (identical to a
+//! direct `Predictor` over the same model), fully accounted for in
+//! `ServeMetrics`, and robust at the edges (empty requests, oversized
+//! requests, dimension mismatches, shutdown draining).
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
+use muchswift::kmeans::predict::Predictor;
+use muchswift::kmeans::solver::{KmeansSpec, SolverCtx};
+use muchswift::kmeans::KmeansModel;
+use muchswift::serve::{ClusterService, ServeConfig, ServeError};
+use std::sync::Arc;
+
+fn trained_model(n: usize, d: usize, k: usize, seed: u64) -> Arc<KmeansModel> {
+    let s = generate_params(n, d, k, 0.2, 2.0, seed);
+    Arc::new(KmeansSpec::new(k).seed(seed).fit(&mut SolverCtx::new(&s.data)))
+}
+
+fn slice(data: &Dataset, start: usize, len: usize) -> Dataset {
+    let d = data.dims();
+    Dataset::from_flat(len, d, data.flat()[start * d..(start + len) * d].to_vec())
+}
+
+#[test]
+fn concurrent_clients_get_exactly_direct_predictor_answers() {
+    let model = trained_model(2000, 4, 6, 17);
+    let queries = generate_params(1280, 4, 6, 0.5, 2.0, 91).data;
+    // Ground truth from a direct predictor with the same kernel.
+    let want = Predictor::with_backend(
+        model.as_ref(),
+        ParCpuPanels::with_kernel(2, PanelKernel::Blocked),
+    )
+    .assign(&queries);
+
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            workers: 2,
+            max_batch_points: 128, // small budget → several batches
+            queue_cap: 64,
+            kernel: PanelKernel::Blocked,
+            prune: None,
+        },
+    );
+    let clients = 4usize;
+    let per_client = 8usize;
+    let req_len = 40usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            let queries = &queries;
+            let want = &want;
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let start = (c * per_client + r) * req_len;
+                    let reply = svc.predict(slice(queries, start, req_len)).unwrap();
+                    assert_eq!(reply.labels.len(), req_len);
+                    assert_eq!(reply.distances.len(), req_len);
+                    assert!(reply.batched_with >= 1);
+                    assert_eq!(
+                        reply.labels,
+                        want[start..start + req_len],
+                        "client {c} request {r}"
+                    );
+                }
+            });
+        }
+    });
+    let m = svc.shutdown();
+    let total_reqs = (clients * per_client) as u64;
+    assert_eq!(m.requests, total_reqs);
+    assert_eq!(m.points, total_reqs * req_len as u64);
+    assert!(m.batches >= 1 && m.batches <= total_reqs);
+    // The point budget caps coalescing: never more than 3 x 40-pt
+    // requests (128 / 40) in one batch.
+    assert!(m.max_batch_requests <= 3, "max_batch_requests {}", m.max_batch_requests);
+    assert!(m.max_batch_points <= 128 + req_len as u64);
+    assert!(m.mean_batch_requests >= 1.0);
+    assert!(m.throughput_pps > 0.0);
+    assert!(m.latency_p99_ms >= m.latency_p50_ms);
+    assert!(m.wall_s > 0.0 && m.busy_s >= 0.0);
+}
+
+#[test]
+fn oversized_and_empty_requests_are_served() {
+    let model = trained_model(600, 3, 4, 5);
+    let queries = generate_params(500, 3, 4, 0.4, 1.0, 7).data;
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            max_batch_points: 64, // request below is 8x the budget
+            ..Default::default()
+        },
+    );
+    // Oversized request ships alone and completely.
+    let reply = svc.predict(slice(&queries, 0, 500)).unwrap();
+    assert_eq!(reply.labels.len(), 500);
+    assert_eq!(reply.batched_with, 1);
+    // Empty request resolves to empty labels.
+    let reply = svc.predict(Dataset::from_flat(0, 3, vec![])).unwrap();
+    assert!(reply.labels.is_empty());
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.points, 500);
+}
+
+#[test]
+fn dim_mismatch_is_rejected_eagerly() {
+    let model = trained_model(400, 3, 3, 2);
+    let svc = ClusterService::start(Arc::clone(&model), ServeConfig::default());
+    let bad = Dataset::from_flat(2, 5, vec![0.0; 10]);
+    match svc.submit(bad) {
+        Err(ServeError::DimMismatch { expected, got }) => {
+            assert_eq!(expected, 3);
+            assert_eq!(got, 5);
+        }
+        other => panic!("expected DimMismatch, got {:?}", other.err()),
+    }
+    // The service is still healthy afterwards.
+    let ok = svc.predict(Dataset::from_flat(1, 3, vec![0.0; 3])).unwrap();
+    assert_eq!(ok.labels.len(), 1);
+}
+
+#[test]
+fn shutdown_drains_accepted_requests() {
+    let model = trained_model(800, 3, 4, 9);
+    let queries = generate_params(256, 3, 4, 0.3, 1.0, 4).data;
+    let svc = ClusterService::start(Arc::clone(&model), ServeConfig::default());
+    // Fire-and-hold a burst of tickets, then shut down immediately: every
+    // accepted request must still be answered (drain-before-exit).
+    let tickets: Vec<_> = (0..16)
+        .map(|i| svc.submit(slice(&queries, i * 16, 16)).unwrap())
+        .collect();
+    let metrics = svc.shutdown();
+    for t in tickets {
+        let reply = t.wait().unwrap();
+        assert_eq!(reply.labels.len(), 16);
+    }
+    assert_eq!(metrics.requests, 16);
+    assert_eq!(metrics.points, 256);
+}
+
+#[test]
+fn scalar_service_is_bit_identical_to_oracle_predictor() {
+    // Scalar kernel end to end: the service must agree with the
+    // training-side arg-min arithmetic exactly, including distances.
+    let model = trained_model(1000, 5, 8, 13);
+    let queries = generate_params(300, 5, 8, 0.5, 2.0, 3).data;
+    let (want_labels, want_dists) = Predictor::new(model.as_ref()).assign_scored(&queries);
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            kernel: PanelKernel::Scalar,
+            ..Default::default()
+        },
+    );
+    let reply = svc.predict(queries.clone()).unwrap();
+    assert_eq!(reply.labels, want_labels);
+    assert_eq!(reply.distances, want_dists);
+}

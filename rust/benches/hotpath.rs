@@ -149,6 +149,41 @@ fn main() {
         coord.run(&s.data, &coord_spec)
     }));
 
+    // Shard-plane scaling sweep: the same two-level workload at P ∈
+    // {1, 2, 4, 8, 16} shards over the machine's workers.  Each P gets a
+    // whole-run wall entry plus a `_level1` entry distilled from the
+    // coordinator's own phase stopwatch — the number the ROADMAP's
+    // scaling claim reads (level-1 wall shrinking as P grows up to the
+    // core count).
+    for p in [1usize, 2, 4, 8, 16] {
+        let spec = KmeansSpec::two_level(k).seed(3).shards(p).workers(workers);
+        let mut level1_laps: Vec<f64> = Vec::new();
+        let r = quick.run(&format!("shard_scaling_p{p}_{tag}_k20"), || {
+            let out = coord.run(&s.data, &spec);
+            level1_laps.push(out.metrics.level1_s);
+            out
+        });
+        // Bench::run calls the closure once as a warmup before the measured
+        // samples — drop that cold lap so the distilled level-1 stats line
+        // up with the paired whole-run entry.
+        let measured = &mut level1_laps[1..];
+        measured.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = measured[measured.len() / 2];
+        let min = measured.first().copied().unwrap_or(f64::NAN);
+        println!(
+            "shard_scaling P={p}: whole-run median {:.4}s, level1 median {med:.4}s",
+            r.median_s
+        );
+        results.push(BenchResult {
+            name: format!("shard_scaling_p{p}_level1_{tag}_k20"),
+            samples: measured.len(),
+            median_s: med,
+            mad_s: 0.0,
+            min_s: min,
+        });
+        results.push(r);
+    }
+
     // Headline ratio for the perf trajectory.
     let med = |name: String| {
         results

@@ -174,6 +174,7 @@ pub fn measure(kind: ArchKind, w: &WorkloadConfig) -> Measured {
         .tol(wm.tol)
         .max_iters(wm.max_iters)
         .level2_max_iters(wm.max_iters)
+        .shards(wm.shards)
         .seed(wm.seed ^ 0xA5);
     let r = spec.solve(&mut SolverCtx::new(&s.data));
     let level1 = r.ext.two_level.as_ref().map(|ext| {
@@ -286,31 +287,55 @@ pub fn evaluate(kind: ArchKind, w: &WorkloadConfig) -> ArchReport {
             iterations = measured.stats.iterations();
         }
         ArchKind::MuchSwift => {
-            // Level 1: quarters run concurrently, each on its own module
-            // group and its own A53; wall time = slowest quarter.
+            // Level 1: P shards, each on its own PL module group.  Shards
+            // run concurrently over the A53s; with P > cores they are
+            // packed longest-first onto the cores (the coordinator's
+            // chunked schedule), so the phase wall time is the heaviest
+            // core's load — which degenerates to "slowest shard" in the
+            // paper's P = cores configuration.
             let level1 = measured.level1.as_ref().unwrap();
-            let pl_quarter = PlArray::for_workload(&cfg, k, 1);
-            let mut slowest = PhaseTime::default();
-            let mut l1_iters = 0usize;
+            let shards = level1.len().max(1);
+            let pl_shard = PlArray::for_workload(&cfg, k, 1);
+            let mut shard_times: Vec<(PhaseTime, usize)> = Vec::with_capacity(shards);
             for qstats in level1 {
                 let mut qt = PhaseTime::default();
                 for it in &qstats.iters {
-                    qt.add(&sim.filter_iteration(it, d, &pl_quarter, 1, true));
+                    qt.add(&sim.filter_iteration(it, d, &pl_shard, 1, true));
                 }
-                if qt.total_s > slowest.total_s {
-                    slowest = qt;
-                }
-                l1_iters = l1_iters.max(qstats.iterations());
+                shard_times.push((qt, qstats.iterations()));
             }
-            compute.add(&slowest);
-            // Combine: 4k x k nearest matching on one A53.
+            shard_times
+                .sort_by(|a, b| b.0.total_s.partial_cmp(&a.0.total_s).unwrap());
+            let lanes = shards.min(cfg.a53_cores.max(1));
+            let mut loads = vec![PhaseTime::default(); lanes];
+            let mut lane_iters = vec![0usize; lanes];
+            for (qt, qi) in &shard_times {
+                let lightest = (0..lanes)
+                    .min_by(|&a, &b| {
+                        loads[a].total_s.partial_cmp(&loads[b].total_s).unwrap()
+                    })
+                    .unwrap();
+                loads[lightest].add(qt);
+                lane_iters[lightest] += *qi;
+            }
+            let heaviest = loads
+                .into_iter()
+                .max_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+                .unwrap();
+            compute.add(&heaviest);
+            // A core serializes the iterations of every shard packed onto
+            // it; the phase iteration count is the busiest lane's total
+            // (for P <= cores: one shard per lane, i.e. the legacy max).
+            let l1_iters = lane_iters.into_iter().max().unwrap_or(0);
+            // Combine: hierarchical fan-in-4 tree reduce; total matching
+            // work stays O(P·k²·d), charged on one A53 (P·k anchors x k
+            // candidates each across the tree levels).
             let combine_s =
-                (4 * k * k * d) as f64 * cfg.sw_cycles_per_term / cfg.a53_freq_hz;
+                (shards * k * k * d) as f64 * cfg.sw_cycles_per_term / cfg.a53_freq_hz;
             compute.total_s += combine_s;
             compute.ps_s += combine_s;
-            // Level 2: all four module groups + all four cores on the full
-            // tree.
-            let pl_full = PlArray::for_workload(&cfg, k, 4);
+            // Level 2: all P module groups + every core on the full tree.
+            let pl_full = PlArray::for_workload(&cfg, k, shards);
             for it in &measured.stats.iters {
                 compute.add(&sim.filter_iteration(it, d, &pl_full, cfg.a53_cores, true));
             }

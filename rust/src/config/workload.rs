@@ -30,6 +30,9 @@ pub struct WorkloadConfig {
     pub max_iters: usize,
     /// RNG seed for data generation and initialization.
     pub seed: u64,
+    /// Level-1 shard count P for the two-level architecture (the paper's
+    /// 4; the shard plane and the MUCH-SWIFT cost model scale with it).
+    pub shards: usize,
 }
 
 impl Default for WorkloadConfig {
@@ -45,6 +48,7 @@ impl Default for WorkloadConfig {
             tol: 1e-6,
             max_iters: 100,
             seed: 42,
+            shards: 4,
         }
     }
 }
@@ -102,6 +106,9 @@ impl WorkloadConfig {
         if let Some(v) = doc.usize("workload.seed") {
             w.seed = v as u64;
         }
+        if let Some(v) = doc.usize("workload.shards") {
+            w.shards = v;
+        }
         w.validate()?;
         Ok(w)
     }
@@ -114,6 +121,7 @@ impl WorkloadConfig {
         anyhow::ensure!(self.true_k >= 1, "true_k must be >= 1");
         anyhow::ensure!(self.sigma >= 0.0, "sigma must be non-negative");
         anyhow::ensure!(self.max_iters >= 1, "max_iters must be >= 1");
+        anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
         Ok(())
     }
 
@@ -156,6 +164,11 @@ mod tests {
         assert_eq!(w.sigma, 0.25);
         assert_eq!(w.metric, Metric::Manhattan);
         assert_eq!(w.seed, 9);
+        assert_eq!(w.shards, 4, "shards defaults to the paper quartet");
+        let doc = Doc::parse("[workload]\nshards = 8").unwrap();
+        assert_eq!(WorkloadConfig::from_doc(&doc).unwrap().shards, 8);
+        let doc = Doc::parse("[workload]\nshards = 0").unwrap();
+        assert!(WorkloadConfig::from_doc(&doc).is_err());
     }
 
     #[test]

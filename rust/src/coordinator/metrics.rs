@@ -24,6 +24,13 @@ pub struct CoordMetrics {
     /// subscriptions (all phases) — the serving-path progress feed.
     pub observed_iters: u64,
     pub observed_dist_evals: u64,
+    /// Level-1 shard count P of the run.
+    pub shards: usize,
+    /// Per-shard level-1 iterations / distance evaluations (length P),
+    /// streamed live by the same observers — the scheduling-balance view
+    /// the aggregate counters can't show.
+    pub shard_iters: Vec<u64>,
+    pub shard_dist_evals: Vec<u64>,
 }
 
 impl CoordMetrics {
@@ -31,7 +38,8 @@ impl CoordMetrics {
         format!(
             "total {:.3}s = partition {:.3}s + trees {:.3}s + level1 {:.3}s + \
              combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
-             pjrt: {} execs / {:.3}s | observed: {} iters / {} evals",
+             pjrt: {} execs / {:.3}s | observed: {} iters / {} evals | \
+             {} shards, iters/shard {:?}",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -44,6 +52,8 @@ impl CoordMetrics {
             self.pjrt_exec_s,
             self.observed_iters,
             self.observed_dist_evals,
+            self.shards,
+            self.shard_iters,
         )
     }
 }
@@ -92,5 +102,18 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("42 jobs"));
         assert!(s.contains("total 1.000s"));
+    }
+
+    #[test]
+    fn summary_reports_per_shard_counters() {
+        let m = CoordMetrics {
+            shards: 3,
+            shard_iters: vec![5, 7, 6],
+            shard_dist_evals: vec![100, 140, 120],
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("3 shards"), "{s}");
+        assert!(s.contains("[5, 7, 6]"), "{s}");
     }
 }

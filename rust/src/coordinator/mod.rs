@@ -1,26 +1,32 @@
-//! The deployable MUCH-SWIFT system: a leader orchestrating four worker
-//! threads (the Cortex-A53 quartet) and a PL offload service (the R5-owned
-//! DMA/PL interface), executing the two-level clustering of Alg. 2 with
-//! the distance arithmetic on the PJRT-compiled Pallas kernels.
+//! The deployable MUCH-SWIFT system: a leader orchestrating P level-1
+//! workers (the Cortex-A53 quartet in the paper's configuration) and a PL
+//! offload service (the R5-owned DMA/PL interface), executing the
+//! two-level clustering of Alg. 2 with the distance arithmetic on the
+//! PJRT-compiled Pallas kernels.
 //!
 //! Phase structure (leader):
-//! 1. `Quarter`   — partition the dataset (round-robin or kd-top).
-//! 2. Level 1     — four workers, each: build kd-tree over its quarter,
-//!    then run an [`Algo::FilterBatched`] solver through the unified
-//!    [`KmeansSpec`]/[`SolverCtx`] API with its panel backend injected
-//!    (local CPU math or the offload service).
-//! 3. `Combine`   — greedy nearest-centroid merge, count-weighted.
+//! 1. `Shard`     — partition the dataset into P parts
+//!    ([`ShardPlan::build`]; round-robin, kd-top or contiguous).
+//! 2. Level 1     — P shard solves scheduled over `spec.workers` threads
+//!    (each thread pulls the next unsolved shard off a shared counter, so
+//!    P > threads chunks instead of oversubscribing).  Each solve: build
+//!    a kd-tree over the shard, then run an [`Algo::FilterBatched`]
+//!    solver through the unified [`KmeansSpec`]/[`SolverCtx`] API with
+//!    its panel backend injected (local CPU math or the offload service).
+//! 3. `Combine`   — hierarchical count-weighted nearest-centroid merge
+//!    ([`shard::combine_hierarchical`]; flat for P ≤ 4).
 //! 4. Level 2     — batched filtering over the full tree from the merged
 //!    seeds (few iterations), same solver API.
 //!
 //! Every worker subscribes an [`IterObserver`] to its solve — the
-//! coordinator streams per-iteration work counters into [`CoordMetrics`]
-//! live (and `log::trace!`s them), which is the seam a serving path would
-//! use for progress reporting.
+//! coordinator streams per-iteration (and per-shard) work counters into
+//! [`CoordMetrics`] live (and `log::trace!`s them), which is the seam a
+//! serving path would use for progress reporting.
 //!
 //! The *algorithmic* building blocks are shared with
-//! [`crate::kmeans::twolevel`] (the sequential reference), so the threaded
-//! system cannot drift from the tested semantics.
+//! [`crate::kmeans::shard`] / [`crate::kmeans::twolevel`] (the sequential
+//! reference), so the threaded system cannot drift from the tested
+//! semantics.
 
 pub mod metrics;
 pub mod offload;
@@ -32,12 +38,12 @@ use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::init::init_centroids;
 use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
+use crate::kmeans::shard::{self, ShardPlan};
 use crate::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
-use crate::kmeans::twolevel::{combine, quarter, quarter_round_robin, Partition, QUARTERS};
 use crate::kmeans::{KmeansResult, Metric, Phase, RunStats, TwoLevelExt};
 use metrics::Stopwatch;
 use offload::OffloadStats;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Everything a coordinated run produces.  The clustering result carries
@@ -91,11 +97,25 @@ impl PanelBackend for SystemPanels {
 }
 
 /// Live counters the per-worker observers stream into (Relaxed atomics —
-/// monitoring data, not synchronization).
-#[derive(Debug, Default)]
+/// monitoring data, not synchronization).  Aggregates cover every phase;
+/// the per-shard slots cover the level-1 solves only.
+#[derive(Debug)]
 struct LiveIters {
     iters: AtomicU64,
     dist_evals: AtomicU64,
+    shard_iters: Vec<AtomicU64>,
+    shard_dist_evals: Vec<AtomicU64>,
+}
+
+impl LiveIters {
+    fn new(shards: usize) -> Self {
+        Self {
+            iters: AtomicU64::new(0),
+            dist_evals: AtomicU64::new(0),
+            shard_iters: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_dist_evals: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
 }
 
 /// The coordinator's [`IterObserver`]: one per worker solve, tagging
@@ -109,6 +129,11 @@ impl IterObserver for LiveObserver {
     fn on_iter(&mut self, ev: &IterEvent<'_>) -> IterFlow {
         self.live.iters.fetch_add(1, Ordering::Relaxed);
         self.live.dist_evals.fetch_add(ev.stats.dist_evals, Ordering::Relaxed);
+        if let Phase::Level1 { quarter } = self.phase {
+            self.live.shard_iters[quarter].fetch_add(1, Ordering::Relaxed);
+            self.live.shard_dist_evals[quarter]
+                .fetch_add(ev.stats.dist_evals, Ordering::Relaxed);
+        }
         log::trace!(
             "coordinator {:?} iter {}: dist_evals={} moved={:.3e}",
             self.phase,
@@ -169,56 +194,74 @@ impl Coordinator {
 
     /// Run the full two-level clustering over `data`.  The spec's `algo`
     /// field is not consulted — this *is* the two-level system; everything
-    /// else (`k`, metric, tol, caps, init, partition, seed, workers)
-    /// drives the run exactly as it drives [`crate::kmeans::twolevel`].
+    /// else (`k`, metric, tol, caps, init, partition, shards, seed,
+    /// workers) drives the run exactly as it drives
+    /// [`crate::kmeans::twolevel`].
     pub fn run(&self, data: &Dataset, spec: &KmeansSpec) -> CoordOutcome {
         assert!(spec.k >= 1 && spec.k <= data.len(), "k out of range");
         assert!(spec.workers >= 1);
+        assert!(spec.shards >= 1, "shards must be >= 1");
         let mut sw = Stopwatch::start();
         let total_sw = Stopwatch::start();
         let mut m = CoordMetrics::default();
         // Batch/job counters for locally-computed (CPU) panels; the PJRT
         // path counts inside the offload service instead.
         let local_stats = Arc::new(OffloadStats::default());
-        let live = Arc::new(LiveIters::default());
+        let live = Arc::new(LiveIters::new(spec.shards));
         let pjrt_exec0 = self.pjrt.as_ref().map(|rt| rt.stats.executions()).unwrap_or(0);
         let pjrt_secs0 = self.pjrt.as_ref().map(|rt| rt.stats.exec_seconds()).unwrap_or(0.0);
 
-        // ---- Quarter -------------------------------------------------------
+        // ---- Shard ---------------------------------------------------------
         let full_tree = Arc::new(KdTree::build(data));
         m.tree_build_s += sw.lap();
-        let (quarters, _ids) = match spec.partition {
-            Partition::RoundRobin => quarter_round_robin(data),
-            Partition::KdTop => quarter(data, &full_tree),
-        };
+        let plan = ShardPlan::build(data, spec.shards, spec.partition, Some(&full_tree));
         m.partition_s = sw.lap();
 
-        let fallback = quarters.iter().any(|q| q.len() < spec.k);
-        let quarter_sizes: Vec<usize> = quarters.iter().map(|q| q.len()).collect();
+        let fallback = !plan.supports_k(spec.k);
+        let shard_sizes = plan.sizes();
+        m.shards = plan.shards();
 
-        // ---- Level 1 (parallel workers) -------------------------------------
+        // ---- Level 1 (P shard solves over `workers` threads) ----------------
         let (l1_centroids, l1_counts, level1_stats) = if fallback {
-            (Vec::new(), Vec::new(), vec![RunStats::default(); QUARTERS])
+            (Vec::new(), Vec::new(), vec![RunStats::default(); plan.shards()])
         } else {
             let mut results: Vec<Option<KmeansResult>> =
-                (0..quarters.len()).map(|_| None).collect();
+                (0..plan.shards()).map(|_| None).collect();
+            // Work-pulling schedule: `min(P, workers)` threads race to
+            // claim the next unsolved shard, so P > workers chunks the
+            // shards instead of oversubscribing the cores, and P <=
+            // workers degenerates to the legacy one-thread-per-quarter
+            // layout.  Per-shard solves are independent and deterministic,
+            // so which thread runs a shard never changes its result.
+            let next = AtomicUsize::new(0);
+            let threads = plan.shards().min(spec.workers);
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
-                for (qi, qdata) in quarters.iter().enumerate() {
-                    let panels = self.worker_panels(&local_stats);
-                    let mut wspec = spec
-                        .clone()
-                        .algo(Algo::FilterBatched)
-                        .seed(spec.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9));
-                    // Level-1 seeds per quarter; never inherit explicit
-                    // start centroids from the caller's spec.
-                    wspec.start = None;
-                    let live = Arc::clone(&live);
-                    handles.push((
-                        qi,
-                        scope.spawn(move || {
-                            // Sequential build: this already runs on one of
-                            // `QUARTERS` concurrent workers — nested build
+                for _ in 0..threads {
+                    // One reusable panel backend per thread (begin_pass
+                    // resets it between shards).
+                    let mut panels = self.worker_panels(&local_stats);
+                    let next = &next;
+                    let parts = &plan.parts;
+                    let live = &live;
+                    handles.push(scope.spawn(move || {
+                        let mut out: Vec<(usize, KmeansResult)> = Vec::new();
+                        loop {
+                            let qi = next.fetch_add(1, Ordering::Relaxed);
+                            if qi >= parts.len() {
+                                break;
+                            }
+                            let qdata = &parts[qi];
+                            let mut wspec = spec
+                                .clone()
+                                .algo(Algo::FilterBatched)
+                                .seed(shard::shard_seed(spec.seed, qi));
+                            // Level-1 seeds per shard; never inherit
+                            // explicit start centroids from the caller's
+                            // spec.
+                            wspec.start = None;
+                            // Sequential build: this already runs on one
+                            // of the concurrent workers — nested build
                             // threads would oversubscribe the cores.
                             let tree = Arc::new(KdTree::build_par(
                                 qdata,
@@ -227,17 +270,20 @@ impl Coordinator {
                             ));
                             let mut ctx = SolverCtx::new(qdata)
                                 .with_tree(tree)
-                                .with_backend(panels)
+                                .with_backend(&mut panels)
                                 .with_observer(LiveObserver {
-                                    live,
+                                    live: Arc::clone(live),
                                     phase: Phase::Level1 { quarter: qi },
                                 });
-                            wspec.solve(&mut ctx)
-                        }),
-                    ));
+                            out.push((qi, wspec.solve(&mut ctx)));
+                        }
+                        out
+                    }));
                 }
-                for (qi, h) in handles {
-                    results[qi] = Some(h.join().expect("worker panicked"));
+                for h in handles {
+                    for (qi, r) in h.join().expect("worker panicked") {
+                        results[qi] = Some(r);
+                    }
                 }
             });
             let results: Vec<KmeansResult> = results.into_iter().map(Option::unwrap).collect();
@@ -252,7 +298,7 @@ impl Coordinator {
         let merged = if fallback {
             init_centroids(data, spec.k, spec.init, spec.metric, spec.seed)
         } else {
-            combine(&l1_centroids, &l1_counts, spec.metric)
+            shard::combine_hierarchical(&l1_centroids, &l1_counts, spec.metric)
         };
         m.combine_s = sw.lap();
 
@@ -290,6 +336,16 @@ impl Coordinator {
         m.offload_jobs = jobs_served;
         m.observed_iters = live.iters.load(Ordering::Relaxed);
         m.observed_dist_evals = live.dist_evals.load(Ordering::Relaxed);
+        m.shard_iters = live
+            .shard_iters
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
+        m.shard_dist_evals = live
+            .shard_dist_evals
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
         if let Some(rt) = &self.pjrt {
             m.pjrt_executions = rt.stats.executions() - pjrt_exec0;
             m.pjrt_exec_s = rt.stats.exec_seconds() - pjrt_secs0;
@@ -297,7 +353,7 @@ impl Coordinator {
 
         result.ext.two_level = Some(Box::new(TwoLevelExt {
             level1_stats,
-            quarter_sizes,
+            quarter_sizes: shard_sizes,
             merged_centroids: merged,
         }));
         CoordOutcome { result, metrics: m }
@@ -308,7 +364,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::data::synthetic::generate_params;
-    use crate::kmeans::twolevel::{self, TwoLevelOpts};
+    use crate::kmeans::twolevel::{self, Partition, TwoLevelOpts};
 
     #[test]
     fn coordinator_matches_sequential_reference() {
@@ -350,6 +406,57 @@ mod tests {
             + c.result.stats.iterations() as u64;
         assert_eq!(c.metrics.observed_iters, expect_iters);
         assert!(c.metrics.observed_dist_evals > 0);
+        // Per-shard counters line up with the per-quarter stats.
+        assert_eq!(c.metrics.shards, 4);
+        assert_eq!(
+            c.metrics.shard_iters,
+            ce.level1_stats.iter().map(|s| s.iterations() as u64).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            c.metrics.shard_dist_evals,
+            ce.level1_stats.iter().map(|s| s.total_dist_evals()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn shards_beyond_workers_are_chunked_and_deterministic() {
+        // P=8 over 2 worker threads must equal the sequential 8-shard
+        // reference (scheduling never changes per-shard math) and P=8 over
+        // 8 threads must equal P=8 over 2 threads.
+        let s = generate_params(4000, 3, 5, 0.15, 2.0, 51);
+        let coord = Coordinator::new(Backend::Cpu);
+        let spec8x2 = KmeansSpec::two_level(5).seed(9).shards(8).workers(2);
+        let a = coord.run(&s.data, &spec8x2);
+        let b = coord.run(&s.data, &spec8x2.clone().workers(8));
+        assert_eq!(a.result.centroids, b.result.centroids);
+        assert_eq!(a.result.assignments, b.result.assignments);
+        assert_eq!(a.metrics.shard_iters, b.metrics.shard_iters);
+        let seq = twolevel::run(
+            &s.data,
+            5,
+            &TwoLevelOpts { seed: 9, shards: 8, ..Default::default() },
+        );
+        let ae = a.result.ext.two_level.as_ref().unwrap();
+        let se = seq.ext.two_level.as_ref().unwrap();
+        assert_eq!(ae.quarter_sizes, se.quarter_sizes);
+        assert_eq!(
+            ae.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+            se.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+        );
+        assert_eq!(a.metrics.shards, 8);
+        assert_eq!(a.metrics.shard_iters.len(), 8);
+        assert!(a.metrics.shard_iters.iter().all(|&i| i > 0));
+    }
+
+    #[test]
+    fn single_shard_runs() {
+        let s = generate_params(1500, 2, 3, 0.2, 1.0, 5);
+        let coord = Coordinator::new(Backend::Cpu);
+        let c = coord.run(&s.data, &KmeansSpec::two_level(3).shards(1));
+        assert_eq!(c.result.assignments.len(), 1500);
+        let ext = c.result.ext.two_level.as_ref().unwrap();
+        assert_eq!(ext.quarter_sizes, vec![1500]);
+        assert_eq!(c.metrics.shards, 1);
     }
 
     #[test]

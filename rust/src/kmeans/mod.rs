@@ -36,12 +36,14 @@ pub mod metrics;
 pub mod model;
 pub mod panel;
 pub mod predict;
+pub mod shard;
 pub mod solver;
 pub mod twolevel;
 
 pub use metrics::Metric;
 pub use model::{KmeansModel, TrainStats, MODEL_FORMAT_VERSION};
 pub use predict::Predictor;
+pub use shard::{Partition, ShardPlan};
 pub use solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, Solver, SolverCtx};
 
 use crate::data::Dataset;
@@ -187,11 +189,15 @@ impl RunStats {
 /// (the result's own `stats` are the level-2 refinement's).  Replaces the
 /// old parallel `TwoLevelResult` type: every solver now returns the same
 /// result shape, multi-phase solvers just carry more in `ext`.
+///
+/// Since the shard-plane refactor these vectors are per-*shard* with
+/// length P ([`KmeansSpec::shards`](solver::KmeansSpec)); the field names
+/// keep the paper's P = 4 "quarter" vocabulary.
 #[derive(Clone, Debug)]
 pub struct TwoLevelExt {
-    /// Per-quarter level-1 statistics (these ran independently).
+    /// Per-shard level-1 statistics (these ran independently).
     pub level1_stats: Vec<RunStats>,
-    /// Row count of each quarter.
+    /// Row count of each shard.
     pub quarter_sizes: Vec<usize>,
     /// The merged (post-`Combine`) centroids that seeded level 2.
     pub merged_centroids: Dataset,

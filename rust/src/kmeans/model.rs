@@ -197,6 +197,7 @@ fn spec_to_json(spec: &KmeansSpec) -> Json {
         ("level2_max_iters", Json::num(spec.level2_max_iters as f64)),
         ("init", Json::str(spec.init.name())),
         ("partition", Json::str(spec.partition.name())),
+        ("shards", Json::num(spec.shards as f64)),
         // Stringly so full-width u64 seeds survive the f64 number path.
         ("seed", Json::str(spec.seed.to_string())),
         ("workers", Json::num(spec.workers as f64)),
@@ -222,6 +223,15 @@ fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
         .req("tol")?
         .as_f64()
         .ok_or_else(|| anyhow::anyhow!("spec field `tol` must be a number"))? as f32;
+    // `shards` is additive (format v1 stayed): files written before the
+    // shard plane default to the paper's quartet.
+    let shards = match j.get("shards") {
+        Some(v) => v
+            .as_usize()
+            .filter(|&p| p >= 1)
+            .ok_or_else(|| anyhow::anyhow!("spec field `shards` must be a positive integer"))?,
+        None => crate::kmeans::shard::DEFAULT_SHARDS,
+    };
     Ok(KmeansSpec::new(req_usize("k")?)
         .algo(req_str("algo")?.parse()?)
         .metric(req_str("metric")?.parse()?)
@@ -230,6 +240,7 @@ fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
         .level2_max_iters(req_usize("level2_max_iters")?)
         .init(req_str("init")?.parse()?)
         .partition(req_str("partition")?.parse()?)
+        .shards(shards)
         .seed(seed)
         .workers(req_usize("workers")?)
         .track_cost(j.req("track_cost")?.as_bool().unwrap_or(false)))
@@ -333,9 +344,27 @@ mod tests {
             assert_eq!(model.spec.tol, back.spec.tol);
             assert_eq!(model.spec.init, back.spec.init);
             assert_eq!(model.spec.partition, back.spec.partition);
+            assert_eq!(model.spec.shards, back.spec.shards);
             assert_eq!(model.spec.seed, back.spec.seed);
             assert_eq!(model.spec.workers, back.spec.workers);
         }
+    }
+
+    #[test]
+    fn shards_round_trips_and_defaults_when_absent() {
+        let (_, mut model) = fitted(Metric::Euclid);
+        model.spec.shards = 16;
+        let back =
+            KmeansModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.spec.shards, 16);
+        // Pre-shard-plane documents carry no `shards` key: default to 4.
+        let doc = model.to_json().to_string().replace("\"shards\":16,", "");
+        assert!(!doc.contains("shards"));
+        let back = KmeansModel::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back.spec.shards, 4);
+        // Zero shards is rejected, not deferred to a later panic.
+        let doc = model.to_json().to_string().replace("\"shards\":16,", "\"shards\":0,");
+        assert!(KmeansModel::from_json(&Json::parse(&doc).unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! The shard plane: P-way partitioning and hierarchical centroid combine.
+//!
+//! The paper "evolves the SW to naturally divide the classification into
+//! smaller data sets, **based on the number of available cores**" — the
+//! quartet of the ZCU102 is one instance, not the architecture.  This
+//! module is the generalization: a [`ShardPlan`] describes P partitions of
+//! the dataset, per-shard solves run independently (the level-1 phase),
+//! and [`combine_hierarchical`] tree-reduces the P×k level-1 centroids
+//! back to k with the count-weighted nearest-centroid merge.  Everything
+//! above it — [`super::twolevel`] (the sequential P=4 paper reference),
+//! the [`crate::coordinator`] (threaded system), the `arch`/`hw` cost
+//! models and the serving layer — builds on this plane, which is also the
+//! seam any future scale-out direction (remote shards, PJRT shard
+//! backends) plugs into.
+//!
+//! Partition strategies ([`Partition`]):
+//!
+//! - [`Partition::RoundRobin`] (default): rows dealt out modulo P, so
+//!   every shard is an i.i.d. sample of the full distribution and the
+//!   per-shard centroid sets are P noisy estimates of the *same* k
+//!   centers — what makes the merge a strong level-2 seed.
+//! - [`Partition::KdTop`]: the P-node frontier of the full kd-tree
+//!   (generalizing the paper's "four grandchild subtrees" reading to any
+//!   P): the frontier is expanded level by level until it holds ≥ P
+//!   nodes, then adjacent smallest neighbors are merged back down to
+//!   exactly P spatially-coherent shards.  For P = 4 this reproduces the
+//!   legacy quartering bit for bit.
+//! - [`Partition::Contiguous`]: plain contiguous row ranges — the
+//!   cheapest split (no gather), kept for streaming/ingest-ordered data.
+//!
+//! Combine: [`combine_level`] is the paper's flat greedy merge (one
+//! cluster from each shard per group, count-weighted averaging), extended
+//! to also return the merged counts.  [`combine_hierarchical`] reduces P
+//! sets with a fan-in-[`COMBINE_FAN_IN`] tree of `combine_level` calls, so
+//! P ≫ 4 costs O(P·k²·d) instead of one O(P²·k²) greedy pass over an
+//! ever-growing used-set; for P ≤ [`COMBINE_FAN_IN`] it *is* a single
+//! flat pass, bitwise identical to the legacy `twolevel::combine`.
+
+use super::Metric;
+use crate::data::Dataset;
+use crate::kdtree::KdTree;
+
+/// Default shard count — the paper's 4 (one per ZCU102 Cortex-A53).
+pub const DEFAULT_SHARDS: usize = 4;
+
+/// Fan-in of the hierarchical combine tree: up to this many centroid sets
+/// are merged per `combine_level` call.  4 keeps the P ≤ 4 paper
+/// configuration on the exact legacy flat-combine path.
+pub const COMBINE_FAN_IN: usize = 4;
+
+/// How a [`ShardPlan`] splits the dataset (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Deal rows out modulo P (i.i.d. shards; default).
+    RoundRobin,
+    /// The P-node frontier of the full kd-tree (spatial shards).
+    KdTop,
+    /// Contiguous row ranges (no gather; ingest-ordered shards).
+    Contiguous,
+}
+
+impl Partition {
+    /// Canonical name (round-trips through [`FromStr`](std::str::FromStr)
+    /// — the model artifact serializes specs by these names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Partition::RoundRobin => "round-robin",
+            Partition::KdTop => "kd-top",
+            Partition::Contiguous => "contiguous",
+        }
+    }
+
+    pub fn all() -> &'static [Partition] {
+        &[Partition::RoundRobin, Partition::KdTop, Partition::Contiguous]
+    }
+}
+
+impl std::str::FromStr for Partition {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "round-robin" | "roundrobin" => Ok(Partition::RoundRobin),
+            "kd-top" | "kdtop" => Ok(Partition::KdTop),
+            "contiguous" => Ok(Partition::Contiguous),
+            other => {
+                anyhow::bail!("unknown partition `{other}` (round-robin|kd-top|contiguous)")
+            }
+        }
+    }
+}
+
+/// Per-shard seed derivation shared by every executor of the plan (the
+/// sequential reference and the threaded coordinator must agree so their
+/// level-1 solves are bitwise comparable).
+#[inline]
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed ^ (shard as u64).wrapping_mul(0x9E37_79B9)
+}
+
+/// P partitions of a dataset: the shard datasets plus, for each shard, the
+/// original row index of every shard row (so labels can be scattered back).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub strategy: Partition,
+    /// The shard datasets, `parts.len() == P`.
+    pub parts: Vec<Dataset>,
+    /// Original row ids per shard (`ids[s][i]` is the dataset row of
+    /// `parts[s].point(i)`).
+    pub ids: Vec<Vec<u32>>,
+}
+
+impl ShardPlan {
+    /// Partition `data` into `shards` parts.  [`Partition::KdTop`] uses
+    /// `tree` when given (the solver ctx's cached full tree) and builds
+    /// one otherwise; the other strategies never touch it.
+    pub fn build(
+        data: &Dataset,
+        shards: usize,
+        strategy: Partition,
+        tree: Option<&KdTree>,
+    ) -> Self {
+        assert!(shards >= 1, "shard plan needs >= 1 shard");
+        let (parts, ids) = match strategy {
+            Partition::RoundRobin => plan_round_robin(data, shards),
+            Partition::Contiguous => plan_contiguous(data, shards),
+            Partition::KdTop => match tree {
+                Some(t) => plan_kd_frontier(data, t, shards),
+                None => {
+                    let t = KdTree::build(data);
+                    plan_kd_frontier(data, &t, shards)
+                }
+            },
+        };
+        Self {
+            strategy,
+            parts,
+            ids,
+        }
+    }
+
+    /// Number of shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Row count of each shard.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.len()).collect()
+    }
+
+    /// Can every shard host `k` clusters?  When not, a two-level run must
+    /// fall back to a plain single-level solve.
+    pub fn supports_k(&self, k: usize) -> bool {
+        self.parts.iter().all(|p| p.len() >= k)
+    }
+}
+
+/// Round-robin plan: deal rows out modulo `shards`.
+pub fn plan_round_robin(data: &Dataset, shards: usize) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    assert!(shards >= 1);
+    let mut ids: Vec<Vec<u32>> = vec![Vec::with_capacity(data.len() / shards + 1); shards];
+    for i in 0..data.len() {
+        ids[i % shards].push(i as u32);
+    }
+    let datasets = ids
+        .iter()
+        .map(|rows| {
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            data.gather(&rows_usize)
+        })
+        .collect();
+    (datasets, ids)
+}
+
+/// Contiguous plan: `shards` row ranges whose sizes differ by at most one.
+pub fn plan_contiguous(data: &Dataset, shards: usize) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    assert!(shards >= 1);
+    let (parts, offsets) = data.split_contiguous(shards);
+    let ids = offsets
+        .iter()
+        .zip(parts.iter())
+        .map(|(&o, p)| (o as u32..(o + p.len()) as u32).collect())
+        .collect();
+    (parts, ids)
+}
+
+/// kd-frontier plan: expand the tree frontier level by level until it
+/// holds at least `shards` nodes (leaves stay), then merge adjacent
+/// smallest neighbors back down to exactly `shards` parts.  Falls back to
+/// [`plan_contiguous`] when the tree is too shallow to yield `shards`
+/// frontier nodes (tiny or degenerate data).
+pub fn plan_kd_frontier(
+    data: &Dataset,
+    tree: &KdTree,
+    shards: usize,
+) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    assert!(shards >= 1);
+    // ceil(log2(shards)) frontier expansions: enough levels for `shards`
+    // nodes if nothing bottoms out early.
+    let rounds = shards.next_power_of_two().trailing_zeros();
+    let mut fronts: Vec<u32> = vec![0];
+    for _ in 0..rounds {
+        let mut next = Vec::with_capacity(fronts.len() * 2);
+        for &ni in &fronts {
+            let n = &tree.nodes[ni as usize];
+            if n.is_leaf() {
+                next.push(ni);
+            } else {
+                next.push(n.left);
+                next.push(n.right);
+            }
+        }
+        fronts = next;
+    }
+
+    if fronts.len() < shards {
+        // Degenerate: pad by splitting contiguous ranges instead.
+        return plan_contiguous(data, shards);
+    }
+
+    // Materialize the frontier's row-id lists, then (for non-power-of-two
+    // P) fold adjacent smallest neighbors together until exactly P remain —
+    // neighbors on the frontier are spatial siblings, so merged shards stay
+    // coherent.  For P a power of two (the P = 4 legacy case included)
+    // `fronts.len() == shards` already and no folding happens.
+    let mut ids: Vec<Vec<u32>> = fronts
+        .iter()
+        .map(|&ni| tree.node_points(&tree.nodes[ni as usize]).to_vec())
+        .collect();
+    while ids.len() > shards {
+        let mut best = 0usize;
+        let mut best_len = usize::MAX;
+        for i in 0..ids.len() - 1 {
+            let len = ids[i].len() + ids[i + 1].len();
+            if len < best_len {
+                best_len = len;
+                best = i;
+            }
+        }
+        let right = ids.remove(best + 1);
+        ids[best].extend_from_slice(&right);
+    }
+
+    let datasets = ids
+        .iter()
+        .map(|rows| {
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            data.gather(&rows_usize)
+        })
+        .collect();
+    (datasets, ids)
+}
+
+/// One flat `Combine` pass: merge up to [`COMBINE_FAN_IN`]-ish sets of k
+/// centroids down to k by greedy nearest matching (set 0's centroids
+/// anchor the groups) with count-weighted averaging — the paper's
+/// "combine a cluster in each sub-group with ... the nearest centroids
+/// ... then update".  Also returns each merged centroid's total member
+/// count, which is what lets [`combine_hierarchical`] chain passes
+/// without losing the weighting.
+pub fn combine_level(
+    centroids: &[Dataset],
+    counts: &[Vec<usize>],
+    metric: Metric,
+) -> (Dataset, Vec<usize>) {
+    let q = centroids.len();
+    assert!(q >= 1);
+    let k = centroids[0].len();
+    let d = centroids[0].dims();
+    assert!(counts.iter().zip(centroids).all(|(c, ds)| c.len() == ds.len()));
+
+    let mut out = Vec::with_capacity(k * d);
+    let mut out_counts = Vec::with_capacity(k);
+    // Used-markers per non-anchor set.
+    let mut used: Vec<Vec<bool>> = centroids.iter().map(|c| vec![false; c.len()]).collect();
+
+    for a in 0..k {
+        let anchor = centroids[0].point(a);
+        let mut wsum: Vec<f64> = anchor
+            .iter()
+            .map(|&v| v as f64 * counts[0][a] as f64)
+            .collect();
+        let mut wtot = counts[0][a] as f64;
+        let mut ctot = counts[0][a];
+        for qi in 1..q {
+            // Nearest unused centroid of set qi to the anchor.
+            let mut best: Option<(usize, f32)> = None;
+            for c in 0..centroids[qi].len() {
+                if used[qi][c] {
+                    continue;
+                }
+                let dd = metric.dist(anchor, centroids[qi].point(c));
+                if best.map_or(true, |(_, bd)| dd < bd) {
+                    best = Some((c, dd));
+                }
+            }
+            if let Some((c, _)) = best {
+                used[qi][c] = true;
+                let w = counts[qi][c] as f64;
+                for (j, &v) in centroids[qi].point(c).iter().enumerate() {
+                    wsum[j] += v as f64 * w;
+                }
+                wtot += w;
+                ctot += counts[qi][c];
+            }
+        }
+        if wtot <= 0.0 {
+            out.extend_from_slice(anchor);
+        } else {
+            out.extend(wsum.iter().map(|&v| (v / wtot) as f32));
+        }
+        out_counts.push(ctot);
+    }
+    (Dataset::from_flat(k, d, out), out_counts)
+}
+
+/// Hierarchical `Combine`: tree-reduce P sets of k centroids to k with a
+/// fan-in-[`COMBINE_FAN_IN`] tree of [`combine_level`] passes, carrying
+/// merged counts between levels.  For P ≤ [`COMBINE_FAN_IN`] this is one
+/// flat pass — bitwise identical to the legacy 4-way
+/// [`super::twolevel::combine`]; for larger P the total matching work is
+/// O(P·k²·d) instead of the O(P²·k²) a single ever-wider greedy pass
+/// would cost.
+pub fn combine_hierarchical(
+    centroids: &[Dataset],
+    counts: &[Vec<usize>],
+    metric: Metric,
+) -> Dataset {
+    assert!(!centroids.is_empty());
+    assert_eq!(centroids.len(), counts.len());
+    let mut sets: Vec<Dataset> = centroids.to_vec();
+    let mut cnts: Vec<Vec<usize>> = counts.to_vec();
+    while sets.len() > COMBINE_FAN_IN {
+        let groups = sets.len().div_ceil(COMBINE_FAN_IN);
+        let mut next_sets = Vec::with_capacity(groups);
+        let mut next_cnts = Vec::with_capacity(groups);
+        for start in (0..sets.len()).step_by(COMBINE_FAN_IN) {
+            let end = (start + COMBINE_FAN_IN).min(sets.len());
+            let (merged, merged_counts) =
+                combine_level(&sets[start..end], &cnts[start..end], metric);
+            next_sets.push(merged);
+            next_cnts.push(merged_counts);
+        }
+        sets = next_sets;
+        cnts = next_cnts;
+    }
+    combine_level(&sets, &cnts, metric).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+
+    fn check_partition(parts: &[Dataset], ids: &[Vec<u32>], data: &Dataset, p: usize) {
+        assert_eq!(parts.len(), p);
+        assert_eq!(ids.len(), p);
+        let total: usize = parts.iter().map(|q| q.len()).sum();
+        assert_eq!(total, data.len());
+        let mut all: Vec<u32> = ids.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..data.len() as u32).collect::<Vec<u32>>());
+        for (part, id) in parts.iter().zip(ids.iter()) {
+            for (row, &orig) in id.iter().enumerate() {
+                assert_eq!(part.point(row), data.point(orig as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn every_strategy_partitions_everything_at_many_p() {
+        let s = generate_params(1003, 3, 4, 0.3, 1.0, 11);
+        let tree = KdTree::build(&s.data);
+        for p in [1usize, 2, 3, 4, 5, 7, 8, 16] {
+            for strat in Partition::all() {
+                let plan = ShardPlan::build(&s.data, p, *strat, Some(&tree));
+                assert_eq!(plan.strategy, *strat);
+                assert_eq!(plan.shards(), p, "{strat:?} P={p}");
+                check_partition(&plan.parts, &plan.ids, &s.data, p);
+                assert_eq!(plan.sizes().iter().sum::<usize>(), 1003);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_shards_are_balanced() {
+        let s = generate_params(1000, 2, 2, 0.2, 1.0, 3);
+        let plan = ShardPlan::build(&s.data, 8, Partition::RoundRobin, None);
+        assert!(plan.sizes().iter().all(|&n| n == 125));
+        // Row i lands on shard i % P at position i / P.
+        assert_eq!(plan.ids[3][2], 3 + 2 * 8);
+    }
+
+    #[test]
+    fn contiguous_shards_are_ranges() {
+        let s = generate_params(10, 2, 1, 0.2, 1.0, 5);
+        let plan = ShardPlan::build(&s.data, 3, Partition::Contiguous, None);
+        assert_eq!(plan.sizes(), vec![4, 3, 3]);
+        assert_eq!(plan.ids[0], vec![0, 1, 2, 3]);
+        assert_eq!(plan.ids[1], vec![4, 5, 6]);
+        assert_eq!(plan.ids[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn kd_frontier_shrinks_extents() {
+        // Spatial coherence: most shards span a smaller extent than the
+        // full data (same invariant the legacy quartering test pinned).
+        let s = generate_params(2000, 3, 4, 0.3, 1.0, 11);
+        let tree = KdTree::build(&s.data);
+        let (full_min, full_max) = s.data.bounds();
+        let full_ext: f32 = full_min
+            .iter()
+            .zip(&full_max)
+            .map(|(a, b)| b - a)
+            .fold(0.0, f32::max);
+        for p in [4usize, 6, 8] {
+            let plan = ShardPlan::build(&s.data, p, Partition::KdTop, Some(&tree));
+            let mut smaller = 0;
+            for part in &plan.parts {
+                let (mn, mx) = part.bounds();
+                let ext: f32 = mn.iter().zip(&mx).map(|(a, b)| b - a).fold(0.0, f32::max);
+                if ext < full_ext * 0.95 {
+                    smaller += 1;
+                }
+            }
+            assert!(smaller >= p / 2, "P={p}: only {smaller} shards shrank");
+        }
+    }
+
+    #[test]
+    fn kd_frontier_degenerate_small_data_falls_back() {
+        let s = generate_params(3, 2, 1, 0.1, 1.0, 1);
+        let tree = KdTree::build(&s.data);
+        let plan = ShardPlan::build(&s.data, 4, Partition::KdTop, Some(&tree));
+        check_partition(&plan.parts, &plan.ids, &s.data, 4);
+        // 3 points over 4 shards: someone is empty, so k >= 1 two-level
+        // runs must fall back.
+        assert!(!plan.supports_k(1));
+    }
+
+    #[test]
+    fn shard_seed_matches_legacy_quarter_seeding() {
+        // The coordinator/sequential xor recipe, verbatim.
+        for qi in 0..8usize {
+            assert_eq!(
+                shard_seed(42, qi),
+                42 ^ (qi as u64).wrapping_mul(0x9E37_79B9)
+            );
+        }
+        assert_eq!(shard_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn combine_level_weighted_average_and_counts() {
+        let c0 = Dataset::from_flat(2, 1, vec![0.0, 10.0]);
+        let c1 = Dataset::from_flat(2, 1, vec![2.0, 12.0]);
+        let (merged, counts) =
+            combine_level(&[c0, c1], &[vec![1, 3], vec![3, 1]], Metric::Euclid);
+        // group 0: (0*1 + 2*3)/4 = 1.5 ; group 1: (10*3 + 12*1)/4 = 10.5
+        assert_eq!(merged.point(0), &[1.5]);
+        assert_eq!(merged.point(1), &[10.5]);
+        assert_eq!(counts, vec![4, 4]);
+    }
+
+    #[test]
+    fn combine_hierarchical_is_flat_combine_up_to_fan_in() {
+        let sets: Vec<Dataset> = (0..COMBINE_FAN_IN)
+            .map(|i| {
+                Dataset::from_flat(3, 2, (0..6).map(|j| (i * 7 + j) as f32 * 0.31).collect())
+            })
+            .collect();
+        let counts: Vec<Vec<usize>> = (0..COMBINE_FAN_IN)
+            .map(|i| vec![i + 1, 2 * i + 1, 3])
+            .collect();
+        for take in 1..=COMBINE_FAN_IN {
+            let flat = combine_level(&sets[..take], &counts[..take], Metric::Euclid).0;
+            let tree = combine_hierarchical(&sets[..take], &counts[..take], Metric::Euclid);
+            assert_eq!(flat, tree, "P={take} must be the flat greedy pass, bitwise");
+        }
+    }
+
+    #[test]
+    fn combine_hierarchical_composes_exactly_like_manual_chunking() {
+        // P=16 reduces as four fan-in-4 groups then one final pass; pin the
+        // reduction order so the tree shape is part of the contract.
+        let sets: Vec<Dataset> = (0..16)
+            .map(|i| {
+                Dataset::from_flat(
+                    2,
+                    2,
+                    vec![i as f32, -(i as f32), 100.0 + i as f32, 50.0 - i as f32],
+                )
+            })
+            .collect();
+        let counts: Vec<Vec<usize>> = (0..16).map(|i| vec![i + 1, 17 - i]).collect();
+        let got = combine_hierarchical(&sets, &counts, Metric::Euclid);
+        let mut mids = Vec::new();
+        let mut midc = Vec::new();
+        for g in 0..4 {
+            let (m, c) =
+                combine_level(&sets[g * 4..g * 4 + 4], &counts[g * 4..g * 4 + 4], Metric::Euclid);
+            mids.push(m);
+            midc.push(c);
+        }
+        let want = combine_level(&mids, &midc, Metric::Euclid).0;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn combine_recovers_planted_centers_at_large_p() {
+        // 16 noisy estimates of the same 3 centers; the hierarchical merge
+        // should land near the truth.
+        let centers = [[0.0f32, 0.0], [10.0, 10.0], [-10.0, 5.0]];
+        let mut sets = Vec::new();
+        let mut counts = Vec::new();
+        for i in 0..16usize {
+            let mut flat = Vec::new();
+            for (ci, c) in centers.iter().enumerate() {
+                // Small deterministic jitter, different per set/center.
+                let jx = ((i * 31 + ci * 7) % 13) as f32 * 0.01 - 0.06;
+                let jy = ((i * 17 + ci * 11) % 13) as f32 * 0.01 - 0.06;
+                flat.push(c[0] + jx);
+                flat.push(c[1] + jy);
+            }
+            sets.push(Dataset::from_flat(3, 2, flat));
+            counts.push(vec![50, 60, 70]);
+        }
+        let merged = combine_hierarchical(&sets, &counts, Metric::Euclid);
+        for c in &centers {
+            let best = merged
+                .iter()
+                .map(|m| Metric::Euclid.dist(m, c))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.01, "center {c:?} missed (best sq dist {best})");
+        }
+    }
+
+    #[test]
+    fn combine_empty_cluster_keeps_anchor() {
+        let c0 = Dataset::from_flat(1, 1, vec![3.5]);
+        let c1 = Dataset::from_flat(1, 1, vec![9.0]);
+        let (merged, counts) =
+            combine_level(&[c0, c1], &[vec![0], vec![0]], Metric::Euclid);
+        assert_eq!(merged.point(0), &[3.5]);
+        assert_eq!(counts, vec![0]);
+    }
+
+    #[test]
+    fn partition_names_round_trip() {
+        for p in Partition::all() {
+            assert_eq!(p.name().parse::<Partition>().unwrap(), *p);
+        }
+        assert!("octants".parse::<Partition>().is_err());
+    }
+}

@@ -133,8 +133,12 @@ pub struct KmeansSpec {
     /// Iteration cap for the two-level refinement phase.
     pub level2_max_iters: usize,
     pub init: Init,
-    /// Quartering strategy ([`Algo::TwoLevel`] only).
+    /// Shard partition strategy ([`Algo::TwoLevel`] only).
     pub partition: Partition,
+    /// Level-1 shard count P ([`Algo::TwoLevel`] only; the paper's 4 by
+    /// default).  The shard plane ([`super::shard`]) partitions the data
+    /// P ways and tree-reduces the P×k level-1 centroids back to k.
+    pub shards: usize,
     pub seed: u64,
     /// Worker threads for the default panel backend (and the coordinator's
     /// level-2 fan-out).
@@ -159,6 +163,7 @@ impl KmeansSpec {
             level2_max_iters: 100,
             init: Init::UniformSample,
             partition: Partition::RoundRobin,
+            shards: QUARTERS,
             seed: 1,
             workers: QUARTERS,
             track_cost: false,
@@ -206,6 +211,14 @@ impl KmeansSpec {
         self
     }
 
+    /// Level-1 shard count P for [`Algo::TwoLevel`] (validated ≥ 1 by
+    /// [`validate`](Self::validate); shards that end up smaller than `k`
+    /// trigger the plain-filtering fallback).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -237,6 +250,7 @@ impl KmeansSpec {
             data.len()
         );
         assert!(self.max_iters >= 1, "max_iters must be >= 1");
+        assert!(self.shards >= 1, "shards must be >= 1");
         if let Some(start) = &self.start {
             assert_eq!(start.len(), self.k, "start centroids must have k rows");
             assert_eq!(start.dims(), data.dims(), "start centroid dims mismatch");
@@ -619,6 +633,7 @@ impl Solver for TwoLevelSolver {
             init: spec.init,
             partition: spec.partition,
             seed: spec.seed,
+            shards: spec.shards,
         };
         let backend: Option<&mut dyn PanelBackend> = match ctx.backend.as_mut() {
             Some(b) => Some(&mut **b),
@@ -667,6 +682,7 @@ mod tests {
             .level2_max_iters(3)
             .init(Init::KmeansPlusPlus)
             .partition(Partition::KdTop)
+            .shards(6)
             .seed(99)
             .workers(2)
             .track_cost(true);
@@ -678,6 +694,7 @@ mod tests {
         assert_eq!(spec.level2_max_iters, 3);
         assert_eq!(spec.init, Init::KmeansPlusPlus);
         assert_eq!(spec.partition, Partition::KdTop);
+        assert_eq!(spec.shards, 6);
         assert_eq!(spec.seed, 99);
         assert_eq!(spec.workers, 2);
         assert!(spec.track_cost);
@@ -823,5 +840,38 @@ mod tests {
     fn oversized_k_is_rejected() {
         let s = generate_params(10, 2, 2, 0.2, 1.0, 1);
         let _ = KmeansSpec::new(11).solve(&mut SolverCtx::new(&s.data));
+    }
+
+    #[test]
+    #[should_panic(expected = "shards must be >= 1")]
+    fn zero_shards_is_rejected() {
+        let s = generate_params(100, 2, 2, 0.2, 1.0, 1);
+        let _ = KmeansSpec::two_level(2).shards(0).solve(&mut SolverCtx::new(&s.data));
+    }
+
+    #[test]
+    fn spec_defaults_to_the_paper_quartet() {
+        assert_eq!(KmeansSpec::new(3).shards, QUARTERS);
+    }
+
+    #[test]
+    fn two_level_solver_honors_shards() {
+        let s = generate_params(2400, 3, 4, 0.2, 2.0, 21);
+        let r = KmeansSpec::two_level(4)
+            .shards(8)
+            .seed(2)
+            .solve(&mut SolverCtx::new(&s.data));
+        let ext = r.ext.two_level.as_ref().unwrap();
+        assert_eq!(ext.level1_stats.len(), 8);
+        assert_eq!(ext.quarter_sizes, vec![300; 8]);
+        // shards(P) with P > n/k collapses to the plain-filtering fallback
+        // rather than failing.
+        let r = KmeansSpec::two_level(4)
+            .shards(2400)
+            .seed(2)
+            .solve(&mut SolverCtx::new(&s.data));
+        assert_eq!(r.assignments.len(), 2400);
+        let ext = r.ext.two_level.as_ref().unwrap();
+        assert!(ext.level1_stats.iter().all(|st| st.iterations() == 0));
     }
 }

@@ -1,32 +1,21 @@
-//! The paper's contribution: two-level k-clustering over 4 parallel
-//! kd-trees (Alg. 2).
+//! The paper's contribution: two-level k-clustering over P parallel
+//! kd-trees (Alg. 2; P = 4 in the paper — one per ZCU102 Cortex-A53).
 //!
-//! Level 1 — `Quarter`: the dataset is split four ways.  Two strategies:
+//! Since the shard-plane refactor this module is a *thin layer over
+//! [`super::shard`]*: partitioning is a [`ShardPlan`], the merge is
+//! [`shard::combine_hierarchical`], and what remains here is the phase
+//! sequencing (level 1 → combine → level 2) plus the legacy 4-way entry
+//! points kept as the sequential paper reference.
 //!
-//! - [`Partition::RoundRobin`] (default): rows are dealt out modulo 4, so
-//!   each quarter is an i.i.d. sample of the full distribution.  The
-//!   paper's `Combine` step ("combine a cluster in each sub-group with
-//!   three clusters in other sub-groups with the nearest centroids") is
-//!   statistically consistent under this split: the four per-quarter
-//!   centroid sets are four noisy estimates of the *same* k centers, and
-//!   nearest-matching + count-weighted averaging de-noises them — which is
-//!   what makes the paper's "level 2 converges in very few iterations"
-//!   claim hold.
-//! - [`Partition::KdTop`]: the four grandchild subtrees of the full
-//!   kd-tree root (the paper's "dividing the original data-set ... at the
-//!   top of the kd-tree" reading).  Spatially coherent quarters make the
-//!   *level-1* trees cheaper, but per-quarter centroids then describe
-//!   different regions, so the merge is a weaker seed.  Kept as an
-//!   ablation (`bench ablate_partition` quantifies the gap).
+//! Level 1 — the dataset is split P ways ([`Partition`] strategies; see
+//! `shard` module docs for the statistics of each).  Each shard gets its
+//! own kd-tree and an independent k-cluster filtering run (on one
+//! Cortex-A53 core each, in the real system).
 //!
-//! Each quarter gets its own kd-tree and an independent k-cluster
-//! filtering run (on one Cortex-A53 core each, in the real system).
-//!
-//! Merge — `Combine`: the 4×k level-1 centroids are merged back to k by
-//! greedy nearest-centroid matching across quarters (one cluster from each
-//! quarter per group), count-weighted averaging, exactly the
-//! "combine ... with the nearest centroids ... then update" step the paper
-//! describes.
+//! Merge — the P×k level-1 centroids are tree-reduced back to k by the
+//! count-weighted nearest-centroid merge, exactly the "combine ... with
+//! the nearest centroids ... then update" step the paper describes (flat
+//! for P ≤ 4, hierarchical above).
 //!
 //! Level 2: a short filtering run over the *full* dataset tree seeded with
 //! the merged centroids — "the second level ... has initial values that
@@ -35,51 +24,31 @@
 //!
 //! This module is the *sequential reference*; `coordinator::` runs the same
 //! phases across real worker threads with the PL offload.  Both call the
-//! same building blocks so they cannot drift.
+//! same shard-plane building blocks so they cannot drift.
+//!
+//! **Deprecated (docs-level):** the fixed 4-way free functions
+//! [`quarter`], [`quarter_round_robin`] and [`combine`] survive only as
+//! P = 4 wrappers for the paper reference and old call sites; new code
+//! should use [`ShardPlan::build`] and [`shard::combine_hierarchical`]
+//! directly, or set [`KmeansSpec::shards`](super::solver::KmeansSpec)
+//! on the unified solver.
 
 use super::filtering::{self, FilterOpts};
 use super::init::{init_centroids, Init};
 use super::panel::PanelBackend;
+use super::shard::{self, ShardPlan};
 use super::{
     IterHook, IterStats, KmeansResult, Metric, Phase, PhasedHook, RunStats, TwoLevelExt,
 };
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
 
-/// Number of level-1 partitions — 4 in the paper (one per Cortex-A53).
-pub const QUARTERS: usize = 4;
+pub use super::shard::Partition;
 
-/// How `Quarter` splits the dataset (see module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Partition {
-    /// Deal rows out modulo 4 (i.i.d. quarters; default).
-    RoundRobin,
-    /// The four depth-2 subtrees of the full kd-tree (spatial quarters).
-    KdTop,
-}
-
-impl Partition {
-    /// Canonical name (round-trips through [`FromStr`](std::str::FromStr)
-    /// — the model artifact serializes specs by these names).
-    pub fn name(self) -> &'static str {
-        match self {
-            Partition::RoundRobin => "round-robin",
-            Partition::KdTop => "kd-top",
-        }
-    }
-}
-
-impl std::str::FromStr for Partition {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s {
-            "round-robin" | "roundrobin" => Ok(Partition::RoundRobin),
-            "kd-top" | "kdtop" => Ok(Partition::KdTop),
-            other => anyhow::bail!("unknown partition `{other}` (round-robin|kd-top)"),
-        }
-    }
-}
+/// Number of level-1 partitions in the paper's configuration — 4 (one per
+/// Cortex-A53).  Legacy alias of [`shard::DEFAULT_SHARDS`]; the general
+/// P-way machinery lives in [`super::shard`].
+pub const QUARTERS: usize = shard::DEFAULT_SHARDS;
 
 #[derive(Clone, Debug)]
 pub struct TwoLevelOpts {
@@ -92,6 +61,9 @@ pub struct TwoLevelOpts {
     pub init: Init,
     pub partition: Partition,
     pub seed: u64,
+    /// Level-1 partition count P (the paper's 4; any P ≥ 1 works — see
+    /// [`super::shard`]).
+    pub shards: usize,
 }
 
 impl Default for TwoLevelOpts {
@@ -104,123 +76,33 @@ impl Default for TwoLevelOpts {
             init: Init::UniformSample,
             partition: Partition::RoundRobin,
             seed: 1,
+            shards: QUARTERS,
         }
     }
 }
 
-/// `Quarter` (round-robin): deal rows out modulo `QUARTERS`.
+/// `Quarter` (round-robin): deal rows out modulo [`QUARTERS`].
+/// Legacy 4-way wrapper over [`shard::plan_round_robin`].
 pub fn quarter_round_robin(data: &Dataset) -> (Vec<Dataset>, Vec<Vec<u32>>) {
-    let mut ids: Vec<Vec<u32>> = vec![Vec::with_capacity(data.len() / QUARTERS + 1); QUARTERS];
-    for i in 0..data.len() {
-        ids[i % QUARTERS].push(i as u32);
-    }
-    let datasets = ids
-        .iter()
-        .map(|rows| {
-            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
-            data.gather(&rows_usize)
-        })
-        .collect();
-    (datasets, ids)
+    shard::plan_round_robin(data, QUARTERS)
 }
 
-/// `Quarter` (kd-top): the dataset split into `QUARTERS` spatially-coherent
-/// parts using the top of a kd-tree.  Returns per-quarter datasets and
-/// the original row index of every quartered row.
+/// `Quarter` (kd-top): the dataset split into [`QUARTERS`]
+/// spatially-coherent parts using the top of a kd-tree.  Returns
+/// per-quarter datasets and the original row index of every quartered
+/// row.  Legacy 4-way wrapper over [`shard::plan_kd_frontier`].
 pub fn quarter(data: &Dataset, tree: &KdTree) -> (Vec<Dataset>, Vec<Vec<u32>>) {
-    // The 4 subtrees two levels below the root; if the tree is too shallow
-    // (tiny or degenerate data), fall back to contiguous ranges.
-    let mut fronts: Vec<u32> = vec![0];
-    for _ in 0..2 {
-        let mut next = Vec::with_capacity(fronts.len() * 2);
-        for &ni in &fronts {
-            let n = &tree.nodes[ni as usize];
-            if n.is_leaf() {
-                next.push(ni);
-            } else {
-                next.push(n.left);
-                next.push(n.right);
-            }
-        }
-        fronts = next;
-    }
-
-    if fronts.len() < QUARTERS {
-        // Degenerate: pad by splitting contiguous ranges instead.
-        let (parts, offsets) = data.split_contiguous(QUARTERS);
-        let ids = offsets
-            .iter()
-            .zip(parts.iter())
-            .map(|(&o, p)| (o as u32..(o + p.len()) as u32).collect())
-            .collect();
-        return (parts, ids);
-    }
-
-    let mut datasets = Vec::with_capacity(QUARTERS);
-    let mut ids = Vec::with_capacity(QUARTERS);
-    for &ni in fronts.iter().take(QUARTERS) {
-        let node = &tree.nodes[ni as usize];
-        let rows: Vec<u32> = tree.node_points(node).to_vec();
-        let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
-        datasets.push(data.gather(&rows_usize));
-        ids.push(rows);
-    }
-    (datasets, ids)
+    shard::plan_kd_frontier(data, tree, QUARTERS)
 }
 
-/// `Combine`: merge `QUARTERS` sets of k centroids down to k by greedy
-/// nearest matching (quarter 0's centroids anchor the groups) with
-/// count-weighted averaging.
-pub fn combine(
-    centroids: &[Dataset],
-    counts: &[Vec<usize>],
-    metric: Metric,
-) -> Dataset {
-    let q = centroids.len();
-    assert!(q >= 1);
-    let k = centroids[0].len();
-    let d = centroids[0].dims();
-    assert!(counts.iter().zip(centroids).all(|(c, ds)| c.len() == ds.len()));
-
-    let mut out = Vec::with_capacity(k * d);
-    // Used-markers per non-anchor quarter.
-    let mut used: Vec<Vec<bool>> = centroids.iter().map(|c| vec![false; c.len()]).collect();
-
-    for a in 0..k {
-        let anchor = centroids[0].point(a);
-        let mut wsum: Vec<f64> = anchor
-            .iter()
-            .map(|&v| v as f64 * counts[0][a] as f64)
-            .collect();
-        let mut wtot = counts[0][a] as f64;
-        for qi in 1..q {
-            // Nearest unused centroid of quarter qi to the anchor.
-            let mut best: Option<(usize, f32)> = None;
-            for c in 0..centroids[qi].len() {
-                if used[qi][c] {
-                    continue;
-                }
-                let dd = metric.dist(anchor, centroids[qi].point(c));
-                if best.map_or(true, |(_, bd)| dd < bd) {
-                    best = Some((c, dd));
-                }
-            }
-            if let Some((c, _)) = best {
-                used[qi][c] = true;
-                let w = counts[qi][c] as f64;
-                for (j, &v) in centroids[qi].point(c).iter().enumerate() {
-                    wsum[j] += v as f64 * w;
-                }
-                wtot += w;
-            }
-        }
-        if wtot <= 0.0 {
-            out.extend_from_slice(anchor);
-        } else {
-            out.extend(wsum.iter().map(|&v| (v / wtot) as f32));
-        }
-    }
-    Dataset::from_flat(k, d, out)
+/// `Combine`: merge P sets of k centroids down to k by greedy nearest
+/// matching (set 0's centroids anchor the groups) with count-weighted
+/// averaging.  Legacy wrapper over the shard plane's
+/// [`shard::combine_level`] (one flat pass — what the paper describes for
+/// its four quarters); the P-way production path is
+/// [`shard::combine_hierarchical`].
+pub fn combine(centroids: &[Dataset], counts: &[Vec<usize>], metric: Metric) -> Dataset {
+    shard::combine_level(centroids, counts, metric).0
 }
 
 /// One filtering phase of the two-level scheme: recursive engine when no
@@ -256,7 +138,7 @@ where
 }
 
 /// Run the full two-level algorithm (sequential reference).  The extra
-/// outputs (per-quarter stats, merged seed, quarter sizes) ride on the
+/// outputs (per-shard stats, merged seed, shard sizes) ride on the
 /// result's [`TwoLevelExt`] extension; the result's own `stats` are the
 /// level-2 refinement's.
 pub fn run(data: &Dataset, k: usize, opts: &TwoLevelOpts) -> KmeansResult {
@@ -277,6 +159,7 @@ pub fn run_ext(
     mut hook: Option<PhasedHook<'_>>,
 ) -> KmeansResult {
     assert!(k >= 1 && k <= data.len());
+    assert!(opts.shards >= 1, "shards must be >= 1");
     let built;
     let full_tree = match full_tree {
         Some(t) => t,
@@ -285,21 +168,18 @@ pub fn run_ext(
             &built
         }
     };
-    let (quarters, _ids) = match opts.partition {
-        Partition::RoundRobin => quarter_round_robin(data),
-        Partition::KdTop => quarter(data, full_tree),
-    };
-    let quarter_sizes: Vec<usize> = quarters.iter().map(|q| q.len()).collect();
+    let plan = ShardPlan::build(data, opts.shards, opts.partition, Some(full_tree));
+    let shard_sizes = plan.sizes();
     let fopts_l2 = FilterOpts {
         metric: opts.metric,
         tol: opts.tol,
         max_iters: opts.level2_max_iters,
     };
 
-    // Tiny-data guard: if any quarter can't host k clusters, the two-level
+    // Tiny-data guard: if any shard can't host k clusters, the two-level
     // scheme degenerates to a plain filtering run (the paper's regime is
-    // always n >> 4k).
-    if quarters.iter().any(|q| q.len() < k) {
+    // always n >> P·k).
+    if !plan.supports_k(k) {
         let init = init_centroids(data, k, opts.init, opts.metric, opts.seed);
         let mut result = run_phase(
             data,
@@ -312,30 +192,30 @@ pub fn run_ext(
         );
         let merged = result.centroids.clone();
         result.ext.two_level = Some(Box::new(TwoLevelExt {
-            level1_stats: vec![RunStats::default(); QUARTERS],
-            quarter_sizes,
+            level1_stats: vec![RunStats::default(); plan.shards()],
+            quarter_sizes: shard_sizes,
             merged_centroids: merged,
         }));
         return result;
     }
 
-    // ---- Level 1: independent k-clustering per quarter -------------------
+    // ---- Level 1: independent k-clustering per shard ---------------------
     let fopts = FilterOpts {
         metric: opts.metric,
         tol: opts.tol,
         max_iters: opts.level1_max_iters,
     };
-    let mut l1_centroids: Vec<Dataset> = Vec::with_capacity(QUARTERS);
-    let mut l1_counts: Vec<Vec<usize>> = Vec::with_capacity(QUARTERS);
-    let mut level1_stats = Vec::with_capacity(QUARTERS);
-    for (qi, qdata) in quarters.iter().enumerate() {
+    let mut l1_centroids: Vec<Dataset> = Vec::with_capacity(plan.shards());
+    let mut l1_counts: Vec<Vec<usize>> = Vec::with_capacity(plan.shards());
+    let mut level1_stats = Vec::with_capacity(plan.shards());
+    for (qi, qdata) in plan.parts.iter().enumerate() {
         let tree = KdTree::build(qdata);
         let init = init_centroids(
             qdata,
             k,
             opts.init,
             opts.metric,
-            opts.seed ^ (qi as u64).wrapping_mul(0x9E37_79B9),
+            shard::shard_seed(opts.seed, qi),
         );
         let r = run_phase(
             qdata,
@@ -351,8 +231,8 @@ pub fn run_ext(
         level1_stats.push(r.stats);
     }
 
-    // ---- Combine ----------------------------------------------------------
-    let merged = combine(&l1_centroids, &l1_counts, opts.metric);
+    // ---- Combine: tree-reduce P×k centroids to k --------------------------
+    let merged = shard::combine_hierarchical(&l1_centroids, &l1_counts, opts.metric);
 
     // ---- Level 2: refine over the full dataset ----------------------------
     let mut result = run_phase(
@@ -366,7 +246,7 @@ pub fn run_ext(
     );
     result.ext.two_level = Some(Box::new(TwoLevelExt {
         level1_stats,
-        quarter_sizes,
+        quarter_sizes: shard_sizes,
         merged_centroids: merged,
     }));
     result
@@ -531,5 +411,44 @@ mod tests {
         // Fallback leaves level-1 stats empty.
         let ext = r.ext.two_level.as_ref().unwrap();
         assert!(ext.level1_stats.iter().all(|s| s.iterations() == 0));
+    }
+
+    #[test]
+    fn eight_shards_run_end_to_end() {
+        let s = generate_params(4000, 3, 5, 0.15, 2.0, 23);
+        for partition in [Partition::RoundRobin, Partition::KdTop, Partition::Contiguous] {
+            let r = run(
+                &s.data,
+                5,
+                &TwoLevelOpts { shards: 8, partition, seed: 4, ..Default::default() },
+            );
+            assert_eq!(r.assignments.len(), 4000);
+            let ext = r.ext.two_level.as_ref().unwrap();
+            assert_eq!(ext.level1_stats.len(), 8, "{partition:?}");
+            assert_eq!(ext.quarter_sizes.len(), 8);
+            assert_eq!(ext.quarter_sizes.iter().sum::<usize>(), 4000);
+            assert!(ext.level1_stats.iter().all(|st| st.iterations() > 0));
+        }
+    }
+
+    #[test]
+    fn one_shard_degenerates_to_chained_filtering() {
+        // P=1: level 1 clusters the full dataset, the "merge" of one set
+        // is (numerically) itself, and level 2 polishes — so the outcome
+        // must essentially match a plain filtering run with the same seed.
+        let s = generate_params(2500, 3, 4, 0.2, 2.0, 19);
+        let r = run(&s.data, 4, &TwoLevelOpts { shards: 1, seed: 6, ..Default::default() });
+        let ext = r.ext.two_level.as_ref().unwrap();
+        assert_eq!(ext.quarter_sizes, vec![2500]);
+        assert_eq!(ext.level1_stats.len(), 1);
+        let tree = KdTree::build(&s.data);
+        let init = init_centroids(&s.data, 4, Init::UniformSample, Metric::Euclid, 6);
+        let plain = filtering::run(&s.data, &tree, &init, &FilterOpts::default());
+        let obj_r = r.objective(&s.data, Metric::Euclid);
+        let obj_p = plain.objective(&s.data, Metric::Euclid);
+        assert!(
+            (obj_r - obj_p).abs() <= 1e-3 * (1.0 + obj_p.abs()),
+            "P=1 two-level {obj_r} vs plain filtering {obj_p}"
+        );
     }
 }

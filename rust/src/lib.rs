@@ -14,9 +14,13 @@
 //!   fronted by the unified solver API (`kmeans::solver`): one
 //!   `KmeansSpec`, one `Solver` trait, pluggable `PanelBackend`s and
 //!   per-iteration `IterObserver`s across all four engines
+//! - `kmeans::shard` — the shard plane: P-way `ShardPlan` partitioning +
+//!   hierarchical count-weighted combine under every two-level path
+//!   (`KmeansSpec::shards(P)`; the paper's quartet is P = 4)
 //! - `hw` — the ZCU102 platform model (clock domains, DMA, DDR3, BRAM, PL)
 //! - `runtime` — PJRT artifact loading & execution (the "PL" compute)
-//! - `coordinator` — the deployable system: leader + 4 workers + offload
+//! - `coordinator` — the deployable system: leader + P shard workers +
+//!   offload
 //! - `serve` — the online half of the fit/predict split: `KmeansModel`
 //!   artifacts (`kmeans::model`), batched inference (`kmeans::predict`)
 //!   and the micro-batching `ClusterService`

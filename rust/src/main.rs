@@ -47,8 +47,9 @@ fn commands() -> Vec<Command> {
             .opt("tol", "1e-6", "convergence tolerance (max squared centroid movement)")
             .opt("max-iters", "100", "iteration cap (level-1 and level-2 for two-level)")
             .opt("workers", "4", "worker threads (two-level) / panel threads (filter-batched)")
+            .opt("shards", "4", "level-1 shard count P (two-level; 1 <= P <= n)")
             .opt("backend", "pjrt", "pjrt|cpu (panel substrate; two-level and filter-batched)")
-            .opt("partition", "round-robin", "round-robin|kd-top (two-level)")
+            .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
             .opt("out", "", "write final assignments CSV here (one label per line)")
             .flag("trace", "stream per-iteration stats through an observer (runs two-level via the sequential solver)")
@@ -64,7 +65,8 @@ fn commands() -> Vec<Command> {
             .opt("tol", "1e-6", "convergence tolerance (max squared centroid movement)")
             .opt("max-iters", "100", "iteration cap (level-1 and level-2 for two-level)")
             .opt("workers", "4", "worker/panel threads")
-            .opt("partition", "round-robin", "round-robin|kd-top (two-level)")
+            .opt("shards", "4", "level-1 shard count P (two-level; 1 <= P <= n)")
+            .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
             .opt("model", "model.json", "output model path")
             .opt("out", "", "also write training-set assignments CSV here")
@@ -86,6 +88,8 @@ fn commands() -> Vec<Command> {
             .opt("requests", "50", "requests per client")
             .opt("batch", "64", "query points per request")
             .opt("workers", "4", "service panel workers (\"PL cores\")")
+            .opt("dispatchers", "1", "dispatcher panel count P draining the shared queue")
+            .opt("deadline-us", "0", "micro-batcher deadline in µs (0 = immediate drain)")
             .opt("max-batch", "4096", "micro-batcher point budget per panel batch")
             .opt("queue", "256", "bounded request-queue capacity")
             // Anchored to the repo root (like BENCH_hotpath.json) so runs
@@ -151,7 +155,8 @@ fn report_result(r: &KmeansResult, data: &muchswift::data::Dataset, metric: Metr
     println!("converged: {}", r.stats.converged);
     if let Some(ext) = &r.ext.two_level {
         println!(
-            "level-1 iterations per quarter: {:?}",
+            "level-1 iterations per shard ({}): {:?}",
+            ext.level1_stats.len(),
             ext.level1_stats.iter().map(|s| s.iterations()).collect::<Vec<_>>()
         );
         println!("level-2 iterations: {}", r.stats.iterations());
@@ -204,8 +209,21 @@ fn load_or_generate(m: &Matches, metric: Metric) -> anyhow::Result<Dataset> {
     }
 }
 
-/// Solver spec shared by `cluster` and `fit`.
-fn spec_from_matches(m: &Matches, metric: Metric, algo: Algo) -> anyhow::Result<KmeansSpec> {
+/// Solver spec shared by `cluster` and `fit`.  Takes the (already
+/// loaded) dataset so the shard count can be range-checked against `n`.
+fn spec_from_matches(
+    m: &Matches,
+    metric: Metric,
+    algo: Algo,
+    data: &Dataset,
+) -> anyhow::Result<KmeansSpec> {
+    let shards = m.usize("shards")?;
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1 (got {shards})");
+    anyhow::ensure!(
+        shards <= data.len(),
+        "--shards {shards} exceeds the dataset size n={}",
+        data.len()
+    );
     Ok(KmeansSpec::new(m.usize("k")?)
         .algo(algo)
         .metric(metric)
@@ -213,6 +231,7 @@ fn spec_from_matches(m: &Matches, metric: Metric, algo: Algo) -> anyhow::Result<
         .max_iters(m.usize("max-iters")?)
         .level2_max_iters(m.usize("max-iters")?)
         .partition(m.str("partition").parse::<Partition>()?)
+        .shards(shards)
         .init(m.str("init").parse::<Init>()?)
         .seed(m.u64("seed")?)
         .workers(m.usize("workers")?))
@@ -261,7 +280,7 @@ fn run() -> anyhow::Result<()> {
                 other => anyhow::bail!("unknown backend `{other}`"),
             };
             let data = load_or_generate(&m, metric)?;
-            let spec = spec_from_matches(&m, metric, algo)?;
+            let spec = spec_from_matches(&m, metric, algo, &data)?;
 
             if algo == Algo::TwoLevel && !trace {
                 // The deployable multi-threaded system.
@@ -314,7 +333,7 @@ fn run() -> anyhow::Result<()> {
             let metric: Metric = m.str("metric").parse()?;
             let algo: Algo = m.str("algo").parse()?;
             let data = load_or_generate(&m, metric)?;
-            let spec = spec_from_matches(&m, metric, algo)?;
+            let spec = spec_from_matches(&m, metric, algo, &data)?;
             let t0 = Instant::now();
             let model = spec.fit(&mut SolverCtx::new(&data));
             let secs = t0.elapsed().as_secs_f64();
@@ -398,6 +417,10 @@ fn run() -> anyhow::Result<()> {
                 m.usize("queue")? >= 1 && m.usize("max-batch")? >= 1 && m.usize("workers")? >= 1,
                 "--queue, --max-batch and --workers must all be >= 1"
             );
+            anyhow::ensure!(
+                m.usize("dispatchers")? >= 1,
+                "--dispatchers must be >= 1"
+            );
             let w = WorkloadConfig {
                 n: m.usize("n")?.max(batch),
                 d: m.usize("d")?,
@@ -422,6 +445,8 @@ fn run() -> anyhow::Result<()> {
                 workers: m.usize("workers")?,
                 max_batch_points: m.usize("max-batch")?,
                 queue_cap: m.usize("queue")?,
+                dispatchers: m.usize("dispatchers")?,
+                batch_deadline_us: m.u64("deadline-us")?,
                 ..Default::default()
             };
             let svc = ClusterService::start(Arc::clone(&model), cfg.clone());
@@ -463,6 +488,8 @@ fn run() -> anyhow::Result<()> {
                         ("requests_per_client", Json::num(requests as f64)),
                         ("points_per_request", Json::num(batch as f64)),
                         ("workers", Json::num(cfg.workers as f64)),
+                        ("dispatchers", Json::num(cfg.dispatchers as f64)),
+                        ("batch_deadline_us", Json::num(cfg.batch_deadline_us as f64)),
                         ("max_batch_points", Json::num(cfg.max_batch_points as f64)),
                         ("queue_cap", Json::num(cfg.queue_cap as f64)),
                         ("k", Json::num(model.k() as f64)),

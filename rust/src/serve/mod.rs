@@ -1,11 +1,15 @@
 //! Serving layer: the fit/predict split's online half.
 //!
 //! [`ClusterService`] owns a trained [`crate::kmeans::KmeansModel`] and a
-//! bounded request queue; a dispatcher thread micro-batches concurrent
-//! predict requests into single distance-panel batches executed across
+//! bounded request queue; P dispatcher threads (`ServeConfig::dispatchers`
+//! — the serve-side face of the shard plane) micro-batch concurrent
+//! predict requests into distance-panel batches executed across
 //! `std::thread::scope` workers (via the [`crate::kmeans::predict`]
 //! engine) — the software mirror of the paper's PS→multi-core-PL
 //! dispatch, pointed at the ROADMAP's "heavy traffic" north star.
+//! The micro-batcher can trade latency for coalescing via
+//! `ServeConfig::batch_deadline_us`, and [`ClusterService::reload`] swaps
+//! the served model warm (queue intact, dimension changes rejected).
 //! [`ServeMetrics`] reports throughput, coalescing quality and latency
 //! percentiles; the CLI's `serve-bench` subcommand drives a closed-loop
 //! load through it and emits `BENCH_serve.json`.

@@ -1,14 +1,14 @@
-//! The micro-batching cluster service: a bounded request queue, a
-//! dispatcher thread that coalesces concurrent predict requests into one
-//! panel batch, and `std::thread::scope` panel workers doing the distance
-//! arithmetic — the software mirror of the paper's PS core dispatching
-//! batched work to multiple PL cores.
+//! The micro-batching cluster service: a bounded request queue, one or
+//! more dispatcher threads that coalesce concurrent predict requests into
+//! panel batches, and `std::thread::scope` panel workers doing the
+//! distance arithmetic — the software mirror of the paper's PS core
+//! dispatching batched work to multiple PL cores.
 //!
 //! Control flow:
 //!
 //! ```text
-//! clients ──submit()──> bounded queue ──drain_batch()──> dispatcher ("PS")
-//!                                                            │ one PanelJobs batch
+//! clients ──submit()──> bounded queue ──drain_batch()──> dispatcher(s) ("PS")
+//!                                                            │ one PanelJobs batch each
 //!                                                            ▼
 //!                                             Predictor → ParCpuPanels
 //!                                             (scope workers = "PL cores")
@@ -19,8 +19,23 @@
 //!
 //! Backpressure is real: `submit` blocks while the queue holds
 //! `queue_cap` requests (`try_submit` refuses instead), and shutdown
-//! drains the queue before the dispatcher exits, so every accepted
+//! drains the queue before the dispatchers exit, so every accepted
 //! request is answered.
+//!
+//! Three scaling knobs ride on [`ServeConfig`]:
+//!
+//! - `batch_deadline_us` — the deadline-based micro-batcher: a dispatcher
+//!   holds a non-full batch until the *oldest* queued request has waited
+//!   this long, trading bounded latency for better coalescing.  0 (the
+//!   default) preserves immediate-drain behavior.
+//! - `dispatchers` — the serve-side face of the shard plane: P dispatcher
+//!   panels drain the shared queue concurrently (each with its own
+//!   `Predictor` + worker pool slice), for models/loads where one panel
+//!   pass per batch is the bottleneck.
+//! - warm reload — [`ClusterService::reload`] swaps the served
+//!   `Arc<KmeansModel>` without dropping the queue (dimension changes are
+//!   rejected); every batch executes against exactly one model snapshot,
+//!   so in-flight tickets always resolve consistently.
 
 use super::metrics::{Recorder, ServeMetrics};
 use crate::data::Dataset;
@@ -28,10 +43,11 @@ use crate::kmeans::model::KmeansModel;
 use crate::kmeans::panel::{PanelKernel, ParCpuPanels};
 use crate::kmeans::predict::Predictor;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -42,7 +58,8 @@ pub struct ServeConfig {
     /// panel batch until the next request would push past this many query
     /// points (a single larger request is still served, alone).
     pub max_batch_points: usize,
-    /// Panel worker threads (the "PL core" count).
+    /// Panel worker threads (the "PL core" count), shared out across the
+    /// dispatchers.
     pub workers: usize,
     /// Panel kernel; `Blocked` is the production profile, `Scalar` the
     /// oracle arithmetic (bit-identical to training-side assignment).
@@ -50,6 +67,15 @@ pub struct ServeConfig {
     /// Centroid kd-tree prune override; `None` = the predictor's
     /// model-size auto rule.
     pub prune: Option<bool>,
+    /// Deadline-based micro-batcher: hold a non-full batch until the
+    /// oldest queued request has waited this many microseconds, to
+    /// coalesce more concurrent requests into one panel pass.  0 =
+    /// immediate drain (the pre-deadline behavior).
+    pub batch_deadline_us: u64,
+    /// Dispatcher panel count P: this many dispatcher threads drain the
+    /// shared queue concurrently, each owning a `Predictor` over
+    /// `workers / dispatchers` panel threads.
+    pub dispatchers: usize,
 }
 
 impl Default for ServeConfig {
@@ -63,6 +89,8 @@ impl Default for ServeConfig {
                 .min(8),
             kernel: PanelKernel::Blocked,
             prune: None,
+            batch_deadline_us: 0,
+            dispatchers: 1,
         }
     }
 }
@@ -115,9 +143,9 @@ pub struct Ticket {
 
 impl Ticket {
     /// Block until the service answers.  Accepted requests are normally
-    /// always answered (shutdown drains the queue before the dispatcher
-    /// exits); [`ServeError::Closed`] is returned only if the dispatcher
-    /// died abnormally (panicked) with this request still queued.
+    /// always answered (shutdown drains the queue before the dispatchers
+    /// exit); [`ServeError::Closed`] is returned only if a dispatcher
+    /// died abnormally (panicked) with this request still in its batch.
     pub fn wait(self) -> Result<PredictReply, ServeError> {
         self.rx.recv().map_err(|_| ServeError::Closed)
     }
@@ -140,6 +168,10 @@ struct Shared {
     state: Mutex<QueueState>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// The served model; [`ClusterService::reload`] swaps it, dispatchers
+    /// snapshot it per batch.  Separate lock from `state` (always
+    /// acquired *after* `state` when both are held).
+    model: Mutex<Arc<KmeansModel>>,
 }
 
 impl Shared {
@@ -150,6 +182,10 @@ impl Shared {
         self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
+    fn current_model(&self) -> Arc<KmeansModel> {
+        Arc::clone(&self.model.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
     fn wait_on<'a>(
         &self,
         cv: &Condvar,
@@ -157,23 +193,44 @@ impl Shared {
     ) -> MutexGuard<'a, QueueState> {
         cv.wait(guard).unwrap_or_else(|p| p.into_inner())
     }
+
+    fn wait_timeout_on<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueState>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, QueueState>, bool) {
+        match cv.wait_timeout(guard, dur) {
+            Ok((g, res)) => (g, res.timed_out()),
+            Err(p) => {
+                let (g, res) = p.into_inner();
+                (g, res.timed_out())
+            }
+        }
+    }
 }
 
-/// Dropped by the dispatcher thread on *any* exit — normal or panic.
-/// Marks the service shut down and clears the queue so queued reply
-/// senders drop (turning blocked `Ticket::wait`s into
-/// `ServeError::Closed`) and blocked submitters wake into the closed
-/// path instead of waiting forever.
-struct DispatcherExitGuard(Arc<Shared>);
+/// Dropped by each dispatcher thread on *any* exit — normal or panic.
+/// When the *last* dispatcher exits it marks the service shut down and
+/// clears the queue so queued reply senders drop (turning blocked
+/// `Ticket::wait`s into `ServeError::Closed`) and blocked submitters wake
+/// into the closed path instead of waiting forever.
+struct DispatcherExitGuard {
+    shared: Arc<Shared>,
+    alive: Arc<AtomicUsize>,
+}
 
 impl Drop for DispatcherExitGuard {
     fn drop(&mut self) {
-        let mut st = self.0.lock_state();
+        if self.alive.fetch_sub(1, Ordering::AcqRel) != 1 {
+            return; // other dispatchers still drain the queue
+        }
+        let mut st = self.shared.lock_state();
         st.shutdown = true;
         st.queue.clear();
         drop(st);
-        self.0.not_empty.notify_all();
-        self.0.not_full.notify_all();
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
     }
 }
 
@@ -196,105 +253,208 @@ fn drain_batch(queue: &mut VecDeque<Pending>, max_points: usize) -> Vec<Pending>
     out
 }
 
+/// What a dispatcher decided to do after inspecting the queue.
+enum Step {
+    /// Serve this micro-batch.
+    Batch(Vec<Pending>),
+    /// The model was swapped: rebuild the predictor, then come back.
+    Reload,
+    /// Shutdown requested and the queue is drained.
+    Exit,
+}
+
+/// One dispatcher thread: snapshot the model, serve batches until the
+/// model is swapped (rebuild) or shutdown drains the queue (exit).
+fn dispatcher_loop(shared: &Arc<Shared>, recorder: &Recorder, cfg: &ServeConfig, workers: usize) {
+    'model: loop {
+        // Every batch below executes against exactly this snapshot, so a
+        // reload never splits one batch across two models.
+        let model = shared.current_model();
+        let mut predictor = Predictor::with_backend(
+            model.as_ref(),
+            ParCpuPanels::with_kernel(workers, cfg.kernel),
+        );
+        if let Some(on) = cfg.prune {
+            predictor = predictor.prune(on);
+        }
+        let d = model.dims();
+        loop {
+            let step = {
+                let mut st = shared.lock_state();
+                while st.queue.is_empty() && !st.shutdown {
+                    st = shared.wait_on(&shared.not_empty, st);
+                }
+                if st.queue.is_empty() {
+                    Step::Exit // shutdown requested and queue drained
+                } else if !Arc::ptr_eq(&model, &shared.current_model()) {
+                    // Swap before draining: the pending requests deserve
+                    // the new model.
+                    Step::Reload
+                } else {
+                    if cfg.batch_deadline_us > 0 && !st.shutdown {
+                        // Deadline micro-batcher: hold the batch open until
+                        // the oldest queued request has waited the deadline
+                        // out (or the point budget fills), coalescing
+                        // stragglers into this panel pass.
+                        let deadline = st.queue.front().unwrap().enqueued
+                            + Duration::from_micros(cfg.batch_deadline_us);
+                        loop {
+                            if st.queue.is_empty() {
+                                break; // another dispatcher drained it
+                            }
+                            let pts: usize =
+                                st.queue.iter().map(|p| p.points.len()).sum();
+                            if pts >= cfg.max_batch_points || st.shutdown {
+                                break;
+                            }
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let (g, timed_out) = shared.wait_timeout_on(
+                                &shared.not_empty,
+                                st,
+                                deadline - now,
+                            );
+                            st = g;
+                            if timed_out {
+                                break;
+                            }
+                        }
+                    }
+                    let b = drain_batch(&mut st.queue, cfg.max_batch_points);
+                    shared.not_full.notify_all();
+                    Step::Batch(b)
+                }
+            };
+            let batch = match step {
+                Step::Exit => break 'model,
+                Step::Reload => continue 'model,
+                // A sibling dispatcher can empty the queue while this one
+                // sat out a coalescing deadline; never record a 0-request
+                // batch.
+                Step::Batch(b) if b.is_empty() => continue,
+                Step::Batch(b) => b,
+            };
+            let nreq = batch.len();
+            let total: usize = batch.iter().map(|p| p.points.len()).sum();
+            let mut flat = Vec::with_capacity(total * d);
+            for p in &batch {
+                flat.extend_from_slice(p.points.flat());
+            }
+            let queries = Dataset::from_flat(total, d, flat);
+            let t0 = Instant::now();
+            let (labels, dists) = predictor.assign_scored(&queries);
+            let busy = t0.elapsed().as_secs_f64();
+            let mut latencies = Vec::with_capacity(nreq);
+            let mut off = 0usize;
+            for p in batch {
+                let n = p.points.len();
+                // Receiver may have given up (client panic); ignore.
+                let _ = p.reply.send(PredictReply {
+                    labels: labels[off..off + n].to_vec(),
+                    distances: dists[off..off + n].to_vec(),
+                    batched_with: nreq,
+                });
+                off += n;
+                latencies.push(p.enqueued.elapsed().as_secs_f64());
+            }
+            recorder.record_batch(total as u64, busy, &latencies);
+        }
+    }
+}
+
 /// The running micro-batching service; see module docs.
 pub struct ClusterService {
-    model: Arc<KmeansModel>,
+    /// Query dimensionality — invariant across reloads (enforced by
+    /// [`reload`](Self::reload)), so submit-side validation never races a
+    /// swap.
+    dims: usize,
     cfg: ServeConfig,
     shared: Arc<Shared>,
     recorder: Arc<Recorder>,
-    dispatcher: Option<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
 }
 
 impl ClusterService {
-    /// Start the dispatcher over a trained model.
+    /// Start the dispatcher(s) over a trained model.
     pub fn start(model: Arc<KmeansModel>, cfg: ServeConfig) -> Self {
         assert!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
         assert!(cfg.max_batch_points >= 1, "max_batch_points must be >= 1");
+        assert!(cfg.dispatchers >= 1, "dispatchers must be >= 1");
+        let dims = model.dims();
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState::default()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            model: Mutex::new(model),
         });
         let recorder = Arc::new(Recorder::new());
+        let alive = Arc::new(AtomicUsize::new(cfg.dispatchers));
+        // Share the panel workers out across the dispatcher panels.
+        let per_workers = (cfg.workers / cfg.dispatchers).max(1);
 
-        let svc_shared = Arc::clone(&shared);
-        let svc_recorder = Arc::clone(&recorder);
-        let svc_model = Arc::clone(&model);
-        let svc_cfg = cfg.clone();
-        let dispatcher = std::thread::Builder::new()
-            .name("cluster-serve".into())
-            .spawn(move || {
-                let _exit_guard = DispatcherExitGuard(Arc::clone(&svc_shared));
-                let mut predictor = Predictor::with_backend(
-                    svc_model.as_ref(),
-                    ParCpuPanels::with_kernel(svc_cfg.workers, svc_cfg.kernel),
-                );
-                if let Some(on) = svc_cfg.prune {
-                    predictor = predictor.prune(on);
-                }
-                let d = svc_model.dims();
-                loop {
-                    let batch = {
-                        let mut st = svc_shared.lock_state();
-                        while st.queue.is_empty() && !st.shutdown {
-                            st = svc_shared.wait_on(&svc_shared.not_empty, st);
-                        }
-                        if st.queue.is_empty() {
-                            break; // shutdown requested and queue drained
-                        }
-                        let b = drain_batch(&mut st.queue, svc_cfg.max_batch_points);
-                        svc_shared.not_full.notify_all();
-                        b
-                    };
-                    let nreq = batch.len();
-                    let total: usize = batch.iter().map(|p| p.points.len()).sum();
-                    let mut flat = Vec::with_capacity(total * d);
-                    for p in &batch {
-                        flat.extend_from_slice(p.points.flat());
-                    }
-                    let queries = Dataset::from_flat(total, d, flat);
-                    let t0 = Instant::now();
-                    let (labels, dists) = predictor.assign_scored(&queries);
-                    let busy = t0.elapsed().as_secs_f64();
-                    let mut latencies = Vec::with_capacity(nreq);
-                    let mut off = 0usize;
-                    for p in batch {
-                        let n = p.points.len();
-                        // Receiver may have given up (client panic); ignore.
-                        let _ = p.reply.send(PredictReply {
-                            labels: labels[off..off + n].to_vec(),
-                            distances: dists[off..off + n].to_vec(),
-                            batched_with: nreq,
-                        });
-                        off += n;
-                        latencies.push(p.enqueued.elapsed().as_secs_f64());
-                    }
-                    svc_recorder.record_batch(total as u64, busy, &latencies);
-                }
+        let dispatchers = (0..cfg.dispatchers)
+            .map(|i| {
+                let svc_shared = Arc::clone(&shared);
+                let svc_recorder = Arc::clone(&recorder);
+                let svc_cfg = cfg.clone();
+                let guard = DispatcherExitGuard {
+                    shared: Arc::clone(&shared),
+                    alive: Arc::clone(&alive),
+                };
+                std::thread::Builder::new()
+                    .name(format!("cluster-serve-{i}"))
+                    .spawn(move || {
+                        let _exit_guard = guard;
+                        dispatcher_loop(&svc_shared, &svc_recorder, &svc_cfg, per_workers);
+                    })
+                    .expect("cannot spawn cluster-serve dispatcher")
             })
-            .expect("cannot spawn cluster-serve dispatcher");
+            .collect();
 
         Self {
-            model,
+            dims,
             cfg,
             shared,
             recorder,
-            dispatcher: Some(dispatcher),
+            dispatchers,
         }
     }
 
-    pub fn model(&self) -> &Arc<KmeansModel> {
-        &self.model
+    /// The currently served model (a reload may replace it at any time).
+    pub fn model(&self) -> Arc<KmeansModel> {
+        self.shared.current_model()
     }
 
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
     }
 
-    fn check_dims(&self, points: &Dataset) -> Result<(), ServeError> {
-        if points.dims() != self.model.dims() {
+    /// Warm model reload: swap the served model without dropping the
+    /// queue.  A replacement with different query dimensionality is
+    /// rejected (queued requests were validated against the old dims).
+    /// Each in-flight batch completes against whichever model snapshot
+    /// its dispatcher drained it under — never a mix.
+    pub fn reload(&self, model: Arc<KmeansModel>) -> Result<(), ServeError> {
+        if model.dims() != self.dims {
             return Err(ServeError::DimMismatch {
-                expected: self.model.dims(),
+                expected: self.dims,
+                got: model.dims(),
+            });
+        }
+        *self
+            .shared
+            .model
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) = model;
+        Ok(())
+    }
+
+    fn check_dims(&self, points: &Dataset) -> Result<(), ServeError> {
+        if points.dims() != self.dims {
+            return Err(ServeError::DimMismatch {
+                expected: self.dims,
                 got: points.dims(),
             });
         }
@@ -357,12 +517,12 @@ impl ClusterService {
         }
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
-        if let Some(j) = self.dispatcher.take() {
+        for j in self.dispatchers.drain(..) {
             let _ = j.join();
         }
     }
 
-    /// Stop accepting requests, drain the queue, join the dispatcher and
+    /// Stop accepting requests, drain the queue, join the dispatchers and
     /// return the final metrics snapshot.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.finish();
@@ -429,5 +589,12 @@ mod tests {
         h.join().unwrap();
         assert_eq!(r.labels, vec![1, 2]);
         assert_eq!(r.batched_with, 1);
+    }
+
+    #[test]
+    fn default_config_preserves_immediate_drain() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.batch_deadline_us, 0);
+        assert_eq!(cfg.dispatchers, 1);
     }
 }

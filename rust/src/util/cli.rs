@@ -383,6 +383,48 @@ mod tests {
     }
 
     #[test]
+    fn shards_option_negative_paths() {
+        // Mirrors the `cluster`/`fit` --shards surface: the parser hands
+        // main.rs a usize (0 included — the P >= 1 and P <= n range checks
+        // live at the command layer, exercised by the binary round-trip
+        // tests), and non-numeric / negative tokens surface as BadValue.
+        let c = Command::new("cluster", "unified solver")
+            .opt("shards", "4", "level-1 shard count P (1 <= P <= n)");
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.usize("shards").unwrap(), 4, "defaults to the paper quartet");
+        let m = c.parse(&args(&["--shards", "16"])).unwrap();
+        assert_eq!(m.usize("shards").unwrap(), 16);
+        // P=0 parses (range-checked downstream against n).
+        let m = c.parse(&args(&["--shards", "0"])).unwrap();
+        assert_eq!(m.usize("shards").unwrap(), 0);
+        // Negative and non-numeric P are BadValue with the offending token.
+        let m = c.parse(&args(&["--shards", "-4"])).unwrap();
+        match m.usize("shards") {
+            Err(CliError::BadValue(name, val, _)) => {
+                assert_eq!(name, "shards");
+                assert_eq!(val, "-4");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        let m = c.parse(&args(&["--shards", "four"])).unwrap();
+        assert!(matches!(m.usize("shards"), Err(CliError::BadValue(..))));
+        // Dangling value.
+        assert!(matches!(
+            c.parse(&args(&["--shards"])),
+            Err(CliError::MissingValue(_))
+        ));
+        // The contiguous partition name the shard plane added parses.
+        use crate::kmeans::twolevel::Partition;
+        let c = Command::new("cluster", "partitions")
+            .opt("partition", "round-robin", "round-robin|kd-top|contiguous");
+        let m = c.parse(&args(&["--partition", "contiguous"])).unwrap();
+        assert_eq!(
+            m.parse_as::<Partition>("partition").unwrap(),
+            Partition::Contiguous
+        );
+    }
+
+    #[test]
     fn lists() {
         let c = Command::new("x", "y").opt("ks", "2,4,8", "cluster sweep");
         let m = c.parse(&args(&[])).unwrap();

@@ -42,6 +42,7 @@ fn concurrent_clients_get_exactly_direct_predictor_answers() {
             queue_cap: 64,
             kernel: PanelKernel::Blocked,
             prune: None,
+            ..Default::default()
         },
     );
     let clients = 4usize;
@@ -137,6 +138,207 @@ fn shutdown_drains_accepted_requests() {
     for t in tickets {
         let reply = t.wait().unwrap();
         assert_eq!(reply.labels.len(), 16);
+    }
+    assert_eq!(metrics.requests, 16);
+    assert_eq!(metrics.points, 256);
+}
+
+#[test]
+fn deadline_batcher_coalesces_a_trickle_into_one_batch() {
+    // With a generous deadline and budget, requests submitted over a few
+    // milliseconds must ride one panel batch instead of draining one by
+    // one — the ROADMAP's "wait up to T µs to coalesce more" batcher.
+    let model = trained_model(600, 3, 4, 11);
+    let queries = generate_params(64, 3, 4, 0.4, 1.0, 8).data;
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            batch_deadline_us: 200_000, // 200 ms — far beyond the submit loop below
+            max_batch_points: 4096,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit(slice(&queries, i * 16, 16)).unwrap())
+        .collect();
+    for t in tickets {
+        let reply = t.wait().unwrap();
+        assert_eq!(reply.labels.len(), 16);
+        assert_eq!(reply.batched_with, 4, "deadline batcher must coalesce all 4");
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.batches, 1);
+}
+
+#[test]
+fn deadline_batcher_ships_early_when_the_budget_fills() {
+    // A full point budget must not sit out the deadline.
+    let model = trained_model(600, 3, 4, 11);
+    let queries = generate_params(64, 3, 4, 0.4, 1.0, 8).data;
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            batch_deadline_us: 10_000_000, // 10 s: a waited-out deadline would hang the test
+            max_batch_points: 32,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = (0..2)
+        .map(|i| svc.submit(slice(&queries, i * 16, 16)).unwrap())
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().labels.len(), 16);
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 2);
+}
+
+#[test]
+fn warm_reload_swaps_models_between_batches() {
+    // Same dims, different k: replies before the reload come from model A,
+    // replies after from model B — scalar kernel, so both are bit-exact
+    // against direct predictors.
+    let model_a = trained_model(1200, 4, 4, 31);
+    let model_b = trained_model(1400, 4, 6, 77);
+    let queries = generate_params(200, 4, 5, 0.5, 2.0, 12).data;
+    let want_a = Predictor::new(model_a.as_ref()).assign(&queries);
+    let want_b = Predictor::new(model_b.as_ref()).assign(&queries);
+    assert_ne!(want_a, want_b, "models must be distinguishable for this test");
+
+    let svc = ClusterService::start(
+        Arc::clone(&model_a),
+        ServeConfig {
+            kernel: PanelKernel::Scalar,
+            ..Default::default()
+        },
+    );
+    let r = svc.predict(queries.clone()).unwrap();
+    assert_eq!(r.labels, want_a);
+
+    // Dim mismatch is rejected and leaves the old model serving.
+    let bad = trained_model(500, 7, 3, 5);
+    match svc.reload(Arc::clone(&bad)) {
+        Err(ServeError::DimMismatch { expected, got }) => {
+            assert_eq!(expected, 4);
+            assert_eq!(got, 7);
+        }
+        other => panic!("expected DimMismatch, got {:?}", other.err()),
+    }
+    assert_eq!(svc.model().k(), 4);
+
+    svc.reload(Arc::clone(&model_b)).unwrap();
+    assert_eq!(svc.model().k(), 6);
+    let r = svc.predict(queries.clone()).unwrap();
+    assert_eq!(r.labels, want_b);
+}
+
+#[test]
+fn in_flight_tickets_complete_against_a_consistent_model() {
+    // Fire a stream of tickets while reloading mid-stream: every reply
+    // must match model A's or model B's answer *entirely* — a batch is
+    // never split across models — and nothing is dropped.
+    let model_a = trained_model(1200, 4, 4, 31);
+    let model_b = trained_model(1400, 4, 6, 77);
+    let queries = generate_params(640, 4, 5, 0.5, 2.0, 12).data;
+    let want_a = Predictor::new(model_a.as_ref()).assign(&queries);
+    let want_b = Predictor::new(model_b.as_ref()).assign(&queries);
+
+    let svc = ClusterService::start(
+        Arc::clone(&model_a),
+        ServeConfig {
+            kernel: PanelKernel::Scalar,
+            max_batch_points: 32, // several batches across the burst
+            ..Default::default()
+        },
+    );
+    let reqs = 20usize;
+    let req_len = 32usize;
+    let mut tickets = Vec::new();
+    for i in 0..reqs {
+        tickets.push((i, svc.submit(slice(&queries, i * req_len, req_len)).unwrap()));
+        if i == reqs / 2 {
+            svc.reload(Arc::clone(&model_b)).unwrap();
+        }
+    }
+    let mut from_b = 0usize;
+    for (i, t) in tickets {
+        let reply = t.wait().unwrap();
+        let lo = i * req_len;
+        let hi = lo + req_len;
+        let is_a = reply.labels == want_a[lo..hi];
+        let is_b = reply.labels == want_b[lo..hi];
+        assert!(
+            is_a || is_b,
+            "request {i}: reply matches neither model wholesale"
+        );
+        if is_b {
+            from_b += 1;
+        }
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.requests, reqs as u64);
+    // The tail of the burst was submitted after the swap, so at least one
+    // batch must have run on model B.
+    assert!(from_b >= 1, "reload never took effect");
+}
+
+#[test]
+fn multi_dispatcher_sharding_serves_correctly() {
+    // P dispatcher panels drain the shared queue concurrently; answers
+    // stay bit-exact (scalar kernel) and fully accounted for.
+    let model = trained_model(1500, 4, 8, 3);
+    let queries = generate_params(1280, 4, 8, 0.5, 2.0, 41).data;
+    let want = Predictor::new(model.as_ref()).assign(&queries);
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            dispatchers: 3,
+            workers: 3,
+            kernel: PanelKernel::Scalar,
+            max_batch_points: 64,
+            ..Default::default()
+        },
+    );
+    let clients = 4usize;
+    let per_client = 10usize;
+    let req_len = 32usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            let queries = &queries;
+            let want = &want;
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let start = (c * per_client + r) * req_len;
+                    let reply = svc.predict(slice(queries, start, req_len)).unwrap();
+                    assert_eq!(reply.labels, want[start..start + req_len]);
+                }
+            });
+        }
+    });
+    let m = svc.shutdown();
+    assert_eq!(m.requests, (clients * per_client) as u64);
+    assert_eq!(m.points, (clients * per_client * req_len) as u64);
+}
+
+#[test]
+fn multi_dispatcher_shutdown_drains_accepted_requests() {
+    let model = trained_model(800, 3, 4, 9);
+    let queries = generate_params(256, 3, 4, 0.3, 1.0, 4).data;
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            dispatchers: 2,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = (0..16)
+        .map(|i| svc.submit(slice(&queries, i * 16, 16)).unwrap())
+        .collect();
+    let metrics = svc.shutdown();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().labels.len(), 16);
     }
     assert_eq!(metrics.requests, 16);
     assert_eq!(metrics.points, 256);

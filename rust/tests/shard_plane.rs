@@ -1,0 +1,325 @@
+//! Shard-plane parity suite: the P-way generalization must reproduce the
+//! legacy fixed 4-quarter two-level architecture exactly at P = 4, and
+//! degenerate sensibly at the edges (P = 1, P ≫ cores).
+//!
+//! The reference implementations in this file are *verbatim copies of the
+//! pre-refactor code* (modulo-4 dealing, the depth-2 kd subtree
+//! quartering, the flat greedy combine), so the parity assertions are
+//! against the historical behavior, not against the new code itself.
+
+use muchswift::coordinator::{Backend, Coordinator};
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::shard::{
+    combine_hierarchical, combine_level, plan_kd_frontier, plan_round_robin, Partition,
+    ShardPlan,
+};
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use muchswift::kmeans::twolevel::{self, TwoLevelOpts, QUARTERS};
+use muchswift::kmeans::Metric;
+
+// ---------------------------------------------------------------------------
+// Legacy reference implementations (pre-refactor code, kept verbatim)
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor `quarter_round_robin`: deal rows out modulo 4.
+fn legacy_quarter_round_robin(data: &Dataset) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    let mut ids: Vec<Vec<u32>> = vec![Vec::with_capacity(data.len() / 4 + 1); 4];
+    for i in 0..data.len() {
+        ids[i % 4].push(i as u32);
+    }
+    let datasets = ids
+        .iter()
+        .map(|rows| {
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            data.gather(&rows_usize)
+        })
+        .collect();
+    (datasets, ids)
+}
+
+/// Pre-refactor `quarter`: the 4 subtrees two levels below the root, with
+/// the contiguous fallback for shallow trees.
+fn legacy_quarter(data: &Dataset, tree: &KdTree) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    let mut fronts: Vec<u32> = vec![0];
+    for _ in 0..2 {
+        let mut next = Vec::with_capacity(fronts.len() * 2);
+        for &ni in &fronts {
+            let n = &tree.nodes[ni as usize];
+            if n.is_leaf() {
+                next.push(ni);
+            } else {
+                next.push(n.left);
+                next.push(n.right);
+            }
+        }
+        fronts = next;
+    }
+    if fronts.len() < 4 {
+        let (parts, offsets) = data.split_contiguous(4);
+        let ids = offsets
+            .iter()
+            .zip(parts.iter())
+            .map(|(&o, p)| (o as u32..(o + p.len()) as u32).collect())
+            .collect();
+        return (parts, ids);
+    }
+    let mut datasets = Vec::with_capacity(4);
+    let mut ids = Vec::with_capacity(4);
+    for &ni in fronts.iter().take(4) {
+        let node = &tree.nodes[ni as usize];
+        let rows: Vec<u32> = tree.node_points(node).to_vec();
+        let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+        datasets.push(data.gather(&rows_usize));
+        ids.push(rows);
+    }
+    (datasets, ids)
+}
+
+/// Pre-refactor `combine`: one flat greedy count-weighted pass.
+fn legacy_combine(centroids: &[Dataset], counts: &[Vec<usize>], metric: Metric) -> Dataset {
+    let q = centroids.len();
+    assert!(q >= 1);
+    let k = centroids[0].len();
+    let d = centroids[0].dims();
+    let mut out = Vec::with_capacity(k * d);
+    let mut used: Vec<Vec<bool>> = centroids.iter().map(|c| vec![false; c.len()]).collect();
+    for a in 0..k {
+        let anchor = centroids[0].point(a);
+        let mut wsum: Vec<f64> = anchor
+            .iter()
+            .map(|&v| v as f64 * counts[0][a] as f64)
+            .collect();
+        let mut wtot = counts[0][a] as f64;
+        for qi in 1..q {
+            let mut best: Option<(usize, f32)> = None;
+            for c in 0..centroids[qi].len() {
+                if used[qi][c] {
+                    continue;
+                }
+                let dd = metric.dist(anchor, centroids[qi].point(c));
+                if best.map_or(true, |(_, bd)| dd < bd) {
+                    best = Some((c, dd));
+                }
+            }
+            if let Some((c, _)) = best {
+                used[qi][c] = true;
+                let w = counts[qi][c] as f64;
+                for (j, &v) in centroids[qi].point(c).iter().enumerate() {
+                    wsum[j] += v as f64 * w;
+                }
+                wtot += w;
+            }
+        }
+        if wtot <= 0.0 {
+            out.extend_from_slice(anchor);
+        } else {
+            out.extend(wsum.iter().map(|&v| (v / wtot) as f32));
+        }
+    }
+    Dataset::from_flat(k, d, out)
+}
+
+/// Deterministic pseudo-random centroid sets + counts for combine tests.
+fn fake_level1(p: usize, k: usize, d: usize, salt: u64) -> (Vec<Dataset>, Vec<Vec<usize>>) {
+    let mut sets = Vec::with_capacity(p);
+    let mut counts = Vec::with_capacity(p);
+    for s in 0..p {
+        let mut flat = Vec::with_capacity(k * d);
+        for i in 0..k * d {
+            let x = (s as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+                .wrapping_add(salt);
+            flat.push(((x >> 33) % 1000) as f32 * 0.017 - 8.5);
+        }
+        sets.push(Dataset::from_flat(k, d, flat));
+        counts.push((0..k).map(|i| (s * 31 + i * 7) % 90 + 1).collect());
+    }
+    (sets, counts)
+}
+
+// ---------------------------------------------------------------------------
+// Plan parity at P = 4
+// ---------------------------------------------------------------------------
+
+#[test]
+fn round_robin_plan_matches_legacy_quartering_bitwise() {
+    for n in [1usize, 3, 4, 997, 2000] {
+        let s = generate_params(n, 3, 2.min(n), 0.3, 1.0, 7);
+        let (lp, li) = legacy_quarter_round_robin(&s.data);
+        let (np, ni) = plan_round_robin(&s.data, QUARTERS);
+        assert_eq!(li, ni, "n={n}");
+        assert_eq!(lp, np, "n={n}");
+        // And through the ShardPlan front door.
+        let plan = ShardPlan::build(&s.data, 4, Partition::RoundRobin, None);
+        assert_eq!(plan.ids, li);
+        assert_eq!(plan.parts, lp);
+    }
+}
+
+#[test]
+fn kd_frontier_plan_matches_legacy_quartering_bitwise() {
+    // Deep trees (the grandchild path) and shallow trees (the contiguous
+    // fallback path) both reproduce the legacy split exactly.
+    for (n, seed) in [(2000usize, 11u64), (5000, 23), (3, 1), (9, 5)] {
+        let s = generate_params(n, 3, 2.min(n), 0.25, 1.0, seed);
+        let tree = KdTree::build(&s.data);
+        let (lp, li) = legacy_quarter(&s.data, &tree);
+        let (np, ni) = plan_kd_frontier(&s.data, &tree, QUARTERS);
+        assert_eq!(li, ni, "n={n}");
+        assert_eq!(lp, np, "n={n}");
+        let plan = ShardPlan::build(&s.data, 4, Partition::KdTop, Some(&tree));
+        assert_eq!(plan.ids, li);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Combine parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hierarchical_combine_equals_flat_greedy_combine_up_to_p4() {
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        for p in 1..=4usize {
+            let (sets, counts) = fake_level1(p, 6, 3, 99);
+            let legacy = legacy_combine(&sets, &counts, metric);
+            let flat = combine_level(&sets, &counts, metric).0;
+            let tree = combine_hierarchical(&sets, &counts, metric);
+            assert_eq!(legacy, flat, "{metric:?} P={p}: combine_level drifted");
+            assert_eq!(legacy, tree, "{metric:?} P={p}: hierarchical drifted");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_combine_scales_past_the_greedy_pass() {
+    // Above the fan-in the tree reduce takes over; output stays a valid
+    // k x d set and matches a hand-built two-level reduction.
+    let (sets, counts) = fake_level1(16, 5, 4, 3);
+    let got = combine_hierarchical(&sets, &counts, Metric::Euclid);
+    assert_eq!(got.len(), 5);
+    assert_eq!(got.dims(), 4);
+    let mut mids = Vec::new();
+    let mut midc = Vec::new();
+    for g in 0..4 {
+        let (m, c) = combine_level(&sets[g * 4..g * 4 + 4], &counts[g * 4..g * 4 + 4], Metric::Euclid);
+        mids.push(m);
+        midc.push(c);
+    }
+    assert_eq!(got, combine_level(&mids, &midc, Metric::Euclid).0);
+}
+
+// ---------------------------------------------------------------------------
+// Solver / coordinator parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn p4_spec_reproduces_the_legacy_two_level_run_on_both_partitions() {
+    let s = generate_params(3000, 3, 5, 0.15, 2.0, 33);
+    for partition in [Partition::RoundRobin, Partition::KdTop] {
+        let spec = KmeansSpec::two_level(5).seed(9).shards(4).partition(partition);
+        let a = spec.solve(&mut SolverCtx::new(&s.data));
+        let b = twolevel::run(
+            &s.data,
+            5,
+            &TwoLevelOpts {
+                seed: 9,
+                partition,
+                ..Default::default()
+            },
+        );
+        assert_eq!(a.centroids, b.centroids, "{partition:?}");
+        assert_eq!(a.assignments, b.assignments, "{partition:?}");
+        let ea = a.ext.two_level.as_ref().unwrap();
+        let eb = b.ext.two_level.as_ref().unwrap();
+        assert_eq!(ea.quarter_sizes, eb.quarter_sizes);
+        assert_eq!(ea.merged_centroids, eb.merged_centroids);
+        // An explicit shards(4) is exactly the default.
+        let c = KmeansSpec::two_level(5).seed(9).partition(partition)
+            .solve(&mut SolverCtx::new(&s.data));
+        assert_eq!(a.centroids, c.centroids);
+        assert_eq!(a.assignments, c.assignments);
+    }
+}
+
+#[test]
+fn coordinator_p4_matches_the_sequential_reference_outcome() {
+    // The acceptance pin, in two sound halves:
+    // (a) an explicit `shards(4)` is bitwise the default coordinator run —
+    //     the P = 4 special case is the unchanged code path;
+    // (b) against the sequential reference the coordinator holds exactly
+    //     the invariants the pre-refactor test pinned (equal per-quarter
+    //     trajectories, near-identical centroids, same objective) — the
+    //     batched-vs-recursive engines may still differ on distance ties,
+    //     which predates the shard plane.
+    let s = generate_params(3000, 3, 5, 0.15, 2.0, 33);
+    let coord = Coordinator::new(Backend::Cpu);
+    let c4 = coord.run(&s.data, &KmeansSpec::two_level(5).seed(9).shards(4));
+    let cd = coord.run(&s.data, &KmeansSpec::two_level(5).seed(9));
+    assert_eq!(c4.result.centroids, cd.result.centroids);
+    assert_eq!(c4.result.assignments, cd.result.assignments);
+
+    let r = twolevel::run(&s.data, 5, &TwoLevelOpts { seed: 9, ..Default::default() });
+    let ce = c4.result.ext.two_level.as_ref().unwrap();
+    let re = r.ext.two_level.as_ref().unwrap();
+    assert_eq!(ce.quarter_sizes, vec![750; 4]);
+    assert_eq!(ce.quarter_sizes, re.quarter_sizes);
+    for (a, b) in ce.level1_stats.iter().zip(re.level1_stats.iter()) {
+        assert_eq!(a.iterations(), b.iterations());
+    }
+    for (a, b) in c4.result.centroids.iter().zip(r.centroids.iter()) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+    let obj_c = c4.result.objective(&s.data, Metric::Euclid);
+    let obj_r = r.objective(&s.data, Metric::Euclid);
+    assert!(
+        (obj_c - obj_r).abs() <= 1e-4 * (1.0 + obj_r.abs()),
+        "{obj_c} vs {obj_r}"
+    );
+}
+
+#[test]
+fn p1_degenerates_to_a_plain_filtering_run() {
+    let s = generate_params(2000, 3, 4, 0.2, 2.0, 13);
+    let spec = KmeansSpec::two_level(4).seed(6).shards(1);
+    let two = spec.solve(&mut SolverCtx::new(&s.data));
+    let ext = two.ext.two_level.as_ref().unwrap();
+    assert_eq!(ext.quarter_sizes, vec![2000]);
+    assert_eq!(ext.level1_stats.len(), 1);
+    let plain = KmeansSpec::new(4)
+        .algo(Algo::Filter)
+        .seed(6)
+        .solve(&mut SolverCtx::new(&s.data));
+    let obj_two = two.objective(&s.data, Metric::Euclid);
+    let obj_plain = plain.objective(&s.data, Metric::Euclid);
+    assert!(
+        (obj_two - obj_plain).abs() <= 1e-3 * (1.0 + obj_plain.abs()),
+        "P=1 two-level {obj_two} vs plain filtering {obj_plain}"
+    );
+}
+
+#[test]
+fn p8_runs_and_partitions_correctly_everywhere() {
+    let s = generate_params(4000, 3, 5, 0.15, 2.0, 29);
+    for partition in [Partition::RoundRobin, Partition::KdTop, Partition::Contiguous] {
+        let spec = KmeansSpec::two_level(5).seed(4).shards(8).partition(partition);
+        let seq = spec.solve(&mut SolverCtx::new(&s.data));
+        let ext = seq.ext.two_level.as_ref().unwrap();
+        assert_eq!(ext.level1_stats.len(), 8, "{partition:?}");
+        assert_eq!(ext.quarter_sizes.iter().sum::<usize>(), 4000);
+        // The threaded system agrees with the sequential reference on the
+        // per-shard trajectories.
+        let coord = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+        let cext = coord.result.ext.two_level.as_ref().unwrap();
+        assert_eq!(cext.quarter_sizes, ext.quarter_sizes);
+        assert_eq!(
+            cext.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+            ext.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+        );
+        assert_eq!(coord.metrics.shards, 8);
+    }
+}

@@ -155,6 +155,45 @@ fn cli_cluster_trace_streams_iterations() {
 }
 
 #[test]
+fn cli_cluster_shards_round_trip_and_range_checks() {
+    // A non-default shard count drives the coordinator end to end.
+    let out = cluster_cmd(&["--algo", "two-level", "--shards", "8"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(
+        stdout.contains("level-1 iterations per shard (8)"),
+        "{stdout}"
+    );
+    assert!(stdout.contains("8 shards"), "coordinator metrics: {stdout}");
+
+    // P = 0 is rejected before any work happens.
+    let out = cluster_cmd(&["--algo", "two-level", "--shards", "0"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--shards must be >= 1"), "{stderr}");
+
+    // P > n is rejected with both numbers in the message (n=2000 here).
+    let out = cluster_cmd(&["--algo", "two-level", "--shards", "2001"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--shards 2001 exceeds the dataset size n=2000"),
+        "{stderr}"
+    );
+
+    // The fit surface shares the same validation.
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_muchswift"));
+    let out = cmd
+        .args(["fit", "--n", "500", "--d", "2", "--k", "3", "--shards", "501"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("exceeds the dataset size"), "{stderr}");
+}
+
+#[test]
 fn cli_cluster_rejects_unknown_algo_and_backend() {
     let out = cluster_cmd(&["--algo", "bogus"]);
     assert!(!out.status.success());

@@ -31,6 +31,19 @@ pub struct CoordMetrics {
     /// the aggregate counters can't show.
     pub shard_iters: Vec<u64>,
     pub shard_dist_evals: Vec<u64>,
+    /// Remote shard plane (all zero unless `--remote` endpoints were
+    /// given): endpoints that connected and handshook at the start of
+    /// the run …
+    pub remote_workers: usize,
+    /// … level-1 shards solved over the wire …
+    pub remote_shards: u64,
+    /// … and connect/handshake/mid-solve wire failures that fell back
+    /// to a local solve (a nonzero value means the run degraded, not
+    /// failed — results are unaffected).
+    pub remote_fallbacks: u64,
+    /// Wire traffic of the run's remote solves.
+    pub remote_bytes_tx: u64,
+    pub remote_bytes_rx: u64,
 }
 
 impl CoordMetrics {
@@ -39,7 +52,8 @@ impl CoordMetrics {
             "total {:.3}s = partition {:.3}s + trees {:.3}s + level1 {:.3}s + \
              combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
              pjrt: {} execs / {:.3}s | observed: {} iters / {} evals | \
-             {} shards, iters/shard {:?}",
+             {} shards, iters/shard {:?} | remote: {} workers, {} shards, \
+             {} fallbacks, {}B tx / {}B rx",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -54,6 +68,11 @@ impl CoordMetrics {
             self.observed_dist_evals,
             self.shards,
             self.shard_iters,
+            self.remote_workers,
+            self.remote_shards,
+            self.remote_fallbacks,
+            self.remote_bytes_tx,
+            self.remote_bytes_rx,
         )
     }
 }
@@ -115,5 +134,23 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("3 shards"), "{s}");
         assert!(s.contains("[5, 7, 6]"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_remote_counters() {
+        let m = CoordMetrics {
+            remote_workers: 2,
+            remote_shards: 3,
+            remote_fallbacks: 1,
+            remote_bytes_tx: 1024,
+            remote_bytes_rx: 2048,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("remote: 2 workers, 3 shards, 1 fallbacks"), "{s}");
+        assert!(s.contains("1024B tx / 2048B rx"), "{s}");
+        // An all-local run reports a zeroed remote section.
+        let s = CoordMetrics::default().summary();
+        assert!(s.contains("remote: 0 workers"), "{s}");
     }
 }

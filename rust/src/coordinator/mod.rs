@@ -38,9 +38,12 @@ use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::init::init_centroids;
 use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
-use crate::kmeans::shard::{self, ShardPlan};
-use crate::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
-use crate::kmeans::{KmeansResult, Metric, Phase, RunStats, TwoLevelExt};
+use crate::kmeans::remote::RemoteShardPool;
+use crate::kmeans::shard::{self, ShardExecutor, ShardPartial, ShardPlan};
+use crate::kmeans::solver::{
+    Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, ObserveFn, SolverCtx,
+};
+use crate::kmeans::{IterStats, KmeansResult, Metric, Phase, RunStats, TwoLevelExt};
 use metrics::Stopwatch;
 use offload::OffloadStats;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -145,12 +148,52 @@ impl IterObserver for LiveObserver {
     }
 }
 
+/// The in-process [`ShardExecutor`]: a worker-thread panel backend driving
+/// the canonical shard solve.  Also the stand-in a remote puller demotes
+/// to when its wire dies.
+struct LocalShardExec {
+    panels: SystemPanels,
+}
+
+impl ShardExecutor for LocalShardExec {
+    fn describe(&self) -> String {
+        "local".into()
+    }
+
+    fn solve_shard(
+        &mut self,
+        shard_idx: usize,
+        data: &Dataset,
+        base_spec: &KmeansSpec,
+        on_iter: &mut dyn FnMut(&IterStats),
+    ) -> anyhow::Result<ShardPartial> {
+        let wspec = shard::level1_spec(base_spec, shard_idx);
+        let observer = ObserveFn(|ev: &IterEvent<'_>| {
+            on_iter(ev.stats);
+            IterFlow::Continue
+        });
+        let r = shard::solve_level1_shard(data, &wspec, &mut self.panels, Some(observer));
+        Ok(ShardPartial::from_result(r))
+    }
+}
+
+/// One scheduler thread's executor: a primary (local thread or remote
+/// worker) plus, for remote primaries, the local fallback that takes over
+/// if the wire dies.
+struct Puller {
+    primary: Box<dyn ShardExecutor>,
+    fallback: Option<LocalShardExec>,
+    remote: bool,
+}
+
 /// The system entry point.
 pub struct Coordinator {
     /// Spawned only for the PJRT backend — the software-only system keeps
     /// panel math inside the worker threads.
     service: Option<OffloadService>,
     pjrt: Option<Arc<crate::runtime::PjrtRuntime>>,
+    /// Remote shard workers (empty = all-local; the legacy layout).
+    remotes: RemoteShardPool,
 }
 
 impl Coordinator {
@@ -160,12 +203,27 @@ impl Coordinator {
             Backend::Cpu => Self {
                 service: None,
                 pjrt: None,
+                remotes: RemoteShardPool::default(),
             },
             Backend::Pjrt(rt) => Self {
                 service: Some(OffloadService::spawn(Backend::Pjrt(Arc::clone(&rt)))),
                 pjrt: Some(rt),
+                remotes: RemoteShardPool::default(),
             },
         }
+    }
+
+    /// Satisfy level-1 shard solves from these remote `shard-worker`
+    /// endpoints too: each endpoint (repeatable for multiple connections
+    /// to one worker) contributes one wire-backed executor per run,
+    /// alongside up to `spec.workers` local threads.  Unreachable or
+    /// failing endpoints fall back to local solves
+    /// ([`CoordMetrics::remote_fallbacks`] counts them); remote solves
+    /// are bit-identical to local ones, so the mix never changes the
+    /// result.
+    pub fn with_remotes(mut self, pool: RemoteShardPool) -> Self {
+        self.remotes = pool;
+        self
     }
 
     /// Panel backend for one level-1 worker (runs on that worker's thread).
@@ -221,62 +279,132 @@ impl Coordinator {
         let shard_sizes = plan.sizes();
         m.shards = plan.shards();
 
-        // ---- Level 1 (P shard solves over `workers` threads) ----------------
+        // ---- Level 1 (P shard solves over the executor fleet) ----------------
         let (l1_centroids, l1_counts, level1_stats) = if fallback {
             (Vec::new(), Vec::new(), vec![RunStats::default(); plan.shards()])
         } else {
-            let mut results: Vec<Option<KmeansResult>> =
+            // The fleet: one puller per connected remote endpoint, plus
+            // local threads up to `spec.workers` (and never more pullers
+            // than shards).  Remotes that refuse the connect/handshake
+            // are counted as fallbacks and replaced by local capacity.
+            let (mut remote_execs, connect_failures) = if self.remotes.is_empty() {
+                (Vec::new(), 0)
+            } else {
+                self.remotes.connect_all()
+            };
+            remote_execs.truncate(plan.shards());
+            m.remote_workers = remote_execs.len();
+            m.remote_fallbacks += connect_failures;
+            let locals = spec
+                .workers
+                .min(plan.shards().saturating_sub(remote_execs.len()));
+            let mut pullers: Vec<Puller> = Vec::with_capacity(remote_execs.len() + locals);
+            for w in remote_execs {
+                pullers.push(Puller {
+                    primary: Box::new(w),
+                    fallback: Some(LocalShardExec {
+                        panels: self.worker_panels(&local_stats),
+                    }),
+                    remote: true,
+                });
+            }
+            for _ in 0..locals {
+                // One reusable panel backend per thread (begin_pass
+                // resets it between shards).
+                pullers.push(Puller {
+                    primary: Box::new(LocalShardExec {
+                        panels: self.worker_panels(&local_stats),
+                    }),
+                    fallback: None,
+                    remote: false,
+                });
+            }
+
+            // Work-pulling schedule: pullers race to claim the next
+            // unsolved shard, so P > pullers chunks the shards instead of
+            // oversubscribing the cores, and P <= workers (no remotes)
+            // degenerates to the legacy one-thread-per-quarter layout.
+            // Per-shard solves are independent and deterministic — and
+            // remote solves are bitwise local solves — so which puller
+            // runs a shard never changes its result.
+            let mut results: Vec<Option<ShardPartial>> =
                 (0..plan.shards()).map(|_| None).collect();
-            // Work-pulling schedule: `min(P, workers)` threads race to
-            // claim the next unsolved shard, so P > workers chunks the
-            // shards instead of oversubscribing the cores, and P <=
-            // workers degenerates to the legacy one-thread-per-quarter
-            // layout.  Per-shard solves are independent and deterministic,
-            // so which thread runs a shard never changes its result.
             let next = AtomicUsize::new(0);
-            let threads = plan.shards().min(spec.workers);
+            let remote_shards = AtomicU64::new(0);
+            let wire_fallbacks = AtomicU64::new(0);
+            let bytes_tx = AtomicU64::new(0);
+            let bytes_rx = AtomicU64::new(0);
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
-                for _ in 0..threads {
-                    // One reusable panel backend per thread (begin_pass
-                    // resets it between shards).
-                    let mut panels = self.worker_panels(&local_stats);
+                for mut p in pullers {
                     let next = &next;
                     let parts = &plan.parts;
                     let live = &live;
+                    let remote_shards = &remote_shards;
+                    let wire_fallbacks = &wire_fallbacks;
+                    let (bytes_tx, bytes_rx) = (&bytes_tx, &bytes_rx);
                     handles.push(scope.spawn(move || {
-                        let mut out: Vec<(usize, KmeansResult)> = Vec::new();
+                        let mut out: Vec<(usize, ShardPartial)> = Vec::new();
                         loop {
                             let qi = next.fetch_add(1, Ordering::Relaxed);
                             if qi >= parts.len() {
                                 break;
                             }
-                            let qdata = &parts[qi];
-                            let mut wspec = spec
-                                .clone()
-                                .algo(Algo::FilterBatched)
-                                .seed(shard::shard_seed(spec.seed, qi));
-                            // Level-1 seeds per shard; never inherit
-                            // explicit start centroids from the caller's
-                            // spec.
-                            wspec.start = None;
-                            // Sequential build: this already runs on one
-                            // of the concurrent workers — nested build
-                            // threads would oversubscribe the cores.
-                            let tree = Arc::new(KdTree::build_par(
-                                qdata,
-                                crate::kdtree::DEFAULT_LEAF_SIZE,
-                                0,
-                            ));
-                            let mut ctx = SolverCtx::new(qdata)
-                                .with_tree(tree)
-                                .with_backend(&mut panels)
-                                .with_observer(LiveObserver {
-                                    live: Arc::clone(live),
-                                    phase: Phase::Level1 { quarter: qi },
-                                });
-                            out.push((qi, wspec.solve(&mut ctx)));
+                            let mut on_iter = |st: &IterStats| {
+                                live.iters.fetch_add(1, Ordering::Relaxed);
+                                live.dist_evals.fetch_add(st.dist_evals, Ordering::Relaxed);
+                                live.shard_iters[qi].fetch_add(1, Ordering::Relaxed);
+                                live.shard_dist_evals[qi]
+                                    .fetch_add(st.dist_evals, Ordering::Relaxed);
+                                log::trace!(
+                                    "coordinator Level1 shard {qi}: dist_evals={} moved={:.3e}",
+                                    st.dist_evals,
+                                    st.moved
+                                );
+                            };
+                            let partial =
+                                match p.primary.solve_shard(qi, &parts[qi], spec, &mut on_iter) {
+                                    Ok(part) => {
+                                        if p.remote {
+                                            remote_shards.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        part
+                                    }
+                                    Err(e) => {
+                                        // The wire died (mid-solve or on
+                                        // send): re-solve this shard
+                                        // locally and demote the puller
+                                        // to local for the rest of the
+                                        // run.  The live per-shard feed
+                                        // may see the aborted stream's
+                                        // iterations again — it is a
+                                        // monotone monitoring feed, not
+                                        // the result path.
+                                        log::warn!(
+                                            "{} failed on shard {qi}, re-solving locally: {e}",
+                                            p.primary.describe()
+                                        );
+                                        wire_fallbacks.fetch_add(1, Ordering::Relaxed);
+                                        let (tx, rx) = p.primary.wire_bytes();
+                                        bytes_tx.fetch_add(tx, Ordering::Relaxed);
+                                        bytes_rx.fetch_add(rx, Ordering::Relaxed);
+                                        let mut local = p
+                                            .fallback
+                                            .take()
+                                            .expect("remote puller carries a local fallback");
+                                        let part = local
+                                            .solve_shard(qi, &parts[qi], spec, &mut on_iter)
+                                            .expect("local shard solve is infallible");
+                                        p.primary = Box::new(local);
+                                        p.remote = false;
+                                        part
+                                    }
+                                };
+                            out.push((qi, partial));
                         }
+                        let (tx, rx) = p.primary.wire_bytes();
+                        bytes_tx.fetch_add(tx, Ordering::Relaxed);
+                        bytes_rx.fetch_add(rx, Ordering::Relaxed);
                         out
                     }));
                 }
@@ -286,8 +414,12 @@ impl Coordinator {
                     }
                 }
             });
-            let results: Vec<KmeansResult> = results.into_iter().map(Option::unwrap).collect();
-            let counts: Vec<Vec<usize>> = results.iter().map(|r| r.sizes()).collect();
+            m.remote_shards = remote_shards.load(Ordering::Relaxed);
+            m.remote_fallbacks += wire_fallbacks.load(Ordering::Relaxed);
+            m.remote_bytes_tx = bytes_tx.load(Ordering::Relaxed);
+            m.remote_bytes_rx = bytes_rx.load(Ordering::Relaxed);
+            let results: Vec<ShardPartial> = results.into_iter().map(Option::unwrap).collect();
+            let counts: Vec<Vec<usize>> = results.iter().map(|r| r.counts.clone()).collect();
             let cents: Vec<Dataset> = results.iter().map(|r| r.centroids.clone()).collect();
             let stats: Vec<RunStats> = results.into_iter().map(|r| r.stats).collect();
             (cents, counts, stats)

@@ -36,6 +36,7 @@ pub mod metrics;
 pub mod model;
 pub mod panel;
 pub mod predict;
+pub mod remote;
 pub mod shard;
 pub mod solver;
 pub mod twolevel;
@@ -43,7 +44,8 @@ pub mod twolevel;
 pub use metrics::Metric;
 pub use model::{KmeansModel, TrainStats, MODEL_FORMAT_VERSION};
 pub use predict::Predictor;
-pub use shard::{Partition, ShardPlan};
+pub use remote::{RemoteShardPool, RemoteWorker};
+pub use shard::{Partition, ShardExecutor, ShardPartial, ShardPlan};
 pub use solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, Solver, SolverCtx};
 
 use crate::data::Dataset;

@@ -1,0 +1,233 @@
+//! Client half of the remote shard plane: a [`RemoteWorker`] is one
+//! handshaken connection to a `shard-worker`, and a [`RemoteShardPool`]
+//! is the set of endpoints the coordinator may spread level-1 solves
+//! over.
+//!
+//! A `RemoteWorker` implements the coordinator's shard-solve seam
+//! ([`ShardExecutor`]), so the work-pulling scheduler treats it exactly
+//! like a local thread; any wire failure surfaces as an `Err`, which the
+//! coordinator answers by re-solving the shard locally and counting the
+//! fallback in `CoordMetrics`.
+
+use super::protocol::{self, DoneFrame, Message, WireSpec, PROTOCOL_VERSION};
+use super::{CONNECT_TIMEOUT, IO_TIMEOUT};
+use crate::data::Dataset;
+use crate::kmeans::shard::{level1_spec, ShardExecutor, ShardPartial};
+use crate::kmeans::solver::KmeansSpec;
+use crate::kmeans::IterStats;
+use crate::util::frame::write_frame;
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// One live, version-checked connection to a `shard-worker`.
+pub struct RemoteWorker {
+    addr: String,
+    stream: TcpStream,
+    bytes_tx: u64,
+    bytes_rx: u64,
+}
+
+impl RemoteWorker {
+    /// Connect and handshake.  Any failure — unresolvable address,
+    /// refused connection, version skew, a peer that does not speak the
+    /// protocol — is an error the caller treats as "this endpoint is
+    /// unavailable".
+    pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        let sock = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("`{addr}` resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let mut worker = Self {
+            addr: addr.to_string(),
+            stream,
+            bytes_tx: 0,
+            bytes_rx: 0,
+        };
+        worker.send(&Message::Hello {
+            version: PROTOCOL_VERSION,
+        })?;
+        match worker.recv()? {
+            Message::HelloAck { version } if version == PROTOCOL_VERSION => Ok(worker),
+            Message::HelloAck { version } => {
+                anyhow::bail!("worker {addr} acked protocol v{version}, want v{PROTOCOL_VERSION}")
+            }
+            Message::Error { code, message } => {
+                anyhow::bail!("worker {addr} refused the handshake (code {code}): {message}")
+            }
+            other => anyhow::bail!("worker {addr} sent {other:?} instead of a handshake ack"),
+        }
+    }
+
+    /// The endpoint this connection was dialed to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// `(bytes sent, bytes received)` over this connection's lifetime.
+    pub fn traffic(&self) -> (u64, u64) {
+        (self.bytes_tx, self.bytes_rx)
+    }
+
+    fn send(&mut self, msg: &Message) -> anyhow::Result<()> {
+        self.bytes_tx += msg.write_to(&mut self.stream)? as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Message> {
+        let (msg, n) = Message::read_from(&mut self.stream)?;
+        self.bytes_rx += n as u64;
+        Ok(msg)
+    }
+
+    /// Ship one shard solve and stream its iterations.  `wspec` must
+    /// already be the worker-side spec ([`level1_spec`]); `on_iter`
+    /// receives each iteration's counters as the frames arrive.
+    pub fn solve(
+        &mut self,
+        shard: usize,
+        data: &Dataset,
+        wspec: &KmeansSpec,
+        on_iter: &mut dyn FnMut(&IterStats),
+    ) -> anyhow::Result<ShardPartial> {
+        // Borrowed-parts encode: the shard slice serializes straight from
+        // the plan's dataset, no intermediate clone.
+        let (kind, payload) =
+            protocol::encode_job(shard as u32, &WireSpec::from_spec(wspec), data);
+        self.bytes_tx += write_frame(&mut self.stream, kind, &payload)? as u64;
+        loop {
+            match self.recv()? {
+                Message::Iter(frame) => on_iter(&frame.stats),
+                Message::Done(done) => {
+                    let DoneFrame {
+                        centroids,
+                        counts,
+                        stats,
+                    } = *done;
+                    anyhow::ensure!(
+                        centroids.len() == wspec.k && counts.len() == wspec.k,
+                        "worker {} returned {} centroids / {} counts for k={}",
+                        self.addr,
+                        centroids.len(),
+                        counts.len(),
+                        wspec.k
+                    );
+                    return Ok(ShardPartial {
+                        centroids,
+                        counts,
+                        stats,
+                    });
+                }
+                Message::Error { code, message } => {
+                    anyhow::bail!(
+                        "worker {} failed shard {shard} (code {code}): {message}",
+                        self.addr
+                    )
+                }
+                other => anyhow::bail!(
+                    "worker {} sent {other:?} mid-solve of shard {shard}",
+                    self.addr
+                ),
+            }
+        }
+    }
+
+    /// Politely tell the worker process to exit its accept loop.
+    pub fn request_shutdown(mut self) -> anyhow::Result<()> {
+        self.send(&Message::Shutdown)
+    }
+}
+
+impl ShardExecutor for RemoteWorker {
+    fn describe(&self) -> String {
+        format!("remote({})", self.addr)
+    }
+
+    fn solve_shard(
+        &mut self,
+        shard: usize,
+        data: &Dataset,
+        base_spec: &KmeansSpec,
+        on_iter: &mut dyn FnMut(&IterStats),
+    ) -> anyhow::Result<ShardPartial> {
+        let wspec = level1_spec(base_spec, shard);
+        self.solve(shard, data, &wspec, on_iter)
+    }
+
+    fn wire_bytes(&self) -> (u64, u64) {
+        self.traffic()
+    }
+}
+
+/// Connect, handshake and immediately request worker shutdown — the
+/// teardown tool tests and scripts use to stop a `shard-worker`.
+pub fn shutdown_worker(addr: &str) -> anyhow::Result<()> {
+    RemoteWorker::connect(addr)?.request_shutdown()
+}
+
+/// The set of `shard-worker` endpoints a coordinated run may use
+/// (`--remote host:port`, repeatable; the same endpoint may appear more
+/// than once to open multiple connections to one worker).
+#[derive(Clone, Debug, Default)]
+pub struct RemoteShardPool {
+    endpoints: Vec<String>,
+}
+
+impl RemoteShardPool {
+    pub fn new(endpoints: Vec<String>) -> Self {
+        Self { endpoints }
+    }
+
+    pub fn endpoints(&self) -> &[String] {
+        &self.endpoints
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.endpoints.is_empty()
+    }
+
+    /// Dial every endpoint.  Unreachable/refusing/skewed endpoints are
+    /// logged and *counted*, not fatal — the coordinator falls back to
+    /// local threads for the capacity they would have provided.
+    pub fn connect_all(&self) -> (Vec<RemoteWorker>, u64) {
+        let mut workers = Vec::with_capacity(self.endpoints.len());
+        let mut failures = 0u64;
+        for ep in &self.endpoints {
+            match RemoteWorker::connect(ep) {
+                Ok(w) => workers.push(w),
+                Err(e) => {
+                    failures += 1;
+                    log::warn!("remote shard worker {ep} unavailable, falling back local: {e}");
+                }
+            }
+        }
+        (workers, failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_tracks_endpoints() {
+        let pool = RemoteShardPool::new(vec!["a:1".into(), "b:2".into(), "a:1".into()]);
+        assert_eq!(pool.endpoints().len(), 3);
+        assert!(!pool.is_empty());
+        assert!(RemoteShardPool::default().is_empty());
+    }
+
+    #[test]
+    fn connect_to_dead_endpoint_fails_cleanly() {
+        // Port 1 on loopback: refused (or at worst filtered — the
+        // connect timeout still bounds it).  Either way: Err, no panic.
+        assert!(RemoteWorker::connect("127.0.0.1:1").is_err());
+        assert!(RemoteWorker::connect("not-a-host-name.invalid:99").is_err());
+        let (workers, failures) =
+            RemoteShardPool::new(vec!["127.0.0.1:1".into()]).connect_all();
+        assert!(workers.is_empty());
+        assert_eq!(failures, 1);
+    }
+}

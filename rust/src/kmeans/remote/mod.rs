@@ -1,0 +1,51 @@
+//! The remote shard plane: level-1 shard solves over a wire protocol.
+//!
+//! The paper's architecture distributes level-1 filtering across
+//! independent cores and merges their `(centroid, count)` partials
+//! centrally; the shard plane ([`crate::kmeans::shard`]) already
+//! abstracts *where* a shard solves via [`ShardExecutor`].  This module
+//! takes that seam across a socket:
+//!
+//! - [`protocol`] — versioned, length-prefixed, checksummed binary
+//!   frames ([`crate::util::frame`]): a `Hello`/`HelloAck` handshake,
+//!   `Job` frames carrying a spec snapshot plus the shard slice in exact
+//!   f32 bits, streamed per-iteration frames, and a terminal
+//!   `Done { centroids, counts, stats }` — the paper's partial-sums
+//!   exchange, literally.
+//! - [`server`] — the `shard-worker` accept loop behind the CLI
+//!   subcommand: each connection is served on its own thread, each job
+//!   runs the *canonical* shard solve over the scalar-oracle panels.
+//! - [`client`] — [`RemoteWorker`] (one connection, implements
+//!   [`ShardExecutor`]) and [`RemoteShardPool`] (the `--remote`
+//!   endpoints of a run).
+//!
+//! **Bitwise parity.** Worker and coordinator share one solve function
+//! and the wire carries exact IEEE bits, so a loopback remote run of P
+//! shards produces *byte-identical* centroids and assignments to the
+//! in-process shard plane (`rust/tests/remote_shard.rs` pins this).
+//!
+//! **Failure semantics.** Every wire failure is contained: endpoints
+//! that refuse/skew at connect time and connections that die mid-solve
+//! both fall back to a local solve of the affected shard, counted in
+//! `CoordMetrics::remote_fallbacks` — a dead worker costs throughput,
+//! never the run.
+//!
+//! [`ShardExecutor`]: crate::kmeans::shard::ShardExecutor
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{shutdown_worker, RemoteShardPool, RemoteWorker};
+pub use protocol::PROTOCOL_VERSION;
+pub use server::{WorkerHandle, WorkerServer};
+
+use std::time::Duration;
+
+/// Dial timeout for coordinator → worker connections.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Per-read/write socket timeout on both sides.  Generous — a shard
+/// solve streams a frame per iteration, so silence this long means a
+/// dead peer, not a slow one.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(120);

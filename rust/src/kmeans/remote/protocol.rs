@@ -1,0 +1,606 @@
+//! Message layer of the remote shard plane: typed frames over the
+//! [`util::frame`](crate::util::frame) codec.
+//!
+//! Conversation shape (client = coordinator, server = `shard-worker`):
+//!
+//! ```text
+//! client → Hello{version}            server → HelloAck{version}
+//!                                           | Error{VersionSkew}
+//! client → Job{shard, spec, slice}   server → Iter{..} × iterations
+//!                                            Done{centroids, counts, stats}
+//!                                           | Error{BadJob | Internal}
+//! …(more Jobs on the same connection)…
+//! client → Shutdown                  server exits its accept loop
+//! ```
+//!
+//! All numeric fields are little-endian; every f32/f64 travels as exact
+//! IEEE bits, which is what lets a loopback remote run reproduce the
+//! in-process shard plane bit for bit.  Decoders never panic on hostile
+//! payloads — every length is bounds-checked against the frame.
+
+use crate::data::Dataset;
+use crate::kmeans::init::Init;
+use crate::kmeans::solver::{Algo, KmeansSpec};
+use crate::kmeans::{IterStats, LevelWork, Metric, RunStats};
+use crate::util::frame::{read_frame, write_frame, ByteReader, ByteWriter, FrameError};
+use std::io::{self, Read, Write};
+
+/// Wire protocol version; the handshake requires an exact match (the
+/// format has no negotiation — a skewed peer is told so and dropped).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+// Frame kinds.
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_HELLO_ACK: u8 = 2;
+pub const KIND_JOB: u8 = 3;
+pub const KIND_ITER: u8 = 4;
+pub const KIND_DONE: u8 = 5;
+pub const KIND_ERROR: u8 = 6;
+pub const KIND_SHUTDOWN: u8 = 7;
+
+// Error codes carried by [`Message::Error`].
+pub const ERR_VERSION_SKEW: u8 = 1;
+pub const ERR_BAD_JOB: u8 = 2;
+pub const ERR_INTERNAL: u8 = 3;
+
+/// The solver knobs a level-1 shard solve needs — the spec snapshot of
+/// the handshake's Job frames.  Deliberately *not* the whole
+/// [`KmeansSpec`]: partition/shards/level-2 fields are coordinator-side
+/// concerns, the seed arrives already shard-derived
+/// ([`shard_seed`](crate::kmeans::shard::shard_seed)'d by the client),
+/// and `track_cost` is omitted on purpose — the filtering engine behind
+/// every level-1 solve has no cost tracking (`FilterOpts` carries none),
+/// so the flag is dead weight locally and remotely alike.  If a future
+/// engine grows it, bump [`PROTOCOL_VERSION`] and add the field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSpec {
+    pub k: u32,
+    pub metric: Metric,
+    /// Exact bits of the convergence tolerance.
+    pub tol: f32,
+    pub max_iters: u64,
+    pub init: Init,
+    pub seed: u64,
+}
+
+impl WireSpec {
+    /// Snapshot the fields of an (already [`level1_spec`]-derived)
+    /// working spec.
+    ///
+    /// [`level1_spec`]: crate::kmeans::shard::level1_spec
+    pub fn from_spec(spec: &KmeansSpec) -> Self {
+        Self {
+            k: spec.k as u32,
+            metric: spec.metric,
+            tol: spec.tol,
+            max_iters: spec.max_iters as u64,
+            init: spec.init,
+            seed: spec.seed,
+        }
+    }
+
+    /// Rebuild the working spec a worker runs: always the batched
+    /// filtering engine (the panel backend is injected worker-side).
+    pub fn to_spec(&self) -> KmeansSpec {
+        KmeansSpec::new(self.k as usize)
+            .algo(Algo::FilterBatched)
+            .metric(self.metric)
+            .tol(self.tol)
+            .max_iters(self.max_iters as usize)
+            .init(self.init)
+            .seed(self.seed)
+            .workers(1)
+    }
+}
+
+/// One shard solve request.
+#[derive(Clone, Debug)]
+pub struct ShardJob {
+    /// Shard index within the coordinator's plan (for logs/accounting).
+    pub shard: u32,
+    pub spec: WireSpec,
+    /// The shard's rows, exact bits.
+    pub data: Dataset,
+}
+
+/// One streamed iteration of a running shard solve: the post-update
+/// centroids plus that iteration's work counters (the coordinator's live
+/// metrics feed).  The coordinator currently consumes only `stats`;
+/// centroids ride along by design (k×d×4 bytes — small next to the
+/// solve) so progress UIs / checkpointing consumers can subscribe
+/// without a protocol bump.
+#[derive(Clone, Debug)]
+pub struct IterFrame {
+    pub iter: u64,
+    pub stats: IterStats,
+    pub centroids: Dataset,
+}
+
+/// Terminal frame of a shard solve: the `(centroids, counts)` partials
+/// the combiner consumes plus the full run statistics.
+#[derive(Clone, Debug)]
+pub struct DoneFrame {
+    pub centroids: Dataset,
+    pub counts: Vec<usize>,
+    pub stats: RunStats,
+}
+
+/// Every message the protocol speaks.
+#[derive(Clone, Debug)]
+pub enum Message {
+    Hello { version: u32 },
+    HelloAck { version: u32 },
+    Job(Box<ShardJob>),
+    Iter(Box<IterFrame>),
+    Done(Box<DoneFrame>),
+    Error { code: u8, message: String },
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// Field codecs
+// ---------------------------------------------------------------------------
+
+fn put_metric(w: &mut ByteWriter, m: Metric) {
+    w.put_u8(match m {
+        Metric::Euclid => 0,
+        Metric::Manhattan => 1,
+    });
+}
+
+fn take_metric(r: &mut ByteReader<'_>) -> Result<Metric, FrameError> {
+    match r.take_u8()? {
+        0 => Ok(Metric::Euclid),
+        1 => Ok(Metric::Manhattan),
+        _ => Err(FrameError::Malformed("unknown metric tag")),
+    }
+}
+
+fn put_init(w: &mut ByteWriter, i: Init) {
+    w.put_u8(match i {
+        Init::UniformSample => 0,
+        Init::KmeansPlusPlus => 1,
+    });
+}
+
+fn take_init(r: &mut ByteReader<'_>) -> Result<Init, FrameError> {
+    match r.take_u8()? {
+        0 => Ok(Init::UniformSample),
+        1 => Ok(Init::KmeansPlusPlus),
+        _ => Err(FrameError::Malformed("unknown init tag")),
+    }
+}
+
+fn put_dataset(w: &mut ByteWriter, d: &Dataset) {
+    w.put_u32(d.len() as u32);
+    w.put_u32(d.dims() as u32);
+    w.put_f32_slice(d.flat());
+}
+
+fn take_dataset(r: &mut ByteReader<'_>) -> Result<Dataset, FrameError> {
+    let n = r.take_u32()? as usize;
+    let d = r.take_u32()? as usize;
+    let flat = r.take_f32_vec()?;
+    if d == 0 || flat.len() != n.saturating_mul(d) {
+        return Err(FrameError::Malformed("dataset shape/length mismatch"));
+    }
+    Ok(Dataset::from_flat(n, d, flat))
+}
+
+fn put_iter_stats(w: &mut ByteWriter, s: &IterStats) {
+    w.put_u64(s.dist_evals);
+    w.put_u64(s.node_visits);
+    w.put_u64(s.leaf_points);
+    w.put_u64(s.interior_assigns);
+    w.put_u64(s.prune_tests);
+    w.put_f32_bits(s.moved);
+    match s.cost {
+        Some(c) => {
+            w.put_u8(1);
+            w.put_f64_bits(c);
+        }
+        None => w.put_u8(0),
+    }
+    w.put_u32(s.levels.len() as u32);
+    for l in &s.levels {
+        w.put_u64(l.interior_jobs);
+        w.put_u64(l.leaf_jobs);
+        w.put_u64(l.cand_evals);
+        w.put_u64(l.prune_tests);
+    }
+}
+
+fn take_iter_stats(r: &mut ByteReader<'_>) -> Result<IterStats, FrameError> {
+    let mut s = IterStats {
+        dist_evals: r.take_u64()?,
+        node_visits: r.take_u64()?,
+        leaf_points: r.take_u64()?,
+        interior_assigns: r.take_u64()?,
+        prune_tests: r.take_u64()?,
+        moved: r.take_f32_bits()?,
+        cost: None,
+        levels: Vec::new(),
+    };
+    if r.take_u8()? != 0 {
+        s.cost = Some(r.take_f64_bits()?);
+    }
+    let nlevels = r.take_u32()? as usize;
+    if r.remaining() < nlevels.saturating_mul(32) {
+        return Err(FrameError::Malformed("level histogram length"));
+    }
+    s.levels.reserve(nlevels);
+    for _ in 0..nlevels {
+        s.levels.push(LevelWork {
+            interior_jobs: r.take_u64()?,
+            leaf_jobs: r.take_u64()?,
+            cand_evals: r.take_u64()?,
+            prune_tests: r.take_u64()?,
+        });
+    }
+    Ok(s)
+}
+
+fn put_run_stats(w: &mut ByteWriter, s: &RunStats) {
+    w.put_u8(s.converged as u8);
+    w.put_u8(s.early_stopped as u8);
+    w.put_u32(s.iters.len() as u32);
+    for it in &s.iters {
+        put_iter_stats(w, it);
+    }
+}
+
+fn take_run_stats(r: &mut ByteReader<'_>) -> Result<RunStats, FrameError> {
+    let converged = r.take_u8()? != 0;
+    let early_stopped = r.take_u8()? != 0;
+    let n = r.take_u32()? as usize;
+    // Each iteration costs >= 49 payload bytes; bound before reserving.
+    if r.remaining() < n.saturating_mul(49) {
+        return Err(FrameError::Malformed("iteration list length"));
+    }
+    let mut iters = Vec::with_capacity(n);
+    for _ in 0..n {
+        iters.push(take_iter_stats(r)?);
+    }
+    Ok(RunStats {
+        iters,
+        converged,
+        early_stopped,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Message encode/decode
+// ---------------------------------------------------------------------------
+
+/// Encode a Job frame from *borrowed* parts — the client-side hot path
+/// uses this so the shard slice is serialized straight from the plan's
+/// dataset without an intermediate clone into a [`ShardJob`].
+pub fn encode_job(shard: u32, spec: &WireSpec, data: &Dataset) -> (u8, Vec<u8>) {
+    let mut w = ByteWriter::with_capacity(40 + data.flat().len() * 4);
+    w.put_u32(shard);
+    w.put_u32(spec.k);
+    put_metric(&mut w, spec.metric);
+    w.put_f32_bits(spec.tol);
+    w.put_u64(spec.max_iters);
+    put_init(&mut w, spec.init);
+    w.put_u64(spec.seed);
+    put_dataset(&mut w, data);
+    (KIND_JOB, w.into_vec())
+}
+
+impl Message {
+    /// `(frame kind, payload)` of this message.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        if let Message::Job(job) = self {
+            return encode_job(job.shard, &job.spec, &job.data);
+        }
+        let mut w = ByteWriter::new();
+        let kind = match self {
+            Message::Hello { version } => {
+                w.put_u32(*version);
+                KIND_HELLO
+            }
+            Message::HelloAck { version } => {
+                w.put_u32(*version);
+                KIND_HELLO_ACK
+            }
+            Message::Job(_) => unreachable!("handled above"),
+            Message::Iter(it) => {
+                w.put_u64(it.iter);
+                put_iter_stats(&mut w, &it.stats);
+                put_dataset(&mut w, &it.centroids);
+                KIND_ITER
+            }
+            Message::Done(done) => {
+                put_dataset(&mut w, &done.centroids);
+                w.put_u32(done.counts.len() as u32);
+                for &c in &done.counts {
+                    w.put_u64(c as u64);
+                }
+                put_run_stats(&mut w, &done.stats);
+                KIND_DONE
+            }
+            Message::Error { code, message } => {
+                w.put_u8(*code);
+                w.put_str(message);
+                KIND_ERROR
+            }
+            Message::Shutdown => KIND_SHUTDOWN,
+        };
+        (kind, w.into_vec())
+    }
+
+    /// Decode a frame's payload.  Unknown kinds and malformed payloads
+    /// are errors, never panics.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Message, FrameError> {
+        let mut r = ByteReader::new(payload);
+        let msg = match kind {
+            KIND_HELLO => Message::Hello {
+                version: r.take_u32()?,
+            },
+            KIND_HELLO_ACK => Message::HelloAck {
+                version: r.take_u32()?,
+            },
+            KIND_JOB => {
+                let shard = r.take_u32()?;
+                let k = r.take_u32()?;
+                let metric = take_metric(&mut r)?;
+                let tol = r.take_f32_bits()?;
+                let max_iters = r.take_u64()?;
+                let init = take_init(&mut r)?;
+                let seed = r.take_u64()?;
+                let data = take_dataset(&mut r)?;
+                Message::Job(Box::new(ShardJob {
+                    shard,
+                    spec: WireSpec {
+                        k,
+                        metric,
+                        tol,
+                        max_iters,
+                        init,
+                        seed,
+                    },
+                    data,
+                }))
+            }
+            KIND_ITER => {
+                let iter = r.take_u64()?;
+                let stats = take_iter_stats(&mut r)?;
+                let centroids = take_dataset(&mut r)?;
+                Message::Iter(Box::new(IterFrame {
+                    iter,
+                    stats,
+                    centroids,
+                }))
+            }
+            KIND_DONE => {
+                let centroids = take_dataset(&mut r)?;
+                let n = r.take_u32()? as usize;
+                if r.remaining() < n.saturating_mul(8) {
+                    return Err(FrameError::Malformed("count list length"));
+                }
+                let mut counts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    counts.push(r.take_u64()? as usize);
+                }
+                let stats = take_run_stats(&mut r)?;
+                Message::Done(Box::new(DoneFrame {
+                    centroids,
+                    counts,
+                    stats,
+                }))
+            }
+            KIND_ERROR => Message::Error {
+                code: r.take_u8()?,
+                message: r.take_str()?,
+            },
+            KIND_SHUTDOWN => Message::Shutdown,
+            _ => return Err(FrameError::Malformed("unknown frame kind")),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+
+    /// Frame and send this message; returns bytes put on the wire.
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<usize> {
+        let (kind, payload) = self.encode();
+        write_frame(w, kind, &payload)
+    }
+
+    /// Read and decode one message; returns it with its wire byte count.
+    pub fn read_from(r: &mut impl Read) -> Result<(Message, usize), FrameError> {
+        let (kind, payload, n) = read_frame(r)?;
+        Ok((Message::decode(kind, &payload)?, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use std::io::Cursor;
+
+    fn round_trip(msg: &Message) -> Message {
+        let mut wire = Vec::new();
+        let tx = msg.write_to(&mut wire).unwrap();
+        assert_eq!(tx, wire.len());
+        let (back, rx) = Message::read_from(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(rx, tx);
+        back
+    }
+
+    #[test]
+    fn handshake_messages_round_trip() {
+        match round_trip(&Message::Hello {
+            version: PROTOCOL_VERSION,
+        }) {
+            Message::Hello { version } => assert_eq!(version, PROTOCOL_VERSION),
+            other => panic!("{other:?}"),
+        }
+        match round_trip(&Message::Error {
+            code: ERR_VERSION_SKEW,
+            message: "speak v1".into(),
+        }) {
+            Message::Error { code, message } => {
+                assert_eq!(code, ERR_VERSION_SKEW);
+                assert_eq!(message, "speak v1");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip(&Message::Shutdown), Message::Shutdown));
+    }
+
+    #[test]
+    fn job_round_trips_exact_bits() {
+        let s = generate_params(37, 5, 3, 0.2, 1.0, 8);
+        let spec = WireSpec {
+            k: 3,
+            metric: Metric::Manhattan,
+            tol: 1e-6,
+            max_iters: 100,
+            init: Init::KmeansPlusPlus,
+            seed: u64::MAX - 5,
+        };
+        let job = Message::Job(Box::new(ShardJob {
+            shard: 2,
+            spec: spec.clone(),
+            data: s.data.clone(),
+        }));
+        match round_trip(&job) {
+            Message::Job(j) => {
+                assert_eq!(j.shard, 2);
+                assert_eq!(j.spec, spec);
+                // Bitwise dataset equality.
+                assert_eq!(j.data.flat().len(), s.data.flat().len());
+                for (a, b) in j.data.flat().iter().zip(s.data.flat()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_spec_maps_onto_the_solver_spec() {
+        let spec = WireSpec {
+            k: 7,
+            metric: Metric::Euclid,
+            tol: 3.5e-5,
+            max_iters: 41,
+            init: Init::UniformSample,
+            seed: 99,
+        };
+        let k = spec.to_spec();
+        assert_eq!(k.k, 7);
+        assert_eq!(k.algo, Algo::FilterBatched);
+        assert_eq!(k.tol.to_bits(), 3.5e-5f32.to_bits());
+        assert_eq!(k.max_iters, 41);
+        assert_eq!(k.seed, 99);
+        assert_eq!(WireSpec::from_spec(&k), spec);
+    }
+
+    #[test]
+    fn done_round_trips_stats_and_counts() {
+        let stats = RunStats {
+            converged: true,
+            early_stopped: false,
+            iters: vec![
+                IterStats {
+                    dist_evals: 123,
+                    node_visits: 45,
+                    leaf_points: 6,
+                    interior_assigns: 7,
+                    prune_tests: 89,
+                    moved: 0.25,
+                    cost: Some(1.5),
+                    levels: vec![LevelWork {
+                        interior_jobs: 1,
+                        leaf_jobs: 2,
+                        cand_evals: 3,
+                        prune_tests: 4,
+                    }],
+                },
+                IterStats::default(),
+            ],
+        };
+        let done = Message::Done(Box::new(DoneFrame {
+            centroids: Dataset::from_flat(2, 2, vec![1.0, -0.0, f32::MIN_POSITIVE, 4.0]),
+            counts: vec![10, 20],
+            stats,
+        }));
+        match round_trip(&done) {
+            Message::Done(d) => {
+                assert_eq!(d.counts, vec![10, 20]);
+                assert!(d.stats.converged);
+                assert_eq!(d.stats.iters.len(), 2);
+                assert_eq!(d.stats.iters[0].dist_evals, 123);
+                assert_eq!(d.stats.iters[0].cost, Some(1.5));
+                assert_eq!(d.stats.iters[0].levels.len(), 1);
+                assert_eq!(d.centroids.point(0)[1].to_bits(), (-0.0f32).to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected_without_panic() {
+        // Unknown kind.
+        assert!(Message::decode(99, &[]).is_err());
+        // Truncated payloads for every kind.
+        for kind in [
+            KIND_HELLO,
+            KIND_HELLO_ACK,
+            KIND_JOB,
+            KIND_ITER,
+            KIND_DONE,
+            KIND_ERROR,
+        ] {
+            assert!(Message::decode(kind, &[1, 2]).is_err(), "kind {kind}");
+        }
+        // Trailing garbage after a valid message body.
+        let (kind, mut payload) = Message::Hello { version: 1 }.encode();
+        payload.push(0);
+        assert!(Message::decode(kind, &payload).is_err());
+        // Bad enum tags inside a job are refused.
+        let s = generate_params(5, 2, 1, 0.2, 1.0, 3);
+        let (kind, mut payload) = Message::Job(Box::new(ShardJob {
+            shard: 0,
+            spec: WireSpec {
+                k: 1,
+                metric: Metric::Euclid,
+                tol: 0.0,
+                max_iters: 1,
+                init: Init::UniformSample,
+                seed: 0,
+            },
+            data: s.data.clone(),
+        }))
+        .encode();
+        payload[8] = 9; // metric tag byte
+        assert!(Message::decode(kind, &payload).is_err());
+    }
+
+    #[test]
+    fn every_iter_stat_field_survives_the_wire() {
+        // Catches a codec that forgets a field: absorb-equality on a
+        // fully-populated IterStats.
+        let mut w = ByteWriter::new();
+        let s = IterStats {
+            dist_evals: 1,
+            node_visits: 2,
+            leaf_points: 3,
+            interior_assigns: 4,
+            prune_tests: 5,
+            moved: -0.0,
+            cost: None,
+            levels: vec![LevelWork::default(); 3],
+        };
+        put_iter_stats(&mut w, &s);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        let back = take_iter_stats(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.moved.to_bits(), (-0.0f32).to_bits());
+    }
+}

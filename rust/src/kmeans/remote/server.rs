@@ -1,0 +1,277 @@
+//! Server half of the remote shard plane: the `shard-worker` loop behind
+//! the CLI subcommand of the same name.
+//!
+//! A [`WorkerServer`] accepts any number of concurrent coordinator
+//! connections (one thread each), answers the version handshake, and
+//! serves [`Job`](super::protocol::Message::Job) frames by running the
+//! *canonical* level-1 shard solve
+//! ([`shard::solve_level1_shard`](crate::kmeans::shard::solve_level1_shard))
+//! over the scalar-oracle panel backend — the same code path and the same
+//! arithmetic as the coordinator's local CPU executor, which is what
+//! makes a loopback remote run bit-identical to the in-process shard
+//! plane.
+//!
+//! Hostile peers are survived, not trusted: bad magic, corrupt frames,
+//! malformed payloads and out-of-range jobs all produce an error reply
+//! and/or a dropped connection, never a panic of the server.  A
+//! [`Shutdown`](super::protocol::Message::Shutdown) frame (from any
+//! peer — the worker is a loopback/cluster-internal tool, not an
+//! authenticated service) ends the accept loop.
+
+use super::protocol::{
+    DoneFrame, IterFrame, Message, ShardJob, ERR_BAD_JOB, ERR_VERSION_SKEW, PROTOCOL_VERSION,
+};
+use super::IO_TIMEOUT;
+use crate::kmeans::panel::CpuPanels;
+use crate::kmeans::shard::{solve_level1_shard, ShardPartial};
+use crate::kmeans::solver::{IterEvent, IterFlow, ObserveFn};
+use crate::util::frame::FrameError;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// How a connection ended (drives the accept loop).
+enum ConnEnd {
+    /// Peer hung up or was dropped for misbehaving.
+    Closed,
+    /// Peer requested worker shutdown.
+    Shutdown,
+}
+
+/// A bound (not yet running) shard worker.
+pub struct WorkerServer {
+    listener: TcpListener,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7601`; port 0 picks a free port).
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(Self {
+            listener,
+            local,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The actual bound address (resolves a `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Blocking accept loop.  Returns cleanly when a peer sends a
+    /// Shutdown frame; propagates listener-level I/O errors.
+    pub fn run(&self) -> anyhow::Result<()> {
+        log::info!(
+            "shard-worker listening on {} (protocol v{PROTOCOL_VERSION})",
+            self.local
+        );
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        // Transient accept failures (ECONNABORTED from a peer resetting
+        // mid-handshake, EMFILE under fd pressure) must not take the
+        // worker down; only a persistently broken listener is fatal.
+        let mut accept_errors = 0u32;
+        loop {
+            let (stream, peer) = match self.listener.accept() {
+                Ok(c) => {
+                    accept_errors = 0;
+                    c
+                }
+                Err(e) => {
+                    accept_errors += 1;
+                    log::warn!("shard-worker: accept failed ({accept_errors} in a row): {e}");
+                    if accept_errors >= 16 {
+                        return Err(e.into());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue;
+                }
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            conns.retain(|h| !h.is_finished());
+            let stop = Arc::clone(&self.stop);
+            let local = self.local;
+            conns.push(std::thread::spawn(move || {
+                match handle_conn(stream) {
+                    Ok(ConnEnd::Shutdown) => {
+                        log::info!("shard-worker: shutdown requested by {peer}");
+                        stop.store(true, Ordering::SeqCst);
+                        // Wake the accept loop so it observes the flag.
+                        let _ = TcpStream::connect(local);
+                    }
+                    Ok(ConnEnd::Closed) => {}
+                    Err(e) => log::warn!("shard-worker: connection from {peer} failed: {e}"),
+                }
+            }));
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+
+    /// Bind and run on a background thread (tests and embedders).
+    pub fn spawn(addr: &str) -> anyhow::Result<WorkerHandle> {
+        let server = Self::bind(addr)?;
+        let local = server.local_addr();
+        let join = std::thread::Builder::new()
+            .name(format!("shard-worker-{local}"))
+            .spawn(move || server.run())?;
+        Ok(WorkerHandle { local, join })
+    }
+}
+
+/// A running background [`WorkerServer`].
+pub struct WorkerHandle {
+    local: SocketAddr,
+    join: JoinHandle<anyhow::Result<()>>,
+}
+
+impl WorkerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Ask the worker to stop and join its accept loop.
+    pub fn shutdown(self) -> anyhow::Result<()> {
+        super::client::shutdown_worker(&self.local.to_string())?;
+        self.wait()
+    }
+
+    /// Join the accept loop without sending anything — for callers that
+    /// already delivered a Shutdown frame over their own connection.
+    pub fn wait(self) -> anyhow::Result<()> {
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("shard-worker accept loop panicked"),
+        }
+    }
+}
+
+/// Serve one coordinator connection: handshake, then a Job loop.
+fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+
+    // Handshake.  A bare disconnect (the accept-loop wake-up dummy, port
+    // scanners) is a normal close; a non-Hello opener is refused.
+    let first = match Message::read_from(&mut stream) {
+        Ok((m, _)) => m,
+        Err(FrameError::Truncated) => return Ok(ConnEnd::Closed),
+        Err(e) => return Err(e.into()),
+    };
+    match first {
+        Message::Shutdown => return Ok(ConnEnd::Shutdown),
+        Message::Hello { version } if version == PROTOCOL_VERSION => {
+            Message::HelloAck {
+                version: PROTOCOL_VERSION,
+            }
+            .write_to(&mut stream)?;
+        }
+        Message::Hello { version } => {
+            Message::Error {
+                code: ERR_VERSION_SKEW,
+                message: format!(
+                    "worker speaks protocol v{PROTOCOL_VERSION}, client sent v{version}"
+                ),
+            }
+            .write_to(&mut stream)?;
+            return Ok(ConnEnd::Closed);
+        }
+        other => {
+            Message::Error {
+                code: ERR_BAD_JOB,
+                message: format!("expected Hello, got {other:?}"),
+            }
+            .write_to(&mut stream)?;
+            return Ok(ConnEnd::Closed);
+        }
+    }
+
+    // Job loop: one connection serves any number of shard solves.
+    loop {
+        let msg = match Message::read_from(&mut stream) {
+            Ok((m, _)) => m,
+            Err(FrameError::Truncated) => return Ok(ConnEnd::Closed),
+            Err(e) => return Err(e.into()),
+        };
+        match msg {
+            Message::Shutdown => return Ok(ConnEnd::Shutdown),
+            Message::Job(job) => serve_job(&mut stream, *job)?,
+            other => {
+                Message::Error {
+                    code: ERR_BAD_JOB,
+                    message: format!("expected Job or Shutdown, got {other:?}"),
+                }
+                .write_to(&mut stream)?;
+                return Ok(ConnEnd::Closed);
+            }
+        }
+    }
+}
+
+/// Run one shard solve, streaming per-iteration frames, ending in Done.
+fn serve_job(stream: &mut TcpStream, job: ShardJob) -> anyhow::Result<()> {
+    let n = job.data.len();
+    let k = job.spec.k as usize;
+    // Range-check before touching the (panicky-by-contract) solver.
+    if k < 1 || k > n || job.spec.max_iters < 1 {
+        Message::Error {
+            code: ERR_BAD_JOB,
+            message: format!(
+                "unsolvable job: k={k} over n={n} rows, max_iters={}",
+                job.spec.max_iters
+            ),
+        }
+        .write_to(stream)?;
+        return Ok(());
+    }
+    log::debug!(
+        "shard-worker: solving shard {} (n={n} d={} k={k} seed={})",
+        job.shard,
+        job.data.dims(),
+        job.spec.seed
+    );
+    let wspec = job.spec.to_spec();
+    // Stream every iteration back as it happens; if the coordinator went
+    // away mid-solve, stop early and drop the connection.
+    let mut io_err: Option<io::Error> = None;
+    let result = {
+        let observer = ObserveFn(|ev: &IterEvent<'_>| {
+            let frame = Message::Iter(Box::new(IterFrame {
+                iter: ev.iter as u64,
+                stats: ev.stats.clone(),
+                centroids: ev.centroids.clone(),
+            }));
+            match frame.write_to(&mut *stream) {
+                Ok(_) => IterFlow::Continue,
+                Err(e) => {
+                    io_err = Some(e);
+                    IterFlow::Stop
+                }
+            }
+        });
+        // CpuPanels: the scalar oracle — bitwise the coordinator's local
+        // CPU executor.
+        solve_level1_shard(&job.data, &wspec, CpuPanels, Some(observer))
+    };
+    if let Some(e) = io_err {
+        return Err(e.into());
+    }
+    let partial = ShardPartial::from_result(result);
+    Message::Done(Box::new(DoneFrame {
+        centroids: partial.centroids,
+        counts: partial.counts,
+        stats: partial.stats,
+    }))
+    .write_to(stream)?;
+    Ok(())
+}

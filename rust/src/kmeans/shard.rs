@@ -36,9 +36,14 @@
 //! ever-growing used-set; for P ≤ [`COMBINE_FAN_IN`] it *is* a single
 //! flat pass, bitwise identical to the legacy `twolevel::combine`.
 
-use super::Metric;
+use super::panel::PanelBackend;
+use super::solver::{Algo, IterObserver, KmeansSpec, SolverCtx};
+use super::{IterStats, KmeansResult, Metric, RunStats};
 use crate::data::Dataset;
-use crate::kdtree::KdTree;
+use crate::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Default shard count — the paper's 4 (one per ZCU102 Cortex-A53).
 pub const DEFAULT_SHARDS: usize = 4;
@@ -228,19 +233,7 @@ pub fn plan_kd_frontier(
         .iter()
         .map(|&ni| tree.node_points(&tree.nodes[ni as usize]).to_vec())
         .collect();
-    while ids.len() > shards {
-        let mut best = 0usize;
-        let mut best_len = usize::MAX;
-        for i in 0..ids.len() - 1 {
-            let len = ids[i].len() + ids[i + 1].len();
-            if len < best_len {
-                best_len = len;
-                best = i;
-            }
-        }
-        let right = ids.remove(best + 1);
-        ids[best].extend_from_slice(&right);
-    }
+    fold_adjacent_smallest(&mut ids, shards);
 
     let datasets = ids
         .iter()
@@ -250,6 +243,60 @@ pub fn plan_kd_frontier(
         })
         .collect();
     (datasets, ids)
+}
+
+/// Repeatedly merge the adjacent pair with the smallest combined size
+/// (leftmost on ties) until exactly `shards` lists remain — the
+/// kd-frontier folding rule, now driven by a binary heap with lazy
+/// invalidation instead of a full linear re-scan per fold (O(F log F)
+/// instead of O(F²) for F frontier nodes).  The merge *sequence* is
+/// pinned to the historical scan's output: entries are keyed
+/// `(combined size, left position)` so equal-size ties still resolve to
+/// the leftmost pair, and stale entries (a neighbor merged or grew) are
+/// discarded at pop time because their recorded sum no longer matches
+/// the live pair.
+fn fold_adjacent_smallest(ids: &mut Vec<Vec<u32>>, shards: usize) {
+    let n = ids.len();
+    if n <= shards {
+        return;
+    }
+    let mut len: Vec<usize> = ids.iter().map(|v| v.len()).collect();
+    // Doubly-linked list over the original positions (`n` = no neighbor);
+    // positions never reorder, so "leftmost" stays the original index.
+    let mut next: Vec<usize> = (1..=n).collect();
+    let mut prev: Vec<usize> = (0..n).map(|i| i.wrapping_sub(1)).collect();
+    let mut alive = vec![true; n];
+    let mut heap: BinaryHeap<Reverse<(usize, usize)>> = (0..n - 1)
+        .map(|i| Reverse((len[i] + len[i + 1], i)))
+        .collect();
+    let mut remaining = n;
+    while remaining > shards {
+        let Reverse((sum, left)) = heap.pop().expect("frontier fold heap exhausted");
+        if !alive[left] {
+            continue;
+        }
+        let right = next[left];
+        if right >= n || len[left] + len[right] != sum {
+            continue; // stale: the pair this entry described no longer exists
+        }
+        let moved = std::mem::take(&mut ids[right]);
+        ids[left].extend_from_slice(&moved);
+        len[left] += len[right];
+        alive[right] = false;
+        next[left] = next[right];
+        if next[left] < n {
+            prev[next[left]] = left;
+        }
+        remaining -= 1;
+        if next[left] < n {
+            heap.push(Reverse((len[left] + len[next[left]], left)));
+        }
+        if prev[left] != usize::MAX {
+            heap.push(Reverse((len[prev[left]] + len[left], prev[left])));
+        }
+    }
+    let mut keep = alive.into_iter();
+    ids.retain(|_| keep.next().unwrap());
 }
 
 /// One flat `Combine` pass: merge up to [`COMBINE_FAN_IN`]-ish sets of k
@@ -346,6 +393,108 @@ pub fn combine_hierarchical(
         cnts = next_cnts;
     }
     combine_level(&sets, &cnts, metric).0
+}
+
+// ---------------------------------------------------------------------------
+// The shard-solve seam: one canonical level-1 solve, many executors
+// ---------------------------------------------------------------------------
+
+/// The spec one level-1 shard solve runs under: the caller's spec with the
+/// batched filtering engine selected, the per-shard seed derived by
+/// [`shard_seed`], and any explicit start centroids stripped (level-1
+/// always seeds per shard).  Every executor of a [`ShardPlan`] — the
+/// sequential reference, the threaded coordinator, and a remote
+/// [`shard-worker`](crate::kmeans::remote) — derives its working spec
+/// through this one function, which is what makes their solves bitwise
+/// comparable.
+pub fn level1_spec(spec: &KmeansSpec, shard: usize) -> KmeansSpec {
+    let mut wspec = spec
+        .clone()
+        .algo(Algo::FilterBatched)
+        .seed(shard_seed(spec.seed, shard));
+    wspec.start = None;
+    wspec
+}
+
+/// The canonical level-1 shard solve: build a kd-tree over the shard
+/// (sequential build — the caller already owns the parallelism budget),
+/// then run `wspec` through the unified solver API with the given panel
+/// backend.  Shared verbatim by the coordinator's local executor and the
+/// remote worker loop so the two cannot drift: same tree, same engine,
+/// same arithmetic ⇒ bit-identical centroids wherever the solve runs.
+pub fn solve_level1_shard<'a, B, O>(
+    data: &'a Dataset,
+    wspec: &KmeansSpec,
+    backend: B,
+    observer: Option<O>,
+) -> KmeansResult
+where
+    B: PanelBackend + 'a,
+    O: IterObserver + 'a,
+{
+    let tree = Arc::new(KdTree::build_par(data, DEFAULT_LEAF_SIZE, 0));
+    let mut ctx = SolverCtx::new(data).with_tree(tree).with_backend(backend);
+    if let Some(obs) = observer {
+        ctx = ctx.with_observer(obs);
+    }
+    wspec.solve(&mut ctx)
+}
+
+/// What one level-1 shard solve ships back to the combiner — the paper's
+/// `(centroid, count)` partials plus the run's work counters.  This is the
+/// whole coordinator↔executor contract: shard assignments never travel
+/// (level 2 reassigns every point), which is also what keeps the remote
+/// wire format small.
+#[derive(Clone, Debug)]
+pub struct ShardPartial {
+    /// The shard's k level-1 centroids.
+    pub centroids: Dataset,
+    /// Member count of each centroid's cluster.
+    pub counts: Vec<usize>,
+    /// Per-iteration work counters of the solve.
+    pub stats: RunStats,
+}
+
+impl ShardPartial {
+    /// Distill a full shard-solve result down to the partials the
+    /// combiner needs.
+    pub fn from_result(r: KmeansResult) -> Self {
+        Self {
+            counts: r.sizes(),
+            centroids: r.centroids,
+            stats: r.stats,
+        }
+    }
+}
+
+/// Where a shard solve runs.  The coordinator's scheduler pulls shard
+/// indices off a shared counter and hands each to *some* executor — local
+/// CPU threads ([`crate::coordinator`]'s `LocalShardExec`) or remote
+/// workers over the wire protocol
+/// ([`crate::kmeans::remote::RemoteWorker`]) — without caring which;
+/// per-shard solves are deterministic, so the mix never changes the
+/// result.  `on_iter` receives every iteration's counters (the live
+/// metrics feed); a `Err` return means the executor could not produce a
+/// partial (e.g. the wire died) and the caller should fall back.
+pub trait ShardExecutor: Send {
+    /// Human-readable identity for logs ("local", "remote(host:port)").
+    fn describe(&self) -> String;
+
+    /// Solve shard `shard` of the plan over `data` under `base_spec`
+    /// (executors derive the working spec via [`level1_spec`]).
+    fn solve_shard(
+        &mut self,
+        shard: usize,
+        data: &Dataset,
+        base_spec: &KmeansSpec,
+        on_iter: &mut dyn FnMut(&IterStats),
+    ) -> anyhow::Result<ShardPartial>;
+
+    /// Wire-traffic accounting `(bytes_tx, bytes_rx)`; zero for local
+    /// executors.
+    fn wire_bytes(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 #[cfg(test)]
@@ -544,6 +693,82 @@ mod tests {
             combine_level(&[c0, c1], &[vec![0], vec![0]], Metric::Euclid);
         assert_eq!(merged.point(0), &[3.5]);
         assert_eq!(counts, vec![0]);
+    }
+
+    /// The pre-heap folding rule, verbatim: full linear scan for the
+    /// smallest adjacent pair (leftmost on ties), merge, repeat.
+    fn legacy_fold(mut ids: Vec<Vec<u32>>, shards: usize) -> Vec<Vec<u32>> {
+        while ids.len() > shards {
+            let mut best = 0usize;
+            let mut best_len = usize::MAX;
+            for i in 0..ids.len() - 1 {
+                let len = ids[i].len() + ids[i + 1].len();
+                if len < best_len {
+                    best_len = len;
+                    best = i;
+                }
+            }
+            let right = ids.remove(best + 1);
+            ids[best].extend_from_slice(&right);
+        }
+        ids
+    }
+
+    #[test]
+    fn heap_fold_matches_legacy_scan_fold() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF01D);
+        for case in 0..40 {
+            let n = 2 + (rng.next_u64() % 30) as usize;
+            let mut row = 0u32;
+            let lists: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    // Small sizes force plenty of equal-sum ties.
+                    let take = 1 + (rng.next_u64() % 5) as u32;
+                    let v: Vec<u32> = (row..row + take).collect();
+                    row += take;
+                    v
+                })
+                .collect();
+            for target in 1..=n {
+                let want = legacy_fold(lists.clone(), target);
+                let mut got = lists.clone();
+                fold_adjacent_smallest(&mut got, target);
+                assert_eq!(got, want, "case {case}: n={n} target={target}");
+            }
+        }
+    }
+
+    #[test]
+    fn level1_spec_derives_the_worker_spec() {
+        let spec = KmeansSpec::two_level(5)
+            .seed(42)
+            .start(Dataset::from_flat(5, 1, vec![0.0; 5]));
+        let w = level1_spec(&spec, 3);
+        assert_eq!(w.algo, Algo::FilterBatched);
+        assert_eq!(w.seed, shard_seed(42, 3));
+        assert!(w.start.is_none(), "level 1 never inherits explicit starts");
+        assert_eq!(w.k, 5);
+        // Shard 0 keeps the base seed (xor with 0).
+        assert_eq!(level1_spec(&spec, 0).seed, 42);
+    }
+
+    #[test]
+    fn shard_partial_distills_a_result() {
+        let s = generate_params(400, 2, 3, 0.2, 1.0, 9);
+        let wspec = level1_spec(&KmeansSpec::two_level(3).seed(4), 1);
+        let r = solve_level1_shard(
+            &s.data,
+            &wspec,
+            crate::kmeans::panel::CpuPanels,
+            None::<crate::kmeans::solver::IterLog>,
+        );
+        let iters = r.stats.iterations();
+        let p = ShardPartial::from_result(r.clone());
+        assert_eq!(p.centroids, r.centroids);
+        assert_eq!(p.counts, r.sizes());
+        assert_eq!(p.counts.iter().sum::<usize>(), 400);
+        assert_eq!(p.stats.iterations(), iters);
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub struct ServeMetrics {
     pub batches: u64,
     /// Mean requests coalesced per batch (the micro-batching win).
     pub mean_batch_requests: f64,
+    /// Mean points per executed batch — how full the panel batches run
+    /// (read against the configured point budget for fill ratio).
+    pub mean_batch_points: f64,
     /// Largest number of requests coalesced into one batch.
     pub max_batch_requests: u64,
     /// Largest number of points in one batch.
@@ -44,21 +47,27 @@ pub struct ServeMetrics {
     pub throughput_pps: f64,
     /// Fulfilled requests per wall second.
     pub throughput_rps: f64,
+    /// Fraction of wall time the dispatcher spent inside panel execution
+    /// (a low value under load points at queueing, not compute).
+    pub busy_frac: f64,
 }
 
 impl ServeMetrics {
     /// One-line human summary for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy) | \
-             {:.1} req/batch (max {}) | {:.0} pts/s, {:.0} req/s | \
+            "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy, \
+             {:.0}% duty) | {:.1} req/batch ({:.1} pts/batch, max {}) | \
+             {:.0} pts/s, {:.0} req/s | \
              latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
             self.requests,
             self.points,
             self.batches,
             self.wall_s,
             self.busy_s,
+            self.busy_frac * 100.0,
             self.mean_batch_requests,
+            self.mean_batch_points,
             self.max_batch_requests,
             self.throughput_pps,
             self.throughput_rps,
@@ -76,6 +85,7 @@ impl ServeMetrics {
             ("points", Json::num(self.points as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("mean_batch_requests", Json::num(self.mean_batch_requests)),
+            ("mean_batch_points", Json::num(self.mean_batch_points)),
             ("max_batch_requests", Json::num(self.max_batch_requests as f64)),
             ("max_batch_points", Json::num(self.max_batch_points as f64)),
             ("wall_s", Json::num(self.wall_s)),
@@ -86,6 +96,7 @@ impl ServeMetrics {
             ("latency_max_ms", Json::num(self.latency_max_ms)),
             ("throughput_pps", Json::num(self.throughput_pps)),
             ("throughput_rps", Json::num(self.throughput_rps)),
+            ("busy_frac", Json::num(self.busy_frac)),
         ])
     }
 }
@@ -160,10 +171,16 @@ impl Recorder {
             points,
             batches,
             mean_batch_requests,
+            mean_batch_points: if batches > 0 {
+                points as f64 / batches as f64
+            } else {
+                0.0
+            },
             max_batch_requests,
             max_batch_points,
             wall_s,
             busy_s,
+            busy_frac: if wall_s > 0.0 { (busy_s / wall_s).min(1.0) } else { 0.0 },
             latency_p50_ms: percentile_sorted(&lat, 50.0) * ms,
             latency_p95_ms: percentile_sorted(&lat, 95.0) * ms,
             latency_p99_ms: percentile_sorted(&lat, 99.0) * ms,
@@ -190,7 +207,9 @@ mod tests {
         assert_eq!(m.max_batch_requests, 3);
         assert_eq!(m.max_batch_points, 30);
         assert!((m.mean_batch_requests - 2.0).abs() < 1e-12);
+        assert!((m.mean_batch_points - 20.0).abs() < 1e-12);
         assert!((m.busy_s - 0.03).abs() < 1e-12);
+        assert!(m.busy_frac >= 0.0 && m.busy_frac <= 1.0);
         assert!(m.latency_max_ms >= m.latency_p99_ms);
         assert!(m.latency_p99_ms >= m.latency_p50_ms);
         assert!((m.latency_max_ms - 4.0).abs() < 1e-9);
@@ -210,6 +229,8 @@ mod tests {
         assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 8);
         assert_eq!(j.get("points").unwrap().as_usize().unwrap(), 64);
         assert!(j.get("latency_p50_ms").unwrap().as_f64().unwrap() > 9.0);
+        assert_eq!(j.get("mean_batch_points").unwrap().as_f64().unwrap(), 64.0);
+        assert!(j.get("busy_frac").unwrap().as_f64().is_some());
     }
 
     #[test]

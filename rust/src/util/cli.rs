@@ -36,6 +36,8 @@ pub struct OptSpec {
     pub help: &'static str,
     pub default: Option<&'static str>,
     pub is_flag: bool,
+    /// Repeatable `--key value` collecting into a list (zero or more).
+    pub is_multi: bool,
 }
 
 /// A declarative command: name, description, options.
@@ -63,6 +65,7 @@ impl Command {
             help,
             default: Some(default),
             is_flag: false,
+            is_multi: false,
         });
         self
     }
@@ -73,6 +76,7 @@ impl Command {
             help,
             default: None,
             is_flag: false,
+            is_multi: false,
         });
         self
     }
@@ -83,6 +87,20 @@ impl Command {
             help,
             default: None,
             is_flag: true,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// A repeatable `--key value` option: every occurrence appends to a
+    /// list read back with [`Matches::all`] (zero occurrences = empty).
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            is_multi: true,
         });
         self
     }
@@ -96,11 +114,14 @@ impl Command {
     pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
         let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut multis: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut positional = None;
 
         for o in &self.opts {
             if o.is_flag {
                 flags.insert(o.name.to_string(), false);
+            } else if o.is_multi {
+                multis.insert(o.name.to_string(), Vec::new());
             } else if let Some(d) = o.default {
                 values.insert(o.name.to_string(), d.to_string());
             }
@@ -138,7 +159,11 @@ impl Command {
                                 .ok_or_else(|| CliError::MissingValue(key.clone()))?
                         }
                     };
-                    values.insert(key, v);
+                    if spec.is_multi {
+                        multis.get_mut(&key).expect("multi pre-seeded").push(v);
+                    } else {
+                        values.insert(key, v);
+                    }
                 }
             } else if self.positional.is_some() && positional.is_none() {
                 positional = Some(a.clone());
@@ -148,9 +173,10 @@ impl Command {
             i += 1;
         }
 
-        // Required options (no default) must be present.
+        // Required options (no default; multis are zero-or-more) must be
+        // present.
         for o in &self.opts {
-            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+            if !o.is_flag && !o.is_multi && o.default.is_none() && !values.contains_key(o.name) {
                 return Err(CliError::MissingValue(o.name.to_string()));
             }
         }
@@ -159,6 +185,7 @@ impl Command {
             command: self.name,
             values,
             flags,
+            multis,
             positional,
         })
     }
@@ -169,10 +196,11 @@ impl Command {
             s.push_str(&format!("  <{p}>  {h}\n"));
         }
         for o in &self.opts {
-            let d = match (o.is_flag, o.default) {
-                (true, _) => "".to_string(),
-                (_, Some(d)) => format!(" [default: {d}]"),
-                (_, None) => " [required]".to_string(),
+            let d = match (o.is_flag, o.is_multi, o.default) {
+                (true, _, _) => "".to_string(),
+                (_, true, _) => " [repeatable]".to_string(),
+                (_, _, Some(d)) => format!(" [default: {d}]"),
+                (_, _, None) => " [required]".to_string(),
             };
             s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
         }
@@ -186,6 +214,7 @@ pub struct Matches {
     pub command: &'static str,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    multis: BTreeMap<String, Vec<String>>,
     pub positional: Option<String>,
 }
 
@@ -194,6 +223,13 @@ impl Matches {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    /// Every value a repeatable option collected, in argument order.
+    pub fn all(&self, name: &str) -> &[String] {
+        self.multis
+            .get(name)
+            .unwrap_or_else(|| panic!("multi option --{name} not declared"))
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -422,6 +458,45 @@ mod tests {
             m.parse_as::<Partition>("partition").unwrap(),
             Partition::Contiguous
         );
+    }
+
+    #[test]
+    fn multi_options_accumulate_in_order() {
+        // Mirrors the `cluster --remote host:port` surface.
+        let c = Command::new("cluster", "unified solver")
+            .opt("shards", "4", "level-1 shard count")
+            .multi("remote", "shard-worker endpoint (host:port)");
+        // Zero occurrences: empty list, not an error.
+        let m = c.parse(&args(&[])).unwrap();
+        assert!(m.all("remote").is_empty());
+        // Repeats accumulate in argument order; `=` form mixes in.
+        let m = c
+            .parse(&args(&[
+                "--remote",
+                "127.0.0.1:7601",
+                "--shards",
+                "8",
+                "--remote=127.0.0.1:7602",
+                "--remote",
+                "127.0.0.1:7601",
+            ]))
+            .unwrap();
+        assert_eq!(
+            m.all("remote"),
+            &[
+                "127.0.0.1:7601".to_string(),
+                "127.0.0.1:7602".to_string(),
+                "127.0.0.1:7601".to_string()
+            ]
+        );
+        assert_eq!(m.usize("shards").unwrap(), 8);
+        // Dangling value still errors.
+        assert!(matches!(
+            c.parse(&args(&["--remote"])),
+            Err(CliError::MissingValue(_))
+        ));
+        // Help marks it repeatable.
+        assert!(c.help().contains("[repeatable]"), "{}", c.help());
     }
 
     #[test]

@@ -1,0 +1,494 @@
+//! Length-prefixed binary frame codec with integrity checksums — the
+//! transport substrate of the remote shard plane (`kmeans::remote`).
+//!
+//! A frame on the wire is:
+//!
+//! ```text
+//! magic   u32 le   FRAME_MAGIC ("MSWF") — rejects non-protocol peers fast
+//! kind    u8       message discriminant (owned by the protocol layer)
+//! len     u32 le   payload byte length (<= MAX_FRAME_LEN)
+//! payload len bytes
+//! crc     u32 le   CRC-32 (IEEE) over kind + len + payload
+//! ```
+//!
+//! The codec is deliberately paranoid: bad magic, oversized lengths,
+//! truncated streams and checksum mismatches are all *errors*, never
+//! panics — a worker must survive a port scanner, and a coordinator must
+//! survive a half-dead worker.  Payload encoding/decoding goes through
+//! [`ByteWriter`]/[`ByteReader`], which keep every multi-byte value
+//! little-endian and every f32/f64 as exact IEEE bits (the remote shard
+//! plane's bitwise-parity guarantee rides on this).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Frame preamble: `"MSWF"` little-endian (MUCH-SWIFT wire format).
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"MSWF");
+
+/// Upper bound on a single frame's payload (256 MiB).  A shard slice of
+/// the largest workload the repo benches (1M × 15 f32) is ~60 MB; anything
+/// past this bound is a corrupt or hostile length prefix, not data.
+pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+
+/// Bytes of framing overhead around a payload (magic + kind + len + crc).
+pub const FRAME_OVERHEAD: usize = 4 + 1 + 4 + 4;
+
+/// Everything that can go wrong reading a frame.  `Io` covers transport
+/// failures; the rest are protocol violations the reader refuses cleanly.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(io::Error),
+    /// The stream did not start with [`FRAME_MAGIC`].
+    BadMagic(u32),
+    /// Declared payload length exceeds [`MAX_FRAME_LEN`].
+    Oversized(u32),
+    /// The stream ended inside a frame.
+    Truncated,
+    /// CRC mismatch between header+payload and the trailer.
+    BadChecksum { want: u32, got: u32 },
+    /// A payload decoder ran past the end or hit an invalid encoding.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (want {FRAME_MAGIC:#010x})")
+            }
+            FrameError::Oversized(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_FRAME_LEN} cap")
+            }
+            FrameError::Truncated => write!(f, "stream ended inside a frame"),
+            FrameError::BadChecksum { want, got } => {
+                write!(f, "frame checksum mismatch (want {want:#010x}, got {got:#010x})")
+            }
+            FrameError::Malformed(what) => write!(f, "malformed frame payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3), table built at compile time
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `bytes` — the frame trailer checksum.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Streaming CRC over multiple slices (header then payload) without
+/// concatenating them.
+struct Crc(u32);
+
+impl Crc {
+    fn new() -> Self {
+        Crc(!0)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = CRC_TABLE[((self.0 ^ b as u32) & 0xFF) as usize] ^ (self.0 >> 8);
+        }
+    }
+
+    fn finish(self) -> u32 {
+        !self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame read/write
+// ---------------------------------------------------------------------------
+
+/// Write one frame.  Returns the total bytes put on the wire (payload +
+/// [`FRAME_OVERHEAD`]) for traffic accounting.  An over-cap payload is
+/// an `InvalidInput` *error*, not a panic — on the client it must
+/// surface as a counted local fallback, never abort the run.
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<usize> {
+    if payload.len() > MAX_FRAME_LEN as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload of {} bytes exceeds the {MAX_FRAME_LEN}-byte cap",
+                payload.len()
+            ),
+        ));
+    }
+    let len = payload.len() as u32;
+    let mut crc = Crc::new();
+    crc.update(&[kind]);
+    crc.update(&len.to_le_bytes());
+    crc.update(payload);
+    w.write_all(&FRAME_MAGIC.to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(payload.len() + FRAME_OVERHEAD)
+}
+
+/// Read one frame, validating magic, length bound and checksum.  Returns
+/// `(kind, payload, wire_bytes)`.  Never panics on hostile input.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>, usize), FrameError> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let kind = head[4];
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]);
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut trailer = [0u8; 4];
+    r.read_exact(&mut trailer)?;
+    let got = u32::from_le_bytes(trailer);
+    let mut crc = Crc::new();
+    crc.update(&head[4..]);
+    crc.update(&payload);
+    let want = crc.finish();
+    if want != got {
+        return Err(FrameError::BadChecksum { want, got });
+    }
+    Ok((kind, payload, len as usize + FRAME_OVERHEAD))
+}
+
+// ---------------------------------------------------------------------------
+// Payload cursors
+// ---------------------------------------------------------------------------
+
+/// Little-endian payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Exact IEEE bits — the bitwise-parity carrier for f32 data.
+    pub fn put_f32_bits(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_f64_bits(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 vector, exact bits.
+    pub fn put_f32_slice(&mut self, vs: &[f32]) {
+        self.put_u32(vs.len() as u32);
+        for &v in vs {
+            self.put_f32_bits(v);
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Little-endian payload cursor; every `take_*` bounds-checks and returns
+/// [`FrameError::Malformed`] instead of panicking.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], FrameError> {
+        if self.remaining() < n {
+            return Err(FrameError::Malformed(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn take_f32_bits(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64_bits(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    pub fn take_str(&mut self) -> Result<String, FrameError> {
+        let n = self.take_u32()? as usize;
+        let b = self.take(n, "string bytes")?;
+        String::from_utf8(b.to_vec()).map_err(|_| FrameError::Malformed("non-utf8 string"))
+    }
+
+    pub fn take_f32_vec(&mut self) -> Result<Vec<f32>, FrameError> {
+        let n = self.take_u32()? as usize;
+        // Bound the allocation by what the payload can actually hold.
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(FrameError::Malformed("f32 vector length"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_f32_bits()?);
+        }
+        Ok(out)
+    }
+
+    /// Decoders call this last: trailing garbage is a protocol violation.
+    pub fn finish(&self) -> Result<(), FrameError> {
+        if self.remaining() != 0 {
+            return Err(FrameError::Malformed("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use std::io::Cursor;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_round_trips_random_payloads() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF4A3);
+        for case in 0..50 {
+            let len = (rng.next_u64() % 4096) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let kind = (case % 7) as u8;
+            let mut wire = Vec::new();
+            let tx = write_frame(&mut wire, kind, &payload).unwrap();
+            assert_eq!(tx, wire.len());
+            assert_eq!(tx, payload.len() + FRAME_OVERHEAD);
+            let (k, p, rx) = read_frame(&mut Cursor::new(&wire)).unwrap();
+            assert_eq!(k, kind);
+            assert_eq!(p, payload);
+            assert_eq!(rx, tx);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_read_in_order() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 1, b"first").unwrap();
+        write_frame(&mut wire, 2, b"second").unwrap();
+        let mut cur = Cursor::new(&wire);
+        let (k1, p1, _) = read_frame(&mut cur).unwrap();
+        let (k2, p2, _) = read_frame(&mut cur).unwrap();
+        assert_eq!((k1, p1.as_slice()), (1, &b"first"[..]));
+        assert_eq!((k2, p2.as_slice()), (2, &b"second"[..]));
+    }
+
+    #[test]
+    fn truncated_frames_error_not_panic() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 3, b"some payload bytes").unwrap();
+        // Every proper prefix must fail cleanly with Truncated.
+        for cut in 0..wire.len() {
+            let err = read_frame(&mut Cursor::new(&wire[..cut])).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Truncated),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 0, b"x").unwrap();
+        wire[0] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(&wire)).unwrap_err();
+        assert!(matches!(err, FrameError::BadMagic(_)), "{err}");
+        // An HTTP-ish stream is also just bad magic.
+        let err = read_frame(&mut Cursor::new(b"GET / HTTP/1.1\r\n")).unwrap_err();
+        assert!(matches!(err, FrameError::BadMagic(_)), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        wire.push(1);
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&wire)).unwrap_err();
+        assert!(matches!(err, FrameError::Oversized(n) if n == u32::MAX), "{err}");
+    }
+
+    #[test]
+    fn oversized_write_is_an_error_not_a_panic() {
+        // The write side must refuse cleanly too: on the coordinator a
+        // too-large shard slice has to become a local fallback, not a
+        // panic in a puller thread.
+        let huge = vec![0u8; MAX_FRAME_LEN as usize + 1];
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, 1, &huge).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(sink.is_empty(), "nothing may reach the wire");
+    }
+
+    #[test]
+    fn corruption_anywhere_fails_the_checksum() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let payload: Vec<u8> = (0..256).map(|_| rng.next_u64() as u8).collect();
+        let mut clean = Vec::new();
+        write_frame(&mut clean, 5, &payload).unwrap();
+        // Flip one byte at a time past the magic (magic corruption is the
+        // BadMagic case; kind/len/payload/crc corruption is checksum or,
+        // for the length field, oversize/truncation).
+        for i in 4..clean.len() {
+            let mut wire = clean.clone();
+            wire[i] ^= 0x40;
+            let res = read_frame(&mut Cursor::new(&wire));
+            assert!(res.is_err(), "flip at {i} was accepted");
+        }
+    }
+
+    #[test]
+    fn byte_cursor_round_trips_exact_bits() {
+        let mut w = ByteWriter::new();
+        w.put_u8(9);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32_bits(-0.0);
+        w.put_f32_bits(f32::NAN);
+        w.put_f64_bits(1.0 / 3.0);
+        w.put_str("héllo");
+        w.put_f32_slice(&[1.5, -2.25, 3.0e-40]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.take_u8().unwrap(), 9);
+        assert_eq!(r.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX - 1);
+        let z = r.take_f32_bits().unwrap();
+        assert_eq!(z.to_bits(), (-0.0f32).to_bits());
+        assert!(r.take_f32_bits().unwrap().is_nan());
+        assert_eq!(r.take_f64_bits().unwrap(), 1.0 / 3.0);
+        assert_eq!(r.take_str().unwrap(), "héllo");
+        let vs = r.take_f32_vec().unwrap();
+        assert_eq!(vs, vec![1.5, -2.25, 3.0e-40]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn byte_cursor_rejects_short_and_trailing() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(matches!(r.take_u32(), Err(FrameError::Malformed(_))));
+        // Lying length prefixes are bounded by the buffer.
+        let mut w = ByteWriter::new();
+        w.put_u32(1_000_000);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(r.take_f32_vec(), Err(FrameError::Malformed(_))));
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(r.take_str(), Err(FrameError::Malformed(_))));
+        // Trailing garbage is flagged by finish().
+        let mut r = ByteReader::new(&[0]);
+        assert!(r.finish().is_err());
+        r.take_u8().unwrap();
+        r.finish().unwrap();
+    }
+}

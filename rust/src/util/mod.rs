@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod frame;
 pub mod json;
 pub mod logger;
 pub mod proptest;

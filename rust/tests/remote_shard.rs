@@ -1,0 +1,308 @@
+//! Remote shard plane integration suite.
+//!
+//! The headline pin: a loopback remote run of P = 4 is **byte-identical**
+//! (centroids and assignments) to the in-process shard plane — the wire
+//! carries exact f32 bits and both sides run the one canonical shard
+//! solve.  Around it: wire-death fallback semantics, protocol robustness
+//! against skewed/hostile peers, and the `shard-worker` binary lifecycle.
+
+use muchswift::coordinator::{Backend, Coordinator};
+use muchswift::data::synthetic::generate_params;
+use muchswift::kmeans::panel::CpuPanels;
+use muchswift::kmeans::remote::protocol::{Message, ERR_VERSION_SKEW, PROTOCOL_VERSION};
+use muchswift::kmeans::remote::{self, RemoteShardPool, RemoteWorker, WorkerServer};
+use muchswift::kmeans::shard::{level1_spec, solve_level1_shard};
+use muchswift::kmeans::solver::{IterLog, KmeansSpec};
+use muchswift::kmeans::KmeansResult;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Command, Stdio};
+
+fn assert_bitwise_equal(a: &KmeansResult, b: &KmeansResult) {
+    assert_eq!(a.centroids.len(), b.centroids.len());
+    for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "centroid bits diverged");
+    }
+    assert_eq!(a.assignments, b.assignments, "assignments diverged");
+}
+
+#[test]
+fn loopback_p4_remote_run_is_bitwise_identical_to_in_process() {
+    let s = generate_params(6000, 3, 5, 0.15, 2.0, 33);
+    let spec = KmeansSpec::two_level(5).seed(9).shards(4).workers(4);
+
+    // In-process baseline.
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // Two loopback workers, two connections each: with four remote
+    // executors for four shards, zero local pullers spawn, so every
+    // level-1 solve provably crossed the wire.
+    let w1 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let w2 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let (a1, a2) = (w1.addr().to_string(), w2.addr().to_string());
+    let pool = RemoteShardPool::new(vec![a1.clone(), a2.clone(), a1, a2]);
+    let remote = Coordinator::new(Backend::Cpu)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+
+    assert_bitwise_equal(&remote.result, &local.result);
+    // The two-level extension travels intact too: per-shard stats and
+    // the merged level-2 seed.
+    let le = local.result.ext.two_level.as_ref().unwrap();
+    let re = remote.result.ext.two_level.as_ref().unwrap();
+    assert_eq!(re.quarter_sizes, le.quarter_sizes);
+    assert_eq!(
+        re.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+        le.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+    );
+    assert_eq!(
+        re.level1_stats.iter().map(|st| st.total_dist_evals()).collect::<Vec<_>>(),
+        le.level1_stats.iter().map(|st| st.total_dist_evals()).collect::<Vec<_>>(),
+    );
+    for (x, y) in re
+        .merged_centroids
+        .flat()
+        .iter()
+        .zip(le.merged_centroids.flat())
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "merged seed bits diverged");
+    }
+    // Accounting: all four shards went remote, nothing fell back, and
+    // the wire saw real traffic both ways.
+    assert_eq!(remote.metrics.remote_workers, 4);
+    assert_eq!(remote.metrics.remote_shards, 4);
+    assert_eq!(remote.metrics.remote_fallbacks, 0);
+    assert!(remote.metrics.remote_bytes_tx > 0);
+    assert!(remote.metrics.remote_bytes_rx > 0);
+    // The iteration frames streamed the same live counters the local
+    // observers would have.
+    assert_eq!(remote.metrics.shard_iters, local.metrics.shard_iters);
+    assert_eq!(remote.metrics.shard_dist_evals, local.metrics.shard_dist_evals);
+    assert_eq!(remote.metrics.observed_iters, local.metrics.observed_iters);
+    // All-local runs report a zeroed remote section.
+    assert_eq!(local.metrics.remote_workers, 0);
+    assert_eq!(local.metrics.remote_shards, 0);
+
+    w1.shutdown().unwrap();
+    w2.shutdown().unwrap();
+}
+
+#[test]
+fn remote_solve_matches_local_solve_bitwise_and_streams_iterations() {
+    let s = generate_params(1200, 3, 4, 0.2, 1.0, 11);
+    let base = KmeansSpec::two_level(4).seed(5);
+    let wspec = level1_spec(&base, 0);
+    let local = solve_level1_shard(&s.data, &wspec, CpuPanels, None::<IterLog>);
+
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let mut rw = RemoteWorker::connect(&w.addr().to_string()).unwrap();
+    let (mut iters, mut evals) = (0u64, 0u64);
+    let partial = rw
+        .solve(0, &s.data, &wspec, &mut |st| {
+            iters += 1;
+            evals += st.dist_evals;
+        })
+        .unwrap();
+    for (x, y) in partial.centroids.flat().iter().zip(local.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(partial.counts, local.sizes());
+    assert_eq!(partial.stats.iterations(), local.stats.iterations());
+    assert_eq!(partial.stats.total_dist_evals(), local.stats.total_dist_evals());
+    assert_eq!(iters, local.stats.iterations() as u64);
+    assert_eq!(evals, local.stats.total_dist_evals());
+
+    // The connection is reusable: a second job (different derived seed)
+    // solves on the same socket.
+    let wspec1 = level1_spec(&base, 1);
+    let p2 = rw.solve(1, &s.data, &wspec1, &mut |_| {}).unwrap();
+    assert_eq!(p2.counts.iter().sum::<usize>(), 1200);
+    let (tx, rx) = rw.traffic();
+    assert!(tx > 0 && rx > 0);
+
+    // Tear the worker down through the protocol.
+    rw.request_shutdown().unwrap();
+    w.wait().unwrap();
+}
+
+#[test]
+fn dead_endpoint_falls_back_to_local_with_identical_results() {
+    let s = generate_params(2400, 3, 4, 0.2, 1.0, 7);
+    let spec = KmeansSpec::two_level(4).seed(3);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+    // Port 1 refuses: the endpoint is counted as a fallback and the run
+    // proceeds all-local, bit-for-bit.
+    let out = Coordinator::new(Backend::Cpu)
+        .with_remotes(RemoteShardPool::new(vec!["127.0.0.1:1".into()]))
+        .run(&s.data, &spec);
+    assert_eq!(out.metrics.remote_workers, 0);
+    assert_eq!(out.metrics.remote_shards, 0);
+    assert_eq!(out.metrics.remote_fallbacks, 1);
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn mid_solve_wire_death_falls_back_to_local() {
+    // A worker that acks the handshake, swallows the first job, and
+    // hangs up — the nastiest failure point (shard claimed, no result).
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let evil = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let (msg, _) = Message::read_from(&mut conn).unwrap();
+        assert!(matches!(msg, Message::Hello { .. }));
+        Message::HelloAck {
+            version: PROTOCOL_VERSION,
+        }
+        .write_to(&mut conn)
+        .unwrap();
+        let _ = Message::read_from(&mut conn); // the job arrives …
+        drop(conn); // … and the wire dies
+    });
+
+    let s = generate_params(2000, 2, 3, 0.2, 1.0, 5);
+    // P = 1 with one remote endpoint: zero local pullers spawn, so the
+    // doomed remote executor *must* claim the shard — the fallback path
+    // is exercised deterministically, never raced away.
+    let spec = KmeansSpec::two_level(3).seed(2).shards(1);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+    let out = Coordinator::new(Backend::Cpu)
+        .with_remotes(RemoteShardPool::new(vec![addr]))
+        .run(&s.data, &spec);
+    evil.join().unwrap();
+
+    assert_eq!(out.metrics.remote_workers, 1, "the handshake succeeded");
+    assert_eq!(out.metrics.remote_shards, 0, "no shard completed remotely");
+    assert_eq!(out.metrics.remote_fallbacks, 1);
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn version_skew_is_refused_and_survived() {
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(w.addr()).unwrap();
+    Message::Hello {
+        version: PROTOCOL_VERSION + 1,
+    }
+    .write_to(&mut conn)
+    .unwrap();
+    let (reply, _) = Message::read_from(&mut conn).unwrap();
+    match reply {
+        Message::Error { code, message } => {
+            assert_eq!(code, ERR_VERSION_SKEW);
+            assert!(message.contains("protocol"), "{message}");
+        }
+        other => panic!("expected a version-skew error, got {other:?}"),
+    }
+    drop(conn);
+    // The worker survives the skewed peer: a well-versioned client still
+    // handshakes.
+    let ok = RemoteWorker::connect(&w.addr().to_string()).unwrap();
+    drop(ok);
+    w.shutdown().unwrap();
+}
+
+#[test]
+fn hostile_bytes_do_not_kill_the_worker() {
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    // A peer speaking the wrong protocol entirely.
+    let mut conn = TcpStream::connect(w.addr()).unwrap();
+    conn.write_all(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    drop(conn);
+    // A peer that connects and says nothing.
+    drop(TcpStream::connect(w.addr()).unwrap());
+    // The accept loop is still alive and serving.
+    let ok = RemoteWorker::connect(&w.addr().to_string()).unwrap();
+    drop(ok);
+    w.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Binary-level lifecycle and CLI validation
+// ---------------------------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_muchswift"))
+}
+
+#[test]
+fn shard_worker_binary_starts_serves_and_shuts_down() {
+    let mut child = bin()
+        .args(["shard-worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // Scrape the bound address from the first stdout line.
+    let mut reader = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .unwrap_or_else(|| panic!("unexpected banner: {line:?}"))
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .to_string();
+    // It actually serves: a real handshake round-trips.
+    let rw = RemoteWorker::connect(&addr).unwrap();
+    drop(rw);
+    // Protocol-level shutdown exits the process cleanly.
+    remote::shutdown_worker(&addr).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "shard-worker exited with {status}");
+}
+
+#[test]
+fn cluster_remote_flags_are_validated() {
+    // --remote outside the coordinator path is refused.
+    let out = bin()
+        .args([
+            "cluster", "--n", "200", "--d", "2", "--k", "2", "--algo", "lloyd",
+            "--remote", "127.0.0.1:7601",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--remote"), "{err}");
+    // So is --report.
+    let out = bin()
+        .args([
+            "cluster", "--n", "200", "--d", "2", "--k", "2", "--algo", "two-level",
+            "--trace", "--report", "r.json",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--report"), "{err}");
+}
+
+#[test]
+fn cluster_binary_survives_a_dead_remote_and_reports_the_fallback() {
+    let dir = std::env::temp_dir().join(format!(
+        "muchswift_remote_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let report = dir.join("BENCH_distributed_test.json");
+    let out = bin()
+        .args([
+            "cluster", "--n", "2000", "--d", "3", "--k", "4", "--backend", "cpu",
+            "--remote", "127.0.0.1:1",
+            "--report", report.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&report).unwrap();
+    assert!(text.contains("\"placeholder\":false"), "{text}");
+    assert!(text.contains("\"remote_fallbacks\":1"), "{text}");
+    assert!(text.contains("\"remote_shards\":0"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

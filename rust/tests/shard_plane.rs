@@ -179,6 +179,96 @@ fn kd_frontier_plan_matches_legacy_quartering_bitwise() {
 // Combine parity
 // ---------------------------------------------------------------------------
 
+/// The pre-heap frontier fold, verbatim (PR 4's code): expand the kd
+/// frontier to >= P nodes, then repeatedly merge the adjacent pair with
+/// the smallest combined size, found by a full linear re-scan each time
+/// (leftmost wins ties).
+fn legacy_plan_kd_frontier(
+    data: &Dataset,
+    tree: &KdTree,
+    shards: usize,
+) -> (Vec<Dataset>, Vec<Vec<u32>>) {
+    assert!(shards >= 1);
+    let rounds = shards.next_power_of_two().trailing_zeros();
+    let mut fronts: Vec<u32> = vec![0];
+    for _ in 0..rounds {
+        let mut next = Vec::with_capacity(fronts.len() * 2);
+        for &ni in &fronts {
+            let n = &tree.nodes[ni as usize];
+            if n.is_leaf() {
+                next.push(ni);
+            } else {
+                next.push(n.left);
+                next.push(n.right);
+            }
+        }
+        fronts = next;
+    }
+    if fronts.len() < shards {
+        let (parts, offsets) = data.split_contiguous(shards);
+        let ids = offsets
+            .iter()
+            .zip(parts.iter())
+            .map(|(&o, p)| (o as u32..(o + p.len()) as u32).collect())
+            .collect();
+        return (parts, ids);
+    }
+    let mut ids: Vec<Vec<u32>> = fronts
+        .iter()
+        .map(|&ni| tree.node_points(&tree.nodes[ni as usize]).to_vec())
+        .collect();
+    while ids.len() > shards {
+        let mut best = 0usize;
+        let mut best_len = usize::MAX;
+        for i in 0..ids.len() - 1 {
+            let len = ids[i].len() + ids[i + 1].len();
+            if len < best_len {
+                best_len = len;
+                best = i;
+            }
+        }
+        let right = ids.remove(best + 1);
+        ids[best].extend_from_slice(&right);
+    }
+    let datasets = ids
+        .iter()
+        .map(|rows| {
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            data.gather(&rows_usize)
+        })
+        .collect();
+    (datasets, ids)
+}
+
+#[test]
+fn heap_driven_frontier_fold_pins_the_legacy_plans() {
+    // The heap rewrite of the frontier folding must reproduce the
+    // pre-heap plans exactly — same shard membership, same order — at
+    // the issue's pinned P ∈ {2, 4, 8} (no folding: fronts == P) and,
+    // crucially, at every non-power-of-two P where folding actually
+    // runs, on several datasets including skewed ones that bottom out
+    // early and force uneven frontier node sizes.
+    for (n, d, k, seed) in [
+        (2000usize, 3usize, 4usize, 11u64),
+        (1003, 2, 6, 5),
+        (517, 5, 2, 93),
+        (64, 2, 1, 7),
+    ] {
+        let s = generate_params(n, d, k, 0.3, 1.0, seed);
+        let tree = KdTree::build(&s.data);
+        for p in [2usize, 4, 8, 3, 5, 6, 7, 9, 11, 13, 16, 25] {
+            let (want_parts, want_ids) = legacy_plan_kd_frontier(&s.data, &tree, p);
+            let plan = ShardPlan::build(&s.data, p, Partition::KdTop, Some(&tree));
+            assert_eq!(plan.ids, want_ids, "n={n} P={p}: row ids diverged");
+            assert_eq!(plan.parts, want_parts, "n={n} P={p}: gathered shards diverged");
+            // And through the free function the plan builder wraps.
+            let (fparts, fids) = plan_kd_frontier(&s.data, &tree, p);
+            assert_eq!(fids, want_ids);
+            assert_eq!(fparts, want_parts);
+        }
+    }
+}
+
 #[test]
 fn hierarchical_combine_equals_flat_greedy_combine_up_to_p4() {
     for metric in [Metric::Euclid, Metric::Manhattan] {

@@ -37,10 +37,23 @@ pub struct CoordMetrics {
     pub remote_workers: usize,
     /// … level-1 shards solved over the wire …
     pub remote_shards: u64,
-    /// … and connect/handshake/mid-solve wire failures that fell back
-    /// to a local solve (a nonzero value means the run degraded, not
-    /// failed — results are unaffected).
+    /// … and connect/handshake/mid-solve wire failures that exhausted
+    /// the whole degradation ladder and fell back to a local solve (a
+    /// nonzero value means the run degraded, not failed — results are
+    /// unaffected).
     pub remote_fallbacks: u64,
+    /// Re-attempts of failed remote operations (connects and jobs).
+    pub remote_retries: u64,
+    /// Remote reads that hit a socket timeout or the per-job deadline.
+    pub remote_timeouts: u64,
+    /// Fresh dial+handshake cycles replacing a dead stream.
+    pub remote_reconnects: u64,
+    /// Shards moved from a failed worker to another live remote (the
+    /// middle rung of the ladder, before local fallback).
+    pub remote_rescheduled: u64,
+    /// Endpoints that never produced a usable connection at
+    /// `connect_all` time — the dead fleet members to go look at.
+    pub remote_failed_endpoints: Vec<String>,
     /// Wire traffic of the run's remote solves.
     pub remote_bytes_tx: u64,
     pub remote_bytes_rx: u64,
@@ -53,7 +66,8 @@ impl CoordMetrics {
              combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
              pjrt: {} execs / {:.3}s | observed: {} iters / {} evals | \
              {} shards, iters/shard {:?} | remote: {} workers, {} shards, \
-             {} fallbacks, {}B tx / {}B rx",
+             {} fallbacks, {} retries, {} timeouts, {} reconnects, \
+             {} rescheduled, dead endpoints {:?}, {}B tx / {}B rx",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -71,6 +85,11 @@ impl CoordMetrics {
             self.remote_workers,
             self.remote_shards,
             self.remote_fallbacks,
+            self.remote_retries,
+            self.remote_timeouts,
+            self.remote_reconnects,
+            self.remote_rescheduled,
+            self.remote_failed_endpoints,
             self.remote_bytes_tx,
             self.remote_bytes_rx,
         )
@@ -142,15 +161,26 @@ mod tests {
             remote_workers: 2,
             remote_shards: 3,
             remote_fallbacks: 1,
+            remote_retries: 4,
+            remote_timeouts: 2,
+            remote_reconnects: 3,
+            remote_rescheduled: 1,
+            remote_failed_endpoints: vec!["h:1".into()],
             remote_bytes_tx: 1024,
             remote_bytes_rx: 2048,
             ..Default::default()
         };
         let s = m.summary();
         assert!(s.contains("remote: 2 workers, 3 shards, 1 fallbacks"), "{s}");
+        assert!(
+            s.contains("4 retries, 2 timeouts, 3 reconnects, 1 rescheduled"),
+            "{s}"
+        );
+        assert!(s.contains("dead endpoints [\"h:1\"]"), "{s}");
         assert!(s.contains("1024B tx / 2048B rx"), "{s}");
         // An all-local run reports a zeroed remote section.
         let s = CoordMetrics::default().summary();
         assert!(s.contains("remote: 0 workers"), "{s}");
+        assert!(s.contains("0 retries"), "{s}");
     }
 }

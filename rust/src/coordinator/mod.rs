@@ -38,7 +38,7 @@ use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::init::init_centroids;
 use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
-use crate::kmeans::remote::RemoteShardPool;
+use crate::kmeans::remote::{RemoteShardPool, RemoteWorker, RetryPolicy, WireCounters};
 use crate::kmeans::shard::{self, ShardExecutor, ShardPartial, ShardPlan};
 use crate::kmeans::solver::{
     Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, ObserveFn, SolverCtx,
@@ -178,12 +178,16 @@ impl ShardExecutor for LocalShardExec {
 }
 
 /// One scheduler thread's executor: a primary (local thread or remote
-/// worker) plus, for remote primaries, the local fallback that takes over
-/// if the wire dies.
+/// worker) plus, for remote primaries, the degradation ladder — other
+/// live endpoints the shard can be rescheduled on, and the local
+/// fallback that takes over when every remote rung is exhausted.
 struct Puller {
     primary: Box<dyn ShardExecutor>,
     fallback: Option<LocalShardExec>,
     remote: bool,
+    /// Endpoints (deduped, excluding this puller's own and any that
+    /// failed `connect_all`) to try before falling back local.
+    alternates: Vec<String>,
 }
 
 /// The system entry point.
@@ -285,27 +289,50 @@ impl Coordinator {
         } else {
             // The fleet: one puller per connected remote endpoint, plus
             // local threads up to `spec.workers` (and never more pullers
-            // than shards).  Remotes that refuse the connect/handshake
-            // are counted as fallbacks and replaced by local capacity.
-            let (mut remote_execs, connect_failures) = if self.remotes.is_empty() {
-                (Vec::new(), 0)
+            // than shards).  Remotes that exhaust their connect retries
+            // are counted as fallbacks, listed by name, and replaced by
+            // local capacity.
+            let wire = Arc::new(WireCounters::default());
+            let (mut remote_execs, failed_endpoints) = if self.remotes.is_empty() {
+                (Vec::new(), Vec::new())
             } else {
-                self.remotes.connect_all()
+                self.remotes.connect_all_with(&wire)
             };
             remote_execs.truncate(plan.shards());
             m.remote_workers = remote_execs.len();
-            m.remote_fallbacks += connect_failures;
+            m.remote_fallbacks += failed_endpoints.len() as u64;
+            // Reschedule candidates: every distinct endpoint that did
+            // produce a connection at the start of the run.
+            let mut candidates: Vec<String> = Vec::new();
+            for ep in self.remotes.endpoints() {
+                if !failed_endpoints.contains(ep) && !candidates.contains(ep) {
+                    candidates.push(ep.clone());
+                }
+            }
+            m.remote_failed_endpoints = failed_endpoints;
+            // Alternate connects get a single attempt: the shard is
+            // already delayed, and local fallback is always behind it.
+            let alt_policy = RetryPolicy {
+                max_attempts: 1,
+                ..self.remotes.policy().clone()
+            };
             let locals = spec
                 .workers
                 .min(plan.shards().saturating_sub(remote_execs.len()));
             let mut pullers: Vec<Puller> = Vec::with_capacity(remote_execs.len() + locals);
             for w in remote_execs {
+                let alternates: Vec<String> = candidates
+                    .iter()
+                    .filter(|a| a.as_str() != w.addr())
+                    .cloned()
+                    .collect();
                 pullers.push(Puller {
                     primary: Box::new(w),
                     fallback: Some(LocalShardExec {
                         panels: self.worker_panels(&local_stats),
                     }),
                     remote: true,
+                    alternates,
                 });
             }
             for _ in 0..locals {
@@ -317,6 +344,7 @@ impl Coordinator {
                     }),
                     fallback: None,
                     remote: false,
+                    alternates: Vec::new(),
                 });
             }
 
@@ -332,6 +360,7 @@ impl Coordinator {
             let next = AtomicUsize::new(0);
             let remote_shards = AtomicU64::new(0);
             let wire_fallbacks = AtomicU64::new(0);
+            let rescheduled = AtomicU64::new(0);
             let bytes_tx = AtomicU64::new(0);
             let bytes_rx = AtomicU64::new(0);
             std::thread::scope(|scope| {
@@ -342,6 +371,9 @@ impl Coordinator {
                     let live = &live;
                     let remote_shards = &remote_shards;
                     let wire_fallbacks = &wire_fallbacks;
+                    let rescheduled = &rescheduled;
+                    let wire = &wire;
+                    let alt_policy = &alt_policy;
                     let (bytes_tx, bytes_rx) = (&bytes_tx, &bytes_rx);
                     handles.push(scope.spawn(move || {
                         let mut out: Vec<(usize, ShardPartial)> = Vec::new();
@@ -371,33 +403,98 @@ impl Coordinator {
                                         part
                                     }
                                     Err(e) => {
-                                        // The wire died (mid-solve or on
-                                        // send): re-solve this shard
-                                        // locally and demote the puller
-                                        // to local for the rest of the
-                                        // run.  The live per-shard feed
-                                        // may see the aborted stream's
-                                        // iterations again — it is a
-                                        // monotone monitoring feed, not
-                                        // the result path.
+                                        // The primary exhausted its own
+                                        // retry/backoff budget (rung 1 of
+                                        // the ladder, inside
+                                        // RemoteWorker::solve).  Climb
+                                        // the remaining rungs: reschedule
+                                        // on another live remote, then
+                                        // local fallback.  Shard seeds
+                                        // are pure functions of (base
+                                        // seed, shard index), so every
+                                        // rung produces bitwise the same
+                                        // partial.  The live per-shard
+                                        // feed may see an aborted
+                                        // stream's iterations again — it
+                                        // is a monotone monitoring feed,
+                                        // not the result path.
                                         log::warn!(
-                                            "{} failed on shard {qi}, re-solving locally: {e}",
+                                            "{} failed on shard {qi}: {e}",
                                             p.primary.describe()
                                         );
-                                        wire_fallbacks.fetch_add(1, Ordering::Relaxed);
                                         let (tx, rx) = p.primary.wire_bytes();
                                         bytes_tx.fetch_add(tx, Ordering::Relaxed);
                                         bytes_rx.fetch_add(rx, Ordering::Relaxed);
-                                        let mut local = p
-                                            .fallback
-                                            .take()
-                                            .expect("remote puller carries a local fallback");
-                                        let part = local
-                                            .solve_shard(qi, &parts[qi], spec, &mut on_iter)
-                                            .expect("local shard solve is infallible");
-                                        p.primary = Box::new(local);
-                                        p.remote = false;
-                                        part
+                                        let mut part: Option<ShardPartial> = None;
+                                        for alt in &p.alternates {
+                                            let mut w = match RemoteWorker::connect_with(
+                                                alt,
+                                                alt_policy,
+                                                Arc::clone(wire),
+                                            ) {
+                                                Ok(w) => w,
+                                                Err(e2) => {
+                                                    log::debug!(
+                                                        "alternate {alt} unavailable for shard {qi}: {e2}"
+                                                    );
+                                                    continue;
+                                                }
+                                            };
+                                            match w.solve_shard(
+                                                qi, &parts[qi], spec, &mut on_iter,
+                                            ) {
+                                                Ok(pt) => {
+                                                    log::info!(
+                                                        "shard {qi} rescheduled onto {alt}"
+                                                    );
+                                                    rescheduled
+                                                        .fetch_add(1, Ordering::Relaxed);
+                                                    remote_shards
+                                                        .fetch_add(1, Ordering::Relaxed);
+                                                    // Adopt the alternate
+                                                    // as this puller's
+                                                    // primary — it proved
+                                                    // live.
+                                                    p.primary = Box::new(w);
+                                                    part = Some(pt);
+                                                    break;
+                                                }
+                                                Err(e2) => {
+                                                    log::warn!(
+                                                        "reschedule of shard {qi} on {alt} failed: {e2}"
+                                                    );
+                                                    let (tx, rx) = w.wire_bytes();
+                                                    bytes_tx
+                                                        .fetch_add(tx, Ordering::Relaxed);
+                                                    bytes_rx
+                                                        .fetch_add(rx, Ordering::Relaxed);
+                                                }
+                                            }
+                                        }
+                                        match part {
+                                            Some(pt) => pt,
+                                            None => {
+                                                // Last rung: solve
+                                                // locally and demote the
+                                                // puller for the rest of
+                                                // the run.
+                                                wire_fallbacks
+                                                    .fetch_add(1, Ordering::Relaxed);
+                                                let mut local = p.fallback.take().expect(
+                                                    "remote puller carries a local fallback",
+                                                );
+                                                let pt = local
+                                                    .solve_shard(
+                                                        qi, &parts[qi], spec, &mut on_iter,
+                                                    )
+                                                    .expect(
+                                                        "local shard solve is infallible",
+                                                    );
+                                                p.primary = Box::new(local);
+                                                p.remote = false;
+                                                pt
+                                            }
+                                        }
                                     }
                                 };
                             out.push((qi, partial));
@@ -416,6 +513,11 @@ impl Coordinator {
             });
             m.remote_shards = remote_shards.load(Ordering::Relaxed);
             m.remote_fallbacks += wire_fallbacks.load(Ordering::Relaxed);
+            m.remote_rescheduled = rescheduled.load(Ordering::Relaxed);
+            let (retries, timeouts, reconnects) = wire.snapshot();
+            m.remote_retries = retries;
+            m.remote_timeouts = timeouts;
+            m.remote_reconnects = reconnects;
             m.remote_bytes_tx = bytes_tx.load(Ordering::Relaxed);
             m.remote_bytes_rx = bytes_rx.load(Ordering::Relaxed);
             let results: Vec<ShardPartial> = results.into_iter().map(Option::unwrap).collect();

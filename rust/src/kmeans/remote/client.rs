@@ -5,18 +5,63 @@
 //!
 //! A `RemoteWorker` implements the coordinator's shard-solve seam
 //! ([`ShardExecutor`]), so the work-pulling scheduler treats it exactly
-//! like a local thread; any wire failure surfaces as an `Err`, which the
-//! coordinator answers by re-solving the shard locally and counting the
-//! fallback in `CoordMetrics`.
+//! like a local thread.  Unlike a local thread, the wire can fail — so
+//! every operation is governed by a [`RetryPolicy`]: connects retry
+//! with seeded exponential backoff, each shard job carries a wall-clock
+//! deadline shared across *all* of its attempts (a hung worker costs at
+//! most `job_deadline`), and any mid-solve failure triggers a
+//! reconnect-and-retry before the error is surfaced to the coordinator's
+//! degradation ladder.  Recovery work is tallied in [`WireCounters`],
+//! which the coordinator folds into `CoordMetrics`.
 
 use super::protocol::{self, DoneFrame, Message, WireSpec, PROTOCOL_VERSION};
-use super::{CONNECT_TIMEOUT, IO_TIMEOUT};
+use super::RetryPolicy;
 use crate::data::Dataset;
 use crate::kmeans::shard::{level1_spec, ShardExecutor, ShardPartial};
 use crate::kmeans::solver::KmeansSpec;
 use crate::kmeans::IterStats;
-use crate::util::frame::write_frame;
+use crate::util::frame::{write_frame, FrameError};
+use crate::util::rng::Xoshiro256pp;
+use std::io;
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared tally of the recovery work a run's remote connections did.
+/// One instance is shared by every worker of a coordinated run (it is
+/// updated from the puller threads, hence atomics; Relaxed is enough —
+/// these are counters, not synchronization).
+#[derive(Debug, Default)]
+pub struct WireCounters {
+    /// Re-attempts of a failed operation (connects and jobs alike).
+    pub retries: AtomicU64,
+    /// Operations that hit a read/deadline timeout.
+    pub timeouts: AtomicU64,
+    /// Fresh dial+handshake cycles performed to replace a dead stream.
+    pub reconnects: AtomicU64,
+}
+
+impl WireCounters {
+    /// `(retries, timeouts, reconnects)` snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.retries.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.reconnects.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// `true` when a frame error is a socket-timeout, i.e. the peer is silent
+/// rather than wrong.  Read timeouts surface as `WouldBlock` on Unix and
+/// `TimedOut` on Windows.
+fn is_timeout(e: &FrameError) -> bool {
+    matches!(
+        e,
+        FrameError::Io(io) if matches!(io.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+    )
+}
 
 /// One live, version-checked connection to a `shard-worker`.
 pub struct RemoteWorker {
@@ -24,33 +69,85 @@ pub struct RemoteWorker {
     stream: TcpStream,
     bytes_tx: u64,
     bytes_rx: u64,
+    policy: RetryPolicy,
+    counters: Arc<WireCounters>,
+    /// Per-worker jitter stream: seeded from `(policy seed, addr)`, so
+    /// the backoff schedule of a run is reproducible.
+    jitter: Xoshiro256pp,
 }
 
 impl RemoteWorker {
-    /// Connect and handshake.  Any failure — unresolvable address,
-    /// refused connection, version skew, a peer that does not speak the
-    /// protocol — is an error the caller treats as "this endpoint is
-    /// unavailable".
+    /// Connect and handshake under the default [`RetryPolicy`].  Any
+    /// terminal failure — unresolvable address, refused connection,
+    /// version skew, a peer that does not speak the protocol — is an
+    /// error the caller treats as "this endpoint is unavailable".
     pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        Self::connect_with(addr, &RetryPolicy::default(), Arc::new(WireCounters::default()))
+    }
+
+    /// Connect and handshake, retrying per `policy` with seeded backoff.
+    /// Every attempt dials, handshakes, *and* health-checks (Ping/Pong)
+    /// — a worker that accepts TCP but won't answer protocol traffic is
+    /// caught here, not mid-job.
+    pub fn connect_with(
+        addr: &str,
+        policy: &RetryPolicy,
+        counters: Arc<WireCounters>,
+    ) -> anyhow::Result<Self> {
+        let mut jitter = Xoshiro256pp::seed_from_u64(policy.jitter_seed(addr));
+        let attempts = policy.max_attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                counters.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(policy.backoff(attempt - 1, jitter.next_f64()));
+            }
+            match Self::dial_once(addr, policy, &counters) {
+                Ok((stream, tx, rx)) => {
+                    return Ok(Self {
+                        addr: addr.to_string(),
+                        stream,
+                        bytes_tx: tx,
+                        bytes_rx: rx,
+                        policy: policy.clone(),
+                        counters,
+                        jitter,
+                    });
+                }
+                Err(e) => {
+                    log::debug!("connect attempt {attempt}/{attempts} to {addr} failed: {e}");
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("`{addr}`: no connect attempts made")))
+    }
+
+    /// One dial + handshake + health check.  Returns the ready stream
+    /// and the handshake's wire bytes `(tx, rx)`.
+    fn dial_once(
+        addr: &str,
+        policy: &RetryPolicy,
+        counters: &WireCounters,
+    ) -> anyhow::Result<(TcpStream, u64, u64)> {
         let sock = addr
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| anyhow::anyhow!("`{addr}` resolves to no address"))?;
-        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)?;
+        let mut stream = TcpStream::connect_timeout(&sock, policy.connect_timeout)?;
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(IO_TIMEOUT))?;
-        stream.set_write_timeout(Some(IO_TIMEOUT))?;
-        let mut worker = Self {
-            addr: addr.to_string(),
-            stream,
-            bytes_tx: 0,
-            bytes_rx: 0,
-        };
-        worker.send(&Message::Hello {
+        stream.set_read_timeout(Some(policy.io_timeout))?;
+        stream.set_write_timeout(Some(policy.io_timeout))?;
+        let mut tx = 0u64;
+        let mut rx = 0u64;
+        tx += Message::Hello {
             version: PROTOCOL_VERSION,
-        })?;
-        match worker.recv()? {
-            Message::HelloAck { version } if version == PROTOCOL_VERSION => Ok(worker),
+        }
+        .write_to(&mut stream)? as u64;
+        let (ack, n) = Self::read_classified(&mut stream, counters)?;
+        rx += n as u64;
+        match ack {
+            Message::HelloAck { version } if version == PROTOCOL_VERSION => {}
             Message::HelloAck { version } => {
                 anyhow::bail!("worker {addr} acked protocol v{version}, want v{PROTOCOL_VERSION}")
             }
@@ -59,6 +156,29 @@ impl RemoteWorker {
             }
             other => anyhow::bail!("worker {addr} sent {other:?} instead of a handshake ack"),
         }
+        tx += Message::Ping.write_to(&mut stream)? as u64;
+        let (pong, n) = Self::read_classified(&mut stream, counters)?;
+        rx += n as u64;
+        match pong {
+            Message::Pong => Ok((stream, tx, rx)),
+            other => anyhow::bail!("worker {addr} answered the health check with {other:?}"),
+        }
+    }
+
+    /// Read one message, folding socket timeouts into the timeout tally.
+    fn read_classified(
+        stream: &mut TcpStream,
+        counters: &WireCounters,
+    ) -> anyhow::Result<(Message, usize)> {
+        match Message::read_from(stream) {
+            Ok(ok) => Ok(ok),
+            Err(e) => {
+                if is_timeout(&e) {
+                    counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e.into())
+            }
+        }
     }
 
     /// The endpoint this connection was dialed to.
@@ -66,9 +186,15 @@ impl RemoteWorker {
         &self.addr
     }
 
-    /// `(bytes sent, bytes received)` over this connection's lifetime.
+    /// `(bytes sent, bytes received)` over this connection's lifetime
+    /// (reconnects included).
     pub fn traffic(&self) -> (u64, u64) {
         (self.bytes_tx, self.bytes_rx)
+    }
+
+    /// The shared recovery tally this worker reports into.
+    pub fn counters(&self) -> &Arc<WireCounters> {
+        &self.counters
     }
 
     fn send(&mut self, msg: &Message) -> anyhow::Result<()> {
@@ -76,15 +202,57 @@ impl RemoteWorker {
         Ok(())
     }
 
-    fn recv(&mut self) -> anyhow::Result<Message> {
-        let (msg, n) = Message::read_from(&mut self.stream)?;
-        self.bytes_rx += n as u64;
-        Ok(msg)
+    /// Read one message with the job deadline enforced: the socket read
+    /// timeout is clamped to the remaining budget, so a silent peer
+    /// costs at most `min(io_timeout, remaining)` per read and never
+    /// more than the deadline overall.
+    fn recv_by(&mut self, deadline: Instant) -> anyhow::Result<Message> {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("worker {}: job deadline exceeded", self.addr);
+        }
+        let per_read = self
+            .policy
+            .io_timeout
+            .min(remaining)
+            .max(Duration::from_millis(1));
+        self.stream.set_read_timeout(Some(per_read))?;
+        match Message::read_from(&mut self.stream) {
+            Ok((msg, n)) => {
+                self.bytes_rx += n as u64;
+                Ok(msg)
+            }
+            Err(e) => {
+                if is_timeout(&e) {
+                    self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                    anyhow::bail!("worker {}: read timed out ({e})", self.addr);
+                }
+                Err(e.into())
+            }
+        }
     }
 
-    /// Ship one shard solve and stream its iterations.  `wspec` must
-    /// already be the worker-side spec ([`level1_spec`]); `on_iter`
-    /// receives each iteration's counters as the frames arrive.
+    /// Tear down the dead stream and dial a fresh one.
+    fn reconnect(&mut self) -> anyhow::Result<()> {
+        self.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+        let (stream, tx, rx) = Self::dial_once(&self.addr, &self.policy, &self.counters)?;
+        self.stream = stream;
+        self.bytes_tx += tx;
+        self.bytes_rx += rx;
+        Ok(())
+    }
+
+    /// Ship one shard solve and stream its iterations, retrying on
+    /// transient failure.  `wspec` must already be the worker-side spec
+    /// ([`level1_spec`]); `on_iter` receives each iteration's counters
+    /// as the frames arrive (replayed iterations of a retried attempt
+    /// are forwarded once, not twice).
+    ///
+    /// The wall-clock deadline is taken **once**, up front, and shared
+    /// by every retry attempt: however the attempts go, a hung worker
+    /// costs at most `policy.job_deadline` before the coordinator's
+    /// ladder takes over.
     pub fn solve(
         &mut self,
         shard: usize,
@@ -92,14 +260,81 @@ impl RemoteWorker {
         wspec: &KmeansSpec,
         on_iter: &mut dyn FnMut(&IterStats),
     ) -> anyhow::Result<ShardPartial> {
+        let deadline = Instant::now() + self.policy.job_deadline;
+        let attempts = self.policy.max_attempts.max(1);
+        let mut streamed = 0u64;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                let pause = self.policy.backoff(attempt - 1, self.jitter.next_f64());
+                std::thread::sleep(pause.min(remaining));
+                // Any failure leaves the old stream desynced (a stray
+                // Iter/Done frame could arrive later); always start the
+                // retry on a fresh connection.
+                if let Err(e) = self.reconnect() {
+                    log::debug!(
+                        "shard {shard}: reconnect to {} failed on attempt {attempt}/{attempts}: {e}",
+                        self.addr
+                    );
+                    last = Some(e);
+                    continue;
+                }
+            }
+            match self.solve_once(shard, data, wspec, on_iter, deadline, &mut streamed) {
+                Ok(partial) => return Ok(partial),
+                Err(e) => {
+                    log::warn!(
+                        "shard {shard} attempt {attempt}/{attempts} on {} failed: {e}",
+                        self.addr
+                    );
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("shard {shard}: retry budget exhausted on {}", self.addr)))
+    }
+
+    fn solve_once(
+        &mut self,
+        shard: usize,
+        data: &Dataset,
+        wspec: &KmeansSpec,
+        on_iter: &mut dyn FnMut(&IterStats),
+        deadline: Instant,
+        streamed: &mut u64,
+    ) -> anyhow::Result<ShardPartial> {
+        // Health check before the upload: a hung worker is detected for
+        // the price of a Pong, not of shipping the whole shard slice.
+        self.send(&Message::Ping)?;
+        match self.recv_by(deadline)? {
+            Message::Pong => {}
+            other => anyhow::bail!(
+                "worker {} answered the pre-job health check with {other:?}",
+                self.addr
+            ),
+        }
         // Borrowed-parts encode: the shard slice serializes straight from
         // the plan's dataset, no intermediate clone.
-        let (kind, payload) =
-            protocol::encode_job(shard as u32, &WireSpec::from_spec(wspec), data);
+        let (kind, payload) = protocol::encode_job(shard as u32, &WireSpec::from_spec(wspec), data);
         self.bytes_tx += write_frame(&mut self.stream, kind, &payload)? as u64;
+        let mut seen = 0u64;
         loop {
-            match self.recv()? {
-                Message::Iter(frame) => on_iter(&frame.stats),
+            match self.recv_by(deadline)? {
+                Message::Iter(frame) => {
+                    seen += 1;
+                    // Forward only iterations the observer has not seen
+                    // from an earlier attempt of this same job.
+                    if seen > *streamed {
+                        on_iter(&frame.stats);
+                        *streamed = seen;
+                    }
+                }
                 Message::Done(done) => {
                     let DoneFrame {
                         centroids,
@@ -169,15 +404,30 @@ pub fn shutdown_worker(addr: &str) -> anyhow::Result<()> {
 
 /// The set of `shard-worker` endpoints a coordinated run may use
 /// (`--remote host:port`, repeatable; the same endpoint may appear more
-/// than once to open multiple connections to one worker).
+/// than once to open multiple connections to one worker), plus the
+/// [`RetryPolicy`] every connection operates under.
 #[derive(Clone, Debug, Default)]
 pub struct RemoteShardPool {
     endpoints: Vec<String>,
+    policy: RetryPolicy,
 }
 
 impl RemoteShardPool {
     pub fn new(endpoints: Vec<String>) -> Self {
-        Self { endpoints }
+        Self {
+            endpoints,
+            policy: RetryPolicy::default(),
+        }
+    }
+
+    /// Replace the pool's retry policy (builder style).
+    pub fn with_policy(mut self, policy: RetryPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
     }
 
     pub fn endpoints(&self) -> &[String] {
@@ -188,22 +438,32 @@ impl RemoteShardPool {
         self.endpoints.is_empty()
     }
 
+    /// Dial every endpoint under a throwaway counter set.
+    pub fn connect_all(&self) -> (Vec<RemoteWorker>, Vec<String>) {
+        self.connect_all_with(&Arc::new(WireCounters::default()))
+    }
+
     /// Dial every endpoint.  Unreachable/refusing/skewed endpoints are
-    /// logged and *counted*, not fatal — the coordinator falls back to
-    /// local threads for the capacity they would have provided.
-    pub fn connect_all(&self) -> (Vec<RemoteWorker>, u64) {
+    /// logged and returned by name — the coordinator surfaces the failed
+    /// list in `CoordMetrics` so dead fleet members are diagnosable, and
+    /// falls back to local threads for the capacity they would have
+    /// provided.
+    pub fn connect_all_with(
+        &self,
+        counters: &Arc<WireCounters>,
+    ) -> (Vec<RemoteWorker>, Vec<String>) {
         let mut workers = Vec::with_capacity(self.endpoints.len());
-        let mut failures = 0u64;
+        let mut failed = Vec::new();
         for ep in &self.endpoints {
-            match RemoteWorker::connect(ep) {
+            match RemoteWorker::connect_with(ep, &self.policy, Arc::clone(counters)) {
                 Ok(w) => workers.push(w),
                 Err(e) => {
-                    failures += 1;
                     log::warn!("remote shard worker {ep} unavailable, falling back local: {e}");
+                    failed.push(ep.clone());
                 }
             }
         }
-        (workers, failures)
+        (workers, failed)
     }
 }
 
@@ -223,11 +483,36 @@ mod tests {
     fn connect_to_dead_endpoint_fails_cleanly() {
         // Port 1 on loopback: refused (or at worst filtered — the
         // connect timeout still bounds it).  Either way: Err, no panic.
-        assert!(RemoteWorker::connect("127.0.0.1:1").is_err());
-        assert!(RemoteWorker::connect("not-a-host-name.invalid:99").is_err());
-        let (workers, failures) =
-            RemoteShardPool::new(vec!["127.0.0.1:1".into()]).connect_all();
+        // A single attempt keeps the test fast; the retry loop itself is
+        // pinned by the chaos tests.
+        let policy = RetryPolicy {
+            max_attempts: 1,
+            connect_timeout: Duration::from_millis(800),
+            ..RetryPolicy::default()
+        };
+        let counters = Arc::new(WireCounters::default());
+        assert!(RemoteWorker::connect_with("127.0.0.1:1", &policy, Arc::clone(&counters)).is_err());
+        assert!(
+            RemoteWorker::connect_with("not-a-host-name.invalid:99", &policy, counters).is_err()
+        );
+        let (workers, failed) = RemoteShardPool::new(vec!["127.0.0.1:1".into()])
+            .with_policy(policy)
+            .connect_all();
         assert!(workers.is_empty());
-        assert_eq!(failures, 1);
+        assert_eq!(failed, vec!["127.0.0.1:1".to_string()]);
+    }
+
+    #[test]
+    fn failed_connect_attempts_are_counted() {
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(1),
+            connect_timeout: Duration::from_millis(500),
+            ..RetryPolicy::default()
+        };
+        let counters = Arc::new(WireCounters::default());
+        assert!(RemoteWorker::connect_with("127.0.0.1:1", &policy, Arc::clone(&counters)).is_err());
+        let (retries, _timeouts, _reconnects) = counters.snapshot();
+        assert_eq!(retries, 2, "3 attempts = 2 retries");
     }
 }

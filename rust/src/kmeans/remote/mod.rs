@@ -24,11 +24,16 @@
 //! shards produces *byte-identical* centroids and assignments to the
 //! in-process shard plane (`rust/tests/remote_shard.rs` pins this).
 //!
-//! **Failure semantics.** Every wire failure is contained: endpoints
-//! that refuse/skew at connect time and connections that die mid-solve
-//! both fall back to a local solve of the affected shard, counted in
-//! `CoordMetrics::remote_fallbacks` — a dead worker costs throughput,
-//! never the run.
+//! **Failure semantics.** Every wire failure is contained and every
+//! recovery step is bounded by a [`RetryPolicy`]: a failed operation is
+//! retried against the same worker with exponential backoff (seeded
+//! jitter, so runs are reproducible), a still-dead worker's shard is
+//! rescheduled on another live remote, and only then does the shard
+//! fall back to a local solve.  A hung worker costs at most the per-job
+//! deadline, never an unbounded stall.  Whatever path recovery takes,
+//! the result is bitwise-identical — the shard seed is a pure function
+//! of `(base seed, shard index)`, so retries cannot change the answer.
+//! DESIGN.md §6 tabulates fault → detection → action → metric.
 //!
 //! [`ShardExecutor`]: crate::kmeans::shard::ShardExecutor
 
@@ -36,16 +41,105 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{shutdown_worker, RemoteShardPool, RemoteWorker};
+pub use client::{shutdown_worker, RemoteShardPool, RemoteWorker, WireCounters};
 pub use protocol::PROTOCOL_VERSION;
 pub use server::{WorkerHandle, WorkerServer};
 
+use crate::util::rng::SplitMix64;
 use std::time::Duration;
 
-/// Dial timeout for coordinator → worker connections.
-pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Bounds every remote operation: dial/handshake attempts, socket IO,
+/// and whole-job deadlines, plus how failures are retried.
+///
+/// Replaces the former `CONNECT_TIMEOUT`/`IO_TIMEOUT` constants (the
+/// defaults mirror them).  Backoff between attempts is exponential with
+/// **seeded** jitter — two runs with the same policy seed sleep the same
+/// schedule, which is what keeps chaos tests deterministic.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Attempts per operation (connect or job), including the first.
+    pub max_attempts: u32,
+    /// Base backoff before the second attempt; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff growth cap.
+    pub backoff_max: Duration,
+    /// TCP dial timeout per connect attempt.
+    pub connect_timeout: Duration,
+    /// Per-read/write socket timeout.  Generous — a shard solve streams
+    /// a frame per iteration, so silence this long means a dead peer.
+    pub io_timeout: Duration,
+    /// Total wall-clock budget for one shard job across *all* retry
+    /// attempts — the bound on what a hung worker can cost.
+    pub job_deadline: Duration,
+    /// Seed for backoff jitter (mixed per worker address).
+    pub seed: u64,
+}
 
-/// Per-read/write socket timeout on both sides.  Generous — a shard
-/// solve streams a frame per iteration, so silence this long means a
-/// dead peer, not a slow one.
-pub const IO_TIMEOUT: Duration = Duration::from_secs(120);
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(120),
+            job_deadline: Duration::from_secs(120),
+            seed: 0x5EED_FA17,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry attempt `attempt` (1-based: the sleep after
+    /// the first failure is `backoff(1)`), jittered into `[50%, 100%]`
+    /// of the exponential step by `jitter` (a per-worker rng draw).
+    pub fn backoff(&self, attempt: u32, jitter: f64) -> Duration {
+        let exp = self
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16).saturating_sub(1));
+        let capped = exp.min(self.backoff_max);
+        capped.mul_f64(0.5 + 0.5 * jitter.clamp(0.0, 1.0))
+    }
+
+    /// Deterministic jitter seed for one worker address: same policy
+    /// seed + same address → same backoff schedule.
+    pub fn jitter_seed(&self, addr: &str) -> u64 {
+        let mut h = self.seed;
+        for &b in addr.as_bytes() {
+            // FNV-ish fold, then SplitMix to spread the bits.
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        SplitMix64::new(h).next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_and_respects_the_cap() {
+        let p = RetryPolicy::default();
+        let full = |a| p.backoff(a, 1.0);
+        assert!(full(2) >= full(1));
+        assert!(full(3) >= full(2));
+        // Far-out attempts saturate at backoff_max.
+        assert!(full(20) <= p.backoff_max);
+        assert!(full(20) >= p.backoff_max.mul_f64(0.99));
+        // jitter=0.0 halves the step, never zeroes it.
+        assert!(p.backoff(1, 0.0) >= p.backoff_base.mul_f64(0.49));
+        assert!(p.backoff(1, 0.0) <= p.backoff_base.mul_f64(0.51));
+    }
+
+    #[test]
+    fn jitter_seed_is_stable_and_address_dependent() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.jitter_seed("a:1"), p.jitter_seed("a:1"));
+        assert_ne!(p.jitter_seed("a:1"), p.jitter_seed("b:2"));
+        let p2 = RetryPolicy {
+            seed: p.seed ^ 1,
+            ..RetryPolicy::default()
+        };
+        assert_ne!(p.jitter_seed("a:1"), p2.jitter_seed("a:1"));
+    }
+}

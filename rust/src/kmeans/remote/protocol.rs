@@ -6,10 +6,11 @@
 //! ```text
 //! client → Hello{version}            server → HelloAck{version}
 //!                                           | Error{VersionSkew}
+//! client → Ping                      server → Pong        (health check)
 //! client → Job{shard, spec, slice}   server → Iter{..} × iterations
 //!                                            Done{centroids, counts, stats}
 //!                                           | Error{BadJob | Internal}
-//! …(more Jobs on the same connection)…
+//! …(more Pings / Jobs on the same connection)…
 //! client → Shutdown                  server exits its accept loop
 //! ```
 //!
@@ -27,7 +28,8 @@ use std::io::{self, Read, Write};
 
 /// Wire protocol version; the handshake requires an exact match (the
 /// format has no negotiation — a skewed peer is told so and dropped).
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2 added the `Ping`/`Pong` health-check frames.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 // Frame kinds.
 pub const KIND_HELLO: u8 = 1;
@@ -37,6 +39,8 @@ pub const KIND_ITER: u8 = 4;
 pub const KIND_DONE: u8 = 5;
 pub const KIND_ERROR: u8 = 6;
 pub const KIND_SHUTDOWN: u8 = 7;
+pub const KIND_PING: u8 = 8;
+pub const KIND_PONG: u8 = 9;
 
 // Error codes carried by [`Message::Error`].
 pub const ERR_VERSION_SKEW: u8 = 1;
@@ -135,6 +139,12 @@ pub enum Message {
     Done(Box<DoneFrame>),
     Error { code: u8, message: String },
     Shutdown,
+    /// Health-check request (v2): empty payload, answered with [`Pong`].
+    ///
+    /// [`Pong`]: Message::Pong
+    Ping,
+    /// Health-check reply (v2): empty payload.
+    Pong,
 }
 
 // ---------------------------------------------------------------------------
@@ -326,6 +336,8 @@ impl Message {
                 KIND_ERROR
             }
             Message::Shutdown => KIND_SHUTDOWN,
+            Message::Ping => KIND_PING,
+            Message::Pong => KIND_PONG,
         };
         (kind, w.into_vec())
     }
@@ -395,6 +407,8 @@ impl Message {
                 message: r.take_str()?,
             },
             KIND_SHUTDOWN => Message::Shutdown,
+            KIND_PING => Message::Ping,
+            KIND_PONG => Message::Pong,
             _ => return Err(FrameError::Malformed("unknown frame kind")),
         };
         r.finish()?;
@@ -448,6 +462,19 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(matches!(round_trip(&Message::Shutdown), Message::Shutdown));
+    }
+
+    #[test]
+    fn ping_pong_round_trip_with_empty_payloads() {
+        assert!(matches!(round_trip(&Message::Ping), Message::Ping));
+        assert!(matches!(round_trip(&Message::Pong), Message::Pong));
+        // Empty payload is part of the contract: a bloated health check
+        // would tax the between-jobs path.
+        assert!(Message::Ping.encode().1.is_empty());
+        assert!(Message::Pong.encode().1.is_empty());
+        // A Ping/Pong with trailing bytes is malformed, not ignored.
+        assert!(Message::decode(KIND_PING, &[0]).is_err());
+        assert!(Message::decode(KIND_PONG, &[0]).is_err());
     }
 
     #[test]

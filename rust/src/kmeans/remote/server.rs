@@ -21,7 +21,7 @@
 use super::protocol::{
     DoneFrame, IterFrame, Message, ShardJob, ERR_BAD_JOB, ERR_VERSION_SKEW, PROTOCOL_VERSION,
 };
-use super::IO_TIMEOUT;
+use super::RetryPolicy;
 use crate::kmeans::panel::CpuPanels;
 use crate::kmeans::shard::{solve_level1_shard, ShardPartial};
 use crate::kmeans::solver::{IterEvent, IterFlow, ObserveFn};
@@ -157,9 +157,10 @@ impl WorkerHandle {
 
 /// Serve one coordinator connection: handshake, then a Job loop.
 fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
+    let io_timeout = RetryPolicy::default().io_timeout;
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
-    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
 
     // Handshake.  A bare disconnect (the accept-loop wake-up dummy, port
     // scanners) is a normal close; a non-Hello opener is refused.
@@ -206,10 +207,14 @@ fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
         match msg {
             Message::Shutdown => return Ok(ConnEnd::Shutdown),
             Message::Job(job) => serve_job(&mut stream, *job)?,
+            // Health check (v2): answer and keep serving.
+            Message::Ping => {
+                Message::Pong.write_to(&mut stream)?;
+            }
             other => {
                 Message::Error {
                     code: ERR_BAD_JOB,
-                    message: format!("expected Job or Shutdown, got {other:?}"),
+                    message: format!("expected Job, Ping or Shutdown, got {other:?}"),
                 }
                 .write_to(&mut stream)?;
                 return Ok(ConnEnd::Closed);

@@ -8,6 +8,8 @@
 //!               `shard-worker`s via repeatable --remote host:port)
 //!   shard-worker serve level-1 shard solves over the wire protocol
 //!               (the remote end of `cluster --remote`)
+//!   chaos-proxy deterministic fault-injecting TCP proxy in front of a
+//!               shard-worker (chaos testing / CI smoke)
 //!   fit         train a model and save the KmeansModel artifact (JSON)
 //!   predict     assign a dataset against a saved model (batched Predictor)
 //!   serve-bench closed-loop load generator for the micro-batching
@@ -26,18 +28,19 @@ use muchswift::kmeans::init::Init;
 use muchswift::kmeans::model::KmeansModel;
 use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
 use muchswift::kmeans::predict::Predictor;
-use muchswift::kmeans::remote::{RemoteShardPool, WorkerServer, PROTOCOL_VERSION};
+use muchswift::kmeans::remote::{RemoteShardPool, RetryPolicy, WorkerServer, PROTOCOL_VERSION};
 use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
 use muchswift::kmeans::twolevel::Partition;
 use muchswift::kmeans::{KmeansResult, Metric};
 use muchswift::runtime::{self, PjrtPanels, PjrtRuntime};
 use muchswift::serve::{ClusterService, ServeConfig};
 use muchswift::util::cli::{Command, Matches};
+use muchswift::util::fault::{ChaosProxy, FaultSchedule};
 use muchswift::util::json::Json;
 use muchswift::util::logger;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -57,12 +60,21 @@ fn commands() -> Vec<Command> {
             .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
             .multi("remote", "shard-worker endpoint host:port for level-1 solves (repeatable)")
+            .opt("remote-timeout-ms", "120000", "per-job deadline and io timeout for remote solves (ms)")
+            .opt("remote-retries", "3", "attempts per remote operation, including the first")
+            .opt("remote-backoff-ms", "100", "base retry backoff (ms; doubles per attempt, seeded jitter)")
             .opt("report", "", "write a machine-readable coordinator run report (JSON) here")
             .opt("out", "", "write final assignments CSV here (one label per line)")
             .flag("trace", "stream per-iteration stats through an observer (runs two-level via the sequential solver)")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
         Command::new("shard-worker", "serve level-1 shard solves to remote coordinators (wire protocol)")
             .opt("listen", "127.0.0.1:7601", "host:port to bind (port 0 picks a free port)"),
+        Command::new("chaos-proxy", "deterministic fault-injecting TCP proxy in front of a shard-worker")
+            .req("upstream", "shard-worker endpoint host:port to forward to")
+            .opt("listen", "127.0.0.1:0", "host:port to bind (port 0 picks a free port)")
+            .opt("schedule", "", "comma-separated fault schedule, e.g. kill@4,none,corrupt@1 (empty = derive from --seed)")
+            .opt("seed", "42", "seed for a derived schedule when --schedule is empty")
+            .opt("conns", "16", "derived schedule length (connections before it repeats)"),
         Command::new("fit", "train a model and save the KmeansModel artifact")
             .opt("n", "100000", "synthetic points (ignored with an input file)")
             .opt("d", "15", "dimensions")
@@ -303,12 +315,30 @@ fn run() -> anyhow::Result<()> {
                 };
                 let mut coord = Coordinator::new(backend);
                 if !remotes.is_empty() {
+                    let timeout_ms = m.u64("remote-timeout-ms")?;
+                    let retries = m.u64("remote-retries")?;
+                    let backoff_ms = m.u64("remote-backoff-ms")?;
+                    anyhow::ensure!(
+                        timeout_ms >= 1 && retries >= 1,
+                        "--remote-timeout-ms and --remote-retries must be >= 1"
+                    );
+                    let policy = RetryPolicy {
+                        max_attempts: retries.min(u32::MAX as u64) as u32,
+                        backoff_base: Duration::from_millis(backoff_ms.max(1)),
+                        io_timeout: Duration::from_millis(timeout_ms),
+                        job_deadline: Duration::from_millis(timeout_ms),
+                        connect_timeout: Duration::from_millis(timeout_ms)
+                            .min(Duration::from_secs(5)),
+                        ..RetryPolicy::default()
+                    };
                     println!(
-                        "remote shard workers: {} endpoint(s) {:?}",
+                        "remote shard workers: {} endpoint(s) {:?} \
+                         (deadline {timeout_ms}ms, {retries} attempts, backoff {backoff_ms}ms)",
                         remotes.len(),
                         remotes
                     );
-                    coord = coord.with_remotes(RemoteShardPool::new(remotes.clone()));
+                    coord = coord
+                        .with_remotes(RemoteShardPool::new(remotes.clone()).with_policy(policy));
                 }
                 let out = coord.run(&data, &spec);
                 report_result(&out.result, &data, metric);
@@ -371,6 +401,24 @@ fn run() -> anyhow::Result<()> {
             );
             server.run()?;
             println!("shard-worker: shutdown requested, exiting");
+        }
+        "chaos-proxy" => {
+            let upstream = m.str("upstream").to_string();
+            let schedule = if m.str("schedule").is_empty() {
+                FaultSchedule::seeded(m.u64("seed")?, m.usize("conns")?.max(1))
+            } else {
+                FaultSchedule::parse(m.str("schedule")).map_err(anyhow::Error::msg)?
+            };
+            println!("fault schedule: {schedule}");
+            let proxy = ChaosProxy::spawn(m.str("listen"), &upstream, schedule)?;
+            // The exact bound address on its own line (resolves `:0`
+            // binds) so scripts/tests can scrape the port.
+            println!("chaos-proxy listening on {} -> {upstream}", proxy.addr());
+            // Proxying happens on background threads; park until killed
+            // (CI backgrounds this process and kills it after the smoke).
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
         }
         "fit" => {
             let metric: Metric = m.str("metric").parse()?;
@@ -659,6 +707,19 @@ fn write_coord_report(
                 ("remote_workers", Json::num(cm.remote_workers as f64)),
                 ("remote_shards", Json::num(cm.remote_shards as f64)),
                 ("remote_fallbacks", Json::num(cm.remote_fallbacks as f64)),
+                ("remote_retries", Json::num(cm.remote_retries as f64)),
+                ("remote_timeouts", Json::num(cm.remote_timeouts as f64)),
+                ("remote_reconnects", Json::num(cm.remote_reconnects as f64)),
+                ("remote_rescheduled", Json::num(cm.remote_rescheduled as f64)),
+                (
+                    "remote_failed_endpoints",
+                    Json::Arr(
+                        cm.remote_failed_endpoints
+                            .iter()
+                            .map(|r| Json::str(r.as_str()))
+                            .collect(),
+                    ),
+                ),
                 ("remote_bytes_tx", Json::num(cm.remote_bytes_tx as f64)),
                 ("remote_bytes_rx", Json::num(cm.remote_bytes_rx as f64)),
             ]),

@@ -50,6 +50,10 @@ pub struct ServeMetrics {
     /// Fraction of wall time the dispatcher spent inside panel execution
     /// (a low value under load points at queueing, not compute).
     pub busy_frac: f64,
+    /// Requests refused at admission because the bounded queue stayed
+    /// full past a [`submit_timeout`](super::ClusterService::submit_timeout)
+    /// deadline — the shed load under saturation.
+    pub rejected: u64,
 }
 
 impl ServeMetrics {
@@ -58,7 +62,7 @@ impl ServeMetrics {
         format!(
             "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy, \
              {:.0}% duty) | {:.1} req/batch ({:.1} pts/batch, max {}) | \
-             {:.0} pts/s, {:.0} req/s | \
+             {:.0} pts/s, {:.0} req/s | {} rejected | \
              latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
             self.requests,
             self.points,
@@ -71,6 +75,7 @@ impl ServeMetrics {
             self.max_batch_requests,
             self.throughput_pps,
             self.throughput_rps,
+            self.rejected,
             self.latency_p50_ms,
             self.latency_p95_ms,
             self.latency_p99_ms,
@@ -97,6 +102,7 @@ impl ServeMetrics {
             ("throughput_pps", Json::num(self.throughput_pps)),
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("busy_frac", Json::num(self.busy_frac)),
+            ("rejected", Json::num(self.rejected as f64)),
         ])
     }
 }
@@ -113,6 +119,8 @@ struct State {
     latencies: Vec<f64>,
     /// Total latencies ever recorded (drives the rolling overwrite).
     recorded: u64,
+    /// Requests shed at admission (deadline submits against a full queue).
+    rejected: u64,
 }
 
 /// Shared recorder: dispatcher writes, snapshots read.
@@ -151,6 +159,13 @@ impl Recorder {
         }
     }
 
+    /// Count one request refused at admission (queue stayed full past the
+    /// caller's submit deadline).
+    pub(crate) fn record_rejection(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.rejected += 1;
+    }
+
     pub(crate) fn snapshot(&self) -> ServeMetrics {
         // Copy everything out under the lock, then release it before the
         // O(n log n) sort so a metrics poll never stalls the dispatcher's
@@ -160,6 +175,7 @@ impl Recorder {
         let (mean_batch_requests, max_batch_requests) =
             (st.batch_requests.mean(), st.batch_requests.max as u64);
         let (max_batch_points, busy_s) = (st.max_batch_points, st.busy_s);
+        let rejected = st.rejected;
         let mut lat = st.latencies.clone();
         drop(st);
         let wall_s = self.started.elapsed().as_secs_f64();
@@ -187,6 +203,7 @@ impl Recorder {
             latency_max_ms: lat.last().copied().unwrap_or(0.0) * ms,
             throughput_pps: if wall_s > 0.0 { points as f64 / wall_s } else { 0.0 },
             throughput_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
+            rejected,
         }
     }
 }
@@ -231,6 +248,19 @@ mod tests {
         assert!(j.get("latency_p50_ms").unwrap().as_f64().unwrap() > 9.0);
         assert_eq!(j.get("mean_batch_points").unwrap().as_f64().unwrap(), 64.0);
         assert!(j.get("busy_frac").unwrap().as_f64().is_some());
+        assert_eq!(j.get("rejected").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn rejections_are_counted_separately_from_requests() {
+        let r = Recorder::new();
+        r.record_rejection();
+        r.record_rejection();
+        r.record_batch(8, 0.01, &[0.001]);
+        let m = r.snapshot();
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.requests, 1, "rejections never count as fulfilled");
+        assert!(m.summary().contains("2 rejected"), "{}", m.summary());
     }
 
     #[test]

@@ -18,9 +18,10 @@
 //! ```
 //!
 //! Backpressure is real: `submit` blocks while the queue holds
-//! `queue_cap` requests (`try_submit` refuses instead), and shutdown
-//! drains the queue before the dispatchers exit, so every accepted
-//! request is answered.
+//! `queue_cap` requests (`try_submit` refuses instead, `submit_timeout`
+//! waits a bounded time then sheds the request as `Rejected`), and
+//! shutdown drains the queue before the dispatchers exit, so every
+//! accepted request is answered.
 //!
 //! Three scaling knobs ride on [`ServeConfig`]:
 //!
@@ -104,6 +105,11 @@ pub enum ServeError {
     DimMismatch { expected: usize, got: usize },
     /// Bounded queue is full (only from [`ClusterService::try_submit`]).
     Full,
+    /// The queue stayed full past a
+    /// [`submit_timeout`](ClusterService::submit_timeout) deadline — the
+    /// request was shed at admission (counted in
+    /// [`ServeMetrics::rejected`]).
+    Rejected,
 }
 
 impl std::fmt::Display for ServeError {
@@ -114,6 +120,9 @@ impl std::fmt::Display for ServeError {
                 write!(f, "query dims {got} != model dims {expected}")
             }
             ServeError::Full => write!(f, "request queue is full"),
+            ServeError::Rejected => {
+                write!(f, "request rejected: queue stayed full past the submit deadline")
+            }
         }
     }
 }
@@ -251,6 +260,17 @@ fn drain_batch(queue: &mut VecDeque<Pending>, max_points: usize) -> Vec<Pending>
         }
     }
     out
+}
+
+/// How long a submit is willing to wait for queue space.
+#[derive(Clone, Copy)]
+enum Admission {
+    /// Wait indefinitely (backpressure).
+    Block,
+    /// Refuse immediately with [`ServeError::Full`].
+    Fail,
+    /// Wait at most this long, then shed with [`ServeError::Rejected`].
+    Deadline(Duration),
 }
 
 /// What a dispatcher decided to do after inspecting the queue.
@@ -461,13 +481,17 @@ impl ClusterService {
         Ok(())
     }
 
-    fn enqueue(&self, points: Dataset, block: bool) -> Result<Ticket, ServeError> {
+    fn enqueue(&self, points: Dataset, admission: Admission) -> Result<Ticket, ServeError> {
         self.check_dims(&points)?;
         let (reply_tx, reply_rx) = channel();
         let pending = Pending {
             points,
             reply: reply_tx,
             enqueued: Instant::now(),
+        };
+        let deadline = match admission {
+            Admission::Deadline(d) => Some(Instant::now() + d),
+            _ => None,
         };
         let mut st = self.shared.lock_state();
         loop {
@@ -477,10 +501,25 @@ impl ClusterService {
             if st.queue.len() < self.cfg.queue_cap {
                 break;
             }
-            if !block {
-                return Err(ServeError::Full);
+            match admission {
+                Admission::Fail => return Err(ServeError::Full),
+                Admission::Block => st = self.shared.wait_on(&self.shared.not_full, st),
+                Admission::Deadline(_) => {
+                    let deadline = deadline.unwrap();
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(st);
+                        self.recorder.record_rejection();
+                        return Err(ServeError::Rejected);
+                    }
+                    // Spurious wakeups loop back through the deadline
+                    // check above, so the timed_out flag is redundant.
+                    let (g, _timed_out) =
+                        self.shared
+                            .wait_timeout_on(&self.shared.not_full, st, deadline - now);
+                    st = g;
+                }
             }
-            st = self.shared.wait_on(&self.shared.not_full, st);
         }
         st.queue.push_back(pending);
         drop(st);
@@ -491,13 +530,26 @@ impl ClusterService {
     /// Enqueue a predict request, blocking while the queue is full
     /// (backpressure).  The returned [`Ticket`] resolves to the reply.
     pub fn submit(&self, points: Dataset) -> Result<Ticket, ServeError> {
-        self.enqueue(points, true)
+        self.enqueue(points, Admission::Block)
     }
 
     /// Non-blocking [`submit`](Self::submit): fails with
     /// [`ServeError::Full`] instead of waiting.
     pub fn try_submit(&self, points: Dataset) -> Result<Ticket, ServeError> {
-        self.enqueue(points, false)
+        self.enqueue(points, Admission::Fail)
+    }
+
+    /// Bounded-wait [`submit`](Self::submit): wait up to `timeout` for
+    /// queue space, then shed the request with [`ServeError::Rejected`]
+    /// (counted in [`ServeMetrics::rejected`]).  The admission-control
+    /// client call: a saturated service costs a bounded wait, never a
+    /// stalled client.
+    pub fn submit_timeout(
+        &self,
+        points: Dataset,
+        timeout: Duration,
+    ) -> Result<Ticket, ServeError> {
+        self.enqueue(points, Admission::Deadline(timeout))
     }
 
     /// Submit and wait — the closed-loop client call.

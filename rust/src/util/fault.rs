@@ -1,0 +1,611 @@
+//! Deterministic fault injection for the remote shard plane.
+//!
+//! `ChaosProxy` is an in-process TCP proxy that sits between the coordinator
+//! and a `shard-worker` and executes a **seeded, fully deterministic fault
+//! schedule**. Each accepted connection `i` is assigned
+//! `schedule.fault_for(i)` (round-robin over the schedule), so the same
+//! schedule — whether written out explicitly or derived from a u64 seed —
+//! always produces the same fault sequence. That makes every chaos test a
+//! reproducible pin rather than a flaky roll of the dice.
+//!
+//! The proxy understands the `util::frame` wire format just enough to act on
+//! *frame boundaries*: the server→client direction is parsed into frames
+//! (9-byte head + payload + CRC trailer) so faults like "truncate mid-frame"
+//! or "flip a payload byte of frame k" land exactly where the schedule says.
+//! The client→server direction is copied verbatim — the faults we model are
+//! a worker misbehaving, not a coordinator misbehaving.
+//!
+//! Fault classes (`Fault`):
+//!
+//! | schedule token | behavior |
+//! |----------------|----------|
+//! | `none`         | forward everything verbatim |
+//! | `refuse`       | close the client socket immediately, never dial upstream |
+//! | `hang`         | accept, then forward nothing in either direction |
+//! | `delay@MS`     | forward, but sleep MS ms before each server→client frame |
+//! | `truncate@K`   | forward K frames, then send only the 9-byte head of frame K and close |
+//! | `corrupt@K`    | forward, but flip one payload byte of server→client frame K |
+//! | `kill@K`       | forward K server→client frames, then close both sockets |
+//! | `stall@K`      | forward K frames, then stop forwarding but keep the socket open |
+//!
+//! `corrupt` exercises the CRC-32 path in `util::frame` (the client must see
+//! `BadChecksum`, never a silently wrong payload); `stall` is the "hung
+//! worker" fault that the per-job deadline in `kmeans::remote` must bound.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Size of the fixed frame head (`magic u32 | kind u8 | len u32`) — mirrors
+/// the layout in `util::frame`.
+const FRAME_HEAD: usize = 9;
+/// CRC-32 trailer length.
+const FRAME_TRAILER: usize = 4;
+/// How often blocked proxy threads wake up to check the stop flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// One fault, applied to one proxied connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward everything verbatim.
+    None,
+    /// Close the client socket at accept; upstream is never dialed.
+    Refuse,
+    /// Accept and hold the socket open, but never forward a byte.
+    Hang,
+    /// Forward, sleeping this many milliseconds before each downstream frame.
+    Delay(u64),
+    /// Forward `frames` whole frames, then emit only the head of the next
+    /// frame and close — the client must observe `FrameError::Truncated`.
+    Truncate { frames: u32 },
+    /// Flip one payload byte of downstream frame `frame` — the client must
+    /// observe `FrameError::BadChecksum`.
+    Corrupt { frame: u32 },
+    /// Forward `frames` downstream frames, then close both sockets.
+    KillAfter { frames: u32 },
+    /// Forward `frames` downstream frames, then go silent while keeping the
+    /// connection open — the "hung worker" the per-job deadline must bound.
+    Stall { frames: u32 },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::None => write!(f, "none"),
+            Fault::Refuse => write!(f, "refuse"),
+            Fault::Hang => write!(f, "hang"),
+            Fault::Delay(ms) => write!(f, "delay@{ms}"),
+            Fault::Truncate { frames } => write!(f, "truncate@{frames}"),
+            Fault::Corrupt { frame } => write!(f, "corrupt@{frame}"),
+            Fault::KillAfter { frames } => write!(f, "kill@{frames}"),
+            Fault::Stall { frames } => write!(f, "stall@{frames}"),
+        }
+    }
+}
+
+impl Fault {
+    fn parse(tok: &str) -> Result<Fault, String> {
+        let (name, arg) = match tok.split_once('@') {
+            Some((n, a)) => (n, Some(a)),
+            None => (tok, None),
+        };
+        let num = || -> Result<u64, String> {
+            arg.ok_or_else(|| format!("fault `{tok}` needs a numeric argument, e.g. `{name}@3`"))?
+                .parse::<u64>()
+                .map_err(|_| format!("bad number in fault `{tok}`"))
+        };
+        let bare = |fault: Fault| -> Result<Fault, String> {
+            if arg.is_some() {
+                Err(format!("fault `{name}` takes no argument (got `{tok}`)"))
+            } else {
+                Ok(fault)
+            }
+        };
+        match name {
+            "none" => bare(Fault::None),
+            "refuse" => bare(Fault::Refuse),
+            "hang" => bare(Fault::Hang),
+            "delay" => Ok(Fault::Delay(num()?)),
+            "truncate" => Ok(Fault::Truncate { frames: num()? as u32 }),
+            "corrupt" => Ok(Fault::Corrupt { frame: num()? as u32 }),
+            "kill" => Ok(Fault::KillAfter { frames: num()? as u32 }),
+            "stall" => Ok(Fault::Stall { frames: num()? as u32 }),
+            _ => Err(format!(
+                "unknown fault `{tok}` (want none|refuse|hang|delay@MS|truncate@K|corrupt@K|kill@K|stall@K)"
+            )),
+        }
+    }
+}
+
+/// A deterministic per-connection fault assignment: connection `i` gets
+/// `faults[i % faults.len()]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    /// Build from an explicit fault list. An empty list behaves like `clean()`.
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultSchedule { faults }
+    }
+
+    /// A schedule that never injects anything.
+    pub fn clean() -> Self {
+        FaultSchedule { faults: vec![Fault::None] }
+    }
+
+    /// Parse a comma-separated schedule, e.g. `"kill@4,none,corrupt@1"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut faults = Vec::new();
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                return Err("empty fault token in schedule".to_string());
+            }
+            faults.push(Fault::parse(tok)?);
+        }
+        Ok(FaultSchedule { faults })
+    }
+
+    /// Derive `n` faults deterministically from a u64 seed: the same seed
+    /// always yields the same schedule.
+    pub fn seeded(seed: u64, n: usize) -> Self {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut faults = Vec::with_capacity(n);
+        for _ in 0..n {
+            let f = match rng.below(8) {
+                0 => Fault::None,
+                1 => Fault::Refuse,
+                2 => Fault::Hang,
+                3 => Fault::Delay(1 + rng.below(40)),
+                4 => Fault::Truncate { frames: rng.below(6) as u32 },
+                5 => Fault::Corrupt { frame: rng.below(6) as u32 },
+                6 => Fault::KillAfter { frames: rng.below(6) as u32 },
+                _ => Fault::Stall { frames: rng.below(6) as u32 },
+            };
+            faults.push(f);
+        }
+        FaultSchedule { faults }
+    }
+
+    /// The fault assigned to accepted connection `conn` (0-based).
+    pub fn fault_for(&self, conn: usize) -> Fault {
+        if self.faults.is_empty() {
+            Fault::None
+        } else {
+            self.faults[conn % self.faults.len()]
+        }
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+}
+
+impl fmt::Display for FaultSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+/// In-process TCP chaos proxy. `spawn` binds a listener and returns
+/// immediately; `addr()` is what the client should dial instead of the real
+/// worker; `shutdown()` stops the accept loop and wakes lingering fault
+/// threads (hang/stall poll a stop flag).
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind `listen` (use `127.0.0.1:0` for an ephemeral port) and start
+    /// proxying to `upstream` under `schedule`.
+    pub fn spawn(listen: &str, upstream: &str, schedule: FaultSchedule) -> io::Result<ChaosProxy> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let upstream = upstream.to_string();
+        let accept = thread::Builder::new()
+            .name("chaos-accept".to_string())
+            .spawn(move || {
+                let mut conn = 0usize;
+                for incoming in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let client = match incoming {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let fault = schedule.fault_for(conn);
+                    log::debug!("chaos: conn {} gets fault {}", conn, fault);
+                    conn += 1;
+                    let upstream = upstream.clone();
+                    let stop3 = Arc::clone(&stop2);
+                    let _ = thread::Builder::new()
+                        .name(format!("chaos-conn-{}", conn))
+                        .spawn(move || handle_conn(client, &upstream, fault, stop3));
+                }
+            })?;
+        Ok(ChaosProxy { addr, stop, accept: Some(accept) })
+    }
+
+    /// The address clients should dial.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and wake any parked fault threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sleep `ms` in small chunks so a proxy shutdown is never blocked on a
+/// long injected delay.
+fn chunked_sleep(ms: u64, stop: &AtomicBool) {
+    let mut left = Duration::from_millis(ms);
+    while !left.is_zero() && !stop.load(Ordering::SeqCst) {
+        let step = left.min(POLL);
+        thread::sleep(step);
+        left -= step;
+    }
+}
+
+/// Park until shutdown (for `hang` / post-`stall`), keeping the socket open.
+fn park(stop: &AtomicBool) {
+    while !stop.load(Ordering::SeqCst) {
+        thread::sleep(POLL);
+    }
+}
+
+/// Read exactly `buf.len()` bytes, polling the stop flag across read
+/// timeouts. `Ok(false)` means clean EOF before the first byte; EOF
+/// mid-buffer is an error.
+fn read_full(s: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> io::Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Err(io::Error::new(io::ErrorKind::Interrupted, "chaos proxy stopping"));
+        }
+        match s.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-frame"));
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn close_both(a: &TcpStream, b: &TcpStream) {
+    let _ = a.shutdown(Shutdown::Both);
+    let _ = b.shutdown(Shutdown::Both);
+}
+
+fn handle_conn(client: TcpStream, upstream: &str, fault: Fault, stop: Arc<AtomicBool>) {
+    match fault {
+        Fault::Refuse => {
+            // Drop without dialing upstream: the client's handshake read
+            // fails immediately, modeling a refused/unreachable worker.
+            drop(client);
+            return;
+        }
+        Fault::Hang => {
+            // Hold the socket open but never answer; the client's own
+            // timeouts decide how long this costs.
+            park(&stop);
+            return;
+        }
+        _ => {}
+    }
+
+    let server = match TcpStream::connect(upstream) {
+        Ok(s) => s,
+        Err(e) => {
+            log::warn!("chaos: upstream {} unreachable: {}", upstream, e);
+            return;
+        }
+    };
+    let _ = client.set_nodelay(true);
+    let _ = server.set_nodelay(true);
+    let _ = client.set_read_timeout(Some(POLL));
+    let _ = server.set_read_timeout(Some(POLL));
+
+    // Uplink (client → server): verbatim byte copy.
+    let up_client = match client.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let up_server = match server.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let uplink = {
+        let stop = Arc::clone(&stop);
+        let mut from = up_client;
+        let mut to = up_server;
+        thread::spawn(move || {
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match from.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        if to.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            io::ErrorKind::WouldBlock
+                                | io::ErrorKind::TimedOut
+                                | io::ErrorKind::Interrupted
+                        ) =>
+                    {
+                        continue
+                    }
+                    Err(_) => break,
+                }
+            }
+            close_both(&from, &to);
+        })
+    };
+
+    // Downlink (server → client): frame-aware, fault-injecting.
+    let mut server = server;
+    let mut client = client;
+    let _ = downlink(&mut server, &mut client, fault, &stop);
+    close_both(&server, &client);
+    let _ = uplink.join();
+}
+
+fn downlink(
+    server: &mut TcpStream,
+    client: &mut TcpStream,
+    fault: Fault,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let mut frame_no: u32 = 0;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let mut head = [0u8; FRAME_HEAD];
+        if !read_full(server, &mut head, stop)? {
+            return Ok(()); // clean upstream EOF
+        }
+        let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]) as usize;
+        let mut body = vec![0u8; len + FRAME_TRAILER];
+        if !read_full(server, &mut body, stop)? {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-frame"));
+        }
+
+        match fault {
+            Fault::Truncate { frames } if frame_no == frames => {
+                // Ship only the head: the client learns the length, then
+                // hits EOF mid-payload — FrameError::Truncated.
+                let _ = client.write_all(&head);
+                return Ok(());
+            }
+            Fault::KillAfter { frames } if frame_no == frames => {
+                // Drop this frame entirely and sever the connection.
+                return Ok(());
+            }
+            Fault::Stall { frames } if frame_no == frames => {
+                // Swallow the frame and go silent, socket still open: the
+                // client's per-job deadline is what bounds this.
+                park(stop);
+                return Ok(());
+            }
+            Fault::Corrupt { frame } if frame_no == frame => {
+                // Flip one payload byte (or a CRC byte for empty payloads):
+                // the CRC-32 check must reject the frame.
+                body[len / 2] ^= 0x01;
+                client.write_all(&head)?;
+                client.write_all(&body)?;
+            }
+            Fault::Delay(ms) => {
+                chunked_sleep(ms, stop);
+                client.write_all(&head)?;
+                client.write_all(&body)?;
+            }
+            _ => {
+                client.write_all(&head)?;
+                client.write_all(&body)?;
+            }
+        }
+        frame_no += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::frame::{read_frame, write_frame, FrameError};
+
+    #[test]
+    fn schedule_parses_every_fault_class() {
+        let s = FaultSchedule::parse("none,refuse,hang,delay@25,truncate@2,corrupt@1,kill@4,stall@3")
+            .expect("parse");
+        assert_eq!(
+            s.faults(),
+            &[
+                Fault::None,
+                Fault::Refuse,
+                Fault::Hang,
+                Fault::Delay(25),
+                Fault::Truncate { frames: 2 },
+                Fault::Corrupt { frame: 1 },
+                Fault::KillAfter { frames: 4 },
+                Fault::Stall { frames: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_display_round_trips() {
+        let s = FaultSchedule::parse("none,refuse,hang,delay@7,truncate@0,corrupt@5,kill@2,stall@9")
+            .expect("parse");
+        let again = FaultSchedule::parse(&s.to_string()).expect("reparse");
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn bad_schedules_are_rejected() {
+        assert!(FaultSchedule::parse("bogus").is_err());
+        assert!(FaultSchedule::parse("delay").is_err());
+        assert!(FaultSchedule::parse("kill@x").is_err());
+        assert!(FaultSchedule::parse("none@3").is_err());
+        assert!(FaultSchedule::parse("").is_err());
+        assert!(FaultSchedule::parse("none,,kill@1").is_err());
+    }
+
+    #[test]
+    fn seeded_schedules_are_deterministic() {
+        let a = FaultSchedule::seeded(7, 32);
+        let b = FaultSchedule::seeded(7, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.faults().len(), 32);
+    }
+
+    #[test]
+    fn schedule_wraps_round_robin() {
+        let s = FaultSchedule::parse("kill@1,none").expect("parse");
+        assert_eq!(s.fault_for(0), Fault::KillAfter { frames: 1 });
+        assert_eq!(s.fault_for(1), Fault::None);
+        assert_eq!(s.fault_for(2), Fault::KillAfter { frames: 1 });
+        assert_eq!(s.fault_for(5), Fault::None);
+    }
+
+    /// Spawn a one-shot upstream that writes the given frames and closes.
+    fn one_shot_upstream(frames: Vec<(u8, Vec<u8>)>) -> (std::net::SocketAddr, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind upstream");
+        let addr = listener.local_addr().expect("addr");
+        let h = thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                for (kind, payload) in frames {
+                    if write_frame(&mut s, kind, &payload).is_err() {
+                        break;
+                    }
+                }
+                // Linger briefly so the proxy drains our bytes before EOF.
+                let _ = s.flush();
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn clean_proxy_forwards_frames_verbatim() {
+        let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4]), (5, vec![9])]);
+        let proxy = ChaosProxy::spawn("127.0.0.1:0", &up.to_string(), FaultSchedule::clean())
+            .expect("spawn proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("dial proxy");
+        let (k1, p1, _) = read_frame(&mut c).expect("frame 1");
+        let (k2, p2, _) = read_frame(&mut c).expect("frame 2");
+        assert_eq!((k1, p1.as_slice()), (3, &[1u8, 2, 3, 4][..]));
+        assert_eq!((k2, p2.as_slice()), (5, &[9u8][..]));
+        drop(c);
+        uh.join().expect("upstream");
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn corrupt_fault_trips_the_checksum() {
+        let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4])]);
+        let schedule = FaultSchedule::parse("corrupt@0").expect("parse");
+        let proxy =
+            ChaosProxy::spawn("127.0.0.1:0", &up.to_string(), schedule).expect("spawn proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("dial proxy");
+        match read_frame(&mut c) {
+            Err(FrameError::BadChecksum { .. }) => {}
+            other => panic!("want BadChecksum, got {:?}", other.map(|(k, p, _)| (k, p.len()))),
+        }
+        drop(c);
+        uh.join().expect("upstream");
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn kill_and_truncate_faults_sever_the_stream() {
+        // kill@0: the client sees EOF before any frame → Truncated.
+        let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4])]);
+        let proxy = ChaosProxy::spawn(
+            "127.0.0.1:0",
+            &up.to_string(),
+            FaultSchedule::parse("kill@0").expect("parse"),
+        )
+        .expect("spawn proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("dial proxy");
+        match read_frame(&mut c) {
+            Err(FrameError::Truncated) => {}
+            other => panic!("want Truncated, got {:?}", other.map(|(k, p, _)| (k, p.len()))),
+        }
+        drop(c);
+        uh.join().expect("upstream");
+        proxy.shutdown();
+
+        // truncate@0: head arrives, payload does not → Truncated.
+        let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4])]);
+        let proxy = ChaosProxy::spawn(
+            "127.0.0.1:0",
+            &up.to_string(),
+            FaultSchedule::parse("truncate@0").expect("parse"),
+        )
+        .expect("spawn proxy");
+        let mut c = TcpStream::connect(proxy.addr()).expect("dial proxy");
+        match read_frame(&mut c) {
+            Err(FrameError::Truncated) => {}
+            other => panic!("want Truncated, got {:?}", other.map(|(k, p, _)| (k, p.len()))),
+        }
+        drop(c);
+        uh.join().expect("upstream");
+        proxy.shutdown();
+    }
+}

@@ -1,0 +1,272 @@
+//! Chaos suite for the remote shard plane: a real `WorkerServer` behind
+//! the deterministic fault-injecting [`ChaosProxy`], driven through the
+//! coordinator's full degradation ladder (retry with backoff →
+//! reschedule on another remote → local fallback).
+//!
+//! The invariant under *every* fault class: the final `KmeansResult` is
+//! bitwise-identical to the in-process solve — the shard seed is a pure
+//! function of `(base seed, shard index)`, so no recovery path can
+//! change the answer — and a hung/stalled worker costs at most the
+//! per-job deadline, never an unbounded stall.
+
+use muchswift::coordinator::{Backend, CoordOutcome, Coordinator};
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kmeans::remote::{RemoteShardPool, RetryPolicy, WorkerServer};
+use muchswift::kmeans::solver::KmeansSpec;
+use muchswift::kmeans::KmeansResult;
+use muchswift::util::fault::{ChaosProxy, FaultSchedule};
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn assert_bitwise_equal(a: &KmeansResult, b: &KmeansResult) {
+    assert_eq!(a.centroids.len(), b.centroids.len());
+    for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "centroid bits diverged");
+    }
+    assert_eq!(a.assignments, b.assignments, "assignments diverged");
+}
+
+/// Small timeouts so injected hangs/stalls cost milliseconds, tiny
+/// backoff so retries are fast, but a roomy job deadline so the *attempt
+/// count*, not wall-clock racing, decides the ladder — which is what
+/// keeps the counter assertions deterministic.
+fn fast_policy() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 3,
+        backoff_base: Duration::from_millis(2),
+        backoff_max: Duration::from_millis(20),
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_millis(400),
+        job_deadline: Duration::from_secs(10),
+        seed: 0xD00D,
+    }
+}
+
+fn run_chaos(
+    data: &Dataset,
+    spec: &KmeansSpec,
+    schedule: &str,
+    policy: RetryPolicy,
+) -> CoordOutcome {
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &w.addr().to_string(),
+        FaultSchedule::parse(schedule).unwrap(),
+    )
+    .unwrap();
+    let out = Coordinator::new(Backend::Cpu)
+        .with_remotes(RemoteShardPool::new(vec![proxy.addr().to_string()]).with_policy(policy))
+        .run(data, spec);
+    proxy.shutdown();
+    w.shutdown().unwrap();
+    out
+}
+
+#[test]
+fn every_fault_class_preserves_bitwise_results() {
+    let s = generate_params(1500, 2, 3, 0.2, 1.0, 21);
+    // P = 1 with one endpoint: the single puller is the remote one, so
+    // the fault schedule is hit deterministically, never raced away.
+    let spec = KmeansSpec::two_level(3).seed(6).shards(1);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // Connection 0 carries the fault, connection 1 is clean: every class
+    // must be detected, retried past, and end bitwise-identical.
+    for fault in ["refuse", "hang", "truncate@3", "corrupt@3", "kill@3", "stall@3"] {
+        let out = run_chaos(
+            &s.data,
+            &spec,
+            &format!("{fault},none"),
+            fast_policy(),
+        );
+        let m = &out.metrics;
+        let disrupted =
+            m.remote_retries + m.remote_timeouts + m.remote_fallbacks + m.remote_rescheduled;
+        assert!(disrupted >= 1, "{fault}: no disruption recorded: {}", m.summary());
+        assert_eq!(
+            m.remote_shards + m.remote_fallbacks,
+            1,
+            "{fault}: the one shard must resolve exactly once: {}",
+            m.summary()
+        );
+        assert_bitwise_equal(&out.result, &local.result);
+    }
+
+    // Delay is a *benign* fault: slower, but nothing to retry.
+    let out = run_chaos(&s.data, &spec, "delay@25", fast_policy());
+    assert_eq!(out.metrics.remote_shards, 1, "{}", out.metrics.summary());
+    assert_eq!(out.metrics.remote_fallbacks, 0);
+    assert_eq!(out.metrics.remote_retries, 0);
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn same_fault_schedule_twice_reproduces_counters_and_bits_exactly() {
+    // One fault of every class in the schedule, the first three of which
+    // (corrupt, kill, truncate) are actually consumed by the default
+    // three attempts before the ladder ends in a local fallback — run
+    // twice, the books and the bits must match exactly.
+    let schedule = "corrupt@3,kill@3,truncate@3,stall@3,refuse,hang,delay@10,none";
+    let s = generate_params(1500, 2, 3, 0.2, 1.0, 21);
+    let spec = KmeansSpec::two_level(3).seed(6).shards(1);
+
+    let a = run_chaos(&s.data, &spec, schedule, fast_policy());
+    let b = run_chaos(&s.data, &spec, schedule, fast_policy());
+    let books = |o: &CoordOutcome| {
+        (
+            o.metrics.remote_workers,
+            o.metrics.remote_shards,
+            o.metrics.remote_fallbacks,
+            o.metrics.remote_retries,
+            o.metrics.remote_timeouts,
+            o.metrics.remote_reconnects,
+            o.metrics.remote_rescheduled,
+        )
+    };
+    assert_eq!(books(&a), books(&b), "chaos run not reproducible");
+    assert_bitwise_equal(&a.result, &b.result);
+    // This schedule exhausts all three attempts mid-solve (corrupt →
+    // kill → truncate), so the ladder demonstrably ran before going
+    // local.
+    assert_eq!(books(&a), (1, 0, 1, 2, 0, 2, 0), "{}", a.metrics.summary());
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+    assert_bitwise_equal(&a.result, &local.result);
+
+    // Seed-derived schedules are themselves reproducible end to end.
+    assert_eq!(
+        FaultSchedule::seeded(0xC4A05, 8).to_string(),
+        FaultSchedule::seeded(0xC4A05, 8).to_string()
+    );
+}
+
+#[test]
+fn stalled_worker_is_bounded_by_the_job_deadline() {
+    // Every connection stalls mid-solve (handshake + pings pass, the
+    // first Iter frame never comes).  The per-job deadline caps what
+    // that costs: attempts stop the moment the budget is gone, and the
+    // shard goes local.
+    let s = generate_params(1500, 2, 3, 0.2, 1.0, 21);
+    let spec = KmeansSpec::two_level(3).seed(6).shards(1);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    let policy = RetryPolicy {
+        io_timeout: Duration::from_millis(300),
+        job_deadline: Duration::from_millis(700),
+        max_attempts: 5,
+        backoff_base: Duration::from_millis(1),
+        ..fast_policy()
+    };
+    let t0 = Instant::now();
+    let out = run_chaos(&s.data, &spec, "stall@3", policy);
+    let elapsed = t0.elapsed();
+
+    assert_eq!(out.metrics.remote_fallbacks, 1, "{}", out.metrics.summary());
+    assert_eq!(out.metrics.remote_shards, 0);
+    assert!(
+        out.metrics.remote_timeouts >= 1,
+        "stall must surface as timeouts: {}",
+        out.metrics.summary()
+    );
+    // 700 ms of job budget + dials/backoff/local solve: nowhere near the
+    // unbounded hang this test exists to prevent.
+    assert!(elapsed < Duration::from_secs(5), "took {elapsed:?}");
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn dead_remote_shard_is_rescheduled_onto_a_live_one() {
+    // Endpoint A kills every connection mid-solve; endpoint B is a clean
+    // worker.  A's shard must move to B (the ladder's middle rung): both
+    // shards still solve remotely, nothing falls back to local.
+    let s = generate_params(2400, 2, 3, 0.2, 1.0, 13);
+    let spec = KmeansSpec::two_level(3).seed(4).shards(2).workers(2);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    let wa = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let wb = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &wa.addr().to_string(),
+        FaultSchedule::parse("kill@3").unwrap(),
+    )
+    .unwrap();
+    let pool = RemoteShardPool::new(vec![
+        proxy.addr().to_string(),
+        wb.addr().to_string(),
+    ])
+    .with_policy(fast_policy());
+    let out = Coordinator::new(Backend::Cpu)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+    proxy.shutdown();
+    wa.shutdown().unwrap();
+    wb.shutdown().unwrap();
+
+    let m = &out.metrics;
+    assert_eq!(m.remote_workers, 2, "{}", m.summary());
+    assert_eq!(m.remote_rescheduled, 1, "{}", m.summary());
+    assert_eq!(m.remote_fallbacks, 0, "reschedule must beat local fallback");
+    assert_eq!(m.remote_shards, 2, "both shards still solved remotely");
+    assert!(m.remote_retries >= 2, "{}", m.summary());
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+// ---------------------------------------------------------------------------
+// chaos-proxy binary lifecycle
+// ---------------------------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_muchswift"))
+}
+
+#[test]
+fn chaos_proxy_binary_fronts_a_worker() {
+    use muchswift::kmeans::remote::RemoteWorker;
+
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let mut child = bin()
+        .args([
+            "chaos-proxy",
+            "--upstream",
+            &w.addr().to_string(),
+            "--schedule",
+            "kill@1,none",
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // Scrape the bound address from the startup banner.
+    let mut reader = BufReader::new(child.stdout.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "banner never came");
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    // Connection 0 dies on its second frame (the connect Pong); the
+    // default policy retries onto the clean connection 1.
+    let rw = RemoteWorker::connect(&addr).unwrap();
+    drop(rw);
+    child.kill().unwrap();
+    child.wait().unwrap();
+    w.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_proxy_binary_rejects_bad_schedules() {
+    let out = bin()
+        .args([
+            "chaos-proxy",
+            "--upstream",
+            "127.0.0.1:1",
+            "--schedule",
+            "explode@7",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

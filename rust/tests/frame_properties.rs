@@ -1,0 +1,203 @@
+//! Property-style tests for the wire substrate of the remote shard
+//! plane: random protocol messages of *every* kind must round-trip the
+//! frame codec exactly, any single corrupted byte of a valid frame must
+//! be refused (an `Err`, never a panic and never a silent success), and
+//! a stream cut at *every* possible boundary must read as `Truncated`.
+//!
+//! These pins are what make the chaos-proxy faults (`util::fault`)
+//! meaningful: corrupt/truncate injections are guaranteed to surface as
+//! clean decode errors the retry ladder can act on.
+
+use muchswift::data::Dataset;
+use muchswift::kmeans::init::Init;
+use muchswift::kmeans::remote::protocol::{
+    DoneFrame, IterFrame, Message, ShardJob, WireSpec, PROTOCOL_VERSION,
+};
+use muchswift::kmeans::{IterStats, LevelWork, Metric, RunStats};
+use muchswift::util::frame::FrameError;
+use muchswift::util::proptest::{proptest_seeded, Gen};
+use muchswift::util::rng::Xoshiro256pp;
+use std::io::Cursor;
+
+// ---------------------------------------------------------------------------
+// Random message generators (seeded, deterministic)
+// ---------------------------------------------------------------------------
+
+fn random_dataset(g: &mut Gen, max_n: usize, max_d: usize) -> Dataset {
+    let n = g.usize_in(1, max_n);
+    let d = g.usize_in(1, max_d);
+    let flat = g.vec_f32(n * d, -100.0, 100.0);
+    Dataset::from_flat(n, d, flat)
+}
+
+fn random_level(g: &mut Gen) -> LevelWork {
+    LevelWork {
+        interior_jobs: g.rng.next_u64() >> 40,
+        leaf_jobs: g.rng.next_u64() >> 40,
+        cand_evals: g.rng.next_u64() >> 40,
+        prune_tests: g.rng.next_u64() >> 40,
+    }
+}
+
+fn random_iter_stats(g: &mut Gen) -> IterStats {
+    let nlevels = g.usize_in(0, 3);
+    IterStats {
+        dist_evals: g.rng.next_u64() >> 32,
+        node_visits: g.rng.next_u64() >> 32,
+        leaf_points: g.rng.next_u64() >> 32,
+        interior_assigns: g.rng.next_u64() >> 32,
+        prune_tests: g.rng.next_u64() >> 32,
+        moved: g.f32_in(0.0, 10.0),
+        cost: if g.bool() {
+            Some(g.f32_in(0.0, 1000.0) as f64)
+        } else {
+            None
+        },
+        levels: (0..nlevels).map(|_| random_level(g)).collect(),
+    }
+}
+
+fn random_wire_spec(g: &mut Gen) -> WireSpec {
+    WireSpec {
+        k: g.usize_in(1, 16) as u32,
+        metric: *g.pick(&[Metric::Euclid, Metric::Manhattan]),
+        tol: g.f32_in(0.0, 1e-2),
+        max_iters: g.usize_in(1, 500) as u64,
+        init: *g.pick(&[Init::UniformSample, Init::KmeansPlusPlus]),
+        seed: g.rng.next_u64(),
+    }
+}
+
+/// One random message of each protocol kind, indexed 0..KINDS.
+const KINDS: usize = 9;
+
+fn random_message(g: &mut Gen, which: usize) -> Message {
+    match which {
+        0 => Message::Hello {
+            version: if g.bool() {
+                PROTOCOL_VERSION
+            } else {
+                g.rng.next_u64() as u32
+            },
+        },
+        1 => Message::HelloAck {
+            version: g.rng.next_u64() as u32,
+        },
+        2 => Message::Job(Box::new(ShardJob {
+            shard: g.usize_in(0, 64) as u32,
+            spec: random_wire_spec(g),
+            data: random_dataset(g, 12, 4),
+        })),
+        3 => Message::Iter(Box::new(IterFrame {
+            iter: g.usize_in(0, 1000) as u64,
+            stats: random_iter_stats(g),
+            centroids: random_dataset(g, 6, 3),
+        })),
+        4 => Message::Done(Box::new(DoneFrame {
+            centroids: random_dataset(g, 6, 3),
+            counts: (0..g.usize_in(1, 6)).map(|_| g.usize_in(0, 10_000)).collect(),
+            stats: RunStats {
+                converged: g.bool(),
+                early_stopped: g.bool(),
+                iters: (0..g.usize_in(0, 4)).map(|_| random_iter_stats(g)).collect(),
+            },
+        })),
+        5 => Message::Error {
+            code: g.usize_in(0, 255) as u8,
+            message: format!("err-{}", g.rng.next_u64()),
+        },
+        6 => Message::Shutdown,
+        7 => Message::Ping,
+        _ => Message::Pong,
+    }
+}
+
+fn wire_of(msg: &Message) -> Vec<u8> {
+    let mut wire = Vec::new();
+    msg.write_to(&mut wire).unwrap();
+    wire
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_message_kind_round_trips_random_payloads() {
+    proptest_seeded(0xF1A9_E5, 48, |g| {
+        for which in 0..KINDS {
+            let msg = random_message(g, which);
+            let wire = wire_of(&msg);
+            let (back, rx) = Message::read_from(&mut Cursor::new(&wire))
+                .map_err(|e| format!("kind {which}: read failed: {e}"))?;
+            if rx != wire.len() {
+                return Err(format!("kind {which}: rx {} != wire {}", rx, wire.len()));
+            }
+            // Message has no PartialEq; bitwise re-encode equality is the
+            // stronger check anyway (exact IEEE bits, exact field order).
+            if back.encode() != msg.encode() {
+                return Err(format!("kind {which}: round trip not bitwise-identical"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn any_single_byte_flip_is_refused_never_a_panic() {
+    // One seeded message per kind, then flip every byte of its wire form
+    // (two masks: low bit and high bit).  The frame layer must catch the
+    // damage (magic, length bound, CRC) or, in the astronomically
+    // unlikely event a frame survives, the message decoder must refuse.
+    let mut g = Gen {
+        rng: Xoshiro256pp::seed_from_u64(0xB17_F11),
+        scale: 1.0,
+        case: 0,
+    };
+    for which in 0..KINDS {
+        let wire = wire_of(&random_message(&mut g, which));
+        for i in 0..wire.len() {
+            for mask in [0x01u8, 0x80u8] {
+                let mut bad = wire.clone();
+                bad[i] ^= mask;
+                match Message::read_from(&mut Cursor::new(&bad)) {
+                    Err(_) => {}
+                    Ok(_) => panic!("kind {which}: flip {mask:#04x} at byte {i} was accepted"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn truncation_at_every_boundary_reads_as_truncated() {
+    let mut g = Gen {
+        rng: Xoshiro256pp::seed_from_u64(0x7_2C47),
+        scale: 1.0,
+        case: 0,
+    };
+    for which in 0..KINDS {
+        let wire = wire_of(&random_message(&mut g, which));
+        for cut in 0..wire.len() {
+            match Message::read_from(&mut Cursor::new(&wire[..cut])) {
+                Err(FrameError::Truncated) => {}
+                Err(e) => panic!("kind {which}: cut at {cut} gave {e}, want Truncated"),
+                Ok(_) => panic!("kind {which}: cut at {cut} decoded a whole message"),
+            }
+        }
+    }
+}
+
+#[test]
+fn garbage_streams_are_rejected_without_panic() {
+    proptest_seeded(0x6A2_BA6E, 64, |g| {
+        let n = g.usize_in(0, 256);
+        let blob: Vec<u8> = (0..n).map(|_| g.rng.next_u64() as u8).collect();
+        // A random blob must never read as a protocol message (the magic
+        // plus CRC make that a ~2^-64 accident) — and must never panic.
+        if Message::read_from(&mut Cursor::new(&blob)).is_ok() {
+            return Err(format!("{n}-byte garbage blob decoded as a message"));
+        }
+        Ok(())
+    });
+}

@@ -14,6 +14,7 @@ use muchswift::kmeans::remote::{self, RemoteShardPool, RemoteWorker, WorkerServe
 use muchswift::kmeans::shard::{level1_spec, solve_level1_shard};
 use muchswift::kmeans::solver::{IterLog, KmeansSpec};
 use muchswift::kmeans::KmeansResult;
+use muchswift::util::fault::{ChaosProxy, FaultSchedule};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::process::{Command, Stdio};
@@ -143,22 +144,19 @@ fn dead_endpoint_falls_back_to_local_with_identical_results() {
 
 #[test]
 fn mid_solve_wire_death_falls_back_to_local() {
-    // A worker that acks the handshake, swallows the first job, and
-    // hangs up — the nastiest failure point (shard claimed, no result).
-    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    let evil = std::thread::spawn(move || {
-        let (mut conn, _) = listener.accept().unwrap();
-        let (msg, _) = Message::read_from(&mut conn).unwrap();
-        assert!(matches!(msg, Message::Hello { .. }));
-        Message::HelloAck {
-            version: PROTOCOL_VERSION,
-        }
-        .write_to(&mut conn)
-        .unwrap();
-        let _ = Message::read_from(&mut conn); // the job arrives …
-        drop(conn); // … and the wire dies
-    });
+    // The wire dies mid-solve on *every* connection: a real worker sits
+    // behind a chaos proxy whose schedule kills the stream right after
+    // the handshake + health checks (server frames 0–2: HelloAck, two
+    // Pongs), i.e. on the first Iter frame — the nastiest failure point
+    // (shard claimed, no result).  With no alternate endpoint the full
+    // ladder runs: retry with reconnect, exhaust attempts, go local.
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &w.addr().to_string(),
+        FaultSchedule::parse("kill@3").unwrap(),
+    )
+    .unwrap();
 
     let s = generate_params(2000, 2, 3, 0.2, 1.0, 5);
     // P = 1 with one remote endpoint: zero local pullers spawn, so the
@@ -167,14 +165,20 @@ fn mid_solve_wire_death_falls_back_to_local() {
     let spec = KmeansSpec::two_level(3).seed(2).shards(1);
     let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
     let out = Coordinator::new(Backend::Cpu)
-        .with_remotes(RemoteShardPool::new(vec![addr]))
+        .with_remotes(RemoteShardPool::new(vec![proxy.addr().to_string()]))
         .run(&s.data, &spec);
-    evil.join().unwrap();
 
     assert_eq!(out.metrics.remote_workers, 1, "the handshake succeeded");
     assert_eq!(out.metrics.remote_shards, 0, "no shard completed remotely");
     assert_eq!(out.metrics.remote_fallbacks, 1);
+    // Default policy: 3 attempts → 2 retries, each on a fresh dial.
+    assert_eq!(out.metrics.remote_retries, 2);
+    assert_eq!(out.metrics.remote_reconnects, 2);
+    assert_eq!(out.metrics.remote_rescheduled, 0, "nowhere to reschedule");
     assert_bitwise_equal(&out.result, &local.result);
+
+    proxy.shutdown();
+    w.shutdown().unwrap();
 }
 
 #[test]

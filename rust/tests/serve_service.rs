@@ -345,6 +345,52 @@ fn multi_dispatcher_shutdown_drains_accepted_requests() {
 }
 
 #[test]
+fn saturated_queue_sheds_deadline_submits_as_rejected() {
+    // queue_cap=1 with a long hold deadline: the dispatcher's
+    // micro-batcher keeps the first request parked in the queue for the
+    // hold window, so a second submit finds the queue full for long
+    // enough that a 50 ms admission deadline must expire.
+    let model = trained_model(600, 3, 4, 11);
+    let queries = generate_params(64, 3, 4, 0.4, 1.0, 8).data;
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            queue_cap: 1,
+            batch_deadline_us: 300_000, // 300 ms hold >> 50 ms admission deadline
+            ..Default::default()
+        },
+    );
+    let first = svc.submit(slice(&queries, 0, 16)).unwrap();
+    match svc.submit_timeout(slice(&queries, 16, 16), std::time::Duration::from_millis(50)) {
+        Err(ServeError::Rejected) => {}
+        other => panic!("expected Rejected, got {:?}", other.err()),
+    }
+    // The accepted request still completes, and the service keeps
+    // serving after shedding load.
+    assert_eq!(first.wait().unwrap().labels.len(), 16);
+    let reply = svc.predict(slice(&queries, 32, 16)).unwrap();
+    assert_eq!(reply.labels.len(), 16);
+    let m = svc.shutdown();
+    assert_eq!(m.rejected, 1, "the shed request must be counted");
+    assert_eq!(m.requests, 2, "rejected submits never count as fulfilled");
+}
+
+#[test]
+fn submit_timeout_admits_when_there_is_room() {
+    // With a roomy queue, submit_timeout behaves exactly like submit.
+    let model = trained_model(600, 3, 4, 11);
+    let queries = generate_params(32, 3, 4, 0.4, 1.0, 8).data;
+    let svc = ClusterService::start(Arc::clone(&model), ServeConfig::default());
+    let t = svc
+        .submit_timeout(slice(&queries, 0, 16), std::time::Duration::from_millis(500))
+        .unwrap();
+    assert_eq!(t.wait().unwrap().labels.len(), 16);
+    let m = svc.shutdown();
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
 fn scalar_service_is_bit_identical_to_oracle_predictor() {
     // Scalar kernel end to end: the service must agree with the
     // training-side arg-min arithmetic exactly, including distances.

@@ -65,7 +65,7 @@ impl CoordMetrics {
             "total {:.3}s = partition {:.3}s + trees {:.3}s + level1 {:.3}s + \
              combine {:.4}s + level2 {:.3}s | offload: {} batches / {} jobs | \
              pjrt: {} execs / {:.3}s | observed: {} iters / {} evals | \
-             {} shards, iters/shard {:?} | remote: {} workers, {} shards, \
+             {} shards, iters/shard {:?}, evals/shard {:?} | remote: {} workers, {} shards, \
              {} fallbacks, {} retries, {} timeouts, {} reconnects, \
              {} rescheduled, dead endpoints {:?}, {}B tx / {}B rx",
             self.total_s,
@@ -82,6 +82,7 @@ impl CoordMetrics {
             self.observed_dist_evals,
             self.shards,
             self.shard_iters,
+            self.shard_dist_evals,
             self.remote_workers,
             self.remote_shards,
             self.remote_fallbacks,
@@ -152,7 +153,8 @@ mod tests {
         };
         let s = m.summary();
         assert!(s.contains("3 shards"), "{s}");
-        assert!(s.contains("[5, 7, 6]"), "{s}");
+        assert!(s.contains("iters/shard [5, 7, 6]"), "{s}");
+        assert!(s.contains("evals/shard [100, 140, 120]"), "{s}");
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //! IEEE bits, which is what lets a loopback remote run reproduce the
 //! in-process shard plane bit for bit.  Decoders never panic on hostile
 //! payloads — every length is bounds-checked against the frame.
+//!
+//! This module is a `pallas-lint` panic-hygiene surface: production code
+//! here must stay free of `unwrap`/`expect`/panicking macros and
+//! unchecked indexing.  The clippy denies below backstop the custom lint.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::data::Dataset;
 use crate::kmeans::init::Init;
@@ -301,9 +307,6 @@ pub fn encode_job(shard: u32, spec: &WireSpec, data: &Dataset) -> (u8, Vec<u8>) 
 impl Message {
     /// `(frame kind, payload)` of this message.
     pub fn encode(&self) -> (u8, Vec<u8>) {
-        if let Message::Job(job) = self {
-            return encode_job(job.shard, &job.spec, &job.data);
-        }
         let mut w = ByteWriter::new();
         let kind = match self {
             Message::Hello { version } => {
@@ -314,7 +317,9 @@ impl Message {
                 w.put_u32(*version);
                 KIND_HELLO_ACK
             }
-            Message::Job(_) => unreachable!("handled above"),
+            // Serialized straight from the borrowed parts — the hot path
+            // (`encode_job`) never clones the shard slice.
+            Message::Job(job) => return encode_job(job.shard, &job.spec, &job.data),
             Message::Iter(it) => {
                 w.put_u64(it.iter);
                 put_iter_stats(&mut w, &it.stats);
@@ -429,6 +434,7 @@ impl Message {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::data::synthetic::generate_params;

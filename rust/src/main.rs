@@ -699,10 +699,28 @@ fn write_coord_report(
                 ("level1_s", Json::num(cm.level1_s)),
                 ("combine_s", Json::num(cm.combine_s)),
                 ("level2_s", Json::num(cm.level2_s)),
+                ("offload_batches", Json::num(cm.offload_batches as f64)),
+                ("offload_jobs", Json::num(cm.offload_jobs as f64)),
+                ("pjrt_executions", Json::num(cm.pjrt_executions as f64)),
+                ("pjrt_exec_s", Json::num(cm.pjrt_exec_s)),
                 ("observed_iters", Json::num(cm.observed_iters as f64)),
                 (
                     "observed_dist_evals",
                     Json::num(cm.observed_dist_evals as f64),
+                ),
+                ("shards", Json::num(cm.shards as f64)),
+                (
+                    "shard_iters",
+                    Json::Arr(cm.shard_iters.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+                (
+                    "shard_dist_evals",
+                    Json::Arr(
+                        cm.shard_dist_evals
+                            .iter()
+                            .map(|&x| Json::num(x as f64))
+                            .collect(),
+                    ),
                 ),
                 ("remote_workers", Json::num(cm.remote_workers as f64)),
                 ("remote_shards", Json::num(cm.remote_shards as f64)),

@@ -129,13 +129,17 @@ pub struct PjrtRuntime {
 }
 
 // SAFETY: the `xla` crate wraps raw PJRT pointers without auto traits, but
-// the underlying XLA CPU objects are documented thread-safe:
-// `PjRtLoadedExecutable::Execute` and `PjRtClient` may be called from
-// multiple threads, and after `load` the maps are never mutated.  The
-// coordinator additionally serializes access through a single PL-service
-// thread (see `coordinator::offload`), mirroring the paper's single DMA
-// manager.
+// the underlying XLA CPU objects may be handed between threads: nothing in
+// `PjRtClient`/`PjRtLoadedExecutable` is thread-affine, and after `load`
+// the maps are never mutated, so moving the runtime to another thread
+// cannot race its construction.
 unsafe impl Send for PjrtRuntime {}
+
+// SAFETY: shared references are safe concurrently for the same reason —
+// XLA documents `PjRtLoadedExecutable::Execute` and `PjRtClient` as
+// callable from multiple threads, and the coordinator additionally
+// serializes access through a single PL-service thread (see
+// `coordinator::offload`), mirroring the paper's single DMA manager.
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {

@@ -61,7 +61,7 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         format!(
             "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy, \
-             {:.0}% duty) | {:.1} req/batch ({:.1} pts/batch, max {}) | \
+             {:.0}% duty) | {:.1} req/batch (max {}), {:.1} pts/batch (max {}) | \
              {:.0} pts/s, {:.0} req/s | {} rejected | \
              latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
             self.requests,
@@ -71,8 +71,9 @@ impl ServeMetrics {
             self.busy_s,
             self.busy_frac * 100.0,
             self.mean_batch_requests,
-            self.mean_batch_points,
             self.max_batch_requests,
+            self.mean_batch_points,
+            self.max_batch_points,
             self.throughput_pps,
             self.throughput_rps,
             self.rejected,
@@ -249,6 +250,45 @@ mod tests {
         assert_eq!(j.get("mean_batch_points").unwrap().as_f64().unwrap(), 64.0);
         assert!(j.get("busy_frac").unwrap().as_f64().is_some());
         assert_eq!(j.get("rejected").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn json_snapshot_carries_every_declared_counter() {
+        // The complete ServeMetrics field set, pinned: `pallas-lint`'s
+        // metrics-parity rule enforces this statically, this test proves
+        // it dynamically (a field in both emitters but with a typo'd key
+        // would pass the lint's token scan yet fail here).
+        const FIELDS: [&str; 17] = [
+            "requests",
+            "points",
+            "batches",
+            "mean_batch_requests",
+            "mean_batch_points",
+            "max_batch_requests",
+            "max_batch_points",
+            "wall_s",
+            "busy_s",
+            "latency_p50_ms",
+            "latency_p95_ms",
+            "latency_p99_ms",
+            "latency_max_ms",
+            "throughput_pps",
+            "throughput_rps",
+            "busy_frac",
+            "rejected",
+        ];
+        let r = Recorder::new();
+        r.record_batch(16, 0.1, &[0.002; 4]);
+        let m = r.snapshot();
+        let j = m.to_json();
+        let obj = j.as_obj().expect("serve metrics must serialize to an object");
+        for f in FIELDS {
+            assert!(obj.contains_key(f), "missing JSON key {f}");
+        }
+        assert_eq!(obj.len(), FIELDS.len(), "undocumented extra JSON keys");
+        // And the human summary mentions the max-points coalescing bound
+        // (the counter the parity rule once caught missing).
+        assert!(m.summary().contains("pts/batch (max 16)"), "{}", m.summary());
     }
 
     #[test]

@@ -541,7 +541,11 @@ mod tests {
         (addr, h)
     }
 
+    // The proxy tests below need real TCP sockets, which Miri's isolated
+    // interpreter cannot provide; the schedule/codec logic above still
+    // runs under Miri, and the native test matrix keeps these covered.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn clean_proxy_forwards_frames_verbatim() {
         let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4]), (5, vec![9])]);
         let proxy = ChaosProxy::spawn("127.0.0.1:0", &up.to_string(), FaultSchedule::clean())
@@ -557,6 +561,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn corrupt_fault_trips_the_checksum() {
         let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4])]);
         let schedule = FaultSchedule::parse("corrupt@0").expect("parse");
@@ -573,6 +578,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn kill_and_truncate_faults_sever_the_stream() {
         // kill@0: the client sees EOF before any frame → Truncated.
         let (up, uh) = one_shot_upstream(vec![(3, vec![1, 2, 3, 4])]);

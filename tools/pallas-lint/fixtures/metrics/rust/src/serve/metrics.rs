@@ -1,0 +1,23 @@
+//! Fixture serve metrics: fully in parity, so the rule stays silent on
+//! this half and the fixture isolates the CoordMetrics gap.
+
+pub struct ServeMetrics {
+    pub requests: u64,
+}
+
+impl ServeMetrics {
+    pub fn summary(&self) -> String {
+        format!("requests {}", self.requests)
+    }
+
+    pub fn to_json(&self) -> String {
+        let pairs = [("requests", self.requests)];
+        let mut out = String::from("{");
+        for (k, v) in pairs {
+            out.push_str(k);
+            out.push_str(&v.to_string());
+        }
+        out.push('}');
+        out
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: this half of the decode surface is clean, so every firing
+//! in the fixture tree is attributable to `frame.rs`.
+
+pub fn decode_kind(buf: &[u8]) -> Option<u8> {
+    buf.first().copied()
+}

@@ -1,0 +1,27 @@
+//! Fixture: a hostile-input decode path with one unchecked index, one
+//! bare unwrap, one allow-annotation missing its justification, one
+//! properly justified annotation (silent), and test-only unwraps
+//! (silent).  `panic-hygiene` must fire exactly three times.
+
+pub fn decode_len(buf: &[u8]) -> u32 {
+    let b0 = buf[0];
+    let b1 = *buf.iter().nth(1).unwrap();
+    // pallas-lint: allow(panic-hygiene)
+    let b2 = *buf.get(2).unwrap();
+    // pallas-lint: allow(panic-hygiene) caller pinned len >= 4 via the header check
+    let b3 = *buf.get(3).unwrap();
+    u32::from_le_bytes([b0, b1, b2, b3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let buf = vec![1u8, 0, 0, 0];
+        assert_eq!(decode_len(&buf), 1);
+        let opt: Option<u8> = Some(1);
+        opt.unwrap();
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: `unsafe` outside the audited allowlist — even a documented
+//! block must fire `unsafe-audit`.
+
+pub fn as_bytes(x: &u32) -> &[u8] {
+    // SAFETY: documentation does not substitute for the allowlist.
+    unsafe { std::slice::from_raw_parts(x as *const u32 as *const u8, 4) }
+}

@@ -1,0 +1,9 @@
+//! Fixture: allowlisted file where the first `unsafe impl` lacks a
+//! SAFETY comment (fires) and the second carries one (silent).
+
+pub struct Handle(*mut u8);
+
+unsafe impl Send for Handle {}
+
+// SAFETY: the raw pointer is only dereferenced under the runtime lock.
+unsafe impl Sync for Handle {}

@@ -1,0 +1,6 @@
+//! Fixture: allowlisted and documented — must stay silent.
+
+pub fn cycle_counter() -> u64 {
+    // SAFETY: rdtsc reads a counter register and has no memory effects.
+    unsafe { core::arch::x86_64::_rdtsc() }
+}

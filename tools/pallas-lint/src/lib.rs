@@ -1,0 +1,1133 @@
+//! pallas-lint: token-level static analysis of the repo's cross-layer
+//! invariants — the contracts that runtime tests can only sample but a
+//! build-time scan can prove exhaustively:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `protocol-exhaustiveness` | every `KIND_*` message constant in `kmeans/remote/protocol.rs` has an encode arm, a decode arm, and a pin in `tests/frame_properties.rs` |
+//! | `metrics-parity` | every counter field of `CoordMetrics`/`ServeMetrics` appears in its summary formatter *and* its JSON emitter |
+//! | `fault-coverage` | every `Fault` variant in `util/fault.rs` is exercised by `tests/chaos_remote.rs` |
+//! | `panic-hygiene` | no `unwrap`/`expect`/panic macros/unchecked indexing in the hostile-input decode paths (`util/frame.rs`, `kmeans/remote/protocol.rs`) |
+//! | `unsafe-audit` | `unsafe` only in an explicit allowlist, each use under a `// SAFETY:` comment |
+//!
+//! The scanner is deliberately *not* a Rust parser: it strips comments,
+//! string/char literals and `#[cfg(test)]` regions, then matches tokens
+//! with identifier boundaries.  That is enough to make every rule above
+//! sound on this codebase, with zero dependencies (`std` only — the
+//! workspace's offline `crates/` policy).
+//!
+//! A site that is provably safe but textually flagged can carry a
+//! justification comment on the same or preceding line:
+//!
+//! ```text
+//! // pallas-lint: allow(panic-hygiene) index masked to 0..=255 above
+//! ```
+//!
+//! The annotation *requires* a justification; a bare allow is itself a
+//! violation.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Rule catalogue
+// ---------------------------------------------------------------------------
+
+pub const RULE_PROTOCOL: &str = "protocol-exhaustiveness";
+pub const RULE_METRICS: &str = "metrics-parity";
+pub const RULE_FAULT: &str = "fault-coverage";
+pub const RULE_PANIC: &str = "panic-hygiene";
+pub const RULE_UNSAFE: &str = "unsafe-audit";
+
+/// Every rule, in report order.
+pub static RULES: &[(&str, fn(&Path) -> Vec<Violation>)] = &[
+    (RULE_PROTOCOL, rule_protocol_exhaustiveness),
+    (RULE_METRICS, rule_metrics_parity),
+    (RULE_FAULT, rule_fault_coverage),
+    (RULE_PANIC, rule_panic_hygiene),
+    (RULE_UNSAFE, rule_unsafe_audit),
+];
+
+/// The annotation marker `panic-hygiene` sites may carry.
+pub const ALLOW_PANIC: &str = "pallas-lint: allow(panic-hygiene)";
+
+/// Files `unsafe` is permitted in (each use still needs `// SAFETY:`).
+pub const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/util/bench.rs", "rust/src/runtime/client.rs"];
+
+/// The hostile-input decode paths the panic-hygiene rule guards.
+pub const DECODE_PATHS: &[&str] = &[
+    "rust/src/util/frame.rs",
+    "rust/src/kmeans/remote/protocol.rs",
+];
+
+const PROTOCOL_RS: &str = "rust/src/kmeans/remote/protocol.rs";
+const FRAME_PROPS_RS: &str = "rust/tests/frame_properties.rs";
+const COORD_METRICS_RS: &str = "rust/src/coordinator/metrics.rs";
+const SERVE_METRICS_RS: &str = "rust/src/serve/metrics.rs";
+const MAIN_RS: &str = "rust/src/main.rs";
+const FAULT_RS: &str = "rust/src/util/fault.rs";
+const CHAOS_RS: &str = "rust/tests/chaos_remote.rs";
+
+/// One invariant violation, pointing at a repo-relative file and line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    /// 1-based; 0 when the violation is about the file as a whole.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every rule against the repo at `root`.
+pub fn run_all(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (_, rule) in RULES {
+        out.extend(rule(root));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Source model: stripped token text + string literals + test ranges
+// ---------------------------------------------------------------------------
+
+/// A scanned source file.  `stripped_lines` aligns 1:1 with `raw_lines`
+/// but has comments and string/char-literal contents blanked, so token
+/// searches and brace matching never trip on prose or format strings.
+pub struct Source {
+    pub rel: String,
+    pub raw_lines: Vec<String>,
+    pub stripped_lines: Vec<String>,
+    /// `(line, contents)` of every string literal, for rules that match
+    /// against quoted tokens (e.g. fault schedule strings).
+    pub literals: Vec<(usize, String)>,
+    /// 0-based inclusive line ranges of `#[cfg(test)]` items.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank comments and literal contents while preserving the line grid;
+/// collect string-literal contents on the side.
+fn strip_code(src: &str) -> (String, Vec<(usize, String)>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut literals: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (covers /// and //! doc forms).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nesting-aware.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (optionally b-prefixed), only when
+        // the prefix is not the tail of an identifier.
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+            let mut j = i;
+            if chars[j] == 'b' && j + 1 < n && chars[j + 1] == 'r' {
+                j += 1;
+            }
+            if chars[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    for _ in i..=k {
+                        out.push(' ');
+                    }
+                    i = k + 1;
+                    let start_line = line;
+                    let mut lit = String::new();
+                    while i < n {
+                        if chars[i] == '"' {
+                            let mut m = 0usize;
+                            while m < hashes && i + 1 + m < n && chars[i + 1 + m] == '#' {
+                                m += 1;
+                            }
+                            if m == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if chars[i] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                            lit.push('\n');
+                        } else {
+                            out.push(' ');
+                            lit.push(chars[i]);
+                        }
+                        i += 1;
+                    }
+                    literals.push((start_line, lit));
+                    continue;
+                }
+            }
+        }
+        // Normal or byte string literal.
+        let byte_str =
+            c == 'b' && i + 1 < n && chars[i + 1] == '"' && (i == 0 || !is_ident(chars[i - 1]));
+        if c == '"' || byte_str {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' '); // opening quote
+            i += 1;
+            let start_line = line;
+            let mut lit = String::new();
+            while i < n {
+                let d = chars[i];
+                if d == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                if d == '\\' && i + 1 < n {
+                    out.push(' ');
+                    if chars[i + 1] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    lit.push(d);
+                    lit.push(chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if d == '\n' {
+                    out.push('\n');
+                    line += 1;
+                    lit.push('\n');
+                } else {
+                    out.push(' ');
+                    lit.push(d);
+                }
+                i += 1;
+            }
+            literals.push((start_line, lit));
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: blank through the closing quote.
+                out.push(' ');
+                out.push(' ');
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' && chars[i + 1] != '\n' {
+                // 'x' — includes '{' / '"' payloads that must not open
+                // a brace or string state.
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // Lifetime or loop label: blank the quote, keep the ident.
+            out.push(' ');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+
+    (out.into_iter().collect(), literals)
+}
+
+impl Source {
+    pub fn from_text(rel: &str, raw: &str) -> Source {
+        let (stripped, literals) = strip_code(raw);
+        let raw_lines: Vec<String> = raw.lines().map(|l| l.to_string()).collect();
+        let stripped_lines: Vec<String> = stripped.lines().map(|l| l.to_string()).collect();
+        let test_ranges = find_test_ranges(&stripped_lines);
+        Source {
+            rel: rel.to_string(),
+            raw_lines,
+            stripped_lines,
+            literals,
+            test_ranges,
+        }
+    }
+
+    pub fn load(root: &Path, rel: &str) -> Result<Source, Violation> {
+        match fs::read_to_string(root.join(rel)) {
+            Ok(raw) => Ok(Source::from_text(rel, &raw)),
+            Err(e) => Err(Violation {
+                file: rel.to_string(),
+                line: 0,
+                rule: "io",
+                msg: format!("cannot read: {e}"),
+            }),
+        }
+    }
+
+    /// Is 0-based `line` inside a `#[cfg(test)]` item?
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// 0-based inclusive line range of the body of `fn name`, including
+    /// the brace lines.  Finds the *declaration*, not call sites.
+    pub fn fn_range(&self, name: &str) -> Option<(usize, usize)> {
+        for (li, l) in self.stripped_lines.iter().enumerate() {
+            if let Some(col) = find_fn_decl(l, name) {
+                return brace_range(&self.stripped_lines, li, col);
+            }
+        }
+        None
+    }
+
+    /// Stripped text of a 0-based inclusive line range.
+    pub fn stripped_text(&self, range: (usize, usize)) -> String {
+        self.stripped_lines[range.0..=range.1.min(self.stripped_lines.len() - 1)].join("\n")
+    }
+
+    /// Raw text of a 0-based inclusive line range (for quoted-key checks).
+    pub fn raw_text(&self, range: (usize, usize)) -> String {
+        self.raw_lines[range.0..=range.1.min(self.raw_lines.len() - 1)].join("\n")
+    }
+
+    /// All stripped non-test text (token space of production code).
+    pub fn production_text(&self) -> String {
+        self.stripped_lines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.in_tests(*i))
+            .map(|(_, l)| l.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn violation(&self, line0: usize, rule: &'static str, msg: String) -> Violation {
+        Violation {
+            file: self.rel.clone(),
+            line: line0 + 1,
+            rule,
+            msg,
+        }
+    }
+}
+
+/// `#[cfg(test)]` item ranges: from each marker, brace-match the next
+/// block (the `mod tests { .. }` or annotated item).
+fn find_test_ranges(stripped_lines: &[String]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (li, l) in stripped_lines.iter().enumerate() {
+        if l.contains("#[cfg(test)]") {
+            if let Some((a, b)) = brace_range(stripped_lines, li, 0) {
+                out.push((li.min(a), b));
+            }
+        }
+    }
+    out
+}
+
+/// Match the first `{` at/after `(from_line, from_col)` to its closing
+/// `}`; returns 0-based inclusive line range.
+fn brace_range(lines: &[String], from_line: usize, from_col: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut started = false;
+    let mut start = from_line;
+    for (li, l) in lines.iter().enumerate().skip(from_line) {
+        for (ci, ch) in l.chars().enumerate() {
+            if li == from_line && ci < from_col {
+                continue;
+            }
+            if ch == '{' {
+                if !started {
+                    started = true;
+                    start = li;
+                }
+                depth += 1;
+            } else if ch == '}' && started {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((start, li));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Column of `name` on a line that *declares* `fn name`, else None.
+fn find_fn_decl(line: &str, name: &str) -> Option<usize> {
+    for pos in token_positions(line, name) {
+        let prefix: String = line.chars().take(pos).collect();
+        let p = prefix.trim_end();
+        if p.ends_with("fn") {
+            let head: Vec<char> = p.chars().collect();
+            if head.len() == 2 || !is_ident(head[head.len() - 3]) {
+                return Some(pos);
+            }
+        }
+    }
+    None
+}
+
+/// Char positions where `token` occurs with identifier boundaries.
+fn token_positions(text: &str, token: &str) -> Vec<usize> {
+    let t: Vec<char> = text.chars().collect();
+    let k: Vec<char> = token.chars().collect();
+    let mut out = Vec::new();
+    if k.is_empty() || t.len() < k.len() {
+        return out;
+    }
+    for i in 0..=t.len() - k.len() {
+        if t[i..i + k.len()] == k[..] {
+            let before_ok = i == 0 || !is_ident(t[i - 1]);
+            let after = i + k.len();
+            let after_ok = after >= t.len() || !is_ident(t[after]);
+            if before_ok && after_ok {
+                out.push(i);
+            }
+        }
+    }
+    out
+}
+
+/// Does `text` contain `token` with identifier boundaries?
+pub fn has_token(text: &str, token: &str) -> bool {
+    !token_positions(text, token).is_empty()
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: protocol exhaustiveness
+// ---------------------------------------------------------------------------
+
+/// Every `pub const KIND_*: u8` in the protocol module must appear in
+/// the encode path (`fn encode` or `fn encode_job`), in `fn decode`,
+/// and in the frame property-test suite.  A message kind someone adds
+/// without all three is exactly the cross-layer skew that shipped the
+/// paper's co-design contract: the constant compiles, the match arms
+/// silently `_ =>` it away, and the first hostile peer finds out.
+pub fn rule_protocol_exhaustiveness(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let proto = match Source::load(root, PROTOCOL_RS) {
+        Ok(s) => s,
+        Err(v) => return vec![with_rule(v, RULE_PROTOCOL)],
+    };
+    let props = match Source::load(root, FRAME_PROPS_RS) {
+        Ok(s) => s,
+        Err(v) => return vec![with_rule(v, RULE_PROTOCOL)],
+    };
+
+    // Collect `const KIND_*: u8` declarations with their lines.
+    let mut kinds: Vec<(String, usize)> = Vec::new();
+    for (li, l) in proto.stripped_lines.iter().enumerate() {
+        if proto.in_tests(li) || !l.contains(": u8") {
+            continue;
+        }
+        if let Some(p) = l.find("const KIND_") {
+            let name: String = l[p + "const ".len()..]
+                .chars()
+                .take_while(|&c| is_ident(c))
+                .collect();
+            if !name.is_empty() {
+                kinds.push((name, li));
+            }
+        }
+    }
+    if kinds.is_empty() {
+        out.push(proto.violation(
+            0,
+            RULE_PROTOCOL,
+            "no `const KIND_*: u8` message-kind constants found — rule would be vacuous".into(),
+        ));
+        return out;
+    }
+
+    let mut enc_text = String::new();
+    for f in ["encode_job", "encode"] {
+        match proto.fn_range(f) {
+            Some(r) => {
+                enc_text.push_str(&proto.stripped_text(r));
+                enc_text.push('\n');
+            }
+            None => out.push(proto.violation(
+                0,
+                RULE_PROTOCOL,
+                format!("cannot locate `fn {f}` — encode surface moved?"),
+            )),
+        }
+    }
+    let dec_text = match proto.fn_range("decode") {
+        Some(r) => proto.stripped_text(r),
+        None => {
+            out.push(proto.violation(
+                0,
+                RULE_PROTOCOL,
+                "cannot locate `fn decode` — decode surface moved?".into(),
+            ));
+            String::new()
+        }
+    };
+    let props_text = props.stripped_lines.join("\n");
+
+    for (kind, li) in &kinds {
+        if !enc_text.is_empty() && !has_token(&enc_text, kind) {
+            out.push(proto.violation(
+                *li,
+                RULE_PROTOCOL,
+                format!("{kind} has no encode arm in `fn encode`/`fn encode_job`"),
+            ));
+        }
+        if !dec_text.is_empty() && !has_token(&dec_text, kind) {
+            out.push(proto.violation(
+                *li,
+                RULE_PROTOCOL,
+                format!("{kind} has no decode arm in `fn decode`"),
+            ));
+        }
+        if !has_token(&props_text, kind) {
+            out.push(proto.violation(
+                *li,
+                RULE_PROTOCOL,
+                format!("{kind} is not pinned by {FRAME_PROPS_RS}"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: metrics parity
+// ---------------------------------------------------------------------------
+
+/// Every public counter field of `CoordMetrics` and `ServeMetrics` must
+/// appear in its human summary *and* its machine-readable JSON emitter.
+/// A counter that exists but never surfaces is how "exactly-once under
+/// chaos" claims quietly stop being observable.
+pub fn rule_metrics_parity(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+
+    // CoordMetrics: summary lives next to the struct; the JSON emitter
+    // is `write_coord_report` in the CLI.
+    match (Source::load(root, COORD_METRICS_RS), Source::load(root, MAIN_RS)) {
+        (Ok(cm), Ok(main)) => {
+            check_struct_parity(
+                &cm,
+                "CoordMetrics",
+                &cm,
+                "summary",
+                &main,
+                "write_coord_report",
+                &mut out,
+            );
+        }
+        (cm, main) => {
+            if let Err(v) = cm {
+                out.push(with_rule(v, RULE_METRICS));
+            }
+            if let Err(v) = main {
+                out.push(with_rule(v, RULE_METRICS));
+            }
+        }
+    }
+
+    // ServeMetrics: summary and to_json both live in serve/metrics.rs.
+    match Source::load(root, SERVE_METRICS_RS) {
+        Ok(sm) => {
+            check_struct_parity(&sm, "ServeMetrics", &sm, "summary", &sm, "to_json", &mut out);
+        }
+        Err(v) => out.push(with_rule(v, RULE_METRICS)),
+    }
+    out
+}
+
+/// Shared core: fields of `struct_name` in `decl` must appear as tokens
+/// in `summary_fn` of `summary_src` and as quoted keys in `json_fn` of
+/// `json_src`.
+fn check_struct_parity(
+    decl: &Source,
+    struct_name: &str,
+    summary_src: &Source,
+    summary_fn: &str,
+    json_src: &Source,
+    json_fn: &str,
+    out: &mut Vec<Violation>,
+) {
+    let fields = struct_fields(decl, struct_name);
+    if fields.is_empty() {
+        out.push(decl.violation(
+            0,
+            RULE_METRICS,
+            format!("no public fields found for struct {struct_name} — rule would be vacuous"),
+        ));
+        return;
+    }
+    let summary = match summary_src.fn_range(summary_fn) {
+        Some(r) => summary_src.stripped_text(r),
+        None => {
+            out.push(summary_src.violation(
+                0,
+                RULE_METRICS,
+                format!("cannot locate `fn {summary_fn}` for {struct_name}"),
+            ));
+            return;
+        }
+    };
+    // JSON keys are string literals, so match against raw text.
+    let json = match json_src.fn_range(json_fn) {
+        Some(r) => json_src.raw_text(r),
+        None => {
+            out.push(json_src.violation(
+                0,
+                RULE_METRICS,
+                format!("cannot locate `fn {json_fn}` for {struct_name}"),
+            ));
+            return;
+        }
+    };
+    for (field, li) in fields {
+        if !has_token(&summary, &field) {
+            out.push(decl.violation(
+                li,
+                RULE_METRICS,
+                format!("{struct_name}.{field} is declared but missing from `fn {summary_fn}`"),
+            ));
+        }
+        if !json.contains(&format!("\"{field}\"")) {
+            out.push(decl.violation(
+                li,
+                RULE_METRICS,
+                format!(
+                    "{struct_name}.{field} is declared but missing from the `{json_fn}` JSON emitter ({})",
+                    json_src.rel
+                ),
+            ));
+        }
+    }
+}
+
+/// `(name, 0-based line)` of each `pub field:` in the struct's body.
+fn struct_fields(src: &Source, struct_name: &str) -> Vec<(String, usize)> {
+    let mut decl_line = None;
+    for (li, l) in src.stripped_lines.iter().enumerate() {
+        if has_token(l, "struct") && has_token(l, struct_name) {
+            decl_line = Some(li);
+            break;
+        }
+    }
+    let Some(li) = decl_line else {
+        return Vec::new();
+    };
+    let Some((a, b)) = brace_range(&src.stripped_lines, li, 0) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for fl in a + 1..b {
+        let t = src.stripped_lines[fl].trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() && rest[name.len()..].trim_start().starts_with(':') {
+                out.push((name, fl));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: fault coverage
+// ---------------------------------------------------------------------------
+
+/// Every `Fault` variant must be exercised by the chaos suite — either
+/// named as `Fault::Variant` or spelled in a schedule string via its
+/// wire token (taken from the `Display` impl, so the mapping can never
+/// drift from the code).  A fault class nobody injects is a recovery
+/// path nobody has proven.
+pub fn rule_fault_coverage(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let fault = match Source::load(root, FAULT_RS) {
+        Ok(s) => s,
+        Err(v) => return vec![with_rule(v, RULE_FAULT)],
+    };
+    let chaos = match Source::load(root, CHAOS_RS) {
+        Ok(s) => s,
+        Err(v) => return vec![with_rule(v, RULE_FAULT)],
+    };
+
+    let variants = enum_variants(&fault, "Fault");
+    if variants.is_empty() {
+        out.push(fault.violation(
+            0,
+            RULE_FAULT,
+            "no variants found for enum Fault — rule would be vacuous".into(),
+        ));
+        return out;
+    }
+    let display = display_tokens(&fault, "Fault");
+    let chaos_code = chaos.stripped_lines.join("\n");
+    let chaos_strings: Vec<&str> = chaos.literals.iter().map(|(_, s)| s.as_str()).collect();
+
+    for (variant, li) in variants {
+        let named = has_token(&chaos_code, &format!("Fault::{variant}"))
+            || chaos_code.contains(&format!("Fault::{variant}"));
+        let token = display.iter().find(|(v, _)| *v == variant).map(|(_, t)| t.clone());
+        let spelled = match &token {
+            Some(t) if !t.is_empty() => chaos_strings.iter().any(|s| s.contains(t.as_str())),
+            _ => false,
+        };
+        if token.is_none() {
+            out.push(fault.violation(
+                li,
+                RULE_FAULT,
+                format!("Fault::{variant} has no Display arm — schedule strings cannot spell it"),
+            ));
+        }
+        if !named && !spelled {
+            out.push(fault.violation(
+                li,
+                RULE_FAULT,
+                format!(
+                    "Fault::{variant} (token {}) is never exercised by {CHAOS_RS}",
+                    token.as_deref().unwrap_or("?")
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `(name, 0-based line)` of each variant of `pub enum <name>`.
+fn enum_variants(src: &Source, enum_name: &str) -> Vec<(String, usize)> {
+    let mut decl_line = None;
+    for (li, l) in src.stripped_lines.iter().enumerate() {
+        if has_token(l, "enum") && has_token(l, enum_name) && !has_token(l, "impl") {
+            decl_line = Some(li);
+            break;
+        }
+    }
+    let Some(li) = decl_line else {
+        return Vec::new();
+    };
+    let Some((a, b)) = brace_range(&src.stripped_lines, li, 0) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for vl in a + 1..b {
+        let t = src.stripped_lines[vl].trim();
+        let name: String = t.chars().take_while(|&c| is_ident(c)).collect();
+        if !name.is_empty() && name.chars().next().map(|c| c.is_uppercase()).unwrap_or(false) {
+            out.push((name, vl));
+        }
+    }
+    out
+}
+
+/// `(variant, wire token)` pairs from `impl Display for <enum>`: the
+/// text inside the first string literal of each `Fault::X => write!(..)`
+/// arm, cut at the first `{` interpolation.
+fn display_tokens(src: &Source, enum_name: &str) -> Vec<(String, String)> {
+    let marker = format!("Display for {enum_name}");
+    let mut start = None;
+    for (li, l) in src.stripped_lines.iter().enumerate() {
+        if l.contains(&marker) {
+            start = Some(li);
+            break;
+        }
+    }
+    let Some(li) = start else {
+        return Vec::new();
+    };
+    let Some((a, b)) = brace_range(&src.stripped_lines, li, 0) else {
+        return Vec::new();
+    };
+    let prefix = format!("{enum_name}::");
+    let mut out = Vec::new();
+    for rl in a..=b.min(src.raw_lines.len() - 1) {
+        let raw = &src.raw_lines[rl];
+        let Some(vp) = raw.find(&prefix) else { continue };
+        let variant: String = raw[vp + prefix.len()..]
+            .chars()
+            .take_while(|&c| is_ident(c))
+            .collect();
+        if variant.is_empty() {
+            continue;
+        }
+        // First string literal on the line, cut at interpolation.
+        let Some(q1) = raw.find('"') else { continue };
+        let rest = &raw[q1 + 1..];
+        let tok: String = rest.chars().take_while(|&c| c != '"' && c != '{').collect();
+        out.push((variant, tok));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: panic hygiene
+// ---------------------------------------------------------------------------
+
+/// The hostile-input decode paths must stay panic-free: a worker decode
+/// must survive a port scanner, a coordinator must survive a half-dead
+/// worker.  Flags `.unwrap()`, `.expect(`, panic-family macros, and
+/// index/slice expressions (`x[..]`) outside `#[cfg(test)]`, unless the
+/// site carries a justified [`ALLOW_PANIC`] annotation.
+pub fn rule_panic_hygiene(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for rel in DECODE_PATHS {
+        let src = match Source::load(root, rel) {
+            Ok(s) => s,
+            Err(v) => {
+                out.push(with_rule(v, RULE_PANIC));
+                continue;
+            }
+        };
+        for (li, line) in src.stripped_lines.iter().enumerate() {
+            if src.in_tests(li) {
+                continue;
+            }
+            let sites = panic_sites(line);
+            if sites.is_empty() {
+                continue;
+            }
+            match annotation_status(&src, li) {
+                Annot::Allowed => continue,
+                Annot::MissingReason => {
+                    out.push(src.violation(
+                        li,
+                        RULE_PANIC,
+                        "allow annotation present but carries no justification".into(),
+                    ));
+                    continue;
+                }
+                Annot::None => {}
+            }
+            for site in sites {
+                out.push(src.violation(
+                    li,
+                    RULE_PANIC,
+                    format!(
+                        "{site} in a hostile-input decode path (return a FrameError or annotate: `// {ALLOW_PANIC} <reason>`)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+enum Annot {
+    None,
+    Allowed,
+    MissingReason,
+}
+
+fn annotation_status(src: &Source, li: usize) -> Annot {
+    for l in [Some(li), li.checked_sub(1)].into_iter().flatten() {
+        if let Some(raw) = src.raw_lines.get(l) {
+            if let Some(p) = raw.find(ALLOW_PANIC) {
+                let reason = raw[p + ALLOW_PANIC.len()..]
+                    .trim_matches(|c: char| c.is_whitespace() || c == ':' || c == '-' || c == '—');
+                return if reason.len() >= 3 {
+                    Annot::Allowed
+                } else {
+                    Annot::MissingReason
+                };
+            }
+        }
+    }
+    Annot::None
+}
+
+/// Panic-capable constructs on one stripped line.
+fn panic_sites(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = line.chars().collect();
+
+    for (method, label) in [(".unwrap", ".unwrap()"), (".expect", ".expect(..)")] {
+        for p in find_all(line, method) {
+            let after = p + method.len();
+            if chars.get(after) == Some(&'(') {
+                out.push(label.to_string());
+            }
+        }
+    }
+    for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        let bare = &mac[..mac.len() - 1];
+        for p in token_positions(line, bare) {
+            if chars.get(p + bare.len()) == Some(&'!') {
+                out.push(format!("{mac}(..)"));
+            }
+        }
+    }
+    // Index/slice expression: `[` directly after an identifier char or a
+    // closing bracket — never after `!` (macros), `&`, `=`, `(`, space.
+    for (i, &c) in chars.iter().enumerate() {
+        if c == '[' && i > 0 {
+            let prev = chars[i - 1];
+            if is_ident(prev) || prev == ')' || prev == ']' {
+                out.push("unchecked index/slice expression".to_string());
+            }
+        }
+    }
+    out
+}
+
+fn find_all(text: &str, pat: &str) -> Vec<usize> {
+    let t: Vec<char> = text.chars().collect();
+    let k: Vec<char> = pat.chars().collect();
+    let mut out = Vec::new();
+    if k.is_empty() || t.len() < k.len() {
+        return out;
+    }
+    for i in 0..=t.len() - k.len() {
+        if t[i..i + k.len()] == k[..] {
+            out.push(i);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: unsafe audit
+// ---------------------------------------------------------------------------
+
+/// `unsafe` is allowed only in [`UNSAFE_ALLOWLIST`] files, and every use
+/// there must sit under a `// SAFETY:` comment (within the preceding 10
+/// lines, so one comment can cover adjacent `unsafe impl` pairs).
+pub fn rule_unsafe_audit(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk_rs(&src_root, &mut files);
+    if files.is_empty() {
+        out.push(Violation {
+            file: "rust/src".into(),
+            line: 0,
+            rule: RULE_UNSAFE,
+            msg: "no Rust sources found under rust/src — rule would be vacuous".into(),
+        });
+        return out;
+    }
+    for path in files {
+        let rel = match path.strip_prefix(root) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => path.to_string_lossy().to_string(),
+        };
+        let raw = match fs::read_to_string(&path) {
+            Ok(r) => r,
+            Err(e) => {
+                out.push(Violation {
+                    file: rel.clone(),
+                    line: 0,
+                    rule: RULE_UNSAFE,
+                    msg: format!("cannot read: {e}"),
+                });
+                continue;
+            }
+        };
+        if !raw.contains("unsafe") {
+            continue; // cheap pre-filter before full stripping
+        }
+        let src = Source::from_text(&rel, &raw);
+        let allowed = UNSAFE_ALLOWLIST.contains(&rel.as_str());
+        for (li, line) in src.stripped_lines.iter().enumerate() {
+            if src.in_tests(li) || !has_token(line, "unsafe") {
+                continue;
+            }
+            if !allowed {
+                out.push(src.violation(
+                    li,
+                    RULE_UNSAFE,
+                    format!(
+                        "`unsafe` outside the audited allowlist ({}) — justify and allowlist it or remove it",
+                        UNSAFE_ALLOWLIST.join(", ")
+                    ),
+                ));
+                continue;
+            }
+            let window_start = li.saturating_sub(10);
+            let documented = (window_start..=li)
+                .any(|w| src.raw_lines.get(w).map(|r| r.contains("SAFETY:")).unwrap_or(false));
+            if !documented {
+                out.push(src.violation(
+                    li,
+                    RULE_UNSAFE,
+                    "`unsafe` without a `// SAFETY:` comment in the preceding 10 lines".into(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn with_rule(mut v: Violation, rule: &'static str) -> Violation {
+    v.rule = rule;
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Unit tests for the scanner core
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_blanks_comments_and_strings_but_keeps_lines() {
+        let src = "let a = 1; // trailing [comment] with .unwrap()\nlet s = \"panic! [0]\";\n/* block\nspans lines */ let b = 2;\n";
+        let (stripped, lits) = strip_code(src);
+        assert_eq!(stripped.lines().count(), src.lines().count());
+        assert!(!stripped.contains("unwrap"));
+        assert!(!stripped.contains("panic"));
+        assert!(stripped.contains("let a = 1;"));
+        assert!(stripped.contains("let b = 2;"));
+        assert_eq!(lits.len(), 1);
+        assert_eq!(lits[0].1, "panic! [0]");
+        assert_eq!(lits[0].0, 2);
+    }
+
+    #[test]
+    fn strip_handles_char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a [u8]) -> char { if x.is_empty() { '{' } else { b'\"' as char } }";
+        let (stripped, _) = strip_code(src);
+        // The '{' char literal must not unbalance brace matching.
+        let opens = stripped.chars().filter(|&c| c == '{').count();
+        let closes = stripped.chars().filter(|&c| c == '}').count();
+        assert_eq!(opens, closes);
+        // Lifetime identifier survives as a token (quote blanked).
+        assert!(stripped.contains("a>"));
+    }
+
+    #[test]
+    fn strip_handles_raw_and_escaped_strings() {
+        let src = "let a = r#\"raw \"quoted\" [0]\"#;\nlet b = \"esc \\\" quote\";\n";
+        let (stripped, lits) = strip_code(src);
+        assert!(!stripped.contains("raw"));
+        assert!(!stripped.contains("quote"));
+        assert_eq!(lits.len(), 2);
+        assert!(lits[0].1.contains("raw \"quoted\" [0]"));
+        assert_eq!(stripped.lines().count(), 2);
+    }
+
+    #[test]
+    fn token_matching_respects_ident_boundaries() {
+        assert!(has_token("self.points as f64", "points"));
+        assert!(!has_token("self.mean_batch_points as f64", "points"));
+        assert!(has_token("KIND_JOB => {", "KIND_JOB"));
+        assert!(!has_token("KIND_JOB_EXTRA => {", "KIND_JOB"));
+    }
+
+    #[test]
+    fn fn_decl_finder_skips_calls_and_prefixed_names() {
+        assert!(find_fn_decl("    pub fn encode(&self) -> u8 {", "encode").is_some());
+        assert!(find_fn_decl("pub fn encode_job(a: u32) {", "encode").is_none());
+        assert!(find_fn_decl("    let x = self.encode();", "encode").is_none());
+        assert!(find_fn_decl("    write_coord_report(&a, &b);", "write_coord_report").is_none());
+    }
+
+    #[test]
+    fn cfg_test_ranges_cover_the_test_module() {
+        let src = "pub fn live() { }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}\n";
+        let s = Source::from_text("x.rs", src);
+        assert!(!s.in_tests(0));
+        assert!(s.in_tests(2));
+        assert!(s.in_tests(4));
+        assert!(s.in_tests(5));
+    }
+
+    #[test]
+    fn panic_sites_flag_the_right_constructs() {
+        assert_eq!(panic_sites("let x = v.unwrap();"), vec![".unwrap()".to_string()]);
+        assert!(panic_sites("let x = v.unwrap_or(0);").is_empty());
+        assert!(panic_sites("let y = buf[0];").iter().any(|s| s.contains("index")));
+        assert!(panic_sites("let y = vec![0u8; n];").is_empty());
+        assert!(panic_sites("let t = [0u8; 9];").is_empty());
+        assert!(panic_sites("unreachable!(\"x\")").iter().any(|s| s.contains("unreachable")));
+        assert!(panic_sites("let z = a.get(i);").is_empty());
+    }
+}

@@ -1,0 +1,93 @@
+//! CLI for the repo's invariant analyzer.
+//!
+//! ```text
+//! cargo run -p pallas-lint            # scan the repo, exit 1 on violations
+//! cargo lint                          # same, via the .cargo/config.toml alias
+//! cargo run -p pallas-lint -- --list  # print the rule catalogue
+//! cargo run -p pallas-lint -- --rule metrics-parity --root /path/to/repo
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{run_all, RULES};
+
+fn usage() -> &'static str {
+    "pallas-lint: static invariant analyzer for this repo\n\
+     \n\
+     USAGE: pallas-lint [--root <dir>] [--rule <name>]... [--list]\n\
+     \n\
+     --root <dir>   repo root to scan (default: this workspace)\n\
+     --rule <name>  run only the named rule (repeatable)\n\
+     --list         print the rule catalogue and exit"
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let mut only: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--list" => {
+                for (name, _) in RULES {
+                    println!("{name}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("--root needs a directory\n\n{}", usage());
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--rule" => match args.next() {
+                Some(r) if RULES.iter().any(|(n, _)| *n == r) => only.push(r),
+                Some(r) => {
+                    eprintln!("unknown rule `{r}` (see --list)");
+                    return ExitCode::FAILURE;
+                }
+                None => {
+                    eprintln!("--rule needs a rule name\n\n{}", usage());
+                    return ExitCode::FAILURE;
+                }
+            },
+            "-h" | "--help" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n\n{}", usage());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let violations = if only.is_empty() {
+        run_all(&root)
+    } else {
+        let mut v = Vec::new();
+        for (name, rule) in RULES {
+            if only.iter().any(|o| o == name) {
+                v.extend(rule(&root));
+            }
+        }
+        v
+    };
+
+    if violations.is_empty() {
+        let ran = if only.is_empty() {
+            RULES.len()
+        } else {
+            only.len()
+        };
+        println!("pallas-lint: clean ({ran} rule(s), root {})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("pallas-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,129 @@
+//! Every rule is proven *live* against a deliberately-violating fixture
+//! tree (a rule that can never fire is a rule that silently rotted),
+//! and proven *clean* against the real repo — the same invocation CI's
+//! `analysis` job runs, so a red `real_tree_is_clean` here is exactly a
+//! red CI wall there.
+
+use std::path::{Path, PathBuf};
+
+use pallas_lint::{
+    rule_fault_coverage, rule_metrics_parity, rule_panic_hygiene, rule_protocol_exhaustiveness,
+    rule_unsafe_audit, run_all, Violation, RULES,
+};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+fn render(v: &[Violation]) -> String {
+    v.iter().map(|x| format!("  {x}\n")).collect()
+}
+
+#[test]
+fn protocol_rule_fires_on_rogue_kind() {
+    let v = rule_protocol_exhaustiveness(&fixture("protocol"));
+    assert_eq!(v.len(), 3, "expected encode+decode+pin gaps:\n{}", render(&v));
+    assert!(v.iter().all(|x| x.msg.contains("KIND_ROGUE")), "{}", render(&v));
+    assert!(v.iter().any(|x| x.msg.contains("no encode arm")), "{}", render(&v));
+    assert!(v.iter().any(|x| x.msg.contains("no decode arm")), "{}", render(&v));
+    assert!(v.iter().any(|x| x.msg.contains("not pinned")), "{}", render(&v));
+    // All three point at the rogue constant's declaration line.
+    assert!(v.iter().all(|x| x.line == 7), "{}", render(&v));
+}
+
+#[test]
+fn metrics_rule_fires_on_ghost_counter() {
+    let v = rule_metrics_parity(&fixture("metrics"));
+    assert_eq!(v.len(), 2, "expected summary+JSON gaps:\n{}", render(&v));
+    assert!(v.iter().all(|x| x.msg.contains("ghost_counter")), "{}", render(&v));
+    assert!(v.iter().any(|x| x.msg.contains("summary")), "{}", render(&v));
+    assert!(
+        v.iter().any(|x| x.msg.contains("JSON emitter")),
+        "{}",
+        render(&v)
+    );
+    // The in-parity ServeMetrics half must not fire.
+    assert!(v.iter().all(|x| x.file.contains("coordinator")), "{}", render(&v));
+}
+
+#[test]
+fn fault_rule_fires_on_uninjected_variant() {
+    let v = rule_fault_coverage(&fixture("fault"));
+    assert_eq!(v.len(), 1, "expected one uncovered variant:\n{}", render(&v));
+    assert!(v[0].msg.contains("Fault::Vanish"), "{}", render(&v));
+    assert!(v[0].msg.contains("vanish"), "token should come from Display: {}", render(&v));
+}
+
+#[test]
+fn panic_rule_fires_on_decode_sites_and_bare_allow() {
+    let v = rule_panic_hygiene(&fixture("panic"));
+    assert_eq!(
+        v.len(),
+        3,
+        "expected index + unwrap + reasonless allow:\n{}",
+        render(&v)
+    );
+    assert!(
+        v.iter().any(|x| x.msg.contains("index/slice")),
+        "{}",
+        render(&v)
+    );
+    assert!(v.iter().any(|x| x.msg.contains(".unwrap()")), "{}", render(&v));
+    assert!(
+        v.iter().any(|x| x.msg.contains("no justification")),
+        "a reasonless allow must itself be a violation:\n{}",
+        render(&v)
+    );
+    // The justified site and the #[cfg(test)] unwraps stay silent.
+    assert!(v.iter().all(|x| x.file.ends_with("frame.rs")), "{}", render(&v));
+}
+
+#[test]
+fn unsafe_rule_fires_outside_allowlist_and_on_undocumented_blocks() {
+    let v = rule_unsafe_audit(&fixture("unsafe"));
+    assert_eq!(
+        v.len(),
+        2,
+        "expected allowlist escape + missing SAFETY:\n{}",
+        render(&v)
+    );
+    assert!(
+        v.iter()
+            .any(|x| x.file.ends_with("evil.rs") && x.msg.contains("allowlist")),
+        "{}",
+        render(&v)
+    );
+    assert!(
+        v.iter()
+            .any(|x| x.file.ends_with("client.rs") && x.msg.contains("SAFETY")),
+        "{}",
+        render(&v)
+    );
+}
+
+#[test]
+fn rule_names_are_unique_and_registered() {
+    assert_eq!(RULES.len(), 5);
+    for i in 0..RULES.len() {
+        for j in i + 1..RULES.len() {
+            assert_ne!(RULES[i].0, RULES[j].0);
+        }
+    }
+}
+
+/// The gate CI's `analysis` job enforces: the real tree carries zero
+/// violations.  If this fails, either fix the flagged code or — for a
+/// provably-safe site — annotate it with a justification.
+#[test]
+fn real_tree_is_clean() {
+    let v = run_all(&repo_root());
+    assert!(
+        v.is_empty(),
+        "pallas-lint found violations on the real tree:\n{}",
+        render(&v)
+    );
+}

@@ -57,6 +57,20 @@ pub struct CoordMetrics {
     /// Wire traffic of the run's remote solves.
     pub remote_bytes_tx: u64,
     pub remote_bytes_rx: u64,
+    /// Session plane (all zero unless `--session`): connections that
+    /// hosted at least one resident shard …
+    pub sessions: u64,
+    /// … per-iteration `Centroids` broadcasts sent and `Partials`
+    /// reduces folded …
+    pub centroid_bcasts: u64,
+    pub partials_rx: u64,
+    /// … the steady-state O(k·d) traffic those frames cost (LoadShard
+    /// uploads count into `remote_bytes_tx` instead) …
+    pub session_bytes_tx: u64,
+    pub session_bytes_rx: u64,
+    /// … and shard uploads beyond the first (recovery re-loads after a
+    /// reconnect or onto another live connection).
+    pub shard_reloads: u64,
 }
 
 impl CoordMetrics {
@@ -67,7 +81,9 @@ impl CoordMetrics {
              pjrt: {} execs / {:.3}s | observed: {} iters / {} evals | \
              {} shards, iters/shard {:?}, evals/shard {:?} | remote: {} workers, {} shards, \
              {} fallbacks, {} retries, {} timeouts, {} reconnects, \
-             {} rescheduled, dead endpoints {:?}, {}B tx / {}B rx",
+             {} rescheduled, dead endpoints {:?}, {}B tx / {}B rx | \
+             session: {} sessions, {} centroid_bcasts, {} partials_rx, \
+             {}B session tx / {}B session rx, {} shard_reloads",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -93,6 +109,12 @@ impl CoordMetrics {
             self.remote_failed_endpoints,
             self.remote_bytes_tx,
             self.remote_bytes_rx,
+            self.sessions,
+            self.centroid_bcasts,
+            self.partials_rx,
+            self.session_bytes_tx,
+            self.session_bytes_rx,
+            self.shard_reloads,
         )
     }
 }
@@ -184,5 +206,25 @@ mod tests {
         let s = CoordMetrics::default().summary();
         assert!(s.contains("remote: 0 workers"), "{s}");
         assert!(s.contains("0 retries"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_session_counters() {
+        let m = CoordMetrics {
+            sessions: 2,
+            centroid_bcasts: 40,
+            partials_rx: 40,
+            session_bytes_tx: 5120,
+            session_bytes_rx: 6144,
+            shard_reloads: 1,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("session: 2 sessions"), "{s}");
+        assert!(s.contains("40 centroid_bcasts, 40 partials_rx"), "{s}");
+        assert!(s.contains("5120B session tx / 6144B session rx"), "{s}");
+        assert!(s.contains("1 shard_reloads"), "{s}");
+        // A one-shot run keeps the section zeroed, not absent.
+        assert!(CoordMetrics::default().summary().contains("session: 0 sessions"));
     }
 }

@@ -38,7 +38,7 @@ use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::init::init_centroids;
 use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
-use crate::kmeans::remote::{RemoteShardPool, RemoteWorker, RetryPolicy, WireCounters};
+use crate::kmeans::remote::{run_session, RemoteShardPool, RemoteWorker, RetryPolicy, WireCounters};
 use crate::kmeans::shard::{self, ShardExecutor, ShardPartial, ShardPlan};
 use crate::kmeans::solver::{
     Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, ObserveFn, SolverCtx,
@@ -198,6 +198,9 @@ pub struct Coordinator {
     pjrt: Option<Arc<crate::runtime::PjrtRuntime>>,
     /// Remote shard workers (empty = all-local; the legacy layout).
     remotes: RemoteShardPool,
+    /// Level-1 over the session plane (`--session`): shards go resident
+    /// on the remotes once, each iteration exchanges only O(k·d).
+    session: bool,
 }
 
 impl Coordinator {
@@ -208,13 +211,26 @@ impl Coordinator {
                 service: None,
                 pjrt: None,
                 remotes: RemoteShardPool::default(),
+                session: false,
             },
             Backend::Pjrt(rt) => Self {
                 service: Some(OffloadService::spawn(Backend::Pjrt(Arc::clone(&rt)))),
                 pjrt: Some(rt),
                 remotes: RemoteShardPool::default(),
+                session: false,
             },
         }
+    }
+
+    /// Run level 1 in session mode ([`crate::kmeans::remote::session`]):
+    /// the coordinator drives the global iteration loop, remote workers
+    /// keep their shard resident, and per-iteration traffic drops from
+    /// O(n/P) to O(k·d).  Bitwise-identical to the one-shot plane (local
+    /// session stepping uses the same scalar-oracle panels the workers
+    /// do).
+    pub fn with_session(mut self, session: bool) -> Self {
+        self.session = session;
+        self
     }
 
     /// Satisfy level-1 shard solves from these remote `shard-worker`
@@ -286,6 +302,44 @@ impl Coordinator {
         // ---- Level 1 (P shard solves over the executor fleet) ----------------
         let (l1_centroids, l1_counts, level1_stats) = if fallback {
             (Vec::new(), Vec::new(), vec![RunStats::default(); plan.shards()])
+        } else if self.session {
+            // Session plane: the driver owns the global iteration loop;
+            // workers (or local steppers) answer one canonical filter
+            // pass per Centroids frame.  Bitwise the one-shot fleet.
+            let wire = Arc::new(WireCounters::default());
+            let mut on_iter = |si: usize, st: &IterStats| {
+                live.iters.fetch_add(1, Ordering::Relaxed);
+                live.dist_evals.fetch_add(st.dist_evals, Ordering::Relaxed);
+                live.shard_iters[si].fetch_add(1, Ordering::Relaxed);
+                live.shard_dist_evals[si].fetch_add(st.dist_evals, Ordering::Relaxed);
+                log::trace!(
+                    "coordinator Level1 shard {si} (session): dist_evals={} moved={:.3e}",
+                    st.dist_evals,
+                    st.moved
+                );
+            };
+            let (partials, sm) =
+                run_session(&plan.parts, spec, &self.remotes, &wire, &mut on_iter);
+            m.remote_workers = sm.remote_workers;
+            m.remote_shards = sm.remote_shards;
+            m.remote_fallbacks += sm.remote_fallbacks;
+            m.remote_failed_endpoints = sm.remote_failed_endpoints;
+            m.sessions = sm.sessions;
+            m.centroid_bcasts = sm.centroid_bcasts;
+            m.partials_rx = sm.partials_rx;
+            m.session_bytes_tx = sm.session_bytes_tx;
+            m.session_bytes_rx = sm.session_bytes_rx;
+            m.shard_reloads = sm.shard_reloads;
+            m.remote_bytes_tx = sm.remote_bytes_tx;
+            m.remote_bytes_rx = sm.remote_bytes_rx;
+            let (retries, timeouts, reconnects) = wire.snapshot();
+            m.remote_retries = retries;
+            m.remote_timeouts = timeouts;
+            m.remote_reconnects = reconnects;
+            let counts: Vec<Vec<usize>> = partials.iter().map(|r| r.counts.clone()).collect();
+            let cents: Vec<Dataset> = partials.iter().map(|r| r.centroids.clone()).collect();
+            let stats: Vec<RunStats> = partials.into_iter().map(|r| r.stats).collect();
+            (cents, counts, stats)
         } else {
             // The fleet: one puller per connected remote endpoint, plus
             // local threads up to `spec.workers` (and never more pullers
@@ -680,6 +734,31 @@ mod tests {
         assert_eq!(a.metrics.shards, 8);
         assert_eq!(a.metrics.shard_iters.len(), 8);
         assert!(a.metrics.shard_iters.iter().all(|&i| i > 0));
+    }
+
+    #[test]
+    fn session_mode_is_bitwise_the_oneshot_fleet() {
+        // No remotes: session mode degrades to pure-local lockstep
+        // stepping, which must still equal the one-shot fleet bit for
+        // bit — centroids, labels, merged seed, and per-shard counters.
+        let s = generate_params(3000, 3, 5, 0.15, 2.0, 33);
+        let spec = KmeansSpec::two_level(5).seed(9).shards(4).workers(2);
+        let a = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+        let b = Coordinator::new(Backend::Cpu)
+            .with_session(true)
+            .run(&s.data, &spec);
+        assert_eq!(a.result.centroids, b.result.centroids);
+        assert_eq!(a.result.assignments, b.result.assignments);
+        let ae = a.result.ext.two_level.as_ref().unwrap();
+        let be = b.result.ext.two_level.as_ref().unwrap();
+        assert_eq!(ae.merged_centroids, be.merged_centroids);
+        assert_eq!(a.metrics.shard_iters, b.metrics.shard_iters);
+        assert_eq!(a.metrics.shard_dist_evals, b.metrics.shard_dist_evals);
+        // All-local session: the remote/session counters stay zero.
+        assert_eq!(b.metrics.sessions, 0);
+        assert_eq!(b.metrics.centroid_bcasts, 0);
+        assert_eq!(b.metrics.remote_fallbacks, 0);
+        assert_eq!(b.metrics.session_bytes_tx + b.metrics.session_bytes_rx, 0);
     }
 
     #[test]

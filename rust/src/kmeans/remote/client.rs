@@ -197,16 +197,32 @@ impl RemoteWorker {
         &self.counters
     }
 
-    fn send(&mut self, msg: &Message) -> anyhow::Result<()> {
+    pub(crate) fn send(&mut self, msg: &Message) -> anyhow::Result<()> {
         self.bytes_tx += msg.write_to(&mut self.stream)? as u64;
         Ok(())
+    }
+
+    pub(crate) fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Explicit health check — Ping, wait for Pong.  The session plane
+    /// calls this only on an *idle* connection (e.g. while other shards
+    /// still converge): during the per-iteration Centroids/Partials
+    /// exchange liveness is implied and no Ping is sent.
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        self.send(&Message::Ping)?;
+        match self.recv_by(Instant::now() + self.policy.io_timeout)? {
+            Message::Pong => Ok(()),
+            other => anyhow::bail!("worker {} answered Ping with {other:?}", self.addr),
+        }
     }
 
     /// Read one message with the job deadline enforced: the socket read
     /// timeout is clamped to the remaining budget, so a silent peer
     /// costs at most `min(io_timeout, remaining)` per read and never
     /// more than the deadline overall.
-    fn recv_by(&mut self, deadline: Instant) -> anyhow::Result<Message> {
+    pub(crate) fn recv_by(&mut self, deadline: Instant) -> anyhow::Result<Message> {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
@@ -234,7 +250,7 @@ impl RemoteWorker {
     }
 
     /// Tear down the dead stream and dial a fresh one.
-    fn reconnect(&mut self) -> anyhow::Result<()> {
+    pub(crate) fn reconnect(&mut self) -> anyhow::Result<()> {
         self.counters.reconnects.fetch_add(1, Ordering::Relaxed);
         let (stream, tx, rx) = Self::dial_once(&self.addr, &self.policy, &self.counters)?;
         self.stream = stream;
@@ -311,6 +327,9 @@ impl RemoteWorker {
     ) -> anyhow::Result<ShardPartial> {
         // Health check before the upload: a hung worker is detected for
         // the price of a Pong, not of shipping the whole shard slice.
+        // One-shot mode only — the session plane ships the shard once
+        // and gets per-iteration liveness for free, so it never Pings a
+        // busy connection (see `remote::session`).
         self.send(&Message::Ping)?;
         match self.recv_by(deadline)? {
             Message::Pong => {}

@@ -18,6 +18,11 @@
 //! - [`client`] — [`RemoteWorker`] (one connection, implements
 //!   [`ShardExecutor`]) and [`RemoteShardPool`] (the `--remote`
 //!   endpoints of a run).
+//! - [`session`] — the v3 **session plane**: workers hold shards
+//!   *resident* (`LoadShard` once, checksummed), the coordinator runs
+//!   the global iteration loop, and the steady-state wire carries only
+//!   O(k·d) `Centroids`/`Partials` frames per iteration instead of the
+//!   one-shot plane's O(n/P) re-uploads (`cluster --session`).
 //!
 //! **Bitwise parity.** Worker and coordinator share one solve function
 //! and the wire carries exact IEEE bits, so a loopback remote run of P
@@ -40,10 +45,12 @@
 pub mod client;
 pub mod protocol;
 pub mod server;
+pub mod session;
 
 pub use client::{shutdown_worker, RemoteShardPool, RemoteWorker, WireCounters};
 pub use protocol::PROTOCOL_VERSION;
 pub use server::{WorkerHandle, WorkerServer};
+pub use session::{run_session, SessionMetrics};
 
 use crate::util::rng::SplitMix64;
 use std::time::Duration;

@@ -14,6 +14,27 @@
 //! client → Shutdown                  server exits its accept loop
 //! ```
 //!
+//! Session mode (v3) makes the worker **dataset-resident**: the shard
+//! slice crosses the wire once, then each iteration moves only O(k·d):
+//!
+//! ```text
+//! client → LoadShard{shard, metric,  server → LoadAck{shard, checksum}
+//!            checksum, slice}                | Error{BadChecksum |
+//!                                                    ResidentLimit}
+//! per iteration:
+//! client → Centroids{shard, iter,    server → Partials{shard, iter,
+//!            centroids}                        sums, counts, stats}
+//!                                           | Error{NoShard | Internal}
+//! client → Release{shard}            server → Released{shard}   (drops it)
+//! client → EndSession                server drops every resident shard,
+//!                                    keeps the connection for one-shot use
+//! ```
+//!
+//! The *coordinator* runs the global Lloyd/filtering loop in session
+//! mode; the worker executes exactly one canonical filter iteration per
+//! `Centroids` frame over its resident slice.  Resident state is
+//! per-connection and dropped on disconnect.
+//!
 //! All numeric fields are little-endian; every f32/f64 travels as exact
 //! IEEE bits, which is what lets a loopback remote run reproduce the
 //! in-process shard plane bit for bit.  Decoders never panic on hostile
@@ -34,8 +55,10 @@ use std::io::{self, Read, Write};
 
 /// Wire protocol version; the handshake requires an exact match (the
 /// format has no negotiation — a skewed peer is told so and dropped).
-/// v2 added the `Ping`/`Pong` health-check frames.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v2 added the `Ping`/`Pong` health-check frames; v3 added the session
+/// plane (`LoadShard`/`LoadAck`/`Centroids`/`Partials`/`Release`/
+/// `Released`/`EndSession`).
+pub const PROTOCOL_VERSION: u32 = 3;
 
 // Frame kinds.
 pub const KIND_HELLO: u8 = 1;
@@ -47,11 +70,26 @@ pub const KIND_ERROR: u8 = 6;
 pub const KIND_SHUTDOWN: u8 = 7;
 pub const KIND_PING: u8 = 8;
 pub const KIND_PONG: u8 = 9;
+// Session plane (v3).
+pub const KIND_LOAD_SHARD: u8 = 10;
+pub const KIND_LOAD_ACK: u8 = 11;
+pub const KIND_CENTROIDS: u8 = 12;
+pub const KIND_PARTIALS: u8 = 13;
+pub const KIND_RELEASE: u8 = 14;
+pub const KIND_RELEASED: u8 = 15;
+pub const KIND_END_SESSION: u8 = 16;
 
 // Error codes carried by [`Message::Error`].
 pub const ERR_VERSION_SKEW: u8 = 1;
 pub const ERR_BAD_JOB: u8 = 2;
 pub const ERR_INTERNAL: u8 = 3;
+/// A `Centroids`/`Release` frame named a shard this connection never
+/// loaded (or already released).
+pub const ERR_NO_SHARD: u8 = 4;
+/// Loading this shard would exceed the worker's resident-memory budget.
+pub const ERR_RESIDENT_LIMIT: u8 = 5;
+/// The `LoadShard` payload's checksum does not match its data bytes.
+pub const ERR_BAD_CHECKSUM: u8 = 6;
 
 /// The solver knobs a level-1 shard solve needs — the spec snapshot of
 /// the handshake's Job frames.  Deliberately *not* the whole
@@ -135,6 +173,50 @@ pub struct DoneFrame {
     pub stats: RunStats,
 }
 
+/// Session-mode shard upload (v3): the one O(n/P) transfer of a
+/// session.  The checksum is [`dataset_checksum`] over the slice's exact
+/// f32 bits — the worker recomputes it before accepting residency, so a
+/// corrupted upload can never silently seed a whole session of wrong
+/// partials.
+#[derive(Clone, Debug)]
+pub struct LoadShardFrame {
+    pub shard: u32,
+    /// Distance metric every iteration of this session will use (fixed at
+    /// load so the per-iteration frames stay minimal).
+    pub metric: Metric,
+    /// [`dataset_checksum`] of `data`, verified worker-side.
+    pub checksum: u32,
+    /// The shard's rows, exact bits.
+    pub data: Dataset,
+}
+
+/// Session-mode per-iteration broadcast (v3): just the current k×d
+/// centroids — the steady-state O(k·d) downlink.
+#[derive(Clone, Debug)]
+pub struct CentroidsFrame {
+    pub shard: u32,
+    /// Iteration index, echoed back in the matching [`PartialsFrame`] so
+    /// the coordinator can detect a desynced worker.
+    pub iter: u64,
+    pub centroids: Dataset,
+}
+
+/// Session-mode per-iteration reduce (v3): one filter iteration's
+/// per-center sums (k×d, exact bits), member counts and work counters.
+/// The coordinator folds these through the same update step the
+/// in-process engine uses, so the trajectory is bitwise-identical.
+#[derive(Clone, Debug)]
+pub struct PartialsFrame {
+    pub shard: u32,
+    /// Echo of the driving [`CentroidsFrame`]'s iteration index.
+    pub iter: u64,
+    /// Per-center coordinate sums as a k×d dataset (exact f32 bits).
+    pub sums: Dataset,
+    /// Per-center member counts (same k as `sums`).
+    pub counts: Vec<u32>,
+    pub stats: IterStats,
+}
+
 /// Every message the protocol speaks.
 #[derive(Clone, Debug)]
 pub enum Message {
@@ -151,6 +233,32 @@ pub enum Message {
     Ping,
     /// Health-check reply (v2): empty payload.
     Pong,
+    /// Session upload (v3): make a shard resident on this connection.
+    LoadShard(Box<LoadShardFrame>),
+    /// Residency granted (v3): echoes the shard and verified checksum.
+    LoadAck { shard: u32, checksum: u32 },
+    /// Per-iteration centroid broadcast (v3).
+    Centroids(Box<CentroidsFrame>),
+    /// Per-iteration partial reduce (v3).
+    Partials(Box<PartialsFrame>),
+    /// Drop one resident shard (v3).
+    Release { shard: u32 },
+    /// Residency dropped (v3): echoes the released shard.
+    Released { shard: u32 },
+    /// Drop every resident shard on this connection (v3); the connection
+    /// stays open for one-shot jobs or a fresh session.
+    EndSession,
+}
+
+/// Checksum of a dataset's exact f32 bit content (the integrity tag of
+/// [`LoadShardFrame`]).  Shape is deliberately excluded: the frame codec
+/// already validates `n × d == len`, this guards the payload bits.
+pub fn dataset_checksum(d: &Dataset) -> u32 {
+    let mut bytes = Vec::with_capacity(d.flat().len() * 4);
+    for v in d.flat() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    crate::util::frame::crc32(&bytes)
 }
 
 // ---------------------------------------------------------------------------
@@ -343,6 +451,44 @@ impl Message {
             Message::Shutdown => KIND_SHUTDOWN,
             Message::Ping => KIND_PING,
             Message::Pong => KIND_PONG,
+            Message::LoadShard(ls) => {
+                w.put_u32(ls.shard);
+                put_metric(&mut w, ls.metric);
+                w.put_u32(ls.checksum);
+                put_dataset(&mut w, &ls.data);
+                KIND_LOAD_SHARD
+            }
+            Message::LoadAck { shard, checksum } => {
+                w.put_u32(*shard);
+                w.put_u32(*checksum);
+                KIND_LOAD_ACK
+            }
+            Message::Centroids(c) => {
+                w.put_u32(c.shard);
+                w.put_u64(c.iter);
+                put_dataset(&mut w, &c.centroids);
+                KIND_CENTROIDS
+            }
+            Message::Partials(p) => {
+                w.put_u32(p.shard);
+                w.put_u64(p.iter);
+                put_dataset(&mut w, &p.sums);
+                w.put_u32(p.counts.len() as u32);
+                for &c in &p.counts {
+                    w.put_u32(c);
+                }
+                put_iter_stats(&mut w, &p.stats);
+                KIND_PARTIALS
+            }
+            Message::Release { shard } => {
+                w.put_u32(*shard);
+                KIND_RELEASE
+            }
+            Message::Released { shard } => {
+                w.put_u32(*shard);
+                KIND_RELEASED
+            }
+            Message::EndSession => KIND_END_SESSION,
         };
         (kind, w.into_vec())
     }
@@ -414,6 +560,63 @@ impl Message {
             KIND_SHUTDOWN => Message::Shutdown,
             KIND_PING => Message::Ping,
             KIND_PONG => Message::Pong,
+            KIND_LOAD_SHARD => {
+                let shard = r.take_u32()?;
+                let metric = take_metric(&mut r)?;
+                let checksum = r.take_u32()?;
+                let data = take_dataset(&mut r)?;
+                Message::LoadShard(Box::new(LoadShardFrame {
+                    shard,
+                    metric,
+                    checksum,
+                    data,
+                }))
+            }
+            KIND_LOAD_ACK => Message::LoadAck {
+                shard: r.take_u32()?,
+                checksum: r.take_u32()?,
+            },
+            KIND_CENTROIDS => {
+                let shard = r.take_u32()?;
+                let iter = r.take_u64()?;
+                let centroids = take_dataset(&mut r)?;
+                Message::Centroids(Box::new(CentroidsFrame {
+                    shard,
+                    iter,
+                    centroids,
+                }))
+            }
+            KIND_PARTIALS => {
+                let shard = r.take_u32()?;
+                let iter = r.take_u64()?;
+                let sums = take_dataset(&mut r)?;
+                let n = r.take_u32()? as usize;
+                if n != sums.len() {
+                    return Err(FrameError::Malformed("partials count/sum shape mismatch"));
+                }
+                if r.remaining() < n.saturating_mul(4) {
+                    return Err(FrameError::Malformed("partials count list length"));
+                }
+                let mut counts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    counts.push(r.take_u32()?);
+                }
+                let stats = take_iter_stats(&mut r)?;
+                Message::Partials(Box::new(PartialsFrame {
+                    shard,
+                    iter,
+                    sums,
+                    counts,
+                    stats,
+                }))
+            }
+            KIND_RELEASE => Message::Release {
+                shard: r.take_u32()?,
+            },
+            KIND_RELEASED => Message::Released {
+                shard: r.take_u32()?,
+            },
+            KIND_END_SESSION => Message::EndSession,
             _ => return Err(FrameError::Malformed("unknown frame kind")),
         };
         r.finish()?;
@@ -611,6 +814,122 @@ mod tests {
         .encode();
         payload[8] = 9; // metric tag byte
         assert!(Message::decode(kind, &payload).is_err());
+    }
+
+    #[test]
+    fn session_frames_round_trip_exact_bits() {
+        let s = generate_params(23, 4, 3, 0.2, 1.0, 17);
+        let sum = dataset_checksum(&s.data);
+        match round_trip(&Message::LoadShard(Box::new(LoadShardFrame {
+            shard: 3,
+            metric: Metric::Manhattan,
+            checksum: sum,
+            data: s.data.clone(),
+        }))) {
+            Message::LoadShard(ls) => {
+                assert_eq!(ls.shard, 3);
+                assert_eq!(ls.metric, Metric::Manhattan);
+                assert_eq!(ls.checksum, sum);
+                for (a, b) in ls.data.flat().iter().zip(s.data.flat()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                // The checksum still validates against the decoded bits.
+                assert_eq!(dataset_checksum(&ls.data), sum);
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip(&Message::LoadAck {
+            shard: 3,
+            checksum: sum,
+        }) {
+            Message::LoadAck { shard, checksum } => {
+                assert_eq!((shard, checksum), (3, sum));
+            }
+            other => panic!("{other:?}"),
+        }
+        let cents = Dataset::from_flat(2, 2, vec![-0.0, 1.5, f32::MIN_POSITIVE, -3.25]);
+        match round_trip(&Message::Centroids(Box::new(CentroidsFrame {
+            shard: 1,
+            iter: 41,
+            centroids: cents.clone(),
+        }))) {
+            Message::Centroids(c) => {
+                assert_eq!((c.shard, c.iter), (1, 41));
+                for (a, b) in c.centroids.flat().iter().zip(cents.flat()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip(&Message::Partials(Box::new(PartialsFrame {
+            shard: 1,
+            iter: 41,
+            sums: cents.clone(),
+            counts: vec![7, 0],
+            stats: IterStats {
+                dist_evals: 9,
+                moved: -0.0,
+                ..Default::default()
+            },
+        }))) {
+            Message::Partials(p) => {
+                assert_eq!((p.shard, p.iter), (1, 41));
+                assert_eq!(p.counts, vec![7, 0]);
+                assert_eq!(p.stats.dist_evals, 9);
+                assert_eq!(p.stats.moved.to_bits(), (-0.0f32).to_bits());
+                for (a, b) in p.sums.flat().iter().zip(cents.flat()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip(&Message::Release { shard: 2 }) {
+            Message::Release { shard } => assert_eq!(shard, 2),
+            other => panic!("{other:?}"),
+        }
+        match round_trip(&Message::Released { shard: 2 }) {
+            Message::Released { shard } => assert_eq!(shard, 2),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip(&Message::EndSession), Message::EndSession));
+        // EndSession is an empty frame, like the other control kinds.
+        assert!(Message::EndSession.encode().1.is_empty());
+        assert!(Message::decode(KIND_END_SESSION, &[0]).is_err());
+    }
+
+    #[test]
+    fn malformed_session_payloads_are_rejected() {
+        for kind in [
+            KIND_LOAD_SHARD,
+            KIND_LOAD_ACK,
+            KIND_CENTROIDS,
+            KIND_PARTIALS,
+            KIND_RELEASE,
+            KIND_RELEASED,
+        ] {
+            assert!(Message::decode(kind, &[1, 2]).is_err(), "kind {kind}");
+        }
+        // A Partials frame whose count list disagrees with its sums shape
+        // is refused outright.
+        let (kind, payload) = Message::Partials(Box::new(PartialsFrame {
+            shard: 0,
+            iter: 0,
+            sums: Dataset::from_flat(2, 2, vec![0.0; 4]),
+            counts: vec![1, 2],
+            stats: IterStats::default(),
+        }))
+        .encode();
+        let mut bad = payload.clone();
+        // counts-length word sits after shard(4) + iter(8) + sums dataset
+        // (n:4 + d:4 + len:4 + 4 floats:16 = 28).
+        bad[40] = 9;
+        assert!(Message::decode(kind, &bad).is_err());
+        // Checksums are order- and bit-sensitive.
+        let a = dataset_checksum(&Dataset::from_flat(2, 1, vec![1.0, 2.0]));
+        let b = dataset_checksum(&Dataset::from_flat(2, 1, vec![2.0, 1.0]));
+        let c = dataset_checksum(&Dataset::from_flat(2, 1, vec![1.0, -2.0]));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
     }
 
     #[test]

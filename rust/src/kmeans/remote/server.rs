@@ -11,6 +11,15 @@
 //! makes a loopback remote run bit-identical to the in-process shard
 //! plane.
 //!
+//! Since protocol v3 a connection can also host a **session**: the
+//! coordinator ships the shard once (`LoadShard`, crc-checked and
+//! acked), then each iteration exchanges only `Centroids` → `Partials`
+//! frames while the worker runs the canonical filter iteration
+//! ([`filter_iteration_batched_scratch`]) over its resident copy.
+//! Resident shards are bounded per connection ([`MAX_RESIDENT_BYTES`])
+//! and dropped on `Release`, `EndSession`, or disconnect — a worker
+//! never leaks a dataset past the connection that loaded it.
+//!
 //! Hostile peers are survived, not trusted: bad magic, corrupt frames,
 //! malformed payloads and out-of-range jobs all produce an error reply
 //! and/or a dropped connection, never a panic of the server.  A
@@ -19,18 +28,31 @@
 //! authenticated service) ends the accept loop.
 
 use super::protocol::{
-    DoneFrame, IterFrame, Message, ShardJob, ERR_BAD_JOB, ERR_VERSION_SKEW, PROTOCOL_VERSION,
+    dataset_checksum, DoneFrame, IterFrame, LoadShardFrame, Message, PartialsFrame, ShardJob,
+    ERR_BAD_CHECKSUM, ERR_BAD_JOB, ERR_NO_SHARD, ERR_RESIDENT_LIMIT, ERR_VERSION_SKEW,
+    PROTOCOL_VERSION,
 };
 use super::RetryPolicy;
+use crate::data::Dataset;
+use crate::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
+use crate::kmeans::filtering::{filter_iteration_batched_scratch, FilterScratch};
 use crate::kmeans::panel::CpuPanels;
-use crate::kmeans::shard::{solve_level1_shard, ShardPartial};
+use crate::kmeans::shard::{solve_level1_shard, ShardPartial, ShardStepper};
 use crate::kmeans::solver::{IterEvent, IterFlow, ObserveFn};
+use crate::kmeans::Metric;
 use crate::util::frame::FrameError;
+use std::collections::HashMap;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// Default per-connection cap on resident session state.  Generous for
+/// the shard sizes this plane targets (a 256 MiB budget fits ~20M f32×8d
+/// points at the [`ShardStepper::resident_bytes`] accounting) while
+/// keeping a misbehaving coordinator from OOMing the worker box.
+pub const MAX_RESIDENT_BYTES: usize = 256 << 20;
 
 /// How a connection ended (drives the accept loop).
 enum ConnEnd {
@@ -45,6 +67,7 @@ pub struct WorkerServer {
     listener: TcpListener,
     local: SocketAddr,
     stop: Arc<AtomicBool>,
+    resident_limit: usize,
 }
 
 impl WorkerServer {
@@ -56,7 +79,15 @@ impl WorkerServer {
             listener,
             local,
             stop: Arc::new(AtomicBool::new(false)),
+            resident_limit: MAX_RESIDENT_BYTES,
         })
+    }
+
+    /// Override the per-connection resident-memory budget (tests shrink
+    /// it to exercise the `ERR_RESIDENT_LIMIT` refusal path cheaply).
+    pub fn with_resident_limit(mut self, bytes: usize) -> Self {
+        self.resident_limit = bytes;
+        self
     }
 
     /// The actual bound address (resolves a `:0` bind).
@@ -98,8 +129,9 @@ impl WorkerServer {
             conns.retain(|h| !h.is_finished());
             let stop = Arc::clone(&self.stop);
             let local = self.local;
+            let resident_limit = self.resident_limit;
             conns.push(std::thread::spawn(move || {
-                match handle_conn(stream) {
+                match handle_conn(stream, resident_limit) {
                     Ok(ConnEnd::Shutdown) => {
                         log::info!("shard-worker: shutdown requested by {peer}");
                         stop.store(true, Ordering::SeqCst);
@@ -119,7 +151,16 @@ impl WorkerServer {
 
     /// Bind and run on a background thread (tests and embedders).
     pub fn spawn(addr: &str) -> anyhow::Result<WorkerHandle> {
-        let server = Self::bind(addr)?;
+        Self::bind(addr)?.spawn_bound()
+    }
+
+    /// Like [`spawn`](Self::spawn) with a shrunken resident budget.
+    pub fn spawn_with_resident_limit(addr: &str, bytes: usize) -> anyhow::Result<WorkerHandle> {
+        Self::bind(addr)?.with_resident_limit(bytes).spawn_bound()
+    }
+
+    fn spawn_bound(self) -> anyhow::Result<WorkerHandle> {
+        let server = self;
         let local = server.local_addr();
         let join = std::thread::Builder::new()
             .name(format!("shard-worker-{local}"))
@@ -155,8 +196,36 @@ impl WorkerHandle {
     }
 }
 
+/// One dataset held resident for a session (protocol v3).  Everything a
+/// [`ShardStepper`] owns, flattened so the map can own the dataset and
+/// the iteration state side by side.
+struct Resident {
+    data: Dataset,
+    tree: KdTree,
+    metric: Metric,
+    assignments: Vec<u32>,
+    scratch: FilterScratch,
+    bytes: usize,
+}
+
+impl Resident {
+    fn load(data: Dataset, metric: Metric) -> Self {
+        let bytes = ShardStepper::<CpuPanels>::resident_bytes(&data);
+        let tree = KdTree::build_par(&data, DEFAULT_LEAF_SIZE, 0);
+        let assignments = vec![0u32; data.len()];
+        Self {
+            data,
+            tree,
+            metric,
+            assignments,
+            scratch: FilterScratch::new(),
+            bytes,
+        }
+    }
+}
+
 /// Serve one coordinator connection: handshake, then a Job loop.
-fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
+fn handle_conn(mut stream: TcpStream, resident_limit: usize) -> anyhow::Result<ConnEnd> {
     let io_timeout = RetryPolicy::default().io_timeout;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(io_timeout))?;
@@ -197,7 +266,10 @@ fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
         }
     }
 
-    // Job loop: one connection serves any number of shard solves.
+    // Job loop: one connection serves any number of one-shot shard
+    // solves and/or session frames.  Resident shards live exactly as
+    // long as this scope — disconnect (any return path) drops them.
+    let mut resident: HashMap<u32, Resident> = HashMap::new();
     loop {
         let msg = match Message::read_from(&mut stream) {
             Ok((m, _)) => m,
@@ -211,16 +283,134 @@ fn handle_conn(mut stream: TcpStream) -> anyhow::Result<ConnEnd> {
             Message::Ping => {
                 Message::Pong.write_to(&mut stream)?;
             }
+            // Session plane (v3).
+            Message::LoadShard(frame) => {
+                serve_load_shard(&mut stream, *frame, &mut resident, resident_limit)?;
+            }
+            Message::Centroids(frame) => {
+                let reply = match resident.get_mut(&frame.shard) {
+                    None => Message::Error {
+                        code: ERR_NO_SHARD,
+                        message: format!("shard {} is not resident on this connection", frame.shard),
+                    },
+                    Some(r) if frame.centroids.dims() != r.data.dims()
+                        || frame.centroids.is_empty()
+                        || frame.centroids.len() > r.data.len() =>
+                    {
+                        Message::Error {
+                            code: ERR_BAD_JOB,
+                            message: format!(
+                                "centroids [{}, {}] do not fit resident shard [{}, {}]",
+                                frame.centroids.len(),
+                                frame.centroids.dims(),
+                                r.data.len(),
+                                r.data.dims()
+                            ),
+                        }
+                    }
+                    Some(r) => {
+                        let mut backend = CpuPanels;
+                        let (sums, counts, stats) = filter_iteration_batched_scratch(
+                            &r.tree,
+                            &r.data,
+                            &frame.centroids,
+                            r.metric,
+                            &mut backend,
+                            &mut r.assignments,
+                            &mut r.scratch,
+                        );
+                        let sums = Dataset::from_flat(frame.centroids.len(), r.data.dims(), sums);
+                        Message::Partials(Box::new(PartialsFrame {
+                            shard: frame.shard,
+                            iter: frame.iter,
+                            sums,
+                            counts,
+                            stats,
+                        }))
+                    }
+                };
+                reply.write_to(&mut stream)?;
+            }
+            // Release is idempotent: retried frames after a reconnect
+            // must not error.
+            Message::Release { shard } => {
+                resident.remove(&shard);
+                Message::Released { shard }.write_to(&mut stream)?;
+            }
+            // Drop all session state but keep the connection — the peer
+            // may still run one-shot jobs (or a fresh session) on it.
+            Message::EndSession => {
+                resident.clear();
+            }
             other => {
                 Message::Error {
                     code: ERR_BAD_JOB,
-                    message: format!("expected Job, Ping or Shutdown, got {other:?}"),
+                    message: format!("expected Job, session frame, Ping or Shutdown, got {other:?}"),
                 }
                 .write_to(&mut stream)?;
                 return Ok(ConnEnd::Closed);
             }
         }
     }
+}
+
+/// Admit (or refuse) a `LoadShard`: checksum, budget, then residency.
+fn serve_load_shard(
+    stream: &mut TcpStream,
+    frame: LoadShardFrame,
+    resident: &mut HashMap<u32, Resident>,
+    resident_limit: usize,
+) -> anyhow::Result<()> {
+    if frame.data.is_empty() {
+        Message::Error {
+            code: ERR_BAD_JOB,
+            message: format!("refusing empty shard {}", frame.shard),
+        }
+        .write_to(stream)?;
+        return Ok(());
+    }
+    let got = dataset_checksum(&frame.data);
+    if got != frame.checksum {
+        Message::Error {
+            code: ERR_BAD_CHECKSUM,
+            message: format!(
+                "shard {} checksum mismatch: frame says {:#010x}, payload hashes to {got:#010x}",
+                frame.shard, frame.checksum
+            ),
+        }
+        .write_to(stream)?;
+        return Ok(());
+    }
+    // Re-loading the same shard id replaces it (reconnect/recovery), so
+    // its old footprint does not count against the budget.
+    let held: usize = resident
+        .iter()
+        .filter(|(id, _)| **id != frame.shard)
+        .map(|(_, r)| r.bytes)
+        .sum();
+    let incoming = ShardStepper::<CpuPanels>::resident_bytes(&frame.data);
+    if held + incoming > resident_limit {
+        Message::Error {
+            code: ERR_RESIDENT_LIMIT,
+            message: format!(
+                "shard {} needs {incoming} resident bytes; {held} of {resident_limit} already held",
+                frame.shard
+            ),
+        }
+        .write_to(stream)?;
+        return Ok(());
+    }
+    log::debug!(
+        "shard-worker: shard {} resident (n={} d={} {incoming} bytes)",
+        frame.shard,
+        frame.data.len(),
+        frame.data.dims()
+    );
+    let checksum = frame.checksum;
+    let shard = frame.shard;
+    resident.insert(shard, Resident::load(frame.data, frame.metric));
+    Message::LoadAck { shard, checksum }.write_to(stream)?;
+    Ok(())
 }
 
 /// Run one shard solve, streaming per-iteration frames, ending in Done.

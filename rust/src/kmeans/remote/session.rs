@@ -1,0 +1,609 @@
+//! The session plane (protocol v3): dataset-resident remote workers.
+//!
+//! The one-shot plane ([`client`](super::client)) re-ships the whole
+//! O(n/P) shard slice inside every `Job` frame; workers forget
+//! everything between solves.  This module implements the paper's
+//! load-once architecture instead: each shard is uploaded **once**
+//! (`LoadShard`, crc-checked and acked), after which every global Lloyd
+//! iteration exchanges only a `Centroids` broadcast (O(k·d) down) and a
+//! `Partials` reduce (O(k·d) up) — per-center sums, member counts, and
+//! the iteration's work counters.
+//!
+//! The coordinator side is [`run_session`]: it owns the *global*
+//! iteration state of every shard (initial centroids, fold, stop rule),
+//! while workers are pure functions from `(resident shard, centroids)`
+//! to partial sums via the canonical
+//! [`filter_iteration_batched_scratch`](crate::kmeans::filtering::filter_iteration_batched_scratch)
+//! pass.  Folding happens through [`fold_partials`] with exactly the
+//! engine's own update/stop ordering, so a session run is **bitwise
+//! identical** to the one-shot [`solve_level1_shard`] oracle
+//! (`shard::tests::session_step_composition_matches_oneshot_solve` pins
+//! the composition; `rust/tests/remote_session.rs` pins the loopback).
+//!
+//! **Failure semantics.** Because every step is a pure function of the
+//! driver-owned centroids, recovery is stateless re-execution — no
+//! exactly-once bookkeeping beyond "fold each (shard, iter) once", which
+//! the driver enforces structurally.  A dead connection climbs the PR-6
+//! ladder: reconnect the same endpoint and re-load ([`SessionMetrics::
+//! shard_reloads`]), re-load on another live session connection, and
+//! finally a local [`ShardStepper`] fallback
+//! ([`SessionMetrics::remote_fallbacks`]).  Whatever rung answers, the
+//! folded partials carry the same IEEE bits.
+//!
+//! **No per-iteration Ping.** Unlike the one-shot path (which fronts
+//! every job upload with a Ping/Pong health check), a session implies
+//! liveness through its per-iteration exchange; [`RemoteWorker::ping`]
+//! exists for *idle* connections only.
+
+use super::client::{RemoteShardPool, RemoteWorker};
+use super::protocol::{dataset_checksum, CentroidsFrame, LoadShardFrame, Message, PartialsFrame};
+use super::WireCounters;
+use crate::data::Dataset;
+use crate::kmeans::panel::CpuPanels;
+use crate::kmeans::shard::{fold_partials, level1_spec, ShardPartial, ShardStepper};
+use crate::kmeans::solver::KmeansSpec;
+use crate::kmeans::{IterStats, RunStats};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What one session-mode level-1 phase did — folded into `CoordMetrics`
+/// by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    /// Connections that hosted at least one resident shard.
+    pub sessions: u64,
+    /// `Centroids` frames sent (one per remote shard per iteration).
+    pub centroid_bcasts: u64,
+    /// `Partials` frames received and folded.
+    pub partials_rx: u64,
+    /// Steady-state wire bytes: `Centroids` out / `Partials` in only —
+    /// the O(k·d) traffic the plane exists to minimize.  `LoadShard`
+    /// uploads count into `remote_bytes_tx`, not here.
+    pub session_bytes_tx: u64,
+    pub session_bytes_rx: u64,
+    /// Shard uploads beyond the first (recovery re-loads, on the same
+    /// endpoint after a reconnect or on another live connection).
+    pub shard_reloads: u64,
+    /// Shards (or endpoints) that exhausted every remote rung.
+    pub remote_fallbacks: u64,
+    /// Shards whose final home was a remote connection.
+    pub remote_shards: u64,
+    /// Connections established at session start.
+    pub remote_workers: usize,
+    /// Endpoints that never produced a usable connection.
+    pub remote_failed_endpoints: Vec<String>,
+    /// Whole-connection traffic (handshakes, loads, releases included).
+    pub remote_bytes_tx: u64,
+    pub remote_bytes_rx: u64,
+}
+
+/// Where a shard's next step executes.
+enum Home<'a> {
+    /// Resident on `conns[i]`.
+    Remote(usize),
+    /// Stepped in-process (no remotes, or the fallback rung).
+    Local(Box<ShardStepper<'a, CpuPanels>>),
+}
+
+/// Driver-owned global state of one shard's level-1 solve.
+struct ShardState<'a> {
+    part: &'a Dataset,
+    wspec: KmeansSpec,
+    centroids: Dataset,
+    stats: RunStats,
+    /// Member counts of the last folded iteration — identical to the
+    /// one-shot result's `sizes()` (the final assignments are the last
+    /// filter pass's).
+    last_counts: Vec<u32>,
+    done: bool,
+    released: bool,
+    home: Home<'a>,
+}
+
+impl<'a> ShardState<'a> {
+    /// Apply one iteration's partials with the engine's exact ordering:
+    /// fold, record movement, push stats, then test tolerance against
+    /// the iteration cap (`run_impl` semantics — convergence wins ties).
+    fn fold(
+        &mut self,
+        si: usize,
+        sums: &[f32],
+        counts: Vec<u32>,
+        mut st: IterStats,
+        on_iter: &mut dyn FnMut(usize, &IterStats),
+    ) {
+        let (next, moved) = fold_partials(&self.centroids, sums, &counts);
+        st.moved = moved;
+        self.centroids = next;
+        self.last_counts = counts;
+        self.stats.iters.push(st);
+        if let Some(last) = self.stats.iters.last() {
+            on_iter(si, last);
+        }
+        if moved <= self.wspec.tol {
+            self.stats.converged = true;
+            self.done = true;
+        } else if self.stats.iters.len() >= self.wspec.max_iters {
+            self.done = true;
+        }
+    }
+}
+
+/// One session connection of the run.
+struct SessionConn {
+    worker: RemoteWorker,
+    alive: bool,
+    /// Acked at least one `LoadShard` (drives the `sessions` counter).
+    hosted: bool,
+}
+
+/// How a `LoadShard` attempt ended.
+enum LoadOutcome {
+    Loaded,
+    /// The worker answered with a protocol refusal (checksum, resident
+    /// budget, bad shard) — the connection itself is still healthy.
+    Refused,
+    /// Transport-level failure or desync: stop trusting the connection.
+    Dead,
+}
+
+/// Upload one shard and wait for its ack.
+fn load_on(conn: &mut SessionConn, si: usize, st: &ShardState<'_>) -> LoadOutcome {
+    let checksum = dataset_checksum(st.part);
+    let frame = LoadShardFrame {
+        shard: si as u32,
+        metric: st.wspec.metric,
+        checksum,
+        data: st.part.clone(),
+    };
+    if let Err(e) = conn.worker.send(&Message::LoadShard(Box::new(frame))) {
+        log::warn!("shard {si}: LoadShard to {} failed: {e}", conn.worker.addr());
+        return LoadOutcome::Dead;
+    }
+    let deadline = Instant::now() + conn.worker.policy().job_deadline;
+    match conn.worker.recv_by(deadline) {
+        Ok(Message::LoadAck { shard, checksum: ack }) if shard == si as u32 && ack == checksum => {
+            LoadOutcome::Loaded
+        }
+        Ok(Message::Error { code, message }) => {
+            log::warn!(
+                "shard {si}: {} refused the load (code {code}): {message}",
+                conn.worker.addr()
+            );
+            LoadOutcome::Refused
+        }
+        Ok(other) => {
+            log::warn!("shard {si}: {} sent {other:?} instead of a LoadAck", conn.worker.addr());
+            LoadOutcome::Dead
+        }
+        Err(e) => {
+            log::warn!("shard {si}: LoadAck from {} failed: {e}", conn.worker.addr());
+            LoadOutcome::Dead
+        }
+    }
+}
+
+/// Send one `Centroids` broadcast (the O(k·d) downlink of a step).
+fn send_centroids(
+    conn: &mut SessionConn,
+    si: usize,
+    st: &ShardState<'_>,
+    m: &mut SessionMetrics,
+) -> bool {
+    let frame = CentroidsFrame {
+        shard: si as u32,
+        iter: st.stats.iters.len() as u64,
+        centroids: st.centroids.clone(),
+    };
+    let (tx0, _) = conn.worker.traffic();
+    let sent = conn.worker.send(&Message::Centroids(Box::new(frame)));
+    let (tx1, _) = conn.worker.traffic();
+    m.session_bytes_tx += tx1 - tx0;
+    match sent {
+        Ok(()) => {
+            m.centroid_bcasts += 1;
+            true
+        }
+        Err(e) => {
+            log::warn!("shard {si}: Centroids to {} failed: {e}", conn.worker.addr());
+            false
+        }
+    }
+}
+
+/// Receive, validate and fold one `Partials` reply.
+fn recv_fold(
+    conn: &mut SessionConn,
+    si: usize,
+    st: &mut ShardState<'_>,
+    m: &mut SessionMetrics,
+    on_iter: &mut dyn FnMut(usize, &IterStats),
+) -> bool {
+    let expect_iter = st.stats.iters.len() as u64;
+    let deadline = Instant::now() + conn.worker.policy().job_deadline;
+    let (_, rx0) = conn.worker.traffic();
+    let got = conn.worker.recv_by(deadline);
+    let (_, rx1) = conn.worker.traffic();
+    m.session_bytes_rx += rx1 - rx0;
+    let shaped = |p: &PartialsFrame| {
+        p.shard == si as u32
+            && p.iter == expect_iter
+            && p.sums.len() == st.wspec.k
+            && p.sums.dims() == st.part.dims()
+            && p.counts.len() == st.wspec.k
+    };
+    match got {
+        Ok(Message::Partials(p)) if shaped(&p) => {
+            m.partials_rx += 1;
+            let PartialsFrame { sums, counts, stats, .. } = *p;
+            st.fold(si, sums.flat(), counts, stats, on_iter);
+            true
+        }
+        Ok(Message::Error { code, message }) => {
+            log::warn!(
+                "shard {si}: {} failed the step (code {code}): {message}",
+                conn.worker.addr()
+            );
+            false
+        }
+        Ok(other) => {
+            log::warn!(
+                "shard {si}: {} answered the step with {other:?}",
+                conn.worker.addr()
+            );
+            false
+        }
+        Err(e) => {
+            log::warn!("shard {si}: Partials from {} failed: {e}", conn.worker.addr());
+            false
+        }
+    }
+}
+
+/// One full remote step (broadcast + reduce) — the recovery path's
+/// re-execution of an iteration that a dead connection swallowed.
+fn step_via_conn(
+    conn: &mut SessionConn,
+    si: usize,
+    st: &mut ShardState<'_>,
+    m: &mut SessionMetrics,
+    on_iter: &mut dyn FnMut(usize, &IterStats),
+) -> bool {
+    send_centroids(conn, si, st, m) && recv_fold(conn, si, st, m, on_iter)
+}
+
+/// Free one finished shard's resident memory.
+fn release_on(conn: &mut SessionConn, si: usize) -> bool {
+    if conn.worker.send(&Message::Release { shard: si as u32 }).is_err() {
+        return false;
+    }
+    let deadline = Instant::now() + conn.worker.policy().io_timeout;
+    matches!(
+        conn.worker.recv_by(deadline),
+        Ok(Message::Released { shard }) if shard == si as u32
+    )
+}
+
+/// The degradation ladder for a shard whose step this round was lost:
+/// revive + re-load the home connection, re-load on another live
+/// connection, then fall back to a local stepper.  The step is re-run on
+/// whatever rung answers; since it is a pure function of the current
+/// centroids, the folded result is bitwise what the dead worker would
+/// have returned.
+fn recover_and_step<'a>(
+    si: usize,
+    states: &mut [ShardState<'a>],
+    conns: &mut [SessionConn],
+    m: &mut SessionMetrics,
+    on_iter: &mut dyn FnMut(usize, &IterStats),
+    revive_failed: &mut Vec<usize>,
+) {
+    let home_ci = match states[si].home {
+        Home::Remote(ci) => Some(ci),
+        Home::Local(_) => None,
+    };
+    if let Some(ci) = home_ci {
+        // Rung 1: the home endpoint, reconnected if its stream died.
+        if !conns[ci].alive && !revive_failed.contains(&ci) {
+            match conns[ci].worker.reconnect() {
+                Ok(()) => conns[ci].alive = true,
+                Err(e) => {
+                    log::warn!("session reconnect to {} failed: {e}", conns[ci].worker.addr());
+                    revive_failed.push(ci);
+                }
+            }
+        }
+        if conns[ci].alive {
+            if matches!(load_on(&mut conns[ci], si, &states[si]), LoadOutcome::Loaded) {
+                m.shard_reloads += 1;
+                if step_via_conn(&mut conns[ci], si, &mut states[si], m, on_iter) {
+                    return;
+                }
+            }
+            conns[ci].alive = false;
+        }
+        // Rung 2: any other live session connection.
+        for cj in 0..conns.len() {
+            if cj == ci || !conns[cj].alive {
+                continue;
+            }
+            match load_on(&mut conns[cj], si, &states[si]) {
+                LoadOutcome::Loaded => {
+                    m.shard_reloads += 1;
+                    if !conns[cj].hosted {
+                        conns[cj].hosted = true;
+                        m.sessions += 1;
+                    }
+                    states[si].home = Home::Remote(cj);
+                    log::info!("shard {si} re-loaded onto {}", conns[cj].worker.addr());
+                    if step_via_conn(&mut conns[cj], si, &mut states[si], m, on_iter) {
+                        return;
+                    }
+                    conns[cj].alive = false;
+                }
+                LoadOutcome::Refused => {}
+                LoadOutcome::Dead => conns[cj].alive = false,
+            }
+        }
+    }
+    // Rung 3: local fallback for the rest of the run.
+    m.remote_fallbacks += 1;
+    log::warn!("shard {si}: session remotes exhausted, stepping locally from here on");
+    let part = states[si].part;
+    let metric = states[si].wspec.metric;
+    let mut stepper = Box::new(ShardStepper::new(part, metric, CpuPanels));
+    let (sums, counts, st) = stepper.step(&states[si].centroids);
+    states[si].home = Home::Local(stepper);
+    states[si].fold(si, &sums, counts, st, on_iter);
+}
+
+/// Run every shard's level-1 solve in session mode and return the same
+/// [`ShardPartial`]s (same bits, same order) the one-shot executor fleet
+/// would have produced.
+///
+/// `on_iter(shard, stats)` streams each folded iteration to the
+/// coordinator's live counters.  An empty `pool` degrades to pure local
+/// stepping (no fallback counted — there was nothing to fall back from).
+pub fn run_session(
+    parts: &[Dataset],
+    spec: &KmeansSpec,
+    pool: &RemoteShardPool,
+    wire: &Arc<WireCounters>,
+    on_iter: &mut dyn FnMut(usize, &IterStats),
+) -> (Vec<ShardPartial>, SessionMetrics) {
+    let mut m = SessionMetrics::default();
+    let (workers, failed) = if pool.is_empty() {
+        (Vec::new(), Vec::new())
+    } else {
+        pool.connect_all_with(wire)
+    };
+    m.remote_workers = workers.len();
+    m.remote_fallbacks += failed.len() as u64;
+    m.remote_failed_endpoints = failed;
+    let mut conns: Vec<SessionConn> = workers
+        .into_iter()
+        .map(|worker| SessionConn {
+            worker,
+            alive: true,
+            hosted: false,
+        })
+        .collect();
+
+    let mut states: Vec<ShardState<'_>> = parts
+        .iter()
+        .enumerate()
+        .map(|(si, part)| {
+            let wspec = level1_spec(spec, si);
+            let centroids = wspec.starting_centroids(part);
+            ShardState {
+                part,
+                wspec,
+                centroids,
+                stats: RunStats::default(),
+                last_counts: Vec::new(),
+                done: false,
+                released: false,
+                home: Home::Remote(usize::MAX),
+            }
+        })
+        .collect();
+
+    // ---- Load phase: place each shard, round-robin over connections.
+    for si in 0..states.len() {
+        let mut placed = false;
+        if !conns.is_empty() {
+            let start = si % conns.len();
+            for off in 0..conns.len() {
+                let ci = (start + off) % conns.len();
+                if !conns[ci].alive {
+                    continue;
+                }
+                match load_on(&mut conns[ci], si, &states[si]) {
+                    LoadOutcome::Loaded => {
+                        if !conns[ci].hosted {
+                            conns[ci].hosted = true;
+                            m.sessions += 1;
+                        }
+                        states[si].home = Home::Remote(ci);
+                        placed = true;
+                        break;
+                    }
+                    LoadOutcome::Refused => continue,
+                    LoadOutcome::Dead => {
+                        conns[ci].alive = false;
+                        continue;
+                    }
+                }
+            }
+        }
+        if !placed {
+            if !conns.is_empty() {
+                m.remote_fallbacks += 1;
+            }
+            let part = states[si].part;
+            let metric = states[si].wspec.metric;
+            states[si].home = Home::Local(Box::new(ShardStepper::new(part, metric, CpuPanels)));
+        }
+    }
+
+    // ---- Iteration rounds: lockstep over all unconverged shards.
+    loop {
+        let active: Vec<usize> = states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.done)
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        let mut folded = vec![false; states.len()];
+        let mut sent = vec![false; states.len()];
+
+        // A) Pipeline the centroid broadcasts: every live connection gets
+        //    all of its shards' frames before any reply is awaited, so
+        //    the workers compute concurrently.
+        for &si in &active {
+            if let Home::Remote(ci) = states[si].home {
+                if conns[ci].alive {
+                    if send_centroids(&mut conns[ci], si, &states[si], &mut m) {
+                        sent[si] = true;
+                    } else {
+                        conns[ci].alive = false;
+                    }
+                }
+            }
+        }
+
+        // B) Step local shards while the remotes work.
+        for &si in &active {
+            let st = &mut states[si];
+            let step = match &mut st.home {
+                Home::Local(stepper) => Some(stepper.step(&st.centroids)),
+                Home::Remote(_) => None,
+            };
+            if let Some((sums, counts, is)) = step {
+                st.fold(si, &sums, counts, is, on_iter);
+                folded[si] = true;
+            }
+        }
+
+        // C) Collect partials in send order (one server thread per
+        //    connection answers in request order).
+        for &si in &active {
+            if folded[si] || !sent[si] {
+                continue;
+            }
+            if let Home::Remote(ci) = states[si].home {
+                if !conns[ci].alive {
+                    continue;
+                }
+                if recv_fold(&mut conns[ci], si, &mut states[si], &mut m, on_iter) {
+                    folded[si] = true;
+                } else {
+                    conns[ci].alive = false;
+                }
+            }
+        }
+
+        // D) Anything still pending lost its step to a dead connection:
+        //    climb the ladder and re-run the step.  Rung 3 is local and
+        //    infallible, so every shard folds exactly once per round.
+        let mut revive_failed: Vec<usize> = Vec::new();
+        for &si in &active {
+            if folded[si] {
+                continue;
+            }
+            recover_and_step(si, &mut states, &mut conns, &mut m, on_iter, &mut revive_failed);
+        }
+
+        // E) Release finished shards promptly — the worker's resident
+        //    budget frees as the fleet converges, not at session end.
+        for &si in &active {
+            if !states[si].done || states[si].released {
+                continue;
+            }
+            if let Home::Remote(ci) = states[si].home {
+                if conns[ci].alive && !release_on(&mut conns[ci], si) {
+                    conns[ci].alive = false;
+                }
+            }
+            states[si].released = true;
+        }
+    }
+
+    // ---- Teardown: drop whatever residency is left, tally traffic.
+    for c in conns.iter_mut() {
+        if c.alive {
+            let _ = c.worker.send(&Message::EndSession);
+        }
+        let (tx, rx) = c.worker.traffic();
+        m.remote_bytes_tx += tx;
+        m.remote_bytes_rx += rx;
+    }
+    for st in &states {
+        if matches!(st.home, Home::Remote(_)) {
+            m.remote_shards += 1;
+        }
+    }
+    let partials = states
+        .into_iter()
+        .map(|st| ShardPartial {
+            centroids: st.centroids,
+            counts: st.last_counts.iter().map(|&c| c as usize).collect(),
+            stats: st.stats,
+        })
+        .collect();
+    (partials, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate_params;
+    use crate::kmeans::shard::{solve_level1_shard, ShardPartial, ShardPlan};
+
+    /// With no remotes at all, the driver is a pure-local lockstep loop —
+    /// and must still reproduce the one-shot oracle bit for bit (this
+    /// pins the driver's fold/stop ordering independently of any wire).
+    #[test]
+    fn local_session_matches_oneshot_partials() {
+        let s = generate_params(2000, 3, 4, 0.2, 1.0, 17);
+        let spec = KmeansSpec::two_level(4).seed(7).shards(4);
+        let plan = ShardPlan::build(&s.data, spec.shards, spec.partition, None);
+        let wire = Arc::new(WireCounters::default());
+        let mut seen: Vec<(usize, u64)> = Vec::new();
+        let (partials, m) = run_session(
+            &plan.parts,
+            &spec,
+            &RemoteShardPool::default(),
+            &wire,
+            &mut |si, st| seen.push((si, st.dist_evals)),
+        );
+        assert_eq!(partials.len(), 4);
+        assert_eq!(m.sessions, 0);
+        assert_eq!(m.remote_fallbacks, 0, "no pool, no fallback");
+        assert_eq!(m.session_bytes_tx + m.session_bytes_rx, 0);
+        let mut streamed = 0usize;
+        for (si, part) in plan.parts.iter().enumerate() {
+            let wspec = level1_spec(&spec, si);
+            let oracle = solve_level1_shard(
+                part,
+                &wspec,
+                CpuPanels,
+                None::<crate::kmeans::solver::IterLog>,
+            );
+            let oracle = ShardPartial::from_result(oracle);
+            assert_eq!(partials[si].centroids, oracle.centroids, "shard {si}");
+            assert_eq!(partials[si].counts, oracle.counts, "shard {si}");
+            assert_eq!(
+                partials[si].stats.iterations(),
+                oracle.stats.iterations(),
+                "shard {si}"
+            );
+            assert_eq!(partials[si].stats.converged, oracle.stats.converged);
+            streamed += oracle.stats.iterations();
+        }
+        assert_eq!(seen.len(), streamed, "every folded iteration streamed once");
+    }
+}

@@ -36,9 +36,10 @@
 //! ever-growing used-set; for P ≤ [`COMBINE_FAN_IN`] it *is* a single
 //! flat pass, bitwise identical to the legacy `twolevel::combine`.
 
+use super::filtering::{filter_iteration_batched_scratch, FilterScratch};
 use super::panel::PanelBackend;
 use super::solver::{Algo, IterObserver, KmeansSpec, SolverCtx};
-use super::{IterStats, KmeansResult, Metric, RunStats};
+use super::{centroids_from_sums, max_sq_movement, IterStats, KmeansResult, Metric, RunStats};
 use crate::data::Dataset;
 use crate::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
 use std::cmp::Reverse;
@@ -440,6 +441,93 @@ where
     wspec.solve(&mut ctx)
 }
 
+// ---------------------------------------------------------------------------
+// Session-mode step primitives
+// ---------------------------------------------------------------------------
+//
+// One-shot mode runs a whole level-1 solve wherever the shard data is
+// ([`solve_level1_shard`] above).  Session mode splits that same solve
+// across the wire: the *data side* executes single filter iterations
+// ([`ShardStepper`]) and the *coordinator side* folds each iteration's
+// `(sums, counts)` partials into the next centroid set
+// ([`fold_partials`]) — exactly the two halves of the engine's own
+// iteration, so composing them reproduces [`solve_level1_shard`] bit for
+// bit.  `tests::session_step_composition_matches_oneshot_solve` pins
+// that equivalence against the oracle.
+
+/// Dataset-resident half of a session-mode shard solve: the shard slice,
+/// its kd-tree, and the recycled per-iteration arenas.  Built once per
+/// `LoadShard` (worker-side) or per local session shard
+/// (coordinator-side); each [`step`](Self::step) executes exactly one
+/// canonical batched filter iteration — the same
+/// [`filter_iteration_batched_scratch`] call the one-shot engine loops
+/// over, with the same tree construction as [`solve_level1_shard`].
+pub struct ShardStepper<'a, B: PanelBackend> {
+    data: &'a Dataset,
+    tree: KdTree,
+    metric: Metric,
+    backend: B,
+    assignments: Vec<u32>,
+    scratch: FilterScratch,
+}
+
+impl<'a, B: PanelBackend> ShardStepper<'a, B> {
+    /// Make `data` resident: build its kd-tree (the same parallel build
+    /// the one-shot path uses) and allocate the iteration arenas.
+    pub fn new(data: &'a Dataset, metric: Metric, backend: B) -> Self {
+        Self {
+            tree: KdTree::build_par(data, DEFAULT_LEAF_SIZE, 0),
+            metric,
+            backend,
+            assignments: vec![0u32; data.len()],
+            scratch: FilterScratch::new(),
+            data,
+        }
+    }
+
+    /// One filter iteration against `centroids`: returns the per-center
+    /// coordinate sums (k×d flat), member counts, and work counters.
+    /// `moved` in the returned stats is left untouched (0) — computing it
+    /// needs the *next* centroids, which only the folding side has.
+    pub fn step(&mut self, centroids: &Dataset) -> (Vec<f32>, Vec<u32>, IterStats) {
+        filter_iteration_batched_scratch(
+            &self.tree,
+            self.data,
+            centroids,
+            self.metric,
+            &mut self.backend,
+            &mut self.assignments,
+            &mut self.scratch,
+        )
+    }
+
+    /// Labels written by the most recent [`step`](Self::step).
+    pub fn assignments(&self) -> &[u32] {
+        &self.assignments
+    }
+
+    /// Resident bytes this stepper pins (slice + tree + arenas, the
+    /// dominant terms) — what a worker charges against its residency
+    /// budget.
+    pub fn resident_bytes(data: &Dataset) -> usize {
+        // Slice + assignments + tree (nodes ≈ 2·n/leaf, each carrying a
+        // d-dim weighted centroid + bbox) — a deliberate overestimate.
+        let point_bytes = data.flat().len() * 4;
+        point_bytes * 3 + data.len() * 8
+    }
+}
+
+/// Coordinator-side half of a session-mode iteration: fold one
+/// iteration's `(sums, counts)` partials into the next centroid set and
+/// its convergence movement — verbatim the update step of the engine's
+/// own loop (`centroids_from_sums` + `max_sq_movement`), which is what
+/// keeps a session trajectory bitwise on the one-shot one.
+pub fn fold_partials(prev: &Dataset, sums: &[f32], counts: &[u32]) -> (Dataset, f32) {
+    let next = centroids_from_sums(sums, counts, prev);
+    let moved = max_sq_movement(prev, &next);
+    (next, moved)
+}
+
 /// What one level-1 shard solve ships back to the combiner — the paper's
 /// `(centroid, count)` partials plus the run's work counters.  This is the
 /// whole coordinator↔executor contract: shard assignments never travel
@@ -777,5 +865,51 @@ mod tests {
             assert_eq!(p.name().parse::<Partition>().unwrap(), *p);
         }
         assert!("octants".parse::<Partition>().is_err());
+    }
+
+    /// The session-plane contract: stepping one filter iteration at a
+    /// time ([`ShardStepper::step`]) and folding the partials
+    /// coordinator-side ([`fold_partials`]) with the engine's own stop
+    /// rule reproduces the one-shot [`solve_level1_shard`] oracle bit for
+    /// bit — centroids, labels, counts, and iteration count.
+    #[test]
+    fn session_step_composition_matches_oneshot_solve() {
+        use crate::kmeans::panel::CpuPanels;
+        for shard in 0..3usize {
+            let s = generate_params(700, 3, 4, 0.2, 1.0, 29 + shard as u64);
+            let wspec = level1_spec(&KmeansSpec::two_level(4).seed(13), shard);
+            let oracle = solve_level1_shard(
+                &s.data,
+                &wspec,
+                CpuPanels,
+                None::<crate::kmeans::solver::IterLog>,
+            );
+
+            let mut stepper = ShardStepper::new(&s.data, wspec.metric, CpuPanels);
+            let mut centroids = wspec.starting_centroids(&s.data);
+            let mut iters = 0usize;
+            let mut converged = false;
+            let mut last_counts: Vec<u32> = Vec::new();
+            for _ in 0..wspec.max_iters {
+                let (sums, counts, _stats) = stepper.step(&centroids);
+                let (next, moved) = fold_partials(&centroids, &sums, &counts);
+                centroids = next;
+                last_counts = counts;
+                iters += 1;
+                if moved <= wspec.tol {
+                    converged = true;
+                    break;
+                }
+            }
+
+            assert_eq!(converged, oracle.stats.converged, "shard {shard}");
+            assert_eq!(iters, oracle.stats.iterations(), "shard {shard}");
+            for (a, b) in centroids.flat().iter().zip(oracle.centroids.flat()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shard {shard}: centroid bits");
+            }
+            assert_eq!(stepper.assignments(), &oracle.assignments[..], "shard {shard}");
+            let counts_usize: Vec<usize> = last_counts.iter().map(|&c| c as usize).collect();
+            assert_eq!(counts_usize, oracle.sizes(), "shard {shard}");
+        }
     }
 }

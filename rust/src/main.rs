@@ -65,6 +65,7 @@ fn commands() -> Vec<Command> {
             .opt("remote-backoff-ms", "100", "base retry backoff (ms; doubles per attempt, seeded jitter)")
             .opt("report", "", "write a machine-readable coordinator run report (JSON) here")
             .opt("out", "", "write final assignments CSV here (one label per line)")
+            .flag("session", "level-1 over the session plane: shards go resident on the remotes once, each iteration ships only O(k*d) centroids/partials (two-level; works all-local too)")
             .flag("trace", "stream per-iteration stats through an observer (runs two-level via the sequential solver)")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
         Command::new("shard-worker", "serve level-1 shard solves to remote coordinators (wire protocol)")
@@ -294,6 +295,7 @@ fn run() -> anyhow::Result<()> {
             let metric: Metric = m.str("metric").parse()?;
             let algo: Algo = m.str("algo").parse()?;
             let trace = m.flag("trace");
+            let session = m.flag("session");
             // Fail fast on a bad backend before paying for data loading.
             let pjrt = match m.str("backend") {
                 "cpu" => false,
@@ -313,7 +315,12 @@ fn run() -> anyhow::Result<()> {
                 } else {
                     Backend::Cpu
                 };
-                let mut coord = Coordinator::new(backend);
+                let mut coord = Coordinator::new(backend).with_session(session);
+                if session {
+                    println!(
+                        "session plane: shards resident on workers, O(k*d) per-iteration wire"
+                    );
+                }
                 if !remotes.is_empty() {
                     let timeout_ms = m.u64("remote-timeout-ms")?;
                     let retries = m.u64("remote-retries")?;
@@ -356,6 +363,11 @@ fn run() -> anyhow::Result<()> {
                 anyhow::ensure!(
                     report_path.is_empty(),
                     "--report requires the two-level coordinator path \
+                     (use --algo two-level without --trace)"
+                );
+                anyhow::ensure!(
+                    !session,
+                    "--session requires the two-level coordinator path \
                      (use --algo two-level without --trace)"
                 );
                 // Single-process path through the unified solver (also the
@@ -740,6 +752,12 @@ fn write_coord_report(
                 ),
                 ("remote_bytes_tx", Json::num(cm.remote_bytes_tx as f64)),
                 ("remote_bytes_rx", Json::num(cm.remote_bytes_rx as f64)),
+                ("sessions", Json::num(cm.sessions as f64)),
+                ("centroid_bcasts", Json::num(cm.centroid_bcasts as f64)),
+                ("partials_rx", Json::num(cm.partials_rx as f64)),
+                ("session_bytes_tx", Json::num(cm.session_bytes_tx as f64)),
+                ("session_bytes_rx", Json::num(cm.session_bytes_rx as f64)),
+                ("shard_reloads", Json::num(cm.shard_reloads as f64)),
             ]),
         ),
         (

@@ -218,6 +218,155 @@ fn dead_remote_shard_is_rescheduled_onto_a_live_one() {
 }
 
 // ---------------------------------------------------------------------------
+// Session plane under chaos (protocol v3)
+// ---------------------------------------------------------------------------
+//
+// In session mode the server's frame sequence per connection is
+// HelloAck (0), LoadAck (1), then one Partials per iteration — so a
+// fault `@2` lands exactly on the *first Partials reduce*, the nastiest
+// point: the shard is resident, an iteration is in flight, and the
+// driver must re-run that step elsewhere without folding it twice.
+
+#[test]
+fn session_partials_kill_reloads_on_same_endpoint_bitwise() {
+    let s = generate_params(2400, 2, 3, 0.2, 1.0, 13);
+    let spec = KmeansSpec::two_level(3).seed(4).shards(2);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // Connection 0 (through the proxy) dies on its first Partials;
+    // the reconnect gets the clean `none` slot, so rung 1 of the ladder
+    // — revive the home endpoint, re-load, re-step — must succeed.
+    let wa = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let wb = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &wa.addr().to_string(),
+        FaultSchedule::parse("kill@2,none").unwrap(),
+    )
+    .unwrap();
+    let pool = RemoteShardPool::new(vec![
+        proxy.addr().to_string(),
+        wb.addr().to_string(),
+    ])
+    .with_policy(fast_policy());
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+    proxy.shutdown();
+    wa.shutdown().unwrap();
+    wb.shutdown().unwrap();
+
+    let m = &out.metrics;
+    assert_eq!(m.remote_workers, 2, "{}", m.summary());
+    assert_eq!(m.shard_reloads, 1, "one recovery re-load: {}", m.summary());
+    assert!(m.remote_reconnects >= 1, "{}", m.summary());
+    assert_eq!(m.remote_fallbacks, 0, "reload must beat local fallback");
+    assert_eq!(m.remote_shards, 2, "both shards finished resident remotely");
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn session_endpoint_that_keeps_dying_reloads_onto_the_live_one() {
+    let s = generate_params(2400, 2, 3, 0.2, 1.0, 13);
+    let spec = KmeansSpec::two_level(3).seed(4).shards(2);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // Every connection through the proxy dies on its first Partials
+    // (a single-entry schedule applies to each new connection): rung 1
+    // re-loads and dies again, so the shard must migrate to the clean
+    // endpoint (rung 2) — two uploads beyond the first, zero fallbacks.
+    let wa = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let wb = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &wa.addr().to_string(),
+        FaultSchedule::parse("kill@2").unwrap(),
+    )
+    .unwrap();
+    let pool = RemoteShardPool::new(vec![
+        proxy.addr().to_string(),
+        wb.addr().to_string(),
+    ])
+    .with_policy(fast_policy());
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+    proxy.shutdown();
+    wa.shutdown().unwrap();
+    wb.shutdown().unwrap();
+
+    let m = &out.metrics;
+    assert_eq!(m.shard_reloads, 2, "retry on home, then migrate: {}", m.summary());
+    assert_eq!(m.remote_fallbacks, 0, "{}", m.summary());
+    assert_eq!(m.remote_shards, 2, "both shards ended resident on the live worker");
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn session_corrupted_partials_is_detected_and_recovered_bitwise() {
+    let s = generate_params(1500, 2, 3, 0.2, 1.0, 21);
+    let spec = KmeansSpec::two_level(3).seed(6).shards(1);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // The first Partials frame arrives bit-flipped: the frame CRC must
+    // refuse it (never fold garbage sums), the connection is condemned,
+    // and the clean reconnect re-runs the lost step.
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &w.addr().to_string(),
+        FaultSchedule::parse("corrupt@2,none").unwrap(),
+    )
+    .unwrap();
+    let pool = RemoteShardPool::new(vec![proxy.addr().to_string()]).with_policy(fast_policy());
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+    proxy.shutdown();
+    w.shutdown().unwrap();
+
+    let m = &out.metrics;
+    assert_eq!(m.shard_reloads, 1, "{}", m.summary());
+    assert_eq!(m.remote_fallbacks, 0, "{}", m.summary());
+    assert_eq!(m.remote_shards, 1);
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+#[test]
+fn session_with_no_surviving_remote_falls_back_local_bitwise() {
+    let s = generate_params(1500, 2, 3, 0.2, 1.0, 21);
+    let spec = KmeansSpec::two_level(3).seed(6).shards(1);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // The only endpoint kills every connection on its first Partials:
+    // rung 1 (reconnect + reload) dies the same way, there is no rung-2
+    // peer, so the shard steps locally from there — results unaffected.
+    let w = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::spawn(
+        "127.0.0.1:0",
+        &w.addr().to_string(),
+        FaultSchedule::parse("kill@2").unwrap(),
+    )
+    .unwrap();
+    let pool = RemoteShardPool::new(vec![proxy.addr().to_string()]).with_policy(fast_policy());
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+    proxy.shutdown();
+    w.shutdown().unwrap();
+
+    let m = &out.metrics;
+    assert_eq!(m.remote_fallbacks, 1, "{}", m.summary());
+    assert_eq!(m.shard_reloads, 1, "rung 1 was tried before going local");
+    assert_eq!(m.remote_shards, 0, "the shard's final home was local");
+    assert_bitwise_equal(&out.result, &local.result);
+}
+
+// ---------------------------------------------------------------------------
 // chaos-proxy binary lifecycle
 // ---------------------------------------------------------------------------
 

@@ -11,8 +11,10 @@
 use muchswift::data::Dataset;
 use muchswift::kmeans::init::Init;
 use muchswift::kmeans::remote::protocol::{
-    DoneFrame, IterFrame, Message, ShardJob, WireSpec, KIND_DONE, KIND_ERROR, KIND_HELLO,
-    KIND_HELLO_ACK, KIND_ITER, KIND_JOB, KIND_PING, KIND_PONG, KIND_SHUTDOWN, PROTOCOL_VERSION,
+    dataset_checksum, CentroidsFrame, DoneFrame, IterFrame, LoadShardFrame, Message, PartialsFrame,
+    ShardJob, WireSpec, KIND_CENTROIDS, KIND_DONE, KIND_END_SESSION, KIND_ERROR, KIND_HELLO,
+    KIND_HELLO_ACK, KIND_ITER, KIND_JOB, KIND_LOAD_ACK, KIND_LOAD_SHARD, KIND_PARTIALS, KIND_PING,
+    KIND_PONG, KIND_RELEASE, KIND_RELEASED, KIND_SHUTDOWN, PROTOCOL_VERSION,
 };
 use muchswift::kmeans::{IterStats, LevelWork, Metric, RunStats};
 use muchswift::util::frame::FrameError;
@@ -70,7 +72,7 @@ fn random_wire_spec(g: &mut Gen) -> WireSpec {
 }
 
 /// One random message of each protocol kind, indexed 0..KINDS.
-const KINDS: usize = 9;
+const KINDS: usize = 16;
 
 fn random_message(g: &mut Gen, which: usize) -> Message {
     match which {
@@ -109,7 +111,51 @@ fn random_message(g: &mut Gen, which: usize) -> Message {
         },
         6 => Message::Shutdown,
         7 => Message::Ping,
-        _ => Message::Pong,
+        8 => Message::Pong,
+        // Session plane (v3).
+        9 => {
+            let data = random_dataset(g, 12, 4);
+            // Honest checksum half the time — the codec round-trips
+            // either way (validation is the server's job, not decode's).
+            let checksum = if g.bool() {
+                dataset_checksum(&data)
+            } else {
+                g.rng.next_u64() as u32
+            };
+            Message::LoadShard(Box::new(LoadShardFrame {
+                shard: g.usize_in(0, 64) as u32,
+                metric: *g.pick(&[Metric::Euclid, Metric::Manhattan]),
+                checksum,
+                data,
+            }))
+        }
+        10 => Message::LoadAck {
+            shard: g.usize_in(0, 64) as u32,
+            checksum: g.rng.next_u64() as u32,
+        },
+        11 => Message::Centroids(Box::new(CentroidsFrame {
+            shard: g.usize_in(0, 64) as u32,
+            iter: g.usize_in(0, 1000) as u64,
+            centroids: random_dataset(g, 6, 3),
+        })),
+        12 => {
+            let k = g.usize_in(1, 6);
+            let d = g.usize_in(1, 3);
+            Message::Partials(Box::new(PartialsFrame {
+                shard: g.usize_in(0, 64) as u32,
+                iter: g.usize_in(0, 1000) as u64,
+                sums: Dataset::from_flat(k, d, g.vec_f32(k * d, -100.0, 100.0)),
+                counts: (0..k).map(|_| g.rng.next_u64() as u32).collect(),
+                stats: random_iter_stats(g),
+            }))
+        }
+        13 => Message::Release {
+            shard: g.usize_in(0, 64) as u32,
+        },
+        14 => Message::Released {
+            shard: g.usize_in(0, 64) as u32,
+        },
+        _ => Message::EndSession,
     }
 }
 
@@ -145,6 +191,13 @@ fn kind_constants_match_encoded_discriminants() {
         KIND_SHUTDOWN,
         KIND_PING,
         KIND_PONG,
+        KIND_LOAD_SHARD,
+        KIND_LOAD_ACK,
+        KIND_CENTROIDS,
+        KIND_PARTIALS,
+        KIND_RELEASE,
+        KIND_RELEASED,
+        KIND_END_SESSION,
     ];
     assert_eq!(expect.len(), KINDS, "a kind was added without a pin");
     for (which, want) in expect.iter().enumerate() {

@@ -1,0 +1,319 @@
+//! Session plane integration suite (protocol v3).
+//!
+//! The headline pin demanded by the plane's whole design: a loopback
+//! **session-mode** run — shards shipped once, every iteration crossing
+//! the wire as an O(k·d) `Centroids`/`Partials` exchange — is
+//! byte-identical (labels, centroids, merged level-2 seed) to the
+//! in-process solve.  Around it: the resident-memory budget's refusal
+//! path, the raw v3 conversation a hostile/naive peer sees, and the
+//! `cluster --session` CLI contract.
+
+use muchswift::coordinator::{Backend, Coordinator};
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kmeans::remote::protocol::{
+    dataset_checksum, CentroidsFrame, LoadShardFrame, Message, ERR_BAD_CHECKSUM, ERR_NO_SHARD,
+    ERR_RESIDENT_LIMIT, PROTOCOL_VERSION,
+};
+use muchswift::kmeans::remote::{RemoteShardPool, WorkerServer};
+use muchswift::kmeans::solver::KmeansSpec;
+use muchswift::kmeans::{KmeansResult, Metric};
+use std::net::TcpStream;
+use std::process::Command;
+
+fn assert_bitwise_equal(a: &KmeansResult, b: &KmeansResult) {
+    assert_eq!(a.centroids.len(), b.centroids.len());
+    for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "centroid bits diverged");
+    }
+    assert_eq!(a.assignments, b.assignments, "assignments diverged");
+}
+
+#[test]
+fn loopback_session_run_is_bitwise_identical_to_in_process() {
+    let s = generate_params(6000, 3, 5, 0.15, 2.0, 33);
+    let spec = KmeansSpec::two_level(5).seed(9).shards(4).workers(4);
+
+    // In-process baseline.
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // Two loopback workers, two session connections each: four homes for
+    // four shards, so every level-1 iteration provably crossed the wire.
+    let w1 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let w2 = WorkerServer::spawn("127.0.0.1:0").unwrap();
+    let (a1, a2) = (w1.addr().to_string(), w2.addr().to_string());
+    let pool = RemoteShardPool::new(vec![a1.clone(), a2.clone(), a1, a2]);
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(pool)
+        .run(&s.data, &spec);
+
+    assert_bitwise_equal(&out.result, &local.result);
+    // The two-level extension travels intact: per-shard stats and the
+    // merged level-2 seed carry the same bits.
+    let le = local.result.ext.two_level.as_ref().unwrap();
+    let re = out.result.ext.two_level.as_ref().unwrap();
+    assert_eq!(re.quarter_sizes, le.quarter_sizes);
+    assert_eq!(
+        re.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+        le.level1_stats.iter().map(|st| st.iterations()).collect::<Vec<_>>(),
+    );
+    for (x, y) in re
+        .merged_centroids
+        .flat()
+        .iter()
+        .zip(le.merged_centroids.flat())
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "merged seed bits diverged");
+    }
+
+    // Session accounting.  All four shards stayed resident remotely, no
+    // recovery rung ever fired …
+    assert_eq!(out.metrics.remote_workers, 4);
+    assert_eq!(out.metrics.sessions, 4, "each connection hosted a shard");
+    assert_eq!(out.metrics.remote_shards, 4);
+    assert_eq!(out.metrics.remote_fallbacks, 0);
+    assert_eq!(out.metrics.shard_reloads, 0);
+    // … every folded iteration cost exactly one broadcast and one reduce …
+    let total_iters: u64 = local.metrics.shard_iters.iter().sum();
+    assert_eq!(out.metrics.centroid_bcasts, total_iters);
+    assert_eq!(out.metrics.partials_rx, total_iters);
+    // … and the steady-state traffic is real but dwarfed by the one-time
+    // shard uploads (remote_bytes includes the LoadShard frames).
+    assert!(out.metrics.session_bytes_tx > 0);
+    assert!(out.metrics.session_bytes_rx > 0);
+    assert!(
+        out.metrics.session_bytes_tx < out.metrics.remote_bytes_tx,
+        "per-iteration bytes ({}) should be a fraction of total tx ({})",
+        out.metrics.session_bytes_tx,
+        out.metrics.remote_bytes_tx
+    );
+    // The folded iterations streamed the same live counters the local
+    // observers would have.
+    assert_eq!(out.metrics.shard_iters, local.metrics.shard_iters);
+    assert_eq!(out.metrics.shard_dist_evals, local.metrics.shard_dist_evals);
+    assert_eq!(out.metrics.observed_iters, local.metrics.observed_iters);
+    // All-local runs report a zeroed session section.
+    assert_eq!(local.metrics.sessions, 0);
+    assert_eq!(local.metrics.centroid_bcasts, 0);
+
+    w1.shutdown().unwrap();
+    w2.shutdown().unwrap();
+}
+
+#[test]
+fn resident_budget_refusal_falls_back_local_with_identical_results() {
+    let s = generate_params(2400, 3, 4, 0.2, 1.0, 7);
+    let spec = KmeansSpec::two_level(4).seed(3).shards(2);
+    let local = Coordinator::new(Backend::Cpu).run(&s.data, &spec);
+
+    // A worker whose resident budget can't hold even one shard refuses
+    // every LoadShard (ERR_RESIDENT_LIMIT); the driver falls back to
+    // local stepping and the results are unaffected.
+    let w = WorkerServer::spawn_with_resident_limit("127.0.0.1:0", 64).unwrap();
+    let out = Coordinator::new(Backend::Cpu)
+        .with_session(true)
+        .with_remotes(RemoteShardPool::new(vec![w.addr().to_string()]))
+        .run(&s.data, &spec);
+
+    assert_bitwise_equal(&out.result, &local.result);
+    assert_eq!(out.metrics.remote_workers, 1, "the handshake succeeded");
+    assert_eq!(out.metrics.sessions, 0, "nothing went resident");
+    assert_eq!(out.metrics.remote_shards, 0);
+    assert_eq!(out.metrics.remote_fallbacks, 2, "both shards fell back");
+    assert_eq!(out.metrics.centroid_bcasts, 0);
+    assert_eq!(out.metrics.partials_rx, 0);
+
+    w.shutdown().unwrap();
+}
+
+/// Drive the raw v3 conversation over a bare socket: the error space a
+/// session peer can hit (step without residency, corrupt upload, budget
+/// refusal), the idempotent Release, and EndSession leaving the
+/// connection serviceable.
+#[test]
+fn raw_session_protocol_semantics() {
+    let w = WorkerServer::spawn_with_resident_limit("127.0.0.1:0", 1 << 20).unwrap();
+    let mut conn = TcpStream::connect(w.addr()).unwrap();
+    Message::Hello {
+        version: PROTOCOL_VERSION,
+    }
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::HelloAck { version } => assert_eq!(version, PROTOCOL_VERSION),
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+
+    let data = Dataset::from_flat(6, 2, vec![
+        0.0, 0.0, 0.1, 0.1, 0.2, 0.0, 5.0, 5.0, 5.1, 5.1, 5.0, 5.2,
+    ]);
+    let checksum = dataset_checksum(&data);
+
+    // Stepping a shard that was never loaded is a clean protocol error.
+    Message::Centroids(Box::new(CentroidsFrame {
+        shard: 0,
+        iter: 0,
+        centroids: Dataset::from_flat(2, 2, vec![0.0, 0.0, 5.0, 5.0]),
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Error { code, .. } => assert_eq!(code, ERR_NO_SHARD),
+        other => panic!("expected ERR_NO_SHARD, got {other:?}"),
+    }
+
+    // A corrupt upload (checksum mismatch) is refused without residency.
+    Message::LoadShard(Box::new(LoadShardFrame {
+        shard: 0,
+        metric: Metric::Euclid,
+        checksum: checksum ^ 0xDEAD_BEEF,
+        data: data.clone(),
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Error { code, .. } => assert_eq!(code, ERR_BAD_CHECKSUM),
+        other => panic!("expected ERR_BAD_CHECKSUM, got {other:?}"),
+    }
+
+    // The honest upload is acked with the checksum echoed.
+    Message::LoadShard(Box::new(LoadShardFrame {
+        shard: 0,
+        metric: Metric::Euclid,
+        checksum,
+        data: data.clone(),
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::LoadAck { shard, checksum: ack } => {
+            assert_eq!(shard, 0);
+            assert_eq!(ack, checksum);
+        }
+        other => panic!("expected LoadAck, got {other:?}"),
+    }
+
+    // A second shard that would blow the 1 MiB budget is refused while
+    // shard 0 stays resident.
+    let big_n = 40_000; // 40k × 2 dims × 4 B × 3 copies ≫ 1 MiB
+    let big = Dataset::from_flat(big_n, 2, vec![0.5; big_n * 2]);
+    Message::LoadShard(Box::new(LoadShardFrame {
+        shard: 1,
+        metric: Metric::Euclid,
+        checksum: dataset_checksum(&big),
+        data: big,
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Error { code, .. } => assert_eq!(code, ERR_RESIDENT_LIMIT),
+        other => panic!("expected ERR_RESIDENT_LIMIT, got {other:?}"),
+    }
+
+    // Stepping the resident shard yields shaped partials: k sums rows,
+    // k counts summing to n.
+    Message::Centroids(Box::new(CentroidsFrame {
+        shard: 0,
+        iter: 0,
+        centroids: Dataset::from_flat(2, 2, vec![0.0, 0.0, 5.0, 5.0]),
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Partials(p) => {
+            assert_eq!(p.shard, 0);
+            assert_eq!(p.iter, 0);
+            assert_eq!(p.sums.len(), 2);
+            assert_eq!(p.sums.dims(), 2);
+            assert_eq!(p.counts.len(), 2);
+            assert_eq!(p.counts.iter().sum::<u32>(), 6);
+        }
+        other => panic!("expected Partials, got {other:?}"),
+    }
+
+    // Release is acked — and idempotent, so a retried Release after a
+    // reconnect can never error.
+    for _ in 0..2 {
+        Message::Release { shard: 0 }.write_to(&mut conn).unwrap();
+        match Message::read_from(&mut conn).unwrap().0 {
+            Message::Released { shard } => assert_eq!(shard, 0),
+            other => panic!("expected Released, got {other:?}"),
+        }
+    }
+
+    // EndSession has no reply and keeps the connection serving: a Ping
+    // still answers, and the released shard is gone.
+    Message::EndSession.write_to(&mut conn).unwrap();
+    Message::Ping.write_to(&mut conn).unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Pong => {}
+        other => panic!("expected Pong, got {other:?}"),
+    }
+    Message::Centroids(Box::new(CentroidsFrame {
+        shard: 0,
+        iter: 1,
+        centroids: Dataset::from_flat(2, 2, vec![0.0, 0.0, 5.0, 5.0]),
+    }))
+    .write_to(&mut conn)
+    .unwrap();
+    match Message::read_from(&mut conn).unwrap().0 {
+        Message::Error { code, .. } => assert_eq!(code, ERR_NO_SHARD),
+        other => panic!("expected ERR_NO_SHARD after EndSession, got {other:?}"),
+    }
+
+    drop(conn);
+    w.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// CLI contract
+// ---------------------------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_muchswift"))
+}
+
+#[test]
+fn cluster_session_flag_is_validated_and_runs_all_local() {
+    // --session outside the two-level coordinator path is refused.
+    let out = bin()
+        .args([
+            "cluster", "--n", "200", "--d", "2", "--k", "2", "--algo", "lloyd",
+            "--session",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--session"), "{err}");
+
+    // On the coordinator path it works with no remotes at all (pure
+    // local lockstep) and reports a zeroed session section.
+    let dir = std::env::temp_dir().join(format!(
+        "muchswift_session_cli_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let report = dir.join("BENCH_session_test.json");
+    let out = bin()
+        .args([
+            "cluster", "--n", "2000", "--d", "3", "--k", "4", "--backend", "cpu",
+            "--session",
+            "--report", report.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("session plane"), "{stdout}");
+    let text = std::fs::read_to_string(&report).unwrap();
+    assert!(text.contains("\"sessions\":0"), "{text}");
+    assert!(text.contains("\"centroid_bcasts\":0"), "{text}");
+    assert!(text.contains("\"remote_fallbacks\":0"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -338,6 +338,12 @@ fn cluster_binary_survives_a_dead_remote_and_reports_the_fallback() {
         "remote_failed_endpoints",
         "remote_bytes_tx",
         "remote_bytes_rx",
+        "sessions",
+        "centroid_bcasts",
+        "partials_rx",
+        "session_bytes_tx",
+        "session_bytes_rx",
+        "shard_reloads",
     ] {
         assert!(text.contains(&format!("\"{key}\"")), "report lacks {key}: {text}");
     }

@@ -1,0 +1,26 @@
+//! Fixture: a message-kind constant (`KIND_ROGUE`) declared but wired
+//! into neither the encode path, nor the decode path, nor the frame
+//! property suite.  `protocol-exhaustiveness` must fire three times.
+
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_JOB: u8 = 2;
+pub const KIND_ROGUE: u8 = 3;
+
+pub fn encode(kind: u8) -> Vec<u8> {
+    match kind {
+        k if k == KIND_HELLO => vec![KIND_HELLO],
+        _ => encode_job(),
+    }
+}
+
+pub fn encode_job() -> Vec<u8> {
+    vec![KIND_JOB]
+}
+
+pub fn decode(buf: &[u8]) -> Option<u8> {
+    match buf.first().copied() {
+        Some(k) if k == KIND_HELLO => Some(KIND_HELLO),
+        Some(k) if k == KIND_JOB => Some(KIND_JOB),
+        _ => None,
+    }
+}

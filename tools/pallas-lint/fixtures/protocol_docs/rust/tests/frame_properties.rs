@@ -1,0 +1,8 @@
+//! Fixture property suite: pins the two wired kinds; the rogue constant
+//! is deliberately absent so the lint's third check fires.
+
+#[test]
+fn kinds_round_trip() {
+    assert_eq!(KIND_HELLO, 1);
+    assert_eq!(KIND_JOB, 2);
+}

@@ -492,6 +492,11 @@ fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
 /// without all three is exactly the cross-layer skew that shipped the
 /// paper's co-design contract: the constant compiles, the match arms
 /// silently `_ =>` it away, and the first hostile peer finds out.
+///
+/// When the tree carries a top-level `DESIGN.md` (the real repo always
+/// does; code-only fixtures need not), every kind must also appear in
+/// its wire table — the human contract rots just as silently as the
+/// match arms, and a kind nobody documented is a kind nobody reviews.
 pub fn rule_protocol_exhaustiveness(root: &Path) -> Vec<Violation> {
     let mut out = Vec::new();
     let proto = match Source::load(root, PROTOCOL_RS) {
@@ -576,6 +581,17 @@ pub fn rule_protocol_exhaustiveness(root: &Path) -> Vec<Violation> {
                 RULE_PROTOCOL,
                 format!("{kind} is not pinned by {FRAME_PROPS_RS}"),
             ));
+        }
+    }
+    if let Ok(design) = fs::read_to_string(root.join("DESIGN.md")) {
+        for (kind, li) in &kinds {
+            if !has_token(&design, kind) {
+                out.push(proto.violation(
+                    *li,
+                    RULE_PROTOCOL,
+                    format!("{kind} is missing from DESIGN.md's wire table"),
+                ));
+            }
         }
     }
     out

@@ -36,6 +36,21 @@ fn protocol_rule_fires_on_rogue_kind() {
 }
 
 #[test]
+fn protocol_rule_fires_on_undocumented_kind() {
+    // Same rogue-kind tree, but this one carries a DESIGN.md whose wire
+    // table documents every kind except the rogue: the docs-side check
+    // must add exactly one violation to the three code-side gaps.
+    let v = rule_protocol_exhaustiveness(&fixture("protocol_docs"));
+    assert_eq!(v.len(), 4, "expected encode+decode+pin+docs gaps:\n{}", render(&v));
+    assert!(v.iter().all(|x| x.msg.contains("KIND_ROGUE")), "{}", render(&v));
+    assert!(
+        v.iter().any(|x| x.msg.contains("DESIGN.md")),
+        "the docs gap must fire:\n{}",
+        render(&v)
+    );
+}
+
+#[test]
 fn metrics_rule_fires_on_ghost_counter() {
     let v = rule_metrics_parity(&fixture("metrics"));
     assert_eq!(v.len(), 2, "expected summary+JSON gaps:\n{}", render(&v));

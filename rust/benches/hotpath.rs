@@ -18,7 +18,9 @@
 use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic::generate_params;
 use muchswift::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
-use muchswift::kmeans::filtering::{self, CpuPanels, FilterScratch, ParCpuPanels};
+use muchswift::kmeans::filtering::{
+    self, CpuPanels, FilterScratch, KernelKind, ParCpuPanels, QuantPanels,
+};
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
 use muchswift::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
@@ -131,6 +133,45 @@ fn main() {
         let mut scalar_panels = CpuPanels;
         results.push(b.run(&format!("panel_dense_{jobs_n}j_k20_scalar"), || {
             scalar_panels.panels(&jobs, &init, Metric::Euclid, &mut out);
+        }));
+    }
+
+    // Kernel-tier isolation: the same dense candidate panel at widths
+    // straddling the vector lanes (d ∈ {8, 16, 64, 128}), one thread, one
+    // entry per tier.  CI's bench-smoke gate reads the `kernel_simd_d*`
+    // vs `kernel_blocked_d*` medians and fails below 2x at d >= 16.  On a
+    // host without AVX2/FMA or NEON `with_kind` demotes SIMD to blocked,
+    // so the entries still exist (the gate, not the bench, is x86-only).
+    for kd in [8usize, 16, 64, 128] {
+        let kn = (n / 20).max(1);
+        let ks = generate_params(kn, kd, k, 0.15, 1.0, 7 + kd as u64);
+        let kcents = init_centroids(&ks.data, k, Init::UniformSample, Metric::Euclid, 11);
+        let mut jobs = PanelJobs::new();
+        jobs.clear(kd);
+        let cands: Vec<u32> = (0..k as u32).collect();
+        for j in 0..kn {
+            jobs.push(ks.data.point(j), &cands);
+        }
+        let mut out = PanelSet::new();
+        let mut scalar = CpuPanels;
+        scalar.begin_pass(&kcents, Metric::Euclid);
+        results.push(quick.run(&format!("kernel_scalar_d{kd}_k20"), || {
+            scalar.panels(&jobs, &kcents, Metric::Euclid, &mut out);
+        }));
+        let mut blocked = ParCpuPanels::with_kind(1, KernelKind::Blocked);
+        blocked.begin_pass(&kcents, Metric::Euclid);
+        results.push(quick.run(&format!("kernel_blocked_d{kd}_k20"), || {
+            blocked.panels(&jobs, &kcents, Metric::Euclid, &mut out);
+        }));
+        let mut simd = ParCpuPanels::with_kind(1, KernelKind::Simd);
+        simd.begin_pass(&kcents, Metric::Euclid);
+        results.push(quick.run(&format!("kernel_simd_d{kd}_k20"), || {
+            simd.panels(&jobs, &kcents, Metric::Euclid, &mut out);
+        }));
+        let mut quant = QuantPanels::new();
+        quant.begin_pass(&kcents, Metric::Euclid);
+        results.push(quick.run(&format!("kernel_simd_i8_d{kd}_k20"), || {
+            quant.panels(&jobs, &kcents, Metric::Euclid, &mut out);
         }));
     }
 

@@ -125,6 +125,11 @@ fn scale_stats(stats: &RunStats, f: f64) -> RunStats {
         iters: stats.iters.iter().map(|it| scale_iter(it, f)).collect(),
         converged: stats.converged,
         early_stopped: stats.early_stopped,
+        // Kernel-tier telemetry: the lane gauge is scale-invariant, the
+        // candidate counters scale with the subsampled workload.
+        simd_lanes: stats.simd_lanes,
+        quantized_candidates: (stats.quantized_candidates as f64 * f) as u64,
+        rescored_candidates: (stats.rescored_candidates as f64 * f) as u64,
     }
 }
 

@@ -37,7 +37,7 @@ pub use offload::{Backend, OffloadService};
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
 use crate::kmeans::init::init_centroids;
-use crate::kmeans::panel::{CpuPanels, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
+use crate::kmeans::panel::{CpuPanels, KernelKind, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
 use crate::kmeans::remote::{run_session, RemoteShardPool, RemoteWorker, RetryPolicy, WireCounters};
 use crate::kmeans::shard::{self, ShardExecutor, ShardPartial, ShardPlan};
 use crate::kmeans::solver::{
@@ -246,25 +246,44 @@ impl Coordinator {
         self
     }
 
-    /// Panel backend for one level-1 worker (runs on that worker's thread).
-    fn worker_panels(&self, local_stats: &Arc<OffloadStats>) -> SystemPanels {
-        match &self.service {
-            Some(svc) => SystemPanels::Remote(offload::RemotePanels {
+    /// Panel backend for one level-1 worker (runs on that worker's
+    /// thread).  The spec's kernel tier, when pinned, overrides the
+    /// scalar-oracle default (which stays bitwise the remote workers').
+    fn worker_panels(
+        &self,
+        kernel: Option<KernelKind>,
+        local_stats: &Arc<OffloadStats>,
+    ) -> SystemPanels {
+        match (&self.service, kernel) {
+            (Some(svc), _) => SystemPanels::Remote(offload::RemotePanels {
                 handle: svc.handle(),
             }),
-            None => SystemPanels::LocalScalar(CpuPanels, Arc::clone(local_stats)),
+            (None, Some(kind)) => SystemPanels::LocalPar(
+                ParCpuPanels::with_kind(1, kind),
+                Arc::clone(local_stats),
+            ),
+            (None, None) => SystemPanels::LocalScalar(CpuPanels, Arc::clone(local_stats)),
         }
     }
 
     /// Panel backend for the single-threaded level-2 phase: on CPU it
-    /// fans the panel arithmetic across `workers` threads.
-    fn level2_panels(&self, workers: usize, local_stats: &Arc<OffloadStats>) -> SystemPanels {
+    /// fans the panel arithmetic across `workers` threads (scalar tier
+    /// unless the spec pins a kernel).
+    fn level2_panels(
+        &self,
+        workers: usize,
+        kernel: Option<KernelKind>,
+        local_stats: &Arc<OffloadStats>,
+    ) -> SystemPanels {
         match &self.service {
             Some(svc) => SystemPanels::Remote(offload::RemotePanels {
                 handle: svc.handle(),
             }),
             None => SystemPanels::LocalPar(
-                ParCpuPanels::scalar(workers),
+                match kernel {
+                    Some(kind) => ParCpuPanels::with_kind(workers, kind),
+                    None => ParCpuPanels::scalar(workers),
+                },
                 Arc::clone(local_stats),
             ),
         }
@@ -383,7 +402,7 @@ impl Coordinator {
                 pullers.push(Puller {
                     primary: Box::new(w),
                     fallback: Some(LocalShardExec {
-                        panels: self.worker_panels(&local_stats),
+                        panels: self.worker_panels(spec.kernel, &local_stats),
                     }),
                     remote: true,
                     alternates,
@@ -394,7 +413,7 @@ impl Coordinator {
                 // resets it between shards).
                 pullers.push(Puller {
                     primary: Box::new(LocalShardExec {
-                        panels: self.worker_panels(&local_stats),
+                        panels: self.worker_panels(spec.kernel, &local_stats),
                     }),
                     fallback: None,
                     remote: false,
@@ -591,7 +610,7 @@ impl Coordinator {
         m.combine_s = sw.lap();
 
         // ---- Level 2 ----------------------------------------------------------
-        let panels = self.level2_panels(spec.workers, &local_stats);
+        let panels = self.level2_panels(spec.workers, spec.kernel, &local_stats);
         let l2spec = spec
             .clone()
             .algo(Algo::FilterBatched)

@@ -51,7 +51,10 @@ use super::{
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
 
-pub use super::panel::{CpuPanels, PanelBackend, PanelKernel, ParCpuPanels};
+pub use super::panel::quant::QuantPanels;
+pub use super::panel::{
+    CpuPanels, KernelKind, KernelStats, PanelBackend, PanelKernel, ParCpuPanels,
+};
 
 /// Options shared by both engines.
 #[derive(Clone, Debug)]
@@ -505,6 +508,12 @@ fn run_impl<B: PanelBackend>(
     let mut centroids = init.clone();
     let mut assignments = vec![0u32; data.len()];
     let mut stats = RunStats::default();
+    // Kernel-tier counters are lifetime-monotonic on the backend; delta
+    // against this snapshot at the end gives this run's share.
+    let kernel_before = backend
+        .as_deref_mut()
+        .map(|b| b.kernel_stats())
+        .unwrap_or_default();
     // One arena set for the whole run — recycled every iteration.
     let mut scratch = FilterScratch::new();
 
@@ -538,6 +547,13 @@ fn run_impl<B: PanelBackend>(
             stats.early_stopped = true;
             break;
         }
+    }
+
+    if let Some(b) = backend.as_deref_mut() {
+        let delta = b.kernel_stats().delta_from(&kernel_before);
+        stats.simd_lanes = delta.simd_lanes;
+        stats.quantized_candidates = delta.quantized_candidates;
+        stats.rescored_candidates = delta.rescored_candidates;
     }
 
     KmeansResult {

@@ -154,6 +154,15 @@ pub struct RunStats {
     /// An [`IterObserver`] (or raw hook) requested a stop before the
     /// convergence test fired; mutually exclusive with `converged`.
     pub early_stopped: bool,
+    /// f32 lanes per vector op of the panel backend's kernel tier
+    /// (8 = AVX2, 4 = NEON, 0 = scalar/blocked).  Local-process telemetry;
+    /// not carried on the remote wire (decodes as 0).
+    pub simd_lanes: u32,
+    /// Candidates scored through the reduced-precision (i8) shortlist
+    /// path during this run.  Local-process telemetry, like `simd_lanes`.
+    pub quantized_candidates: u64,
+    /// Quantized candidates re-scored in exact f32 (shortlist survivors).
+    pub rescored_candidates: u64,
 }
 
 impl RunStats {

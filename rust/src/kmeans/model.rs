@@ -188,7 +188,7 @@ impl KmeansModel {
 }
 
 fn spec_to_json(spec: &KmeansSpec) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("algo", Json::str(spec.algo.name())),
         ("k", Json::num(spec.k as f64)),
         ("metric", Json::str(spec.metric.name())),
@@ -202,7 +202,13 @@ fn spec_to_json(spec: &KmeansSpec) -> Json {
         ("seed", Json::str(spec.seed.to_string())),
         ("workers", Json::num(spec.workers as f64)),
         ("track_cost", Json::Bool(spec.track_cost)),
-    ])
+    ];
+    // `kernel` is additive like `shards`: written only when the spec pins
+    // a tier, so documents from pre-kernel builds stay byte-identical.
+    if let Some(kind) = spec.kernel {
+        fields.push(("kernel", Json::str(kind.name())));
+    }
+    Json::obj(fields)
 }
 
 fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
@@ -232,7 +238,7 @@ fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
             .ok_or_else(|| anyhow::anyhow!("spec field `shards` must be a positive integer"))?,
         None => crate::kmeans::shard::DEFAULT_SHARDS,
     };
-    Ok(KmeansSpec::new(req_usize("k")?)
+    let mut spec = KmeansSpec::new(req_usize("k")?)
         .algo(req_str("algo")?.parse()?)
         .metric(req_str("metric")?.parse()?)
         .tol(tol)
@@ -243,7 +249,19 @@ fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
         .shards(shards)
         .seed(seed)
         .workers(req_usize("workers")?)
-        .track_cost(j.req("track_cost")?.as_bool().unwrap_or(false)))
+        .track_cost(j.req("track_cost")?.as_bool().unwrap_or(false));
+    // Absent `kernel` means "legacy default", not an error: the key only
+    // exists in documents whose spec pinned a tier explicitly.
+    if let Some(v) = j.get("kernel") {
+        let name = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("spec field `kernel` must be a string"))?;
+        let kind = name
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad spec kernel: {e}"))?;
+        spec = spec.kernel(kind);
+    }
+    Ok(spec)
 }
 
 fn train_to_json(t: &TrainStats) -> Json {
@@ -364,6 +382,25 @@ mod tests {
         assert_eq!(back.spec.shards, 4);
         // Zero shards is rejected, not deferred to a later panic.
         let doc = model.to_json().to_string().replace("\"shards\":16,", "\"shards\":0,");
+        assert!(KmeansModel::from_json(&Json::parse(&doc).unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_round_trips_and_is_optional() {
+        use crate::kmeans::panel::KernelKind;
+        let (_, mut model) = fitted(Metric::Euclid);
+        // Default specs carry no `kernel` key at all (additive format).
+        assert!(!model.to_json().to_string().contains("kernel"));
+        let back =
+            KmeansModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.spec.kernel, None);
+        // A pinned tier survives the round trip.
+        model.spec.kernel = Some(KernelKind::Simd);
+        let back =
+            KmeansModel::from_json(&Json::parse(&model.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.spec.kernel, Some(KernelKind::Simd));
+        // Unknown tiers are rejected at load, not deferred to a panic.
+        let doc = model.to_json().to_string().replace("\"kernel\":\"simd\"", "\"kernel\":\"warp\"");
         assert!(KmeansModel::from_json(&Json::parse(&doc).unwrap()).is_err());
     }
 

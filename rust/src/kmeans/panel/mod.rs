@@ -29,9 +29,21 @@
 //!   loops (the shape the autovectorizer turns into SIMD).  The blocked
 //!   kernel matches the scalar one to f32 rounding (≤ ~1e-4 relative),
 //!   which the property tests in `tests/panel_engine.rs` enforce.
+//! - [`PanelKernel::Simd`] upgrades the blocked kernel's inner loops to
+//!   explicit `core::arch` intrinsics ([`simd`]: AVX2/FMA on x86-64, NEON
+//!   on aarch64), runtime-detected once per process; see [`KernelKind`]
+//!   for the user-facing dispatch seam.
+//! - [`quant::QuantPanels`] — the reduced-precision shortlist backend
+//!   mirroring the paper's fixed-point PL arithmetic: i8-quantized
+//!   centroid panels score every candidate cheaply, survivors are
+//!   re-scored in exact f32, so emitted *labels* stay bitwise-identical
+//!   to the scalar oracle.
 
 use super::Metric;
 use crate::data::Dataset;
+
+pub mod quant;
+pub mod simd;
 
 // ---------------------------------------------------------------------------
 // Flat batch containers
@@ -256,6 +268,46 @@ pub trait PanelBackend {
         metric: Metric,
         out: &mut PanelSet,
     );
+
+    /// Kernel-tier telemetry: lane width plus lifetime quantize/rescore
+    /// counters.  Callers that want per-run numbers snapshot before and
+    /// after and subtract ([`KernelStats::delta_from`]).  Default: all
+    /// zeros (scalar-tier backends have nothing to report).
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats::default()
+    }
+}
+
+/// Telemetry from the kernel tier of a [`PanelBackend`].
+///
+/// `simd_lanes` is a gauge (f32 lanes per vector op of the active kernel:
+/// 8 for AVX2, 4 for NEON, 0 for scalar/blocked); the candidate counters
+/// are lifetime-monotonic for the backend instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// f32 lanes per vector op in the active kernel (0 = no SIMD tier).
+    pub simd_lanes: u32,
+    /// Candidates scored through the reduced-precision (i8) path.
+    pub quantized_candidates: u64,
+    /// Quantized candidates that survived the shortlist and were
+    /// re-scored in exact f32.
+    pub rescored_candidates: u64,
+}
+
+impl KernelStats {
+    /// Counters accumulated since `earlier` (gauge fields are carried,
+    /// not subtracted).
+    pub fn delta_from(&self, earlier: &KernelStats) -> KernelStats {
+        KernelStats {
+            simd_lanes: self.simd_lanes,
+            quantized_candidates: self
+                .quantized_candidates
+                .saturating_sub(earlier.quantized_candidates),
+            rescored_candidates: self
+                .rescored_candidates
+                .saturating_sub(earlier.rescored_candidates),
+        }
+    }
 }
 
 // Forwarding impls so trait objects plug into the generic engine entry
@@ -275,6 +327,10 @@ impl<B: PanelBackend + ?Sized> PanelBackend for &mut B {
     ) {
         (**self).panels(jobs, centroids, metric, out);
     }
+
+    fn kernel_stats(&self) -> KernelStats {
+        (**self).kernel_stats()
+    }
 }
 
 impl<B: PanelBackend + ?Sized> PanelBackend for Box<B> {
@@ -291,6 +347,10 @@ impl<B: PanelBackend + ?Sized> PanelBackend for Box<B> {
     ) {
         (**self).panels(jobs, centroids, metric, out);
     }
+
+    fn kernel_stats(&self) -> KernelStats {
+        (**self).kernel_stats()
+    }
 }
 
 /// Which inner kernel fills the rows.
@@ -302,6 +362,105 @@ pub enum PanelKernel {
     /// Norm-decomposition squared-L2 / 8-wide L1 — equal to `Scalar` up to
     /// f32 rounding (≤ ~1e-4 relative), measurably faster.
     Blocked,
+    /// The blocked kernel with explicit `core::arch` inner loops
+    /// ([`simd`]): AVX2/FMA on x86-64, NEON on aarch64.  Same arithmetic
+    /// shape and tolerance contract as `Blocked`.  Only constructible
+    /// where [`simd::available`] is true — [`ParCpuPanels::with_kernel`]
+    /// demotes it to `Blocked` otherwise, and [`KernelKind::resolve`]
+    /// turns an explicit request on an unsupported host into a clean
+    /// error.
+    Simd,
+}
+
+/// The user-facing kernel-dispatch seam: what `--kernel` parses to and
+/// what [`crate::kmeans::solver::KmeansSpec`] carries.  `Scalar`/`Blocked`
+/// /`Simd` request that tier explicitly; `Auto` picks the fastest tier the
+/// host supports ([`PanelKernel::Simd`] where detected, else `Blocked`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    Scalar,
+    #[default]
+    Blocked,
+    Simd,
+    Auto,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Simd => "simd",
+            KernelKind::Auto => "auto",
+        }
+    }
+
+    pub fn all() -> [KernelKind; 4] {
+        [
+            KernelKind::Scalar,
+            KernelKind::Blocked,
+            KernelKind::Simd,
+            KernelKind::Auto,
+        ]
+    }
+
+    /// Strict resolution for explicit user requests: `Simd` on a host
+    /// without the feature set is an error (the CLI surfaces it as such),
+    /// never a silent downgrade.  `Auto` always resolves.
+    pub fn resolve(self) -> Result<PanelKernel, String> {
+        match self {
+            KernelKind::Scalar => Ok(PanelKernel::Scalar),
+            KernelKind::Blocked => Ok(PanelKernel::Blocked),
+            KernelKind::Simd => {
+                if simd::available() {
+                    Ok(PanelKernel::Simd)
+                } else {
+                    Err(format!(
+                        "kernel `simd` requested but this host has no supported \
+                         SIMD feature set ({}); use `auto` to fall back to `blocked`",
+                        simd::describe()
+                    ))
+                }
+            }
+            KernelKind::Auto => Ok(KernelKind::Auto.effective()),
+        }
+    }
+
+    /// Lenient resolution for library defaults: `Simd`/`Auto` degrade to
+    /// `Blocked` when the host lacks the feature set.
+    pub fn effective(self) -> PanelKernel {
+        match self {
+            KernelKind::Scalar => PanelKernel::Scalar,
+            KernelKind::Blocked => PanelKernel::Blocked,
+            KernelKind::Simd | KernelKind::Auto => {
+                if simd::available() {
+                    PanelKernel::Simd
+                } else {
+                    PanelKernel::Blocked
+                }
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelKind::Scalar),
+            "blocked" => Ok(KernelKind::Blocked),
+            "simd" => Ok(KernelKind::Simd),
+            "auto" => Ok(KernelKind::Auto),
+            other => Err(format!("unknown kernel `{other}` (scalar|blocked|simd|auto)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// Plain-CPU scalar panel backend (software baseline, semantic oracle).
@@ -372,7 +531,16 @@ impl ParCpuPanels {
         Self::with_kernel(workers, PanelKernel::Scalar)
     }
 
+    /// Build with an explicit kernel.  A `Simd` request on a host without
+    /// the feature set is demoted to `Blocked` (same arithmetic contract)
+    /// — `kernel()` reports the *effective* tier.  Callers that want a
+    /// hard error instead go through [`KernelKind::resolve`] first.
     pub fn with_kernel(workers: usize, kernel: PanelKernel) -> Self {
+        let kernel = if kernel == PanelKernel::Simd && !simd::available() {
+            PanelKernel::Blocked
+        } else {
+            kernel
+        };
         Self {
             workers: workers.max(1),
             kernel,
@@ -381,8 +549,15 @@ impl ParCpuPanels {
         }
     }
 
+    /// Build from the user-facing dispatch seam (lenient: `Simd`/`Auto`
+    /// degrade to `Blocked` off-host).
+    pub fn with_kind(workers: usize, kind: KernelKind) -> Self {
+        Self::with_kernel(workers, kind.effective())
+    }
+
     fn needs_cnorms(&self, metric: Metric) -> bool {
-        self.kernel == PanelKernel::Blocked && metric == Metric::Euclid
+        matches!(self.kernel, PanelKernel::Blocked | PanelKernel::Simd)
+            && metric == Metric::Euclid
     }
 
     fn compute_cnorms(&mut self, centroids: &Dataset) {
@@ -397,6 +572,7 @@ impl ParCpuPanels {
         self.workers
     }
 
+    /// The *effective* kernel (a demoted `Simd` request reads `Blocked`).
     pub fn kernel(&self) -> PanelKernel {
         self.kernel
     }
@@ -489,6 +665,18 @@ impl PanelBackend for ParCpuPanels {
             }
         });
     }
+
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats {
+            simd_lanes: if self.kernel == PanelKernel::Simd {
+                simd::lanes()
+            } else {
+                0
+            },
+            quantized_candidates: 0,
+            rescored_candidates: 0,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -529,6 +717,12 @@ fn fill_range(
                 for (slot, &c) in cands.iter().enumerate() {
                     row[slot] = l1_8(q, centroids.point(c as usize));
                 }
+            }
+            (PanelKernel::Simd, Metric::Euclid) => {
+                simd::euclid_row(q, centroids, cands, cnorms, row);
+            }
+            (PanelKernel::Simd, Metric::Manhattan) => {
+                simd::l1_row(q, centroids, cands, row);
             }
         }
     }

@@ -1,0 +1,401 @@
+//! Reduced-precision shortlist backend — the software analogue of the
+//! paper's fixed-point PL distance datapath.
+//!
+//! [`QuantPanels`] scores every (job, candidate) pair through an
+//! **i8-quantized** copy of the centroid panel (per-centroid scale /
+//! zero-point for squared-L2, one global scale for L1, built once per
+//! [`PanelBackend::begin_pass`]), derives a *provable* per-candidate
+//! error bound, and only re-scores the candidates whose approximate
+//! interval can still contain the minimum — in exact f32, through the
+//! same [`Metric::dist`] the scalar oracle uses.
+//!
+//! ## Why emitted labels stay bitwise-identical to the scalar oracle
+//!
+//! Every consumer of panel rows (the batched filtering engine, the
+//! predictor, the serve tier) takes a **first-wins argmin** over each
+//! row.  `QuantPanels` writes:
+//!
+//! - **survivors** (`approx − bound ≤ min(approx + bound)`): the exact
+//!   scalar-oracle distance;
+//! - **non-survivors**: `approx + bound`, which is *strictly greater*
+//!   than the row's true minimum (proof: for a non-survivor `ns`,
+//!   `approx_ns − bound_ns > m = min_c(approx_c + bound_c)`, and the true
+//!   nearest `t` has `dist_t ≤ approx_c + bound_c` for every `c`, hence
+//!   `dist_t ≤ m < approx_ns + bound_ns`).
+//!
+//! So the row's first-wins argmin lands on the lowest-index *exact*
+//! minimizer: any candidate exactly tied with the minimum satisfies
+//! `approx − bound ≤ dist = dist_t ≤ m`, i.e. ties always survive and are
+//! compared by their exact values — the oracle's lowest-index tie rule is
+//! preserved.  The winner's row value is the exact distance, so scored
+//! predictions are exact too.  `tests/model_predict.rs` pins this
+//! bitwise, tie cases included.
+//!
+//! ## Error budget
+//!
+//! With per-centroid scale `s_c = max_j|c_j − zp_c| / 127` and symmetric
+//! query scale `s_q = max_j|q_j| / 127`, each reconstructed coordinate is
+//! off by at most half a quantization step, giving
+//! `|q·c − q'·c'| ≤ (s_c/2)·Σ|q_j| + (s_q/2)·Σ|c'_j|` for the L2 cross
+//! term (doubled in the distance) and `Σ|q−c|` off by at most `d·s` for
+//! L1.  The implemented bound inflates the analytic value by 6.25% and
+//! adds a `1e-4`-relative float-rounding cushion (the norm decomposition
+//! itself rounds at ~`d·2⁻²⁴` relative, two orders below the cushion), so
+//! quantization can only ever *widen* the shortlist, never corrupt the
+//! argmin.
+
+use super::{dot8, KernelStats, PanelBackend, PanelJobs, PanelSet};
+use crate::data::Dataset;
+use crate::kmeans::Metric;
+
+/// Relative float-rounding cushion added to every bound (the analytic
+/// quantization bound is exact in real arithmetic; this covers the f32
+/// evaluation of both the bound and the `‖q‖²−2q·c+‖c‖²` decomposition).
+const REL_SLACK: f32 = 1e-4;
+/// Multiplicative inflation of the analytic quantization bound.
+const BOUND_INFLATE: f32 = 1.0625;
+/// Manhattan queries whose quantized magnitude would exceed this are
+/// scored exactly instead (saturating f32→i32 casts would break the
+/// error bound); ~never hit outside adversarial inputs.
+const L1_Q_LIMIT: f32 = 1e8;
+
+/// i8-shortlist panel backend: quantized scoring + exact re-scoring.
+///
+/// Single-threaded by design — it is the predictor/serve tier's cheap
+/// scoring path (each serve dispatcher owns one), and an opt-in solver
+/// backend via `SolverCtx::with_backend`.
+#[derive(Clone, Debug, Default)]
+pub struct QuantPanels {
+    d: usize,
+    /// k×d quantized centroid panel.
+    qc: Vec<i8>,
+    /// Per-centroid scale (L2) or `[global]` scale (L1).
+    scale: Vec<f32>,
+    /// Per-centroid zero point (L2 only).
+    zp: Vec<f32>,
+    /// Per-centroid Σ|c'_j| of the *reconstructed* centroid (L2 bound).
+    l1rec: Vec<f32>,
+    /// Per-centroid ‖c‖² for the decomposition (approximate use only).
+    cn: Vec<f32>,
+    /// Identity of the centroid buffer the tables were built for.
+    key: Option<(usize, usize, Metric)>,
+    // Per-job scratch (recycled).
+    qq: Vec<i32>,
+    approx: Vec<f32>,
+    bound: Vec<f32>,
+    // Lifetime counters (see `KernelStats`).
+    quantized: u64,
+    rescored: u64,
+}
+
+fn centroid_key(centroids: &Dataset, metric: Metric) -> (usize, usize, Metric) {
+    (
+        centroids.flat().as_ptr() as usize,
+        centroids.flat().len(),
+        metric,
+    )
+}
+
+impl QuantPanels {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Candidates scored through the i8 path so far (lifetime counter).
+    pub fn quantized_candidates(&self) -> u64 {
+        self.quantized
+    }
+
+    /// Shortlist survivors re-scored in exact f32 so far.
+    pub fn rescored_candidates(&self) -> u64 {
+        self.rescored
+    }
+
+    fn build_tables(&mut self, centroids: &Dataset, metric: Metric) {
+        let d = centroids.dims();
+        let k = centroids.len();
+        self.d = d;
+        self.qc.clear();
+        self.qc.reserve(k * d);
+        self.scale.clear();
+        self.zp.clear();
+        self.l1rec.clear();
+        self.cn.clear();
+        match metric {
+            Metric::Euclid => {
+                for c in centroids.iter() {
+                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                    for &x in c {
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    let zp = 0.5 * (lo + hi);
+                    let half = (hi - zp).max(zp - lo).max(0.0);
+                    let s = if half > 0.0 { half / 127.0 } else { 1.0 };
+                    let mut l1 = 0.0f32;
+                    for &x in c {
+                        let q = ((x - zp) / s).round().clamp(-127.0, 127.0) as i8;
+                        self.qc.push(q);
+                        l1 += (zp + s * q as f32).abs();
+                    }
+                    self.scale.push(s);
+                    self.zp.push(zp);
+                    self.l1rec.push(l1);
+                    self.cn.push(dot8(c, c));
+                }
+            }
+            Metric::Manhattan => {
+                let mut max_abs = 0.0f32;
+                for &x in centroids.flat() {
+                    max_abs = max_abs.max(x.abs());
+                }
+                let s = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+                self.scale.push(s);
+                for &x in centroids.flat() {
+                    self.qc.push((x / s).round().clamp(-127.0, 127.0) as i8);
+                }
+            }
+        }
+        self.key = Some(centroid_key(centroids, metric));
+    }
+}
+
+impl PanelBackend for QuantPanels {
+    fn begin_pass(&mut self, centroids: &Dataset, metric: Metric) {
+        self.key = None;
+        self.build_tables(centroids, metric);
+    }
+
+    fn panels(
+        &mut self,
+        jobs: &PanelJobs,
+        centroids: &Dataset,
+        metric: Metric,
+        out: &mut PanelSet,
+    ) {
+        out.reset_from(jobs);
+        if jobs.is_empty() {
+            return;
+        }
+        if self.key != Some(centroid_key(centroids, metric)) {
+            self.build_tables(centroids, metric);
+        }
+        let d = self.d;
+        for j in 0..jobs.len() {
+            let q = jobs.mid(j);
+            let cands = jobs.cands(j);
+            let row = out.row_mut(j);
+            self.quantized += cands.len() as u64;
+
+            self.approx.clear();
+            self.bound.clear();
+            match metric {
+                Metric::Euclid => {
+                    // Symmetric query quantization.
+                    let mut max_abs = 0.0f32;
+                    let mut l1q = 0.0f32;
+                    for &x in q {
+                        max_abs = max_abs.max(x.abs());
+                        l1q += x.abs();
+                    }
+                    let sq = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+                    self.qq.clear();
+                    let mut sum_q: i32 = 0;
+                    for &x in q {
+                        let v = (x / sq).round().clamp(-127.0, 127.0) as i32;
+                        sum_q += v;
+                        self.qq.push(v);
+                    }
+                    let qn = dot8(q, q);
+                    for &c in cands {
+                        let ci = c as usize;
+                        let crow = &self.qc[ci * d..ci * d + d];
+                        let mut dot: i32 = 0;
+                        for (a, &b) in self.qq.iter().zip(crow) {
+                            dot += a * b as i32;
+                        }
+                        let sc = self.scale[ci];
+                        let cross = sq * self.zp[ci] * sum_q as f32 + sq * sc * dot as f32;
+                        let approx = qn - 2.0 * cross + self.cn[ci];
+                        let bound = (sc * l1q + sq * self.l1rec[ci]) * BOUND_INFLATE
+                            + REL_SLACK * (qn + self.cn[ci] + 1.0);
+                        self.approx.push(approx);
+                        self.bound.push(bound);
+                    }
+                }
+                Metric::Manhattan => {
+                    let s = self.scale[0];
+                    let mut max_abs = 0.0f32;
+                    for &x in q {
+                        max_abs = max_abs.max(x.abs());
+                    }
+                    if max_abs / s > L1_Q_LIMIT {
+                        // Saturation hazard: score everything exactly.
+                        for _ in cands {
+                            self.approx.push(0.0);
+                            self.bound.push(f32::INFINITY);
+                        }
+                    } else {
+                        self.qq.clear();
+                        for &x in q {
+                            self.qq.push((x / s).round() as i32);
+                        }
+                        for &c in cands {
+                            let ci = c as usize;
+                            let crow = &self.qc[ci * d..ci * d + d];
+                            let mut sad: i64 = 0;
+                            for (a, &b) in self.qq.iter().zip(crow) {
+                                sad += (a - b as i32).unsigned_abs() as i64;
+                            }
+                            let approx = s * sad as f32;
+                            let bound = s * d as f32 * BOUND_INFLATE + REL_SLACK * approx + 1e-6;
+                            self.approx.push(approx);
+                            self.bound.push(bound);
+                        }
+                    }
+                }
+            }
+
+            // Shortlist: a candidate survives iff its interval can still
+            // contain the minimum.
+            let mut m = f32::INFINITY;
+            for (a, b) in self.approx.iter().zip(self.bound.iter()) {
+                m = m.min(a + b);
+            }
+            for (slot, &c) in cands.iter().enumerate() {
+                if self.approx[slot] - self.bound[slot] <= m {
+                    row[slot] = metric.dist(q, centroids.point(c as usize));
+                    self.rescored += 1;
+                } else {
+                    row[slot] = self.approx[slot] + self.bound[slot];
+                }
+            }
+        }
+    }
+
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats {
+            simd_lanes: 0,
+            quantized_candidates: self.quantized,
+            rescored_candidates: self.rescored,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CpuPanels, PanelJobs, PanelSet};
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_problem(seed: u64, jobs: usize, d: usize, k: usize) -> (PanelJobs, Dataset) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let cents = Dataset::from_flat(
+            k,
+            d,
+            (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
+        );
+        let mut batch = PanelJobs::new();
+        batch.clear(d);
+        let mut mid = vec![0f32; d];
+        for _ in 0..jobs {
+            for m in mid.iter_mut() {
+                *m = rng.uniform_f32(-3.0, 3.0);
+            }
+            let len = 1 + rng.below_usize(k);
+            let mut c: Vec<u32> = (0..k as u32).collect();
+            rng.shuffle(&mut c);
+            c.truncate(len);
+            batch.push(&mid, &c);
+        }
+        (batch, cents)
+    }
+
+    /// First-wins argmin over a row.
+    fn argmin(row: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v < row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn quant_argmin_matches_oracle_and_winner_value_is_exact() {
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            for d in [1usize, 3, 8, 16, 31] {
+                let (batch, cents) = random_problem(d as u64 ^ 0x51AD, 80, d, 12);
+                let mut exact = PanelSet::new();
+                CpuPanels.panels(&batch, &cents, metric, &mut exact);
+                let mut q = QuantPanels::new();
+                q.begin_pass(&cents, metric);
+                let mut got = PanelSet::new();
+                q.panels(&batch, &cents, metric, &mut got);
+                for j in 0..batch.len() {
+                    let (er, gr) = (exact.row(j), got.row(j));
+                    let (ea, ga) = (argmin(er), argmin(gr));
+                    assert_eq!(ea, ga, "{metric:?} d={d} job {j}");
+                    assert_eq!(
+                        er[ea].to_bits(),
+                        gr[ga].to_bits(),
+                        "winner value must be the exact oracle distance"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicated_centroids_keep_lowest_index_tie() {
+        // Centroids 0 and 2 are identical; the oracle's first-wins argmin
+        // picks 0 — so must the quantized path.
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let cents = Dataset::from_flat(3, 2, vec![1.0, 1.0, 5.0, 5.0, 1.0, 1.0]);
+            let mut batch = PanelJobs::new();
+            batch.clear(2);
+            batch.push(&[1.1, 0.9], &[0, 1, 2]);
+            let mut q = QuantPanels::new();
+            q.begin_pass(&cents, metric);
+            let mut got = PanelSet::new();
+            q.panels(&batch, &cents, metric, &mut got);
+            assert_eq!(argmin(got.row(0)), 0, "{metric:?}");
+        }
+    }
+
+    #[test]
+    fn counters_accumulate_and_rescore_is_a_subset() {
+        let (batch, cents) = random_problem(77, 50, 16, 20);
+        let mut q = QuantPanels::new();
+        q.begin_pass(&cents, Metric::Euclid);
+        let mut out = PanelSet::new();
+        q.panels(&batch, &cents, Metric::Euclid, &mut out);
+        let s = q.kernel_stats();
+        assert_eq!(s.quantized_candidates, batch.total_cands() as u64);
+        assert!(s.rescored_candidates >= batch.len() as u64, "≥1 survivor per row");
+        assert!(s.rescored_candidates <= s.quantized_candidates);
+        // Second pass keeps accumulating.
+        q.panels(&batch, &cents, Metric::Euclid, &mut out);
+        assert_eq!(q.kernel_stats().quantized_candidates, 2 * s.quantized_candidates);
+    }
+
+    #[test]
+    fn zero_and_constant_centroids_are_safe() {
+        // Degenerate scales (all-zero panel, zero-range rows) must not
+        // divide by zero and must stay exact.
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let cents = Dataset::from_flat(2, 3, vec![0.0; 6]);
+            let mut batch = PanelJobs::new();
+            batch.clear(3);
+            batch.push(&[0.5, -0.5, 0.25], &[0, 1]);
+            let mut q = QuantPanels::new();
+            q.begin_pass(&cents, metric);
+            let mut got = PanelSet::new();
+            q.panels(&batch, &cents, metric, &mut got);
+            assert_eq!(argmin(got.row(0)), 0, "{metric:?}");
+            let want = metric.dist(&[0.5, -0.5, 0.25], cents.point(0));
+            assert_eq!(got.row(0)[0].to_bits(), want.to_bits());
+        }
+    }
+}

@@ -7,7 +7,11 @@
 //! batch ships through the backend's flat arenas, and the arg-min over
 //! each returned distance row is the label.  That means inference rides
 //! the identical blocked/multi-threaded kernels (or the PJRT "PL") as
-//! training — the serving story of the paper's PS→PL dispatch.
+//! training — the serving story of the paper's PS→PL dispatch.  The
+//! kernel tier is selectable ([`Predictor::with_kernel_kind`]): scalar
+//! oracle, blocked, or explicit SIMD; [`Predictor::quantized`] instead
+//! routes panels through the i8 shortlist + exact-f32-rescore backend,
+//! which keeps labels bitwise-identical to the scalar oracle.
 //!
 //! For large `k` the candidate lists can be pruned through a kd-tree
 //! built over the *centroids* (KPynq-style assignment-time pruning): a
@@ -25,7 +29,8 @@
 //! agrees to that tolerance.
 
 use super::model::KmeansModel;
-use super::panel::{PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
+use super::panel::quant::QuantPanels;
+use super::panel::{KernelKind, KernelStats, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
 use super::Metric;
 use crate::data::Dataset;
 use crate::kdtree::KdTree;
@@ -92,6 +97,27 @@ impl<'m> Predictor<'m> {
             p = p.prune(true);
         }
         p
+    }
+
+    /// Predictor over the [`KernelKind`]-selected CPU tier (lenient
+    /// resolution: SIMD demotes to blocked on hosts without AVX2/FMA or
+    /// NEON — callers that must know use [`KernelKind::resolve`] first).
+    pub fn with_kernel_kind(model: &'m KmeansModel, workers: usize, kind: KernelKind) -> Self {
+        Self::with_backend(model, ParCpuPanels::with_kind(workers, kind))
+    }
+
+    /// Predictor over the reduced-precision shortlist backend: i8 panels
+    /// score every candidate cheaply, survivors re-score in exact f32, so
+    /// labels stay bitwise-identical to the scalar oracle (including
+    /// lowest-index ties — see [`QuantPanels`]'s bound proof).
+    pub fn quantized(model: &'m KmeansModel) -> Self {
+        Self::with_backend(model, QuantPanels::new())
+    }
+
+    /// Lifetime kernel telemetry from the underlying panel backend
+    /// (SIMD lane width, quantized/re-scored candidate counters).
+    pub fn kernel_stats(&self) -> KernelStats {
+        self.backend.kernel_stats()
     }
 
     /// Force the centroid kd-tree prune on or off (overrides the

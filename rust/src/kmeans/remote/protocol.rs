@@ -389,6 +389,9 @@ fn take_run_stats(r: &mut ByteReader<'_>) -> Result<RunStats, FrameError> {
         iters,
         converged,
         early_stopped,
+        // Kernel-tier telemetry is local-process only — the wire format
+        // does not carry it, so decoded stats read zero.
+        ..RunStats::default()
     })
 }
 
@@ -758,6 +761,7 @@ mod tests {
                 },
                 IterStats::default(),
             ],
+            ..RunStats::default()
         };
         let done = Message::Done(Box::new(DoneFrame {
             centroids: Dataset::from_flat(2, 2, vec![1.0, -0.0, f32::MIN_POSITIVE, 4.0]),

@@ -36,7 +36,7 @@ use super::RetryPolicy;
 use crate::data::Dataset;
 use crate::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
 use crate::kmeans::filtering::{filter_iteration_batched_scratch, FilterScratch};
-use crate::kmeans::panel::CpuPanels;
+use crate::kmeans::panel::{CpuPanels, KernelKind, ParCpuPanels};
 use crate::kmeans::shard::{solve_level1_shard, ShardPartial, ShardStepper};
 use crate::kmeans::solver::{IterEvent, IterFlow, ObserveFn};
 use crate::kmeans::Metric;
@@ -68,6 +68,7 @@ pub struct WorkerServer {
     local: SocketAddr,
     stop: Arc<AtomicBool>,
     resident_limit: usize,
+    kernel: KernelKind,
 }
 
 impl WorkerServer {
@@ -80,6 +81,7 @@ impl WorkerServer {
             local,
             stop: Arc::new(AtomicBool::new(false)),
             resident_limit: MAX_RESIDENT_BYTES,
+            kernel: KernelKind::Scalar,
         })
     }
 
@@ -87,6 +89,17 @@ impl WorkerServer {
     /// it to exercise the `ERR_RESIDENT_LIMIT` refusal path cheaply).
     pub fn with_resident_limit(mut self, bytes: usize) -> Self {
         self.resident_limit = bytes;
+        self
+    }
+
+    /// Pick the distance-kernel tier this worker solves with.  The
+    /// default is `Scalar` — the oracle arithmetic, bitwise the
+    /// coordinator's local executor — so the cross-process parity pins in
+    /// `tests/remote_worker.rs` hold regardless of host SIMD support.
+    /// This knob is worker-local: no wire-protocol change, the
+    /// coordinator never learns (or needs to know) the tier.
+    pub fn with_kernel(mut self, kind: KernelKind) -> Self {
+        self.kernel = kind;
         self
     }
 
@@ -130,8 +143,9 @@ impl WorkerServer {
             let stop = Arc::clone(&self.stop);
             let local = self.local;
             let resident_limit = self.resident_limit;
+            let kernel = self.kernel;
             conns.push(std::thread::spawn(move || {
-                match handle_conn(stream, resident_limit) {
+                match handle_conn(stream, resident_limit, kernel) {
                     Ok(ConnEnd::Shutdown) => {
                         log::info!("shard-worker: shutdown requested by {peer}");
                         stop.store(true, Ordering::SeqCst);
@@ -225,7 +239,11 @@ impl Resident {
 }
 
 /// Serve one coordinator connection: handshake, then a Job loop.
-fn handle_conn(mut stream: TcpStream, resident_limit: usize) -> anyhow::Result<ConnEnd> {
+fn handle_conn(
+    mut stream: TcpStream,
+    resident_limit: usize,
+    kernel: KernelKind,
+) -> anyhow::Result<ConnEnd> {
     let io_timeout = RetryPolicy::default().io_timeout;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(io_timeout))?;
@@ -278,7 +296,7 @@ fn handle_conn(mut stream: TcpStream, resident_limit: usize) -> anyhow::Result<C
         };
         match msg {
             Message::Shutdown => return Ok(ConnEnd::Shutdown),
-            Message::Job(job) => serve_job(&mut stream, *job)?,
+            Message::Job(job) => serve_job(&mut stream, *job, kernel)?,
             // Health check (v2): answer and keep serving.
             Message::Ping => {
                 Message::Pong.write_to(&mut stream)?;
@@ -309,7 +327,9 @@ fn handle_conn(mut stream: TcpStream, resident_limit: usize) -> anyhow::Result<C
                         }
                     }
                     Some(r) => {
-                        let mut backend = CpuPanels;
+                        // Scalar (the default) is bit-identical to
+                        // `CpuPanels` — the pinned cross-process parity.
+                        let mut backend = ParCpuPanels::with_kind(1, kernel);
                         let (sums, counts, stats) = filter_iteration_batched_scratch(
                             &r.tree,
                             &r.data,
@@ -414,7 +434,7 @@ fn serve_load_shard(
 }
 
 /// Run one shard solve, streaming per-iteration frames, ending in Done.
-fn serve_job(stream: &mut TcpStream, job: ShardJob) -> anyhow::Result<()> {
+fn serve_job(stream: &mut TcpStream, job: ShardJob, kernel: KernelKind) -> anyhow::Result<()> {
     let n = job.data.len();
     let k = job.spec.k as usize;
     // Range-check before touching the (panicky-by-contract) solver.
@@ -454,9 +474,15 @@ fn serve_job(stream: &mut TcpStream, job: ShardJob) -> anyhow::Result<()> {
                 }
             }
         });
-        // CpuPanels: the scalar oracle — bitwise the coordinator's local
-        // CPU executor.
-        solve_level1_shard(&job.data, &wspec, CpuPanels, Some(observer))
+        // The default Scalar tier is the oracle arithmetic — bitwise the
+        // coordinator's local CPU executor (`ParCpuPanels::scalar` is
+        // pinned bit-identical to `CpuPanels`).
+        solve_level1_shard(
+            &job.data,
+            &wspec,
+            ParCpuPanels::with_kind(1, kernel),
+            Some(observer),
+        )
     };
     if let Some(e) = io_err {
         return Err(e.into());

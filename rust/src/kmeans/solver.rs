@@ -39,7 +39,7 @@ use super::elkan::{self, ElkanOpts};
 use super::filtering::{self, FilterOpts};
 use super::init::{init_centroids, Init};
 use super::lloyd::{self, LloydOpts};
-use super::panel::{PanelBackend, ParCpuPanels};
+use super::panel::{KernelKind, PanelBackend, ParCpuPanels};
 use super::twolevel::{self, Partition, TwoLevelOpts, QUARTERS};
 use super::{IterStats, KmeansResult, Metric, Phase};
 use crate::data::Dataset;
@@ -145,6 +145,12 @@ pub struct KmeansSpec {
     pub workers: usize,
     /// Also accumulate the exact objective each iteration (Lloyd only).
     pub track_cost: bool,
+    /// Distance-kernel tier for the default panel backend.  `None` keeps
+    /// the legacy choice (blocked when `workers > 1`, scalar otherwise) so
+    /// every bitwise-parity pin on the defaults stays intact; `Some(kind)`
+    /// resolves leniently via [`KernelKind::effective`] (SIMD demotes to
+    /// blocked on hosts without AVX2/FMA or NEON).
+    pub kernel: Option<KernelKind>,
     /// Explicit initial centroids; overrides `init`/`seed` seeding.
     /// Ignored by [`Algo::TwoLevel`], which seeds per quarter.
     pub start: Option<Dataset>,
@@ -167,6 +173,7 @@ impl KmeansSpec {
             seed: 1,
             workers: QUARTERS,
             track_cost: false,
+            kernel: None,
             start: None,
         }
     }
@@ -234,6 +241,12 @@ impl KmeansSpec {
         self
     }
 
+    /// Pin the distance-kernel tier for the default panel backend.
+    pub fn kernel(mut self, kind: KernelKind) -> Self {
+        self.kernel = Some(kind);
+        self
+    }
+
     /// Start from these centroids instead of seeding from `init`/`seed`.
     pub fn start(mut self, centroids: Dataset) -> Self {
         self.start = Some(centroids);
@@ -265,14 +278,15 @@ impl KmeansSpec {
         }
     }
 
-    /// Panel backend used when the ctx has none injected: scalar (oracle,
-    /// bit-identical to the recursive engine) for one worker, the blocked
-    /// multi-threaded kernel otherwise.
+    /// Panel backend used when the ctx has none injected.  With no
+    /// explicit kernel: scalar (oracle, bit-identical to the recursive
+    /// engine) for one worker, the blocked multi-threaded kernel
+    /// otherwise.  An explicit [`KernelKind`] overrides that choice.
     fn default_panels(&self) -> ParCpuPanels {
-        if self.workers > 1 {
-            ParCpuPanels::new(self.workers)
-        } else {
-            ParCpuPanels::scalar(1)
+        match self.kernel {
+            Some(kind) => ParCpuPanels::with_kind(self.workers, kind),
+            None if self.workers > 1 => ParCpuPanels::new(self.workers),
+            None => ParCpuPanels::scalar(1),
         }
     }
 
@@ -685,7 +699,8 @@ mod tests {
             .shards(6)
             .seed(99)
             .workers(2)
-            .track_cost(true);
+            .track_cost(true)
+            .kernel(KernelKind::Auto);
         assert_eq!(spec.k, 7);
         assert_eq!(spec.algo, Algo::Elkan);
         assert_eq!(spec.metric, Metric::Manhattan);
@@ -698,6 +713,8 @@ mod tests {
         assert_eq!(spec.seed, 99);
         assert_eq!(spec.workers, 2);
         assert!(spec.track_cost);
+        assert_eq!(spec.kernel, Some(KernelKind::Auto));
+        assert_eq!(KmeansSpec::new(2).kernel, None);
     }
 
     #[test]

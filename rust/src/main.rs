@@ -26,7 +26,7 @@ use muchswift::data::{csv, synthetic, Dataset};
 use muchswift::experiments::{fig2, fig3, table1};
 use muchswift::kmeans::init::Init;
 use muchswift::kmeans::model::KmeansModel;
-use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
+use muchswift::kmeans::panel::{KernelKind, ParCpuPanels};
 use muchswift::kmeans::predict::Predictor;
 use muchswift::kmeans::remote::{RemoteShardPool, RetryPolicy, WorkerServer, PROTOCOL_VERSION};
 use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
@@ -59,6 +59,7 @@ fn commands() -> Vec<Command> {
             .opt("backend", "pjrt", "pjrt|cpu (panel substrate; two-level and filter-batched)")
             .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
+            .opt("kernel", "", "scalar|blocked|simd|auto distance-kernel tier (empty = legacy default)")
             .multi("remote", "shard-worker endpoint host:port for level-1 solves (repeatable)")
             .opt("remote-timeout-ms", "120000", "per-job deadline and io timeout for remote solves (ms)")
             .opt("remote-retries", "3", "attempts per remote operation, including the first")
@@ -69,7 +70,8 @@ fn commands() -> Vec<Command> {
             .flag("trace", "stream per-iteration stats through an observer (runs two-level via the sequential solver)")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
         Command::new("shard-worker", "serve level-1 shard solves to remote coordinators (wire protocol)")
-            .opt("listen", "127.0.0.1:7601", "host:port to bind (port 0 picks a free port)"),
+            .opt("listen", "127.0.0.1:7601", "host:port to bind (port 0 picks a free port)")
+            .opt("kernel", "scalar", "scalar|blocked|simd|auto distance-kernel tier for shard solves"),
         Command::new("chaos-proxy", "deterministic fault-injecting TCP proxy in front of a shard-worker")
             .req("upstream", "shard-worker endpoint host:port to forward to")
             .opt("listen", "127.0.0.1:0", "host:port to bind (port 0 picks a free port)")
@@ -90,6 +92,7 @@ fn commands() -> Vec<Command> {
             .opt("shards", "4", "level-1 shard count P (two-level; 1 <= P <= n)")
             .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
+            .opt("kernel", "", "scalar|blocked|simd|auto distance-kernel tier (empty = legacy default)")
             .opt("model", "model.json", "output model path")
             .opt("out", "", "also write training-set assignments CSV here")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
@@ -97,7 +100,8 @@ fn commands() -> Vec<Command> {
             .req("model", "trained model JSON (from `fit`)")
             .opt("out", "assignments.csv", "output labels CSV")
             .opt("workers", "4", "panel worker threads")
-            .opt("kernel", "scalar", "scalar|blocked panel kernel (scalar = oracle arithmetic)")
+            .opt("kernel", "scalar", "scalar|blocked|simd|auto panel kernel (scalar = oracle arithmetic)")
+            .flag("quantized", "i8 shortlist + exact f32 re-score (labels stay bitwise-exact)")
             .opt("prune", "auto", "auto|on|off centroid kd-tree prune")
             .pos("input", "CSV dataset to assign (required)"),
         Command::new("serve-bench", "closed-loop load generator for the ClusterService")
@@ -114,6 +118,8 @@ fn commands() -> Vec<Command> {
             .opt("deadline-us", "0", "micro-batcher deadline in µs (0 = immediate drain)")
             .opt("max-batch", "4096", "micro-batcher point budget per panel batch")
             .opt("queue", "256", "bounded request-queue capacity")
+            .opt("kernel", "blocked", "scalar|blocked|simd|auto service panel kernel")
+            .flag("quantized", "serve through the i8 shortlist + exact re-score path")
             // Anchored to the repo root (like BENCH_hotpath.json) so runs
             // from any cwd refresh the checked-in artifact CI gates on.
             .opt(
@@ -246,7 +252,7 @@ fn spec_from_matches(
         "--shards {shards} exceeds the dataset size n={}",
         data.len()
     );
-    Ok(KmeansSpec::new(m.usize("k")?)
+    let mut spec = KmeansSpec::new(m.usize("k")?)
         .algo(algo)
         .metric(metric)
         .tol(m.f64("tol")? as f32)
@@ -256,7 +262,14 @@ fn spec_from_matches(
         .shards(shards)
         .init(m.str("init").parse::<Init>()?)
         .seed(m.u64("seed")?)
-        .workers(m.usize("workers")?))
+        .workers(m.usize("workers")?);
+    // Empty keeps the legacy backend choice (and its bitwise pins); an
+    // explicit tier resolves leniently inside the solver.
+    let kernel = m.str("kernel");
+    if !kernel.is_empty() {
+        spec = spec.kernel(kernel.parse::<KernelKind>().map_err(anyhow::Error::msg)?);
+    }
+    Ok(spec)
 }
 
 /// `--out <path>` label emission shared by `cluster`/`fit`/`predict`
@@ -404,7 +417,11 @@ fn run() -> anyhow::Result<()> {
             }
         }
         "shard-worker" => {
-            let server = WorkerServer::bind(m.str("listen"))?;
+            // Strict resolve: asking for SIMD on a host without AVX2/FMA
+            // or NEON is an operator error, not a silent demotion.
+            let kind: KernelKind = m.str("kernel").parse().map_err(anyhow::Error::msg)?;
+            kind.resolve().map_err(anyhow::Error::msg)?;
+            let server = WorkerServer::bind(m.str("listen"))?.with_kernel(kind);
             // The exact bound address on its own line (resolves `:0`
             // binds) so scripts/tests can scrape the port.
             println!(
@@ -466,11 +483,10 @@ fn run() -> anyhow::Result<()> {
         }
         "predict" => {
             // Fail fast on bad flags before touching the filesystem.
-            let kernel = match m.str("kernel") {
-                "scalar" => PanelKernel::Scalar,
-                "blocked" => PanelKernel::Blocked,
-                other => anyhow::bail!("unknown kernel `{other}` (scalar|blocked)"),
-            };
+            // Strict resolve so `--kernel simd` on an unsupported host is
+            // a clean error instead of a silent demotion to blocked.
+            let kind: KernelKind = m.str("kernel").parse().map_err(anyhow::Error::msg)?;
+            let kernel = kind.resolve().map_err(anyhow::Error::msg)?;
             let prune = match m.str("prune") {
                 "auto" => None,
                 "on" => Some(true),
@@ -489,10 +505,14 @@ fn run() -> anyhow::Result<()> {
                 data.dims(),
                 model.dims()
             );
-            let mut pred = Predictor::with_backend(
-                &model,
-                ParCpuPanels::with_kernel(m.usize("workers")?, kernel),
-            );
+            let mut pred = if m.flag("quantized") {
+                Predictor::quantized(&model)
+            } else {
+                Predictor::with_backend(
+                    &model,
+                    ParCpuPanels::with_kernel(m.usize("workers")?, kernel),
+                )
+            };
             if let Some(on) = prune {
                 pred = pred.prune(on);
             }
@@ -510,6 +530,13 @@ fn run() -> anyhow::Result<()> {
                 if secs > 0.0 { data.len() as f64 / secs } else { 0.0 }
             );
             println!("objective on this dataset: {objective:.6e}");
+            let ks = pred.kernel_stats();
+            if ks.quantized_candidates > 0 {
+                println!(
+                    "kernel: {} candidates shortlisted in i8, {} re-scored in exact f32",
+                    ks.quantized_candidates, ks.rescored_candidates
+                );
+            }
             write_labels_if_asked(m.str("out"), &labels)?;
         }
         "serve-bench" => {
@@ -550,6 +577,8 @@ fn run() -> anyhow::Result<()> {
                 queue_cap: m.usize("queue")?,
                 dispatchers: m.usize("dispatchers")?,
                 batch_deadline_us: m.u64("deadline-us")?,
+                kernel: m.str("kernel").parse().map_err(anyhow::Error::msg)?,
+                quantized: m.flag("quantized"),
                 ..Default::default()
             };
             let svc = ClusterService::start(Arc::clone(&model), cfg.clone());
@@ -595,6 +624,8 @@ fn run() -> anyhow::Result<()> {
                         ("batch_deadline_us", Json::num(cfg.batch_deadline_us as f64)),
                         ("max_batch_points", Json::num(cfg.max_batch_points as f64)),
                         ("queue_cap", Json::num(cfg.queue_cap as f64)),
+                        ("kernel", Json::str(cfg.kernel.name())),
+                        ("quantized", Json::Bool(cfg.quantized)),
                         ("k", Json::num(model.k() as f64)),
                         ("d", Json::num(model.dims() as f64)),
                     ]),

@@ -6,6 +6,7 @@
 //! (not per request) by the dispatcher thread, so contention with the
 //! submit path is negligible; snapshots compute percentiles on demand.
 
+use crate::kmeans::panel::KernelStats;
 use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, Accum};
 use std::sync::Mutex;
@@ -54,6 +55,14 @@ pub struct ServeMetrics {
     /// full past a [`submit_timeout`](super::ClusterService::submit_timeout)
     /// deadline — the shed load under saturation.
     pub rejected: u64,
+    /// SIMD lane width of the dispatcher's panel kernel (8 = AVX2,
+    /// 4 = NEON, 0 = scalar/blocked tier) — a gauge, not a counter.
+    pub simd_lanes: u32,
+    /// Candidates scored through the reduced-precision i8 shortlist path.
+    pub quantized_candidates: u64,
+    /// Shortlist survivors re-scored in exact f32 (the parity guarantee's
+    /// cost; `rescored / quantized` is the shortlist survival rate).
+    pub rescored_candidates: u64,
 }
 
 impl ServeMetrics {
@@ -63,6 +72,7 @@ impl ServeMetrics {
             "serve: {} reqs ({} pts) in {} batches over {:.2}s wall ({:.2}s busy, \
              {:.0}% duty) | {:.1} req/batch (max {}), {:.1} pts/batch (max {}) | \
              {:.0} pts/s, {:.0} req/s | {} rejected | \
+             kernel {} lanes, {} quantized / {} rescored | \
              latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
             self.requests,
             self.points,
@@ -77,6 +87,9 @@ impl ServeMetrics {
             self.throughput_pps,
             self.throughput_rps,
             self.rejected,
+            self.simd_lanes,
+            self.quantized_candidates,
+            self.rescored_candidates,
             self.latency_p50_ms,
             self.latency_p95_ms,
             self.latency_p99_ms,
@@ -104,6 +117,9 @@ impl ServeMetrics {
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("busy_frac", Json::num(self.busy_frac)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("simd_lanes", Json::num(self.simd_lanes as f64)),
+            ("quantized_candidates", Json::num(self.quantized_candidates as f64)),
+            ("rescored_candidates", Json::num(self.rescored_candidates as f64)),
         ])
     }
 }
@@ -122,6 +138,8 @@ struct State {
     recorded: u64,
     /// Requests shed at admission (deadline submits against a full queue).
     rejected: u64,
+    /// Kernel-tier telemetry: lane gauge + lifetime candidate counters.
+    kernel: KernelStats,
 }
 
 /// Shared recorder: dispatcher writes, snapshots read.
@@ -167,6 +185,15 @@ impl Recorder {
         st.rejected += 1;
     }
 
+    /// Fold in one batch's kernel-telemetry delta (lane width is a gauge
+    /// and overwrites; candidate counters accumulate).
+    pub(crate) fn record_kernel(&self, delta: KernelStats) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.kernel.simd_lanes = delta.simd_lanes;
+        st.kernel.quantized_candidates += delta.quantized_candidates;
+        st.kernel.rescored_candidates += delta.rescored_candidates;
+    }
+
     pub(crate) fn snapshot(&self) -> ServeMetrics {
         // Copy everything out under the lock, then release it before the
         // O(n log n) sort so a metrics poll never stalls the dispatcher's
@@ -177,6 +204,7 @@ impl Recorder {
             (st.batch_requests.mean(), st.batch_requests.max as u64);
         let (max_batch_points, busy_s) = (st.max_batch_points, st.busy_s);
         let rejected = st.rejected;
+        let kernel = st.kernel;
         let mut lat = st.latencies.clone();
         drop(st);
         let wall_s = self.started.elapsed().as_secs_f64();
@@ -205,6 +233,9 @@ impl Recorder {
             throughput_pps: if wall_s > 0.0 { points as f64 / wall_s } else { 0.0 },
             throughput_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
             rejected,
+            simd_lanes: kernel.simd_lanes,
+            quantized_candidates: kernel.quantized_candidates,
+            rescored_candidates: kernel.rescored_candidates,
         }
     }
 }
@@ -258,7 +289,7 @@ mod tests {
         // metrics-parity rule enforces this statically, this test proves
         // it dynamically (a field in both emitters but with a typo'd key
         // would pass the lint's token scan yet fail here).
-        const FIELDS: [&str; 17] = [
+        const FIELDS: [&str; 20] = [
             "requests",
             "points",
             "batches",
@@ -276,6 +307,9 @@ mod tests {
             "throughput_rps",
             "busy_frac",
             "rejected",
+            "simd_lanes",
+            "quantized_candidates",
+            "rescored_candidates",
         ];
         let r = Recorder::new();
         r.record_batch(16, 0.1, &[0.002; 4]);
@@ -301,6 +335,29 @@ mod tests {
         assert_eq!(m.rejected, 2);
         assert_eq!(m.requests, 1, "rejections never count as fulfilled");
         assert!(m.summary().contains("2 rejected"), "{}", m.summary());
+    }
+
+    #[test]
+    fn kernel_telemetry_accumulates_counters_and_gauges_lanes() {
+        let r = Recorder::new();
+        r.record_kernel(KernelStats {
+            simd_lanes: 8,
+            quantized_candidates: 100,
+            rescored_candidates: 12,
+        });
+        r.record_kernel(KernelStats {
+            simd_lanes: 8,
+            quantized_candidates: 50,
+            rescored_candidates: 5,
+        });
+        let m = r.snapshot();
+        assert_eq!(m.simd_lanes, 8, "lane width is a gauge");
+        assert_eq!(m.quantized_candidates, 150, "counters accumulate");
+        assert_eq!(m.rescored_candidates, 17);
+        assert!(m.summary().contains("8 lanes"), "{}", m.summary());
+        assert!(m.summary().contains("150 quantized / 17 rescored"), "{}", m.summary());
+        let j = m.to_json();
+        assert_eq!(j.get("quantized_candidates").unwrap().as_usize().unwrap(), 150);
     }
 
     #[test]

@@ -23,8 +23,12 @@
 //! shutdown drains the queue before the dispatchers exit, so every
 //! accepted request is answered.
 //!
-//! Three scaling knobs ride on [`ServeConfig`]:
+//! The scaling knobs ride on [`ServeConfig`]:
 //!
+//! - `kernel` / `quantized` — the distance-arithmetic tier each
+//!   dispatcher's predictor runs: scalar oracle, blocked, explicit SIMD
+//!   ([`KernelKind`]), or the reduced-precision i8 shortlist path whose
+//!   exact-f32 rescore keeps labels bitwise-identical to the oracle.
 //! - `batch_deadline_us` — the deadline-based micro-batcher: a dispatcher
 //!   holds a non-full batch until the *oldest* queued request has waited
 //!   this long, trading bounded latency for better coalescing.  0 (the
@@ -41,7 +45,7 @@
 use super::metrics::{Recorder, ServeMetrics};
 use crate::data::Dataset;
 use crate::kmeans::model::KmeansModel;
-use crate::kmeans::panel::{PanelKernel, ParCpuPanels};
+use crate::kmeans::panel::{KernelKind, ParCpuPanels};
 use crate::kmeans::predict::Predictor;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -62,9 +66,18 @@ pub struct ServeConfig {
     /// Panel worker threads (the "PL core" count), shared out across the
     /// dispatchers.
     pub workers: usize,
-    /// Panel kernel; `Blocked` is the production profile, `Scalar` the
-    /// oracle arithmetic (bit-identical to training-side assignment).
-    pub kernel: PanelKernel,
+    /// Panel kernel tier; `Blocked` is the production profile, `Scalar`
+    /// the oracle arithmetic (bit-identical to training-side assignment),
+    /// `Simd`/`Auto` the explicit vector kernels (lenient resolution:
+    /// SIMD demotes to blocked on hosts without AVX2/FMA or NEON).
+    pub kernel: KernelKind,
+    /// Route panels through the reduced-precision i8 shortlist backend
+    /// instead of `kernel`: candidates are scored in quantized arithmetic
+    /// and survivors re-scored in exact f32, so labels stay
+    /// bitwise-identical to the scalar oracle while most of the distance
+    /// work runs 8-bit.  Telemetry lands in
+    /// [`ServeMetrics::quantized_candidates`]/[`rescored_candidates`](ServeMetrics::rescored_candidates).
+    pub quantized: bool,
     /// Centroid kd-tree prune override; `None` = the predictor's
     /// model-size auto rule.
     pub prune: Option<bool>,
@@ -88,7 +101,8 @@ impl Default for ServeConfig {
                 .map(|c| c.get())
                 .unwrap_or(1)
                 .min(8),
-            kernel: PanelKernel::Blocked,
+            kernel: KernelKind::Blocked,
+            quantized: false,
             prune: None,
             batch_deadline_us: 0,
             dispatchers: 1,
@@ -290,13 +304,18 @@ fn dispatcher_loop(shared: &Arc<Shared>, recorder: &Recorder, cfg: &ServeConfig,
         // Every batch below executes against exactly this snapshot, so a
         // reload never splits one batch across two models.
         let model = shared.current_model();
-        let mut predictor = Predictor::with_backend(
-            model.as_ref(),
-            ParCpuPanels::with_kernel(workers, cfg.kernel),
-        );
+        let mut predictor = if cfg.quantized {
+            Predictor::quantized(model.as_ref())
+        } else {
+            Predictor::with_backend(
+                model.as_ref(),
+                ParCpuPanels::with_kind(workers, cfg.kernel),
+            )
+        };
         if let Some(on) = cfg.prune {
             predictor = predictor.prune(on);
         }
+        let mut kernel_last = predictor.kernel_stats();
         let d = model.dims();
         loop {
             let step = {
@@ -380,6 +399,9 @@ fn dispatcher_loop(shared: &Arc<Shared>, recorder: &Recorder, cfg: &ServeConfig,
                 latencies.push(p.enqueued.elapsed().as_secs_f64());
             }
             recorder.record_batch(total as u64, busy, &latencies);
+            let ks = predictor.kernel_stats();
+            recorder.record_kernel(ks.delta_from(&kernel_last));
+            kernel_last = ks;
         }
     }
 }

@@ -509,6 +509,48 @@ mod tests {
     }
 
     #[test]
+    fn kernel_option_negative_paths() {
+        // Mirrors the `predict`/`shard-worker` --kernel surface: all four
+        // tier names parse, anything else is BadValue carrying the
+        // offending token, and strict `resolve()` cleanly rejects `simd`
+        // on hosts without a supported feature set instead of silently
+        // demoting (the fail-fast path the binary takes before touching
+        // the filesystem or binding a socket).
+        use crate::kmeans::panel::{KernelKind, PanelKernel};
+        let c = Command::new("predict", "assign against a model")
+            .opt("kernel", "scalar", "scalar|blocked|simd|auto panel kernel");
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.parse_as::<KernelKind>("kernel").unwrap(), KernelKind::Scalar);
+        for (tok, want) in [
+            ("blocked", KernelKind::Blocked),
+            ("simd", KernelKind::Simd),
+            ("auto", KernelKind::Auto),
+        ] {
+            let m = c.parse(&args(&["--kernel", tok])).unwrap();
+            assert_eq!(m.parse_as::<KernelKind>("kernel").unwrap(), want);
+        }
+        let m = c.parse(&args(&["--kernel", "warp"])).unwrap();
+        match m.parse_as::<KernelKind>("kernel") {
+            Err(CliError::BadValue(name, val, why)) => {
+                assert_eq!(name, "kernel");
+                assert_eq!(val, "warp");
+                assert!(why.contains("unknown kernel"), "{why}");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+        // Strict resolve: the portable tiers always succeed, `auto` never
+        // fails (it demotes), and `simd` either resolves to the SIMD
+        // kernel or errors naming the tier so the operator sees why.
+        assert_eq!(KernelKind::Scalar.resolve(), Ok(PanelKernel::Scalar));
+        assert_eq!(KernelKind::Blocked.resolve(), Ok(PanelKernel::Blocked));
+        assert!(KernelKind::Auto.resolve().is_ok());
+        match KernelKind::Simd.resolve() {
+            Ok(k) => assert_eq!(k, PanelKernel::Simd),
+            Err(why) => assert!(why.contains("simd"), "{why}"),
+        }
+    }
+
+    #[test]
     fn help_mentions_everything() {
         let h = cmd().help();
         for needle in ["--n", "--arch", "--verbose", "<input>", "required", "default: 1000"] {

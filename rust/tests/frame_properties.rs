@@ -103,6 +103,9 @@ fn random_message(g: &mut Gen, which: usize) -> Message {
                 converged: g.bool(),
                 early_stopped: g.bool(),
                 iters: (0..g.usize_in(0, 4)).map(|_| random_iter_stats(g)).collect(),
+                // Kernel-tier counters are local-only (not wire-carried),
+                // so the round-trip generator leaves them at zero.
+                ..RunStats::default()
             },
         })),
         5 => Message::Error {

@@ -11,7 +11,7 @@
 use muchswift::data::synthetic::generate_params;
 use muchswift::data::{csv, Dataset};
 use muchswift::kmeans::model::KmeansModel;
-use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
+use muchswift::kmeans::panel::{KernelKind, PanelKernel, ParCpuPanels};
 use muchswift::kmeans::predict::Predictor;
 use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
 use muchswift::kmeans::Metric;
@@ -249,4 +249,71 @@ fn cli_rejects_bad_metric_kernel_and_missing_model() {
         .unwrap();
     assert!(!out.status.success());
     std::fs::remove_file(&data_csv).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Quantized shortlist parity (ISSUE 9 satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_predictor_is_bitwise_identical_to_scalar_oracle() {
+    // The i8 shortlist may only *narrow* the candidate set — survivors are
+    // re-scored in exact f32 — so labels AND assigned distances must match
+    // the scalar oracle bit-for-bit on both metrics, including queries far
+    // from the training distribution.
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let s = generate_params(2000, 8, 9, 0.3, 2.0, 51);
+        let spec = KmeansSpec::new(9).metric(metric).seed(7);
+        let model = spec.fit(&mut SolverCtx::new(&s.data));
+        let q = generate_params(1200, 8, 9, 0.6, 2.0, 99).data;
+        let (want_l, want_d) = Predictor::new(&model).assign_scored(&q);
+        let (got_l, got_d) = Predictor::quantized(&model).assign_scored(&q);
+        assert_eq!(got_l, want_l, "{metric:?}: labels drifted");
+        assert_eq!(got_d, want_d, "{metric:?}: distances drifted");
+    }
+}
+
+#[test]
+fn quantized_predictor_keeps_lowest_index_tie_rule() {
+    // Duplicated centroids force exact distance ties; the shortlist must
+    // keep every tied candidate alive so the exact re-score can apply the
+    // same lowest-index rule as the scalar oracle.
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let s = generate_params(600, 2, 4, 0.2, 2.0, 5);
+        let spec = KmeansSpec::new(4).metric(metric).seed(1);
+        let mut model = spec.fit(&mut SolverCtx::new(&s.data));
+        model.centroids =
+            Dataset::from_flat(4, 2, vec![1.0, 1.0, 5.0, 5.0, 1.0, 1.0, 5.0, 5.0]);
+        // On-centroid queries (ties between the duplicate pair), the exact
+        // midpoint (a four-way tie under both metrics), and off-grid ones.
+        let q = Dataset::from_flat(
+            5,
+            2,
+            vec![1.0, 1.0, 5.0, 5.0, 3.0, 3.0, 0.9, 1.2, 4.8, 5.1],
+        );
+        let (want_l, want_d) = Predictor::new(&model).assign_scored(&q);
+        let (got_l, got_d) = Predictor::quantized(&model).assign_scored(&q);
+        assert_eq!(got_l, want_l, "{metric:?}");
+        assert_eq!(got_d, want_d, "{metric:?}");
+        assert_eq!(got_l[0], 0, "{metric:?}: duplicate tie must pick index 0");
+        assert_eq!(got_l[1], 1, "{metric:?}: duplicate tie must pick index 1");
+        assert_eq!(got_l[2], 0, "{metric:?}: four-way midpoint tie picks index 0");
+    }
+}
+
+#[test]
+fn simd_kernel_predictor_labels_match_scalar_oracle() {
+    // Label-level parity for the SIMD tier (panel values are pinned to
+    // 1e-4 in tests/panel_engine.rs; labels must agree exactly wherever
+    // distances aren't within float noise of a tie, which planted
+    // well-separated clusters guarantee).
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let s = generate_params(1500, 16, 6, 0.05, 6.0, 17);
+        let spec = KmeansSpec::new(6).metric(metric).seed(2);
+        let model = spec.fit(&mut SolverCtx::new(&s.data));
+        let q = generate_params(800, 16, 6, 0.05, 6.0, 18).data;
+        let want = Predictor::new(&model).assign(&q);
+        let got = Predictor::with_kernel_kind(&model, 3, KernelKind::Auto).assign(&q);
+        assert_eq!(got, want, "{metric:?}");
+    }
 }

@@ -18,7 +18,7 @@ use muchswift::kdtree::KdTree;
 use muchswift::kmeans::filtering::{self, FilterScratch};
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::panel::{
-    CpuPanels, PanelBackend, PanelJobs, PanelKernel, PanelSet, ParCpuPanels,
+    CpuPanels, KernelKind, PanelBackend, PanelJobs, PanelKernel, PanelSet, ParCpuPanels,
 };
 use muchswift::kmeans::Metric;
 use muchswift::util::proptest::proptest;
@@ -195,4 +195,65 @@ fn blocked_parallel_full_run_tracks_reference() {
             .count();
         assert!(same >= 1080, "{metric:?}: assignments diverge: {same}/1200");
     }
+}
+
+/// SIMD tier vs. the scalar oracle: relative error <= 1e-4 across dims
+/// that straddle the vector widths (8-lane AVX2, 4-lane NEON) and ragged
+/// candidate tails that don't divide the 4-candidate blocking.  On hosts
+/// without a supported feature set `with_kind` demotes to blocked, so the
+/// pin runs (and still holds) everywhere CI does.
+#[test]
+fn prop_simd_panels_match_scalar_oracle() {
+    proptest(60, |g| {
+        let d = *g.pick(&[1usize, 3, 7, 8, 15, 16, 64]);
+        let k = g.usize_in(1, 24);
+        let jobs_n = g.size(1, 300).max(1);
+        let metric = *g.pick(&[Metric::Euclid, Metric::Manhattan]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let kind = *g.pick(&[KernelKind::Simd, KernelKind::Auto]);
+
+        let mut rng = Xoshiro256pp::seed_from_u64(g.case as u64 ^ 0x51D0_C0DE);
+        let cents = Dataset::from_flat(
+            k,
+            d,
+            (0..k * d).map(|_| rng.uniform_f32(-3.0, 3.0)).collect(),
+        );
+        let mut jobs = PanelJobs::new();
+        jobs.clear(d);
+        let mut mid = vec![0f32; d];
+        for _ in 0..jobs_n {
+            for m in mid.iter_mut() {
+                *m = rng.uniform_f32(-3.0, 3.0);
+            }
+            let len = 1 + rng.below_usize(k);
+            let mut c: Vec<u32> = (0..k as u32).collect();
+            rng.shuffle(&mut c);
+            c.truncate(len);
+            jobs.push(&mid, &c);
+        }
+
+        let mut want = PanelSet::new();
+        CpuPanels.begin_pass(&cents, metric);
+        CpuPanels.panels(&jobs, &cents, metric, &mut want);
+
+        let mut simd = ParCpuPanels::with_kind(workers, kind);
+        simd.begin_pass(&cents, metric);
+        let mut got = PanelSet::new();
+        simd.panels(&jobs, &cents, metric, &mut got);
+
+        for j in 0..jobs.len() {
+            let (a, b) = (want.row(j), got.row(j));
+            if a.len() != b.len() {
+                return Err(format!("row {j} length {} vs {}", a.len(), b.len()));
+            }
+            for (slot, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
+                    return Err(format!(
+                        "simd drift: job {j} slot {slot} ({metric:?} d={d}): {x} vs {y}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }

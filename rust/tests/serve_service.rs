@@ -6,7 +6,7 @@
 
 use muchswift::data::synthetic::generate_params;
 use muchswift::data::Dataset;
-use muchswift::kmeans::panel::{PanelKernel, ParCpuPanels};
+use muchswift::kmeans::panel::{KernelKind, PanelKernel, ParCpuPanels};
 use muchswift::kmeans::predict::Predictor;
 use muchswift::kmeans::solver::{KmeansSpec, SolverCtx};
 use muchswift::kmeans::KmeansModel;
@@ -40,7 +40,7 @@ fn concurrent_clients_get_exactly_direct_predictor_answers() {
             workers: 2,
             max_batch_points: 128, // small budget → several batches
             queue_cap: 64,
-            kernel: PanelKernel::Blocked,
+            kernel: KernelKind::Blocked,
             prune: None,
             ..Default::default()
         },
@@ -209,7 +209,7 @@ fn warm_reload_swaps_models_between_batches() {
     let svc = ClusterService::start(
         Arc::clone(&model_a),
         ServeConfig {
-            kernel: PanelKernel::Scalar,
+            kernel: KernelKind::Scalar,
             ..Default::default()
         },
     );
@@ -247,7 +247,7 @@ fn in_flight_tickets_complete_against_a_consistent_model() {
     let svc = ClusterService::start(
         Arc::clone(&model_a),
         ServeConfig {
-            kernel: PanelKernel::Scalar,
+            kernel: KernelKind::Scalar,
             max_batch_points: 32, // several batches across the burst
             ..Default::default()
         },
@@ -295,7 +295,7 @@ fn multi_dispatcher_sharding_serves_correctly() {
         ServeConfig {
             dispatchers: 3,
             workers: 3,
-            kernel: PanelKernel::Scalar,
+            kernel: KernelKind::Scalar,
             max_batch_points: 64,
             ..Default::default()
         },
@@ -400,11 +400,35 @@ fn scalar_service_is_bit_identical_to_oracle_predictor() {
     let svc = ClusterService::start(
         Arc::clone(&model),
         ServeConfig {
-            kernel: PanelKernel::Scalar,
+            kernel: KernelKind::Scalar,
             ..Default::default()
         },
     );
     let reply = svc.predict(queries.clone()).unwrap();
     assert_eq!(reply.labels, want_labels);
     assert_eq!(reply.distances, want_dists);
+}
+
+#[test]
+fn quantized_service_matches_oracle_bitwise_and_counts_candidates() {
+    // The i8 shortlist + exact-f32 rescore path: labels AND assigned
+    // distances must be bit-identical to the scalar oracle, and the
+    // kernel telemetry must account for the quantized/rescored split.
+    let model = trained_model(1000, 5, 8, 13);
+    let queries = generate_params(300, 5, 8, 0.5, 2.0, 3).data;
+    let (want_labels, want_dists) = Predictor::new(model.as_ref()).assign_scored(&queries);
+    let svc = ClusterService::start(
+        Arc::clone(&model),
+        ServeConfig {
+            quantized: true,
+            ..Default::default()
+        },
+    );
+    let reply = svc.predict(queries.clone()).unwrap();
+    assert_eq!(reply.labels, want_labels);
+    assert_eq!(reply.distances, want_dists);
+    let m = svc.shutdown();
+    assert!(m.quantized_candidates > 0, "i8 path never engaged");
+    assert!(m.rescored_candidates >= 1, "the winner is always re-scored exactly");
+    assert!(m.rescored_candidates <= m.quantized_candidates);
 }

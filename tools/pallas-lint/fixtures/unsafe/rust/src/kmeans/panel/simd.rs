@@ -1,0 +1,13 @@
+//! Fixture: the SIMD kernel file is allowlisted, but an intrinsic call
+//! without a safety justification must still fire (first fn); a
+//! documented one stays silent (second fn).
+
+pub fn lane_splat_undocumented(x: f32) -> f32 {
+    unsafe { core::arch::x86_64::_mm256_cvtss_f32(core::arch::x86_64::_mm256_set1_ps(x)) }
+}
+
+pub fn lane_splat_documented(x: f32) -> f32 {
+    // SAFETY: set1/cvtss are value-only intrinsics with no memory access;
+    // the caller verified the avx target feature at dispatch time.
+    unsafe { core::arch::x86_64::_mm256_cvtss_f32(core::arch::x86_64::_mm256_set1_ps(x)) }
+}

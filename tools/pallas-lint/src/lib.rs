@@ -53,7 +53,11 @@ pub static RULES: &[(&str, fn(&Path) -> Vec<Violation>)] = &[
 pub const ALLOW_PANIC: &str = "pallas-lint: allow(panic-hygiene)";
 
 /// Files `unsafe` is permitted in (each use still needs `// SAFETY:`).
-pub const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/util/bench.rs", "rust/src/runtime/client.rs"];
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/util/bench.rs",
+    "rust/src/runtime/client.rs",
+    "rust/src/kmeans/panel/simd.rs",
+];
 
 /// The hostile-input decode paths the panic-hygiene rule guards.
 pub const DECODE_PATHS: &[&str] = &[

@@ -102,8 +102,8 @@ fn unsafe_rule_fires_outside_allowlist_and_on_undocumented_blocks() {
     let v = rule_unsafe_audit(&fixture("unsafe"));
     assert_eq!(
         v.len(),
-        2,
-        "expected allowlist escape + missing SAFETY:\n{}",
+        3,
+        "expected allowlist escape + two missing SAFETY:\n{}",
         render(&v)
     );
     assert!(
@@ -115,6 +115,14 @@ fn unsafe_rule_fires_outside_allowlist_and_on_undocumented_blocks() {
     assert!(
         v.iter()
             .any(|x| x.file.ends_with("client.rs") && x.msg.contains("SAFETY")),
+        "{}",
+        render(&v)
+    );
+    // The simd kernel file is allowlisted, but an undocumented intrinsic
+    // call inside it must still demand its SAFETY comment.
+    assert!(
+        v.iter()
+            .any(|x| x.file.ends_with("panel/simd.rs") && x.msg.contains("SAFETY")),
         "{}",
         render(&v)
     );

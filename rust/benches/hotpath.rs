@@ -19,12 +19,12 @@ use muchswift::coordinator::{Backend, Coordinator};
 use muchswift::data::synthetic::generate_params;
 use muchswift::kdtree::{KdTree, DEFAULT_LEAF_SIZE};
 use muchswift::kmeans::filtering::{
-    self, CpuPanels, FilterScratch, KernelKind, ParCpuPanels, QuantPanels,
+    self, CpuPanels, FilterOpts, FilterScratch, KernelKind, ParCpuPanels, QuantPanels,
 };
 use muchswift::kmeans::init::{init_centroids, Init};
 use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
 use muchswift::kmeans::panel::{PanelBackend, PanelJobs, PanelSet};
-use muchswift::kmeans::Metric;
+use muchswift::kmeans::{BoundsMode, Metric};
 use muchswift::util::bench::{self, Bench, BenchResult};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -173,6 +173,31 @@ fn main() {
         results.push(quick.run(&format!("kernel_simd_i8_d{kd}_k20"), || {
             quant.panels(&jobs, &kcents, Metric::Euclid, &mut out);
         }));
+    }
+
+    // Bounds-plane win: the same short batched run with the
+    // triangle-inequality bounds off vs on, at k straddling the Auto
+    // threshold.  Identical data and init in both modes, forced On (Auto
+    // would leave k=20 off by design, and the k=20 pair is exactly the
+    // "don't pay below the threshold" evidence).  CI's bench gate reads
+    // the `bounds_on_k{64,256}` vs `bounds_off_k{64,256}` medians and
+    // requires a strict win at large k.
+    for bk in [20usize, 64, 256] {
+        let bn = (n / 5).max(bk);
+        let bset = generate_params(bn, 8, bk, 0.05, 1.0, 19 + bk as u64);
+        let btree = KdTree::build(&bset.data);
+        let binit = init_centroids(&bset.data, bk, Init::UniformSample, Metric::Euclid, 23);
+        for (mode, label) in [(BoundsMode::Off, "off"), (BoundsMode::On, "on")] {
+            let opts = FilterOpts {
+                metric: Metric::Euclid,
+                tol: 0.0,
+                max_iters: 4,
+                bounds: mode,
+            };
+            results.push(quick.run(&format!("bounds_{label}_k{bk}"), || {
+                filtering::run_batched(&bset.data, &btree, &binit, &opts, &mut CpuPanels)
+            }));
+        }
     }
 
     let lloyd_spec = KmeansSpec::new(k)

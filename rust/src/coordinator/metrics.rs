@@ -71,6 +71,16 @@ pub struct CoordMetrics {
     /// … and shard uploads beyond the first (recovery re-loads after a
     /// reconnect or onto another live connection).
     pub shard_reloads: u64,
+    /// Bounds plane (all zero unless the spec's `bounds` mode engaged —
+    /// DESIGN.md §10): leaf panel jobs the triangle-inequality bounds
+    /// dropped outright across the run's *local* solves (level 2 plus any
+    /// locally-executed level-1 shards; remote partials decode these as
+    /// 0) …
+    pub bound_pruned_points: u64,
+    /// … candidate entries removed from surviving jobs …
+    pub bound_pruned_candidates: u64,
+    /// … and the true-distance evaluations spent maintaining the bounds.
+    pub bounds_matrix_cost: u64,
 }
 
 impl CoordMetrics {
@@ -83,7 +93,8 @@ impl CoordMetrics {
              {} fallbacks, {} retries, {} timeouts, {} reconnects, \
              {} rescheduled, dead endpoints {:?}, {}B tx / {}B rx | \
              session: {} sessions, {} centroid_bcasts, {} partials_rx, \
-             {}B session tx / {}B session rx, {} shard_reloads",
+             {}B session tx / {}B session rx, {} shard_reloads | \
+             bounds: {} pruned pts, {} pruned cands, {} matrix cost",
             self.total_s,
             self.partition_s,
             self.tree_build_s,
@@ -115,6 +126,9 @@ impl CoordMetrics {
             self.session_bytes_tx,
             self.session_bytes_rx,
             self.shard_reloads,
+            self.bound_pruned_points,
+            self.bound_pruned_candidates,
+            self.bounds_matrix_cost,
         )
     }
 }
@@ -226,5 +240,22 @@ mod tests {
         assert!(s.contains("1 shard_reloads"), "{s}");
         // A one-shot run keeps the section zeroed, not absent.
         assert!(CoordMetrics::default().summary().contains("session: 0 sessions"));
+    }
+
+    #[test]
+    fn summary_reports_bounds_counters() {
+        let m = CoordMetrics {
+            bound_pruned_points: 120,
+            bound_pruned_candidates: 3400,
+            bounds_matrix_cost: 560,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(
+            s.contains("bounds: 120 pruned pts, 3400 pruned cands, 560 matrix cost"),
+            "{s}"
+        );
+        // A bounds-off run keeps the section zeroed, not absent.
+        assert!(CoordMetrics::default().summary().contains("bounds: 0 pruned pts"));
     }
 }

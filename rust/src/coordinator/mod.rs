@@ -626,6 +626,18 @@ impl Coordinator {
         let mut result = l2spec.solve(&mut ctx);
         m.level2_s = sw.lap();
 
+        // Bounds-plane counters: level-2 plus every locally-executed
+        // level-1 shard (remote partials decode them as 0, like the rest
+        // of the local-process telemetry).
+        m.bound_pruned_points = result.stats.bound_pruned_points;
+        m.bound_pruned_candidates = result.stats.bound_pruned_candidates;
+        m.bounds_matrix_cost = result.stats.bounds_matrix_cost;
+        for st in &level1_stats {
+            m.bound_pruned_points += st.bound_pruned_points;
+            m.bound_pruned_candidates += st.bound_pruned_candidates;
+            m.bounds_matrix_cost += st.bounds_matrix_cost;
+        }
+
         m.total_s = total_sw.elapsed().as_secs_f64();
         let (batches, jobs_served) = match &self.service {
             Some(svc) => {

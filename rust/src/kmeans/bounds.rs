@@ -1,0 +1,565 @@
+//! Bounds plane: Elkan/Hamerly-style triangle-inequality work
+//! elimination, fused into the *batched* filtering engine and the
+//! serving-side [`Predictor`](super::predict::Predictor).
+//!
+//! The standalone [`super::elkan`] baseline proves the bounds machinery
+//! against Lloyd; this module is its fused successor on the panel path:
+//! instead of replacing the engine, it shrinks the work the engine sees.
+//! Each iteration maintains a k×k half-center-center distance matrix
+//! ([`BoundsState::advance`]) plus a per-point upper bound on the true
+//! distance to the point's assigned center, and uses them to drop leaf
+//! `PanelJobs` outright (the incumbent provably still wins) or shrink
+//! their candidate lists before they reach the
+//! [`PanelBackend`](super::panel::PanelBackend) seam — so the win
+//! multiplies through every kernel tier and every executor.
+//!
+//! The invariant contract — what makes pruning *exact* under both
+//! metrics, the tie rule, and how the bounds interact with the engine's
+//! bitwise pins — is documented in DESIGN.md §10; the property tests in
+//! `tests/bounds_plane.rs` pin it.
+//!
+//! Three rules keep this sound:
+//!
+//! 1. **Bounds are maintained in scalar true-metric arithmetic only**
+//!    (`sqrt` of the squared-L2 kernel for Euclid, L1 as-is): panel
+//!    kernel outputs never feed a bound, because the blocked/SIMD
+//!    kernels' `‖q‖² − 2q·c + ‖c‖²` form carries cancellation error that
+//!    is unbounded *relative* to small distances.
+//! 2. **Every comparison goes through [`surely_lt`]** — a strict
+//!    less-than with [`BOUNDS_SLACK`] relative margin on both sides.
+//!    Slack only ever weakens pruning, never correctness, and it makes
+//!    exact ties (duplicated centroids included) unprunable, preserving
+//!    the repo-wide lowest-index tie rule.
+//! 3. **Pruning never reorders surviving work.** Candidate lists keep
+//!    their ascending engine order, and points pruned outright have
+//!    their accumulator contribution *deferred* to the exact slot the
+//!    unpruned schedule would have used (see
+//!    `filtering::filter_iteration_batched_bounded`), so bounds-on
+//!    centroids are bitwise the bounds-off ones.
+
+use super::metrics::{self, Metric};
+use crate::data::Dataset;
+
+/// [`BoundsMode::Auto`] enables the bounds at this many clusters — below
+/// it the k×k matrix upkeep costs more than the candidate work it saves
+/// (the `bounds_{off,on}_k*` entries in `BENCH_hotpath.json` measure the
+/// crossover).
+pub const AUTO_MIN_K: usize = 64;
+
+/// Relative slack applied to both sides of every bound comparison
+/// ([`surely_lt`]).  Generous on purpose: it absorbs the `sqrt` rounding
+/// and the d·ε positive-summation error of the scalar distance kernels,
+/// so a pruned candidate is *strictly* worse in real arithmetic.
+pub const BOUNDS_SLACK: f32 = 1e-3;
+
+/// Upper bound on k×k matrix entries before [`BoundsMode::Auto`] (and
+/// the training-side state) refuses to activate: 1<<24 f32s = 64 MiB.
+const MAX_CC_ENTRIES: u64 = 1 << 24;
+
+/// Whether (and when) triangle-inequality pruning runs.  The knob rides
+/// on [`KmeansSpec`](super::solver::KmeansSpec),
+/// [`Predictor`](super::predict::Predictor), and
+/// [`ServeConfig`](crate::serve::ServeConfig); `Off` (the default)
+/// leaves every pre-existing code path untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BoundsMode {
+    /// No bounds upkeep, no pruning — the legacy path, bit for bit.
+    #[default]
+    Off,
+    /// Enable at `k >= `[`AUTO_MIN_K`] (where the matrix pays for
+    /// itself), stay off below.
+    Auto,
+    /// Always enable (subject only to the k×k memory guard).
+    On,
+}
+
+impl BoundsMode {
+    /// Canonical name (round-trips through
+    /// [`FromStr`](std::str::FromStr)).
+    pub fn name(self) -> &'static str {
+        match self {
+            BoundsMode::Off => "off",
+            BoundsMode::Auto => "auto",
+            BoundsMode::On => "on",
+        }
+    }
+
+    pub fn all() -> &'static [BoundsMode] {
+        &[BoundsMode::Off, BoundsMode::Auto, BoundsMode::On]
+    }
+
+    /// Resolve the knob for a concrete cluster count.
+    pub fn enabled_for(self, k: usize) -> bool {
+        let fits = (k as u64) * (k as u64) <= MAX_CC_ENTRIES;
+        match self {
+            BoundsMode::Off => false,
+            BoundsMode::Auto => k >= AUTO_MIN_K && fits,
+            BoundsMode::On => fits,
+        }
+    }
+}
+
+impl std::fmt::Display for BoundsMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BoundsMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(BoundsMode::Off),
+            "auto" => Ok(BoundsMode::Auto),
+            "on" => Ok(BoundsMode::On),
+            other => anyhow::bail!("unknown bounds mode `{other}` (off|auto|on)"),
+        }
+    }
+}
+
+/// The *true* distance of the metric — what the triangle inequality
+/// holds for.  [`Metric::dist`] returns squared L2 for
+/// [`Metric::Euclid`] (the repo-wide convention), which is not a metric;
+/// every bound in this module lives in `sqrt` space instead.
+#[inline]
+pub fn true_dist(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
+    match metric {
+        Metric::Euclid => metrics::sq_l2(a, b).sqrt(),
+        Metric::Manhattan => metrics::l1(a, b),
+    }
+}
+
+/// Slack-guarded strict less-than over nonnegative true distances:
+/// `a` is *surely* below `b` only when the [`BOUNDS_SLACK`] margins on
+/// both sides cannot close the gap.  `INFINITY` (an unset upper bound)
+/// is never surely below anything.
+#[inline]
+pub fn surely_lt(a: f32, b: f32) -> bool {
+    a.is_finite() && a * (1.0 + BOUNDS_SLACK) < b * (1.0 - BOUNDS_SLACK)
+}
+
+/// Lifetime pruning counters, shared by the training state and the
+/// predictor (the `bound_*` fields of
+/// [`RunStats`](super::RunStats)/`ServeMetrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BoundsStats {
+    /// Leaf points (training) or queries (predict) whose panel job was
+    /// dropped outright — the incumbent center provably still wins.
+    pub pruned_points: u64,
+    /// Candidate entries removed from surviving panel jobs by the
+    /// center-center test.
+    pub pruned_candidates: u64,
+    /// Scalar true-distance evaluations spent maintaining the bounds
+    /// (the k×k matrix, per-center shifts, and on-demand tightenings) —
+    /// the cost side of the ledger.
+    pub matrix_cost: u64,
+}
+
+impl BoundsStats {
+    /// Counter delta since an `earlier` snapshot of the same source.
+    pub fn delta_from(&self, earlier: &BoundsStats) -> BoundsStats {
+        BoundsStats {
+            pruned_points: self.pruned_points.saturating_sub(earlier.pruned_points),
+            pruned_candidates: self
+                .pruned_candidates
+                .saturating_sub(earlier.pruned_candidates),
+            matrix_cost: self.matrix_cost.saturating_sub(earlier.matrix_cost),
+        }
+    }
+
+    /// Fold another source's counters into this one.
+    pub fn absorb(&mut self, other: &BoundsStats) {
+        self.pruned_points += other.pruned_points;
+        self.pruned_candidates += other.pruned_candidates;
+        self.matrix_cost += other.matrix_cost;
+    }
+}
+
+/// The center-center geometry of one centroid set: half pairwise true
+/// distances (`cc_half[a*k + b] = d(c_a, c_b) / 2`, zero diagonal) and
+/// each center's closest-other-center half distance
+/// (`s[a] = min_{b≠a} cc_half[a*k + b]`).
+pub struct CenterGeometry {
+    k: usize,
+    cc_half: Vec<f32>,
+    s: Vec<f32>,
+    /// True-distance evaluations the build spent (k·(k−1)/2).
+    cost: u64,
+}
+
+impl CenterGeometry {
+    /// Compute the geometry of `centroids` under `metric` with scalar
+    /// true-distance arithmetic.
+    pub fn compute(centroids: &Dataset, metric: Metric) -> Self {
+        let k = centroids.len();
+        let mut cc_half = vec![0.0f32; k * k];
+        let mut cost = 0u64;
+        for a in 0..k {
+            for b in a + 1..k {
+                let h = 0.5 * true_dist(metric, centroids.point(a), centroids.point(b));
+                cc_half[a * k + b] = h;
+                cc_half[b * k + a] = h;
+                cost += 1;
+            }
+        }
+        let mut s = vec![f32::INFINITY; k];
+        for a in 0..k {
+            for b in 0..k {
+                if b != a && cc_half[a * k + b] < s[a] {
+                    s[a] = cc_half[a * k + b];
+                }
+            }
+        }
+        Self { k, cc_half, s, cost }
+    }
+
+    /// Half true distance between centers `a` and `b`.
+    #[inline]
+    pub fn cc_half(&self, a: usize, b: usize) -> f32 {
+        self.cc_half[a * self.k + b]
+    }
+
+    /// Half true distance from center `a` to its closest other center.
+    #[inline]
+    pub fn s(&self, a: usize) -> f32 {
+        self.s[a]
+    }
+
+    /// True-distance evaluations the build spent.
+    pub fn cost(&self) -> u64 {
+        self.cost
+    }
+
+    /// Keep (in `out`, preserving order) every candidate of `cands` that
+    /// the center-center test cannot rule out against pivot `a` with
+    /// exact pivot distance `u = d(q, c_a)`: candidate `c` is dropped
+    /// only when `u` is [`surely_lt`] `cc_half(a, c)`, which makes
+    /// `d(q, c) ≥ 2·cc_half − u > u ≥ d(q, argmin)` strict — the argmin
+    /// and everything tied with it always survive, and `a` itself always
+    /// survives (zero diagonal).  Returns how many were dropped.
+    pub fn filter_candidates(&self, a: usize, u: f32, cands: &[u32], out: &mut Vec<u32>) -> usize {
+        out.clear();
+        for &c in cands {
+            if !surely_lt(u, self.cc_half(a, c as usize)) {
+                out.push(c);
+            }
+        }
+        cands.len() - out.len()
+    }
+}
+
+/// Per-run bounds state for the batched training engine: the current
+/// centroid geometry plus a per-point upper bound on the true distance
+/// to the point's assigned center, carried across iterations.
+///
+/// Protocol (driven by `filtering::run_impl` and the session plane's
+/// `ShardStepper`): call [`advance`](Self::advance) with each
+/// iteration's centroids *before* running the iteration.  The first call
+/// only seeds the state ([`active`](Self::active) stays `false` — the
+/// assignments a fresh pass sees are not yet meaningful); every later
+/// call loosens the uppers by the per-center movement since the previous
+/// call and rebuilds the geometry, after which the engine may consult
+/// [`prunes_outright`](Self::prunes_outright) /
+/// [`tighten`](Self::tighten) / the geometry per leaf point.
+pub struct BoundsState {
+    /// Centroids of the most recent [`advance`](Self::advance) (flat
+    /// k×d), the reference frame of `upper`.
+    cur: Vec<f32>,
+    geometry: Option<CenterGeometry>,
+    /// `upper[i]` bounds the true distance from point `i` to its
+    /// currently assigned center; `INFINITY` = unknown.
+    upper: Vec<f32>,
+    active: bool,
+    stats: BoundsStats,
+    /// Scratch: the filtered candidate list of the leaf point currently
+    /// being pushed.
+    pub(crate) filtered: Vec<u32>,
+    /// Scratch: accumulator adds for pruned points, deferred to the job
+    /// slot the unpruned schedule would have used — `(job index the add
+    /// precedes, point id)`, in push order.
+    pub(crate) deferred: Vec<(usize, u32)>,
+}
+
+impl BoundsState {
+    /// Fresh state for an `n`-point dataset: all uppers unknown.
+    pub fn new(n: usize) -> Self {
+        Self {
+            cur: Vec::new(),
+            geometry: None,
+            upper: vec![f32::INFINITY; n],
+            active: false,
+            stats: BoundsStats::default(),
+            filtered: Vec::new(),
+            deferred: Vec::new(),
+        }
+    }
+
+    /// Whether the engine may prune this iteration (false until the
+    /// second [`advance`](Self::advance) — a fresh pass's assignments
+    /// are not yet meaningful).
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> BoundsStats {
+        self.stats
+    }
+
+    /// Move the state to this iteration's `centroids`: loosen every
+    /// point's upper bound by its assigned center's movement since the
+    /// previous call (`upper[i] += d(prev[a], cur[a])`, `a =
+    /// assignments[i]`), then rebuild the center-center geometry.  On
+    /// the first call (or after a shape change) the state only seeds
+    /// itself and stays inactive.
+    pub fn advance(&mut self, centroids: &Dataset, metric: Metric, assignments: &[u32]) {
+        let k = centroids.len();
+        let d = centroids.dims();
+        if self.cur.len() != k * d {
+            self.cur.clear();
+            self.cur.extend_from_slice(centroids.flat());
+            self.geometry = None;
+            self.active = false;
+            return;
+        }
+        // Per-center movement since the previous advance, in true-metric
+        // units; loosening by it keeps every upper valid for the moved
+        // centers (triangle inequality on d(x, c_new) ≤ d(x, c_old) +
+        // d(c_old, c_new)).
+        let mut shifts = vec![0.0f32; k];
+        for (c, shift) in shifts.iter_mut().enumerate() {
+            *shift = true_dist(metric, &self.cur[c * d..(c + 1) * d], centroids.point(c));
+            self.stats.matrix_cost += 1;
+        }
+        for (u, &a) in self.upper.iter_mut().zip(assignments) {
+            *u += shifts[a as usize]; // INF + x = INF: unknown stays unknown
+        }
+        self.cur.clear();
+        self.cur.extend_from_slice(centroids.flat());
+        let geom = CenterGeometry::compute(centroids, metric);
+        self.stats.matrix_cost += geom.cost();
+        self.geometry = Some(geom);
+        self.active = true;
+    }
+
+    /// The geometry of the centroids last passed to
+    /// [`advance`](Self::advance); `None` until the state is active.
+    #[inline]
+    pub fn geometry(&self) -> Option<&CenterGeometry> {
+        self.geometry.as_ref()
+    }
+
+    /// Elkan's lemma 1 with the current (possibly loose) upper: when the
+    /// upper bound is surely below half the distance from the assigned
+    /// center `a` to its closest other center, no other center can win
+    /// strictly or tie — the point's argmin is still `a`.
+    #[inline]
+    pub fn prunes_outright(&self, point: u32, a: u32) -> bool {
+        match &self.geometry {
+            Some(g) => surely_lt(self.upper[point as usize], g.s(a as usize)),
+            None => false,
+        }
+    }
+
+    /// Replace the point's upper with the exact true distance to its
+    /// assigned center (counted in
+    /// [`matrix_cost`](BoundsStats::matrix_cost)) and return it.
+    #[inline]
+    pub fn tighten(&mut self, point: u32, q: &[f32], center: &[f32], metric: Metric) -> f32 {
+        let u = true_dist(metric, q, center);
+        self.upper[point as usize] = u;
+        self.stats.matrix_cost += 1;
+        u
+    }
+
+    /// The batched engine's per-leaf-point decision (only called while
+    /// [`active`](Self::active)): `true` ⇒ drop the job outright, the
+    /// point keeps assignment `a`; `false` ⇒ push the job with the
+    /// (possibly shrunk, order-preserving) candidate list left in the
+    /// `filtered` scratch.
+    ///
+    /// Sequence: lemma 1 with the loose upper, then tighten to the exact
+    /// `d(q, c_a)` and retest, then the center-center candidate filter.
+    /// A one-survivor filtered list counts as an outright prune *only*
+    /// when the survivor is `a` itself — when `a` was not in `cands`
+    /// (the point's cell no longer carries it) the single survivor still
+    /// goes through the kernel so the assignment updates.
+    pub(crate) fn leaf_decision(
+        &mut self,
+        point: u32,
+        a: u32,
+        q: &[f32],
+        center_a: &[f32],
+        metric: Metric,
+        cands: &[u32],
+    ) -> bool {
+        if self.prunes_outright(point, a) {
+            self.stats.pruned_points += 1;
+            return true;
+        }
+        let u = true_dist(metric, q, center_a);
+        self.upper[point as usize] = u;
+        self.stats.matrix_cost += 1;
+        let Some(geom) = &self.geometry else {
+            self.filtered.clear();
+            self.filtered.extend_from_slice(cands);
+            return false;
+        };
+        if surely_lt(u, geom.s(a as usize)) {
+            self.stats.pruned_points += 1;
+            return true;
+        }
+        let dropped = geom.filter_candidates(a as usize, u, cands, &mut self.filtered);
+        self.stats.pruned_candidates += dropped as u64;
+        if self.filtered.len() == 1 && self.filtered[0] == a {
+            self.stats.pruned_points += 1;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_round_trip_and_default_is_off() {
+        assert_eq!(BoundsMode::default(), BoundsMode::Off);
+        for m in BoundsMode::all() {
+            assert_eq!(m.name().parse::<BoundsMode>().unwrap(), *m);
+            assert_eq!(format!("{m}"), m.name());
+        }
+        assert!("elkan".parse::<BoundsMode>().is_err());
+    }
+
+    #[test]
+    fn auto_resolves_at_the_documented_threshold() {
+        assert!(!BoundsMode::Off.enabled_for(1 << 10));
+        assert!(!BoundsMode::Auto.enabled_for(AUTO_MIN_K - 1));
+        assert!(BoundsMode::Auto.enabled_for(AUTO_MIN_K));
+        assert!(BoundsMode::On.enabled_for(1));
+        // The k×k memory guard refuses absurd k even under On.
+        assert!(!BoundsMode::On.enabled_for(1 << 13));
+        assert!(!BoundsMode::Auto.enabled_for(1 << 13));
+    }
+
+    #[test]
+    fn surely_lt_is_strict_and_slack_guarded() {
+        assert!(surely_lt(1.0, 2.0));
+        assert!(!surely_lt(2.0, 1.0));
+        assert!(!surely_lt(1.0, 1.0), "exact ties never prune");
+        assert!(!surely_lt(0.0, 0.0), "duplicated centers never prune");
+        assert!(surely_lt(0.0, 1.0));
+        assert!(
+            !surely_lt(1.0, 1.0 + 1e-5),
+            "gaps inside the slack margin never prune"
+        );
+        assert!(!surely_lt(f32::INFINITY, f32::INFINITY));
+        assert!(!surely_lt(f32::INFINITY, 1.0), "unset uppers never prune");
+    }
+
+    #[test]
+    fn true_dist_is_the_metric_not_its_square() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(true_dist(Metric::Euclid, &a, &b), 5.0);
+        assert_eq!(true_dist(Metric::Manhattan, &a, &b), 7.0);
+    }
+
+    #[test]
+    fn geometry_is_symmetric_with_zero_diagonal() {
+        let cents = Dataset::from_flat(3, 2, vec![0.0, 0.0, 6.0, 8.0, 0.0, 2.0]);
+        let g = CenterGeometry::compute(&cents, Metric::Euclid);
+        for a in 0..3 {
+            assert_eq!(g.cc_half(a, a), 0.0);
+            for b in 0..3 {
+                assert_eq!(g.cc_half(a, b), g.cc_half(b, a));
+            }
+        }
+        assert_eq!(g.cc_half(0, 1), 5.0); // d = 10
+        assert_eq!(g.cc_half(0, 2), 1.0); // d = 2
+        assert_eq!(g.s(0), 1.0);
+        assert_eq!(g.s(1), g.cc_half(1, 2));
+        assert_eq!(g.cost(), 3);
+    }
+
+    #[test]
+    fn filter_keeps_pivot_order_and_ties() {
+        let cents = Dataset::from_flat(3, 1, vec![0.0, 100.0, 0.5]);
+        let g = CenterGeometry::compute(&cents, Metric::Euclid);
+        let mut out = Vec::new();
+        // Query at 0.3: exact pivot distance to center 0 is 0.3; center 1
+        // (cc_half 50) is surely out, center 2 (cc_half 0.25) is not —
+        // and indeed the query is *closer* to center 2, so dropping it
+        // would be a wrong answer, not just a loose bound.
+        let dropped = g.filter_candidates(0, 0.3, &[0, 1, 2], &mut out);
+        assert_eq!(dropped, 1);
+        assert_eq!(out, vec![0, 2], "order preserved, pivot kept");
+        // Duplicated centers: cc_half = 0, nothing ever prunes.
+        let dup = Dataset::from_flat(2, 1, vec![4.0, 4.0]);
+        let gd = CenterGeometry::compute(&dup, Metric::Euclid);
+        assert_eq!(gd.filter_candidates(0, 0.0, &[0, 1], &mut out), 0);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn state_activates_on_the_second_advance_and_loosens_by_shift() {
+        let mut st = BoundsState::new(2);
+        let c0 = Dataset::from_flat(2, 1, vec![0.0, 10.0]);
+        let assign = vec![0u32, 1u32];
+        st.advance(&c0, Metric::Euclid, &assign);
+        assert!(!st.active(), "first advance only seeds");
+        assert!(st.geometry().is_none());
+        assert!(!st.prunes_outright(0, 0), "inactive state never prunes");
+
+        // Tighten point 0 against center 0, then move center 0 by 2.
+        let u = st.tighten(0, &[1.0], c0.point(0), Metric::Euclid);
+        assert_eq!(u, 1.0);
+        let c1 = Dataset::from_flat(2, 1, vec![2.0, 10.0]);
+        st.advance(&c1, Metric::Euclid, &assign);
+        assert!(st.active());
+        assert_eq!(st.upper[0], 3.0, "upper loosened by the center's shift");
+        assert_eq!(st.upper[1], f32::INFINITY, "unknown stays unknown");
+        // s(0) = half of d(2, 10) = 4: upper 3.0 surely below ⇒ prune.
+        assert!(st.prunes_outright(0, 0));
+        assert!(!st.prunes_outright(1, 1), "INF upper never prunes");
+        let stats = st.stats();
+        assert_eq!(stats.matrix_cost, 1 + 2 + 1, "tighten + shifts + matrix");
+    }
+
+    #[test]
+    fn zero_movement_advance_keeps_tight_uppers() {
+        let mut st = BoundsState::new(1);
+        let c = Dataset::from_flat(2, 1, vec![0.0, 8.0]);
+        let assign = vec![0u32];
+        st.advance(&c, Metric::Euclid, &assign);
+        st.tighten(0, &[0.5], c.point(0), Metric::Euclid);
+        st.advance(&c, Metric::Euclid, &assign);
+        assert_eq!(st.upper[0], 0.5, "zero shift leaves the upper tight");
+        assert!(st.prunes_outright(0, 0), "fixpoint prunes everything");
+    }
+
+    #[test]
+    fn stats_delta_and_absorb() {
+        let a = BoundsStats {
+            pruned_points: 10,
+            pruned_candidates: 100,
+            matrix_cost: 7,
+        };
+        let b = BoundsStats {
+            pruned_points: 4,
+            pruned_candidates: 40,
+            matrix_cost: 2,
+        };
+        let d = a.delta_from(&b);
+        assert_eq!(d.pruned_points, 6);
+        assert_eq!(d.pruned_candidates, 60);
+        assert_eq!(d.matrix_cost, 5);
+        let mut acc = b;
+        acc.absorb(&d);
+        assert_eq!(acc, a);
+    }
+}

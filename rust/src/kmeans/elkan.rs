@@ -10,6 +10,15 @@
 //! Bounds need a *metric* (triangle inequality), so Euclidean runs on true
 //! L2 internally and squares only when reporting; Manhattan is a metric
 //! already.
+//!
+//! Since PR 10 the same bounding idea is *fused into the production
+//! batched engine* as [`super::bounds`] (`BoundsMode` on
+//! [`KmeansSpec`](super::solver::KmeansSpec), DESIGN.md §10): the
+//! center-center matrix and movement-loosened upper bounds prune panel
+//! jobs before enqueue while keeping labels and centroid bits identical
+//! to the unpruned run.  This standalone engine remains the
+//! whole-algorithm reference baseline; the bounds plane is its fused
+//! successor on the panel path.
 
 use super::{
     centroids_from_sums, max_sq_movement, metrics, IterHook, IterStats, KmeansResult, Metric,

@@ -43,6 +43,7 @@
 //! the software "PL"), and `runtime::PjrtPanels` / the coordinator's
 //! offload service for the real PJRT seam.
 
+use super::bounds::{BoundsMode, BoundsState};
 use super::panel::{PanelJobs, PanelSet};
 use super::{
     centroids_from_sums, max_sq_movement, IterHook, IterStats, KmeansResult, LevelWork, Metric,
@@ -62,6 +63,11 @@ pub struct FilterOpts {
     pub metric: Metric,
     pub tol: f32,
     pub max_iters: usize,
+    /// Triangle-inequality bounds pruning (DESIGN.md §10).  Applies to
+    /// the *batched* engine only — the recursive reference engine always
+    /// runs unpruned; `Off` (the default) leaves the batched engine
+    /// bitwise on its legacy path.
+    pub bounds: BoundsMode,
 }
 
 impl Default for FilterOpts {
@@ -70,6 +76,7 @@ impl Default for FilterOpts {
             metric: Metric::Euclid,
             tol: 1e-6,
             max_iters: 100,
+            bounds: BoundsMode::Off,
         }
     }
 }
@@ -312,6 +319,32 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
     assignments: &mut [u32],
     arena: &mut FilterScratch,
 ) -> (Vec<f32>, Vec<u32>, IterStats) {
+    filter_iteration_batched_bounded(tree, data, centroids, metric, backend, assignments, arena, None)
+}
+
+/// [`filter_iteration_batched_scratch`] with optional triangle-inequality
+/// bounds (DESIGN.md §10): while the state is
+/// [`active`](BoundsState::active), leaf panel jobs whose incumbent
+/// center provably still wins are dropped before enqueue, and surviving
+/// leaf jobs get their candidate lists shrunk by the center-center test.
+/// Pruning is exact — assignments and centroid sums are bitwise the
+/// unbounded engine's (pruned points' accumulator adds are deferred to
+/// the exact slot the unpruned schedule would have used, and candidate
+/// lists keep their order, so f32 accumulation order never changes).
+/// The caller owns the protocol: [`BoundsState::advance`] must be called
+/// with `centroids` *before* this pass, and `assignments` must hold the
+/// previous pass's labels.
+#[allow(clippy::too_many_arguments)]
+pub fn filter_iteration_batched_bounded<B: PanelBackend>(
+    tree: &KdTree,
+    data: &Dataset,
+    centroids: &Dataset,
+    metric: Metric,
+    backend: &mut B,
+    assignments: &mut [u32],
+    arena: &mut FilterScratch,
+    mut bounds: Option<&mut BoundsState>,
+) -> (Vec<f32>, Vec<u32>, IterStats) {
     let k = centroids.len();
     let d = data.dims();
     let mut scratch = Scratch::new(k, d);
@@ -346,9 +379,17 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
         }
 
         // Assemble the level's job batch: one midpoint job per interior
-        // node, one job per leaf point.
+        // node, one job per leaf point.  With active bounds, a leaf point
+        // whose incumbent provably still wins never becomes a job — its
+        // accumulator add is deferred (tagged with the job index it would
+        // have had) so the f32 accumulation order stays the unbounded
+        // engine's — and surviving leaf jobs may carry a shrunk (still
+        // ascending) candidate list.
         jobs.clear(d);
         kinds.clear();
+        if let Some(bs) = bounds.as_deref_mut() {
+            bs.deferred.clear();
+        }
         for (slot, wn) in wave.iter().enumerate() {
             let node = &tree.nodes[wn.node as usize];
             let cands =
@@ -356,10 +397,38 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
             stats.node_visits += 1;
             if node.is_leaf() {
                 for &pi in tree.node_points(node) {
-                    jobs.push(data.point(pi as usize), cands);
+                    let q = data.point(pi as usize);
+                    let filtered = match bounds.as_deref_mut() {
+                        Some(bs) if bs.active() => {
+                            let a = assignments[pi as usize];
+                            if bs.leaf_decision(
+                                pi,
+                                a,
+                                q,
+                                centroids.point(a as usize),
+                                metric,
+                                cands,
+                            ) {
+                                bs.deferred.push((kinds.len(), pi));
+                                continue;
+                            }
+                            true
+                        }
+                        _ => false,
+                    };
+                    if filtered {
+                        // Reborrow: the filtered list lives in the bounds
+                        // scratch filled by leaf_decision above.
+                        if let Some(bs) = bounds.as_deref_mut() {
+                            jobs.push(q, &bs.filtered);
+                            stats.levels[depth].cand_evals += bs.filtered.len() as u64;
+                        }
+                    } else {
+                        jobs.push(q, cands);
+                        stats.levels[depth].cand_evals += cands.len() as u64;
+                    }
                     kinds.push(JobKind::LeafPoint { point: pi });
                     stats.levels[depth].leaf_jobs += 1;
-                    stats.levels[depth].cand_evals += cands.len() as u64;
                 }
             } else {
                 jobs.push_with(cands, |mid| node.bbox.midpoint_into(mid));
@@ -375,10 +444,22 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
         backend.panels(jobs, centroids, metric, panels);
         debug_assert_eq!(panels.len(), kinds.len());
 
-        // PS-side consumption of the panels.
+        // PS-side consumption of the panels.  Deferred adds of
+        // bounds-pruned points flush right before the job that would
+        // have followed them, bitwise-reproducing the unbounded
+        // accumulation order.
         next_wave.clear();
         next_cand.clear();
+        let mut def_i = 0usize;
         for (j, kind) in kinds.iter().enumerate() {
+            if let Some(bs) = bounds.as_deref_mut() {
+                while def_i < bs.deferred.len() && bs.deferred[def_i].0 <= j {
+                    let pi = bs.deferred[def_i].1;
+                    scratch.add_point(assignments[pi as usize] as usize, data.point(pi as usize), d);
+                    stats.leaf_points += 1;
+                    def_i += 1;
+                }
+            }
             let cands = jobs.cands(j);
             let dists = panels.row(j);
             stats.dist_evals += cands.len() as u64;
@@ -441,6 +522,16 @@ pub fn filter_iteration_batched_scratch<B: PanelBackend>(
                         });
                     }
                 }
+            }
+        }
+
+        // Pruned points that came after the level's last pushed job.
+        if let Some(bs) = bounds.as_deref_mut() {
+            while def_i < bs.deferred.len() {
+                let pi = bs.deferred[def_i].1;
+                scratch.add_point(assignments[pi as usize] as usize, data.point(pi as usize), d);
+                stats.leaf_points += 1;
+                def_i += 1;
             }
         }
 
@@ -516,11 +607,21 @@ fn run_impl<B: PanelBackend>(
         .unwrap_or_default();
     // One arena set for the whole run — recycled every iteration.
     let mut scratch = FilterScratch::new();
+    // Bounds ride the batched engine only (the recursive reference is
+    // always unpruned); Off resolves to no state at all.
+    let mut bounds_state = if backend.is_some() && opts.bounds.enabled_for(init.len()) {
+        Some(BoundsState::new(data.len()))
+    } else {
+        None
+    };
 
     for _ in 0..opts.max_iters {
+        if let Some(bs) = bounds_state.as_mut() {
+            bs.advance(&centroids, opts.metric, &assignments);
+        }
         let (sums, counts, mut iter_stats) = match backend.as_deref_mut() {
             None => filter_iteration(tree, data, &centroids, opts.metric, &mut assignments),
-            Some(b) => filter_iteration_batched_scratch(
+            Some(b) => filter_iteration_batched_bounded(
                 tree,
                 data,
                 &centroids,
@@ -528,6 +629,7 @@ fn run_impl<B: PanelBackend>(
                 b,
                 &mut assignments,
                 &mut scratch,
+                bounds_state.as_mut(),
             ),
         };
         let next = centroids_from_sums(&sums, &counts, &centroids);
@@ -554,6 +656,12 @@ fn run_impl<B: PanelBackend>(
         stats.simd_lanes = delta.simd_lanes;
         stats.quantized_candidates = delta.quantized_candidates;
         stats.rescored_candidates = delta.rescored_candidates;
+    }
+    if let Some(bs) = &bounds_state {
+        let b = bs.stats();
+        stats.bound_pruned_points = b.pruned_points;
+        stats.bound_pruned_candidates = b.pruned_candidates;
+        stats.bounds_matrix_cost = b.matrix_cost;
     }
 
     KmeansResult {
@@ -751,6 +859,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn bounds_on_run_is_bitwise_the_bounds_off_run() {
+        // DESIGN.md §10: pruning is exact and never reorders surviving
+        // work, so the whole trajectory — labels, centroid bits,
+        // iteration count — matches the unbounded engine under the
+        // scalar backend, while the counters prove work was eliminated.
+        for metric in [Metric::Euclid, Metric::Manhattan] {
+            let s = generate_params(900, 3, 8, 0.05, 1.0, 21);
+            let tree = KdTree::build(&s.data);
+            let init =
+                init_centroids(&s.data, 8, Init::UniformSample, metric, 22);
+            let off = FilterOpts { metric, tol: 1e-6, max_iters: 12, bounds: BoundsMode::Off };
+            let on = FilterOpts { bounds: BoundsMode::On, ..off.clone() };
+            let a = run_batched(&s.data, &tree, &init, &off, &mut CpuPanels);
+            let b = run_batched(&s.data, &tree, &init, &on, &mut CpuPanels);
+            assert_eq!(a.assignments, b.assignments, "{metric:?}");
+            for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{metric:?}: centroid bits");
+            }
+            assert_eq!(a.stats.iterations(), b.stats.iterations(), "{metric:?}");
+            assert_eq!(a.stats.converged, b.stats.converged, "{metric:?}");
+            assert!(
+                b.stats.bound_pruned_points + b.stats.bound_pruned_candidates > 0,
+                "{metric:?}: bounds never fired"
+            );
+            assert!(b.stats.bounds_matrix_cost > 0, "{metric:?}");
+            assert_eq!(a.stats.bound_pruned_points, 0, "off mode keeps counters zero");
+            assert_eq!(a.stats.bounds_matrix_cost, 0);
+            // The ledger's point: pruning eliminates kernel evals.
+            assert!(
+                b.stats.total_dist_evals() < a.stats.total_dist_evals(),
+                "{metric:?}: {} !< {}",
+                b.stats.total_dist_evals(),
+                a.stats.total_dist_evals()
+            );
+        }
     }
 
     #[test]

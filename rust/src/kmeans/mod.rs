@@ -28,6 +28,7 @@
 //! would take" (modelled), so the same run feeds both the functional
 //! results and the Fig. 2/3 timing reproductions.
 
+pub mod bounds;
 pub mod elkan;
 pub mod filtering;
 pub mod init;
@@ -41,6 +42,7 @@ pub mod shard;
 pub mod solver;
 pub mod twolevel;
 
+pub use bounds::{BoundsMode, BoundsStats};
 pub use metrics::Metric;
 pub use model::{KmeansModel, TrainStats, MODEL_FORMAT_VERSION};
 pub use predict::Predictor;
@@ -163,6 +165,19 @@ pub struct RunStats {
     pub quantized_candidates: u64,
     /// Quantized candidates re-scored in exact f32 (shortlist survivors).
     pub rescored_candidates: u64,
+    /// Leaf panel jobs dropped outright by the triangle-inequality bounds
+    /// (DESIGN.md §10) — the incumbent center provably still won.
+    /// Local-process telemetry; not carried on the remote wire (decodes
+    /// as 0).
+    pub bound_pruned_points: u64,
+    /// Candidate entries removed from surviving leaf jobs by the bounds'
+    /// center-center test.  Local-process telemetry, like
+    /// `bound_pruned_points`.
+    pub bound_pruned_candidates: u64,
+    /// Scalar true-distance evaluations spent maintaining the bounds (the
+    /// k×k matrix, per-center shifts, on-demand tightenings) — the cost
+    /// side of the pruning ledger.  Local-process telemetry.
+    pub bounds_matrix_cost: u64,
 }
 
 impl RunStats {

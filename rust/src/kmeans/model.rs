@@ -208,6 +208,11 @@ fn spec_to_json(spec: &KmeansSpec) -> Json {
     if let Some(kind) = spec.kernel {
         fields.push(("kernel", Json::str(kind.name())));
     }
+    // `bounds` follows the same additive rule: only non-default modes are
+    // written, so every pre-bounds document stays byte-identical.
+    if spec.bounds != crate::kmeans::bounds::BoundsMode::Off {
+        fields.push(("bounds", Json::str(spec.bounds.name())));
+    }
     Json::obj(fields)
 }
 
@@ -260,6 +265,16 @@ fn spec_from_json(j: &Json) -> anyhow::Result<KmeansSpec> {
             .parse()
             .map_err(|e| anyhow::anyhow!("bad spec kernel: {e}"))?;
         spec = spec.kernel(kind);
+    }
+    // Absent `bounds` means `Off` (the pre-bounds default).
+    if let Some(v) = j.get("bounds") {
+        let name = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("spec field `bounds` must be a string"))?;
+        let mode = name
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad spec bounds: {e}"))?;
+        spec = spec.bounds(mode);
     }
     Ok(spec)
 }

@@ -16,7 +16,7 @@
 //! For large `k` the candidate lists can be pruned through a kd-tree
 //! built over the *centroids* (KPynq-style assignment-time pruning): a
 //! greedy descent yields an upper bound, then every subtree whose
-//! bounding-box lower bound ([`BBox::min_dist`]) beats the (slightly
+//! bounding-box lower bound ([`BBox::min_dist`](crate::kdtree::bbox::BBox::min_dist)) beats the (slightly
 //! inflated) bound contributes candidates.  The shortlist provably
 //! contains every *scalar-arithmetic* global minimizer, and candidates
 //! are sorted ascending before paneling, so with the scalar kernel
@@ -27,7 +27,20 @@
 //! rounding (≤ ~1e-4 relative), so a near-exact tie can resolve
 //! differently with pruning on vs off; the assigned *distance* still
 //! agrees to that tolerance.
+//!
+//! Orthogonally, [`Predictor::bounds`] layers the triangle-inequality
+//! bounds tier (DESIGN.md §10) on top: a one-time k×k center-center
+//! half-distance matrix lets each query drop candidates `c` with
+//! `d(q, pivot) < ½·d(pivot, c)` — provably not the nearest — *before*
+//! paneling.  Survivors are still scored by the configured kernel (a
+//! query is never answered from the bound alone), so under the scalar
+//! and quantized kernels labels **and** distances stay bitwise-identical
+//! to bounds-off, lowest-index ties included.  Under the blocked/SIMD
+//! kernels per-candidate values depend on lane position, so — exactly as
+//! with the kd prune above — a near-exact tie can resolve differently;
+//! the assigned distance agrees to kernel rounding.
 
+use super::bounds::{true_dist, BoundsMode, BoundsStats, CenterGeometry};
 use super::model::KmeansModel;
 use super::panel::quant::QuantPanels;
 use super::panel::{KernelKind, KernelStats, PanelBackend, PanelJobs, PanelSet, ParCpuPanels};
@@ -48,7 +61,8 @@ const ASSIGN_CHUNK: usize = 8192;
 
 /// Relative slack on the branch-and-bound upper bound, absorbing f32
 /// summation-order differences between [`Metric::dist`]'s unrolled kernel
-/// and the plain [`BBox::min_dist`] loop.  Only ever *widens* the
+/// and the plain [`BBox::min_dist`](crate::kdtree::bbox::BBox::min_dist)
+/// loop.  Only ever *widens* the
 /// shortlist, so exactness is preserved.
 const BOUND_SLACK: f32 = 1e-5;
 
@@ -58,11 +72,15 @@ pub struct Predictor<'m> {
     backend: Box<dyn PanelBackend + Send + 'm>,
     /// kd-tree over the centroids when pruning is active.
     tree: Option<KdTree>,
+    /// k×k half-distance matrix when the bounds tier is active.
+    geometry: Option<CenterGeometry>,
+    bstats: BoundsStats,
     // Recycled arenas (steady-state predict allocates nothing per batch).
     jobs: PanelJobs,
     panels: PanelSet,
     all_cands: Vec<u32>,
     shortlist: Vec<u32>,
+    bounds_list: Vec<u32>,
     stack: Vec<u32>,
 }
 
@@ -87,10 +105,13 @@ impl<'m> Predictor<'m> {
             model,
             backend: Box::new(backend),
             tree: None,
+            geometry: None,
+            bstats: BoundsStats::default(),
             jobs: PanelJobs::new(),
             panels: PanelSet::new(),
             all_cands: (0..model.k() as u32).collect(),
             shortlist: Vec::new(),
+            bounds_list: Vec::new(),
             stack: Vec::new(),
         };
         if model.k() >= PRUNE_MIN_K {
@@ -131,12 +152,41 @@ impl<'m> Predictor<'m> {
         self
     }
 
+    /// Select the triangle-inequality bounds tier (DESIGN.md §10).  The
+    /// center-center matrix is computed once, here; its cost lands in
+    /// [`bounds_stats`](Self::bounds_stats)'s `matrix_cost`.
+    /// [`BoundsMode::Auto`] engages at large k, [`BoundsMode::On`]
+    /// whenever the matrix fits the memory guard.
+    pub fn bounds(mut self, mode: BoundsMode) -> Self {
+        self.geometry = if mode.enabled_for(self.model.k()) {
+            let geom = CenterGeometry::compute(&self.model.centroids, self.model.metric);
+            self.bstats.matrix_cost += geom.cost();
+            Some(geom)
+        } else {
+            None
+        };
+        self
+    }
+
     pub fn model(&self) -> &'m KmeansModel {
         self.model
     }
 
     pub fn pruning(&self) -> bool {
         self.tree.is_some()
+    }
+
+    /// Is the bounds tier actually filtering (mode resolved to active)?
+    pub fn bounding(&self) -> bool {
+        self.geometry.is_some()
+    }
+
+    /// Lifetime bounds-pruning counters: queries whose candidate list the
+    /// bounds collapsed to a single (still kernel-scored) survivor,
+    /// candidates dropped, and true-distance evals spent maintaining the
+    /// bounds.  All zero when the tier is off.
+    pub fn bounds_stats(&self) -> BoundsStats {
+        self.bstats
     }
 
     /// Labels for a batch of query points.
@@ -187,7 +237,7 @@ impl<'m> Predictor<'m> {
             self.jobs.clear(d);
             for i in start..start + take {
                 let q = queries.point(i);
-                match &self.tree {
+                let cands: &[u32] = match &self.tree {
                     Some(tree) => {
                         centroid_shortlist(
                             tree,
@@ -200,9 +250,31 @@ impl<'m> Predictor<'m> {
                         // Ascending order ⇒ first-wins arg-min over the
                         // shortlist picks the lowest-index global minimum.
                         self.shortlist.sort_unstable();
-                        self.jobs.push(q, &self.shortlist);
+                        &self.shortlist
                     }
-                    None => self.jobs.push(q, &self.all_cands),
+                    None => &self.all_cands,
+                };
+                match &self.geometry {
+                    Some(geom) => {
+                        // Pivot on the first (lowest-index) candidate: its
+                        // exact true distance rules out every candidate the
+                        // center-center test puts surely farther.  The
+                        // survivors — always including the argmin and its
+                        // ties, in unchanged order — still go through the
+                        // kernel, even when only one is left, so distances
+                        // stay kernel-computed.
+                        let g = cands[0] as usize;
+                        let u = true_dist(metric, q, cents.point(g));
+                        self.bstats.matrix_cost += 1;
+                        let dropped =
+                            geom.filter_candidates(g, u, cands, &mut self.bounds_list);
+                        self.bstats.pruned_candidates += dropped as u64;
+                        if self.bounds_list.len() == 1 {
+                            self.bstats.pruned_points += 1;
+                        }
+                        self.jobs.push(q, &self.bounds_list);
+                    }
+                    None => self.jobs.push(q, cands),
                 }
             }
             self.backend.panels(&self.jobs, cents, metric, &mut self.panels);

@@ -24,8 +24,9 @@
 //! driver-owned centroids, recovery is stateless re-execution — no
 //! exactly-once bookkeeping beyond "fold each (shard, iter) once", which
 //! the driver enforces structurally.  A dead connection climbs the PR-6
-//! ladder: reconnect the same endpoint and re-load ([`SessionMetrics::
-//! shard_reloads`]), re-load on another live session connection, and
+//! ladder: reconnect the same endpoint and re-load
+//! ([`SessionMetrics::shard_reloads`]), re-load on another live session
+//! connection, and
 //! finally a local [`ShardStepper`] fallback
 //! ([`SessionMetrics::remote_fallbacks`]).  Whatever rung answers, the
 //! folded partials carry the same IEEE bits.
@@ -351,7 +352,8 @@ fn recover_and_step<'a>(
     log::warn!("shard {si}: session remotes exhausted, stepping locally from here on");
     let part = states[si].part;
     let metric = states[si].wspec.metric;
-    let mut stepper = Box::new(ShardStepper::new(part, metric, CpuPanels));
+    let mut stepper =
+        Box::new(ShardStepper::new(part, metric, CpuPanels).with_bounds(states[si].wspec.bounds));
     let (sums, counts, st) = stepper.step(&states[si].centroids);
     states[si].home = Home::Local(stepper);
     states[si].fold(si, &sums, counts, st, on_iter);
@@ -442,7 +444,10 @@ pub fn run_session(
             }
             let part = states[si].part;
             let metric = states[si].wspec.metric;
-            states[si].home = Home::Local(Box::new(ShardStepper::new(part, metric, CpuPanels)));
+            let bounds = states[si].wspec.bounds;
+            states[si].home = Home::Local(Box::new(
+                ShardStepper::new(part, metric, CpuPanels).with_bounds(bounds),
+            ));
         }
     }
 
@@ -548,10 +553,22 @@ pub fn run_session(
     }
     let partials = states
         .into_iter()
-        .map(|st| ShardPartial {
-            centroids: st.centroids,
-            counts: st.last_counts.iter().map(|&c| c as usize).collect(),
-            stats: st.stats,
+        .map(|st| {
+            let mut stats = st.stats;
+            // Bounds counters are local-process telemetry: fold them in
+            // for shards that ran (or fell back) on a local stepper —
+            // remote partials carry none on the wire.
+            if let Home::Local(stepper) = &st.home {
+                let bs = stepper.bounds_stats();
+                stats.bound_pruned_points += bs.pruned_points;
+                stats.bound_pruned_candidates += bs.pruned_candidates;
+                stats.bounds_matrix_cost += bs.matrix_cost;
+            }
+            ShardPartial {
+                centroids: st.centroids,
+                counts: st.last_counts.iter().map(|&c| c as usize).collect(),
+                stats,
+            }
         })
         .collect();
     (partials, m)

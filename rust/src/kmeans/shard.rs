@@ -36,7 +36,8 @@
 //! ever-growing used-set; for P ≤ [`COMBINE_FAN_IN`] it *is* a single
 //! flat pass, bitwise identical to the legacy `twolevel::combine`.
 
-use super::filtering::{filter_iteration_batched_scratch, FilterScratch};
+use super::bounds::{BoundsMode, BoundsState, BoundsStats};
+use super::filtering::{filter_iteration_batched_bounded, FilterScratch};
 use super::panel::PanelBackend;
 use super::solver::{Algo, IterObserver, KmeansSpec, SolverCtx};
 use super::{centroids_from_sums, max_sq_movement, IterStats, KmeansResult, Metric, RunStats};
@@ -460,7 +461,8 @@ where
 /// `LoadShard` (worker-side) or per local session shard
 /// (coordinator-side); each [`step`](Self::step) executes exactly one
 /// canonical batched filter iteration — the same
-/// [`filter_iteration_batched_scratch`] call the one-shot engine loops
+/// [`filter_iteration_batched_scratch`](super::filtering::filter_iteration_batched_scratch)
+/// call the one-shot engine loops
 /// over, with the same tree construction as [`solve_level1_shard`].
 pub struct ShardStepper<'a, B: PanelBackend> {
     data: &'a Dataset,
@@ -469,6 +471,8 @@ pub struct ShardStepper<'a, B: PanelBackend> {
     backend: B,
     assignments: Vec<u32>,
     scratch: FilterScratch,
+    bounds_mode: BoundsMode,
+    bounds: Option<BoundsState>,
 }
 
 impl<'a, B: PanelBackend> ShardStepper<'a, B> {
@@ -481,8 +485,19 @@ impl<'a, B: PanelBackend> ShardStepper<'a, B> {
             backend,
             assignments: vec![0u32; data.len()],
             scratch: FilterScratch::new(),
+            bounds_mode: BoundsMode::Off,
+            bounds: None,
             data,
         }
+    }
+
+    /// Enable the triangle-inequality bounds tier (DESIGN.md §10) for
+    /// subsequent steps.  Bound state is owned per stepper, so a stepper
+    /// rebuilt mid-run (recovery) simply restarts from infinite uppers —
+    /// looser, never wrong.
+    pub fn with_bounds(mut self, mode: BoundsMode) -> Self {
+        self.bounds_mode = mode;
+        self
     }
 
     /// One filter iteration against `centroids`: returns the per-center
@@ -490,7 +505,13 @@ impl<'a, B: PanelBackend> ShardStepper<'a, B> {
     /// `moved` in the returned stats is left untouched (0) — computing it
     /// needs the *next* centroids, which only the folding side has.
     pub fn step(&mut self, centroids: &Dataset) -> (Vec<f32>, Vec<u32>, IterStats) {
-        filter_iteration_batched_scratch(
+        if self.bounds_mode.enabled_for(centroids.len()) {
+            let bs = self
+                .bounds
+                .get_or_insert_with(|| BoundsState::new(self.data.len()));
+            bs.advance(centroids, self.metric, &self.assignments);
+        }
+        filter_iteration_batched_bounded(
             &self.tree,
             self.data,
             centroids,
@@ -498,7 +519,14 @@ impl<'a, B: PanelBackend> ShardStepper<'a, B> {
             &mut self.backend,
             &mut self.assignments,
             &mut self.scratch,
+            self.bounds.as_mut(),
         )
+    }
+
+    /// Cumulative bounds-pruning counters across every step so far (all
+    /// zero when bounds never engaged).
+    pub fn bounds_stats(&self) -> BoundsStats {
+        self.bounds.as_ref().map(|b| b.stats()).unwrap_or_default()
     }
 
     /// Labels written by the most recent [`step`](Self::step).

@@ -35,6 +35,7 @@
 //! assert!(result.stats.converged);
 //! ```
 
+use super::bounds::BoundsMode;
 use super::elkan::{self, ElkanOpts};
 use super::filtering::{self, FilterOpts};
 use super::init::{init_centroids, Init};
@@ -151,6 +152,13 @@ pub struct KmeansSpec {
     /// resolves leniently via [`KernelKind::effective`] (SIMD demotes to
     /// blocked on hosts without AVX2/FMA or NEON).
     pub kernel: Option<KernelKind>,
+    /// Triangle-inequality bounds tier for the batched filtering engine
+    /// (DESIGN.md §10).  [`BoundsMode::Off`] (the default) leaves every
+    /// engine bitwise on its legacy path; `Auto` enables pruning at
+    /// large k; `On` forces it.  Only [`Algo::FilterBatched`] — and the
+    /// shard/session planes built on it — honors the knob; the other
+    /// engines ignore it.
+    pub bounds: BoundsMode,
     /// Explicit initial centroids; overrides `init`/`seed` seeding.
     /// Ignored by [`Algo::TwoLevel`], which seeds per quarter.
     pub start: Option<Dataset>,
@@ -174,6 +182,7 @@ impl KmeansSpec {
             workers: QUARTERS,
             track_cost: false,
             kernel: None,
+            bounds: BoundsMode::Off,
             start: None,
         }
     }
@@ -244,6 +253,12 @@ impl KmeansSpec {
     /// Pin the distance-kernel tier for the default panel backend.
     pub fn kernel(mut self, kind: KernelKind) -> Self {
         self.kernel = Some(kind);
+        self
+    }
+
+    /// Set the triangle-inequality bounds tier for the batched engine.
+    pub fn bounds(mut self, bounds: BoundsMode) -> Self {
+        self.bounds = bounds;
         self
     }
 
@@ -571,6 +586,9 @@ impl Solver for FilterSolver {
             metric: spec.metric,
             tol: spec.tol,
             max_iters: spec.max_iters,
+            // The recursive engine assigns whole subtrees wholesale and
+            // never builds panel jobs, so point-level bounds do not apply.
+            bounds: BoundsMode::Off,
         };
         match ctx.observer.as_mut() {
             Some(obs) => {
@@ -605,6 +623,7 @@ impl Solver for BatchedFilterSolver {
             metric: spec.metric,
             tol: spec.tol,
             max_iters: spec.max_iters,
+            bounds: spec.bounds,
         };
         let mut fallback: Option<ParCpuPanels> = None;
         let mut backend: &mut dyn PanelBackend = match ctx.backend.as_mut() {
@@ -700,7 +719,8 @@ mod tests {
             .seed(99)
             .workers(2)
             .track_cost(true)
-            .kernel(KernelKind::Auto);
+            .kernel(KernelKind::Auto)
+            .bounds(BoundsMode::Auto);
         assert_eq!(spec.k, 7);
         assert_eq!(spec.algo, Algo::Elkan);
         assert_eq!(spec.metric, Metric::Manhattan);
@@ -714,7 +734,9 @@ mod tests {
         assert_eq!(spec.workers, 2);
         assert!(spec.track_cost);
         assert_eq!(spec.kernel, Some(KernelKind::Auto));
+        assert_eq!(spec.bounds, BoundsMode::Auto);
         assert_eq!(KmeansSpec::new(2).kernel, None);
+        assert_eq!(KmeansSpec::new(2).bounds, BoundsMode::Off);
     }
 
     #[test]

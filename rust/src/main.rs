@@ -31,7 +31,7 @@ use muchswift::kmeans::predict::Predictor;
 use muchswift::kmeans::remote::{RemoteShardPool, RetryPolicy, WorkerServer, PROTOCOL_VERSION};
 use muchswift::kmeans::solver::{Algo, IterEvent, IterFlow, IterObserver, KmeansSpec, SolverCtx};
 use muchswift::kmeans::twolevel::Partition;
-use muchswift::kmeans::{KmeansResult, Metric};
+use muchswift::kmeans::{BoundsMode, KmeansResult, Metric};
 use muchswift::runtime::{self, PjrtPanels, PjrtRuntime};
 use muchswift::serve::{ClusterService, ServeConfig};
 use muchswift::util::cli::{Command, Matches};
@@ -60,6 +60,7 @@ fn commands() -> Vec<Command> {
             .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
             .opt("kernel", "", "scalar|blocked|simd|auto distance-kernel tier (empty = legacy default)")
+            .opt("bounds", "off", "off|auto|on triangle-inequality pruning (batched engine; labels stay bitwise-exact)")
             .multi("remote", "shard-worker endpoint host:port for level-1 solves (repeatable)")
             .opt("remote-timeout-ms", "120000", "per-job deadline and io timeout for remote solves (ms)")
             .opt("remote-retries", "3", "attempts per remote operation, including the first")
@@ -93,6 +94,7 @@ fn commands() -> Vec<Command> {
             .opt("partition", "round-robin", "round-robin|kd-top|contiguous (two-level)")
             .opt("init", "uniform", "uniform|kmeans++")
             .opt("kernel", "", "scalar|blocked|simd|auto distance-kernel tier (empty = legacy default)")
+            .opt("bounds", "off", "off|auto|on triangle-inequality pruning (batched engine; labels stay bitwise-exact)")
             .opt("model", "model.json", "output model path")
             .opt("out", "", "also write training-set assignments CSV here")
             .pos("input", "optional CSV dataset (overrides synthetic)"),
@@ -103,6 +105,7 @@ fn commands() -> Vec<Command> {
             .opt("kernel", "scalar", "scalar|blocked|simd|auto panel kernel (scalar = oracle arithmetic)")
             .flag("quantized", "i8 shortlist + exact f32 re-score (labels stay bitwise-exact)")
             .opt("prune", "auto", "auto|on|off centroid kd-tree prune")
+            .opt("bounds", "off", "off|auto|on triangle-inequality candidate pruning")
             .pos("input", "CSV dataset to assign (required)"),
         Command::new("serve-bench", "closed-loop load generator for the ClusterService")
             .opt("n", "20000", "synthetic points backing the request stream")
@@ -120,6 +123,7 @@ fn commands() -> Vec<Command> {
             .opt("queue", "256", "bounded request-queue capacity")
             .opt("kernel", "blocked", "scalar|blocked|simd|auto service panel kernel")
             .flag("quantized", "serve through the i8 shortlist + exact re-score path")
+            .opt("bounds", "off", "off|auto|on triangle-inequality candidate pruning")
             // Anchored to the repo root (like BENCH_hotpath.json) so runs
             // from any cwd refresh the checked-in artifact CI gates on.
             .opt(
@@ -214,6 +218,14 @@ fn report_result(r: &KmeansResult, data: &muchswift::data::Dataset, metric: Metr
         "work: {dist} dist evals, {nodes} node visits, {prunes} prune tests, \
          {leaves} leaf points, {interior} interior assigns",
     );
+    if r.stats.bound_pruned_points + r.stats.bound_pruned_candidates > 0 {
+        println!(
+            "bounds: {} jobs pruned outright, {} candidates pruned, {} maintenance evals",
+            r.stats.bound_pruned_points,
+            r.stats.bound_pruned_candidates,
+            r.stats.bounds_matrix_cost
+        );
+    }
 }
 
 /// Synthetic-or-CSV dataset for the training-shaped subcommands.
@@ -269,6 +281,7 @@ fn spec_from_matches(
     if !kernel.is_empty() {
         spec = spec.kernel(kernel.parse::<KernelKind>().map_err(anyhow::Error::msg)?);
     }
+    spec = spec.bounds(m.str("bounds").parse::<BoundsMode>().map_err(anyhow::Error::msg)?);
     Ok(spec)
 }
 
@@ -516,6 +529,8 @@ fn run() -> anyhow::Result<()> {
             if let Some(on) = prune {
                 pred = pred.prune(on);
             }
+            let bounds: BoundsMode = m.str("bounds").parse().map_err(anyhow::Error::msg)?;
+            pred = pred.bounds(bounds);
             let t0 = Instant::now();
             let (labels, dists) = pred.assign_scored(&data);
             let secs = t0.elapsed().as_secs_f64();
@@ -535,6 +550,14 @@ fn run() -> anyhow::Result<()> {
                 println!(
                     "kernel: {} candidates shortlisted in i8, {} re-scored in exact f32",
                     ks.quantized_candidates, ks.rescored_candidates
+                );
+            }
+            if pred.bounding() {
+                let bs = pred.bounds_stats();
+                println!(
+                    "bounds: {} candidates pruned, {} queries down to one candidate, \
+                     {} maintenance evals",
+                    bs.pruned_candidates, bs.pruned_points, bs.matrix_cost
                 );
             }
             write_labels_if_asked(m.str("out"), &labels)?;
@@ -579,6 +602,7 @@ fn run() -> anyhow::Result<()> {
                 batch_deadline_us: m.u64("deadline-us")?,
                 kernel: m.str("kernel").parse().map_err(anyhow::Error::msg)?,
                 quantized: m.flag("quantized"),
+                bounds: m.str("bounds").parse().map_err(anyhow::Error::msg)?,
                 ..Default::default()
             };
             let svc = ClusterService::start(Arc::clone(&model), cfg.clone());
@@ -626,6 +650,7 @@ fn run() -> anyhow::Result<()> {
                         ("queue_cap", Json::num(cfg.queue_cap as f64)),
                         ("kernel", Json::str(cfg.kernel.name())),
                         ("quantized", Json::Bool(cfg.quantized)),
+                        ("bounds", Json::str(cfg.bounds.name())),
                         ("k", Json::num(model.k() as f64)),
                         ("d", Json::num(model.dims() as f64)),
                     ]),
@@ -727,6 +752,7 @@ fn write_coord_report(
                 ("workers", Json::num(spec.workers as f64)),
                 ("partition", Json::str(spec.partition.name())),
                 ("metric", Json::str(spec.metric.name())),
+                ("bounds", Json::str(spec.bounds.name())),
                 (
                     "remote_endpoints",
                     Json::Arr(remotes.iter().map(|r| Json::str(r.as_str())).collect()),
@@ -789,6 +815,15 @@ fn write_coord_report(
                 ("session_bytes_tx", Json::num(cm.session_bytes_tx as f64)),
                 ("session_bytes_rx", Json::num(cm.session_bytes_rx as f64)),
                 ("shard_reloads", Json::num(cm.shard_reloads as f64)),
+                (
+                    "bound_pruned_points",
+                    Json::num(cm.bound_pruned_points as f64),
+                ),
+                (
+                    "bound_pruned_candidates",
+                    Json::num(cm.bound_pruned_candidates as f64),
+                ),
+                ("bounds_matrix_cost", Json::num(cm.bounds_matrix_cost as f64)),
             ]),
         ),
         (

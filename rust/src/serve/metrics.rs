@@ -6,6 +6,7 @@
 //! (not per request) by the dispatcher thread, so contention with the
 //! submit path is negligible; snapshots compute percentiles on demand.
 
+use crate::kmeans::bounds::BoundsStats;
 use crate::kmeans::panel::KernelStats;
 use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, Accum};
@@ -63,6 +64,15 @@ pub struct ServeMetrics {
     /// Shortlist survivors re-scored in exact f32 (the parity guarantee's
     /// cost; `rescored / quantized` is the shortlist survival rate).
     pub rescored_candidates: u64,
+    /// Queries whose candidate list the triangle-inequality bounds tier
+    /// (DESIGN.md §10) collapsed to a single, still-kernel-scored
+    /// survivor.
+    pub bound_pruned_points: u64,
+    /// Candidate entries the bounds tier removed before paneling.
+    pub bound_pruned_candidates: u64,
+    /// True-distance evaluations spent maintaining the bounds (the
+    /// per-snapshot k×k matrix plus per-query pivot distances).
+    pub bounds_matrix_cost: u64,
 }
 
 impl ServeMetrics {
@@ -73,6 +83,7 @@ impl ServeMetrics {
              {:.0}% duty) | {:.1} req/batch (max {}), {:.1} pts/batch (max {}) | \
              {:.0} pts/s, {:.0} req/s | {} rejected | \
              kernel {} lanes, {} quantized / {} rescored | \
+             bounds {} pruned pts / {} pruned cands / {} matrix cost | \
              latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
             self.requests,
             self.points,
@@ -90,6 +101,9 @@ impl ServeMetrics {
             self.simd_lanes,
             self.quantized_candidates,
             self.rescored_candidates,
+            self.bound_pruned_points,
+            self.bound_pruned_candidates,
+            self.bounds_matrix_cost,
             self.latency_p50_ms,
             self.latency_p95_ms,
             self.latency_p99_ms,
@@ -120,6 +134,12 @@ impl ServeMetrics {
             ("simd_lanes", Json::num(self.simd_lanes as f64)),
             ("quantized_candidates", Json::num(self.quantized_candidates as f64)),
             ("rescored_candidates", Json::num(self.rescored_candidates as f64)),
+            ("bound_pruned_points", Json::num(self.bound_pruned_points as f64)),
+            (
+                "bound_pruned_candidates",
+                Json::num(self.bound_pruned_candidates as f64),
+            ),
+            ("bounds_matrix_cost", Json::num(self.bounds_matrix_cost as f64)),
         ])
     }
 }
@@ -140,6 +160,8 @@ struct State {
     rejected: u64,
     /// Kernel-tier telemetry: lane gauge + lifetime candidate counters.
     kernel: KernelStats,
+    /// Bounds-tier telemetry (all counters; accumulate across batches).
+    bounds: BoundsStats,
 }
 
 /// Shared recorder: dispatcher writes, snapshots read.
@@ -194,6 +216,12 @@ impl Recorder {
         st.kernel.rescored_candidates += delta.rescored_candidates;
     }
 
+    /// Fold in one batch's bounds-telemetry delta (all three accumulate).
+    pub(crate) fn record_bounds(&self, delta: BoundsStats) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.bounds.absorb(&delta);
+    }
+
     pub(crate) fn snapshot(&self) -> ServeMetrics {
         // Copy everything out under the lock, then release it before the
         // O(n log n) sort so a metrics poll never stalls the dispatcher's
@@ -205,6 +233,7 @@ impl Recorder {
         let (max_batch_points, busy_s) = (st.max_batch_points, st.busy_s);
         let rejected = st.rejected;
         let kernel = st.kernel;
+        let bounds = st.bounds;
         let mut lat = st.latencies.clone();
         drop(st);
         let wall_s = self.started.elapsed().as_secs_f64();
@@ -236,6 +265,9 @@ impl Recorder {
             simd_lanes: kernel.simd_lanes,
             quantized_candidates: kernel.quantized_candidates,
             rescored_candidates: kernel.rescored_candidates,
+            bound_pruned_points: bounds.pruned_points,
+            bound_pruned_candidates: bounds.pruned_candidates,
+            bounds_matrix_cost: bounds.matrix_cost,
         }
     }
 }
@@ -289,7 +321,7 @@ mod tests {
         // metrics-parity rule enforces this statically, this test proves
         // it dynamically (a field in both emitters but with a typo'd key
         // would pass the lint's token scan yet fail here).
-        const FIELDS: [&str; 20] = [
+        const FIELDS: [&str; 23] = [
             "requests",
             "points",
             "batches",
@@ -310,6 +342,9 @@ mod tests {
             "simd_lanes",
             "quantized_candidates",
             "rescored_candidates",
+            "bound_pruned_points",
+            "bound_pruned_candidates",
+            "bounds_matrix_cost",
         ];
         let r = Recorder::new();
         r.record_batch(16, 0.1, &[0.002; 4]);
@@ -358,6 +393,32 @@ mod tests {
         assert!(m.summary().contains("150 quantized / 17 rescored"), "{}", m.summary());
         let j = m.to_json();
         assert_eq!(j.get("quantized_candidates").unwrap().as_usize().unwrap(), 150);
+    }
+
+    #[test]
+    fn bounds_telemetry_accumulates_all_three_counters() {
+        let r = Recorder::new();
+        r.record_bounds(BoundsStats {
+            pruned_points: 5,
+            pruned_candidates: 200,
+            matrix_cost: 1128,
+        });
+        r.record_bounds(BoundsStats {
+            pruned_points: 3,
+            pruned_candidates: 100,
+            matrix_cost: 8,
+        });
+        let m = r.snapshot();
+        assert_eq!(m.bound_pruned_points, 8);
+        assert_eq!(m.bound_pruned_candidates, 300);
+        assert_eq!(m.bounds_matrix_cost, 1136);
+        assert!(
+            m.summary().contains("bounds 8 pruned pts / 300 pruned cands / 1136 matrix cost"),
+            "{}",
+            m.summary()
+        );
+        let j = m.to_json();
+        assert_eq!(j.get("bound_pruned_candidates").unwrap().as_usize().unwrap(), 300);
     }
 
     #[test]

@@ -44,6 +44,7 @@
 
 use super::metrics::{Recorder, ServeMetrics};
 use crate::data::Dataset;
+use crate::kmeans::bounds::BoundsMode;
 use crate::kmeans::model::KmeansModel;
 use crate::kmeans::panel::{KernelKind, ParCpuPanels};
 use crate::kmeans::predict::Predictor;
@@ -81,6 +82,14 @@ pub struct ServeConfig {
     /// Centroid kd-tree prune override; `None` = the predictor's
     /// model-size auto rule.
     pub prune: Option<bool>,
+    /// Triangle-inequality bounds tier for each dispatcher's predictor
+    /// (DESIGN.md §10): candidate lists shrink *before* paneling, and
+    /// the pruning telemetry lands in
+    /// [`ServeMetrics::bound_pruned_points`] /
+    /// [`bound_pruned_candidates`](ServeMetrics::bound_pruned_candidates) /
+    /// [`bounds_matrix_cost`](ServeMetrics::bounds_matrix_cost).
+    /// `Off` (the default) keeps the legacy path bit for bit.
+    pub bounds: BoundsMode,
     /// Deadline-based micro-batcher: hold a non-full batch until the
     /// oldest queued request has waited this many microseconds, to
     /// coalesce more concurrent requests into one panel pass.  0 =
@@ -104,6 +113,7 @@ impl Default for ServeConfig {
             kernel: KernelKind::Blocked,
             quantized: false,
             prune: None,
+            bounds: BoundsMode::Off,
             batch_deadline_us: 0,
             dispatchers: 1,
         }
@@ -315,7 +325,11 @@ fn dispatcher_loop(shared: &Arc<Shared>, recorder: &Recorder, cfg: &ServeConfig,
         if let Some(on) = cfg.prune {
             predictor = predictor.prune(on);
         }
+        predictor = predictor.bounds(cfg.bounds);
         let mut kernel_last = predictor.kernel_stats();
+        // Zero baseline, not a post-build snapshot: the one-time k×k
+        // matrix cost must land in the first batch's recorded delta.
+        let mut bounds_last = crate::kmeans::bounds::BoundsStats::default();
         let d = model.dims();
         loop {
             let step = {
@@ -402,6 +416,9 @@ fn dispatcher_loop(shared: &Arc<Shared>, recorder: &Recorder, cfg: &ServeConfig,
             let ks = predictor.kernel_stats();
             recorder.record_kernel(ks.delta_from(&kernel_last));
             kernel_last = ks;
+            let bs = predictor.bounds_stats();
+            recorder.record_bounds(bs.delta_from(&bounds_last));
+            bounds_last = bs;
         }
     }
 }

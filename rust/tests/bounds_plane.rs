@@ -1,0 +1,252 @@
+//! Bounds-plane acceptance tests (ISSUE 10): the triangle-inequality
+//! pruning in the batched engine and the `Predictor` is *work
+//! elimination, not approximation* — every surviving candidate is scored
+//! by the same kernels, so a bounds-on run must be bitwise the bounds-off
+//! run wherever the kernel itself is position-independent (scalar and
+//! quantized tiers: labels AND distances), and label-identical on
+//! separated data for the SIMD tier (whose per-candidate value bits
+//! depend on the candidate's position in the list — DESIGN.md §10).
+//!
+//! Also pinned here: the duplicated-centroid tie rule (exact ties are
+//! unprunable by construction, so the lowest-index winner survives), the
+//! zero-movement fixpoint (a converged model keeps tight uppers and
+//! prunes aggressively without drifting), and the `Auto` threshold.
+
+use muchswift::data::synthetic::generate_params;
+use muchswift::data::Dataset;
+use muchswift::kdtree::KdTree;
+use muchswift::kmeans::filtering::{self, FilterOpts, QuantPanels};
+use muchswift::kmeans::init::{init_centroids, Init};
+use muchswift::kmeans::panel::{CpuPanels, KernelKind, PanelKernel, ParCpuPanels};
+use muchswift::kmeans::predict::Predictor;
+use muchswift::kmeans::solver::{Algo, KmeansSpec, SolverCtx};
+use muchswift::kmeans::{BoundsMode, Metric};
+
+/// Bounds-off vs bounds-on batched runs over the same data/init, any
+/// backend.  Returns (off, on) results.
+fn run_pair<B: muchswift::kmeans::panel::PanelBackend>(
+    n: usize,
+    d: usize,
+    k: usize,
+    sigma: f32,
+    metric: Metric,
+    seed: u64,
+    mk: impl Fn() -> B,
+) -> (muchswift::kmeans::KmeansResult, muchswift::kmeans::KmeansResult) {
+    let s = generate_params(n, d, k, sigma, 1.0, seed);
+    let tree = KdTree::build(&s.data);
+    let init = init_centroids(&s.data, k, Init::UniformSample, metric, seed ^ 5);
+    let off = FilterOpts { metric, tol: 1e-6, max_iters: 15, bounds: BoundsMode::Off };
+    let on = FilterOpts { bounds: BoundsMode::On, ..off.clone() };
+    let a = filtering::run_batched(&s.data, &tree, &init, &off, &mut mk());
+    let b = filtering::run_batched(&s.data, &tree, &init, &on, &mut mk());
+    (a, b)
+}
+
+fn assert_bitwise(
+    a: &muchswift::kmeans::KmeansResult,
+    b: &muchswift::kmeans::KmeansResult,
+    ctx: &str,
+) {
+    assert_eq!(a.assignments, b.assignments, "{ctx}: labels");
+    for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: centroid bits");
+    }
+    assert_eq!(a.stats.iterations(), b.stats.iterations(), "{ctx}: iters");
+    assert_eq!(a.stats.converged, b.stats.converged, "{ctx}: converged");
+}
+
+#[test]
+fn training_parity_scalar_both_metrics_at_large_k() {
+    // k = 64 is the Auto threshold: the production configuration the
+    // bench gate measures.  Scalar backend → full bitwise parity.
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let (off, on) = run_pair(3000, 4, 64, 0.05, metric, 31, || CpuPanels);
+        assert_bitwise(&off, &on, &format!("scalar {metric:?}"));
+        assert!(
+            on.stats.bound_pruned_points + on.stats.bound_pruned_candidates > 0,
+            "{metric:?}: bounds never fired at k=64"
+        );
+        assert!(on.stats.bounds_matrix_cost > 0, "{metric:?}");
+        assert_eq!(off.stats.bound_pruned_points, 0, "off mode stays inert");
+        assert!(
+            on.stats.total_dist_evals() < off.stats.total_dist_evals(),
+            "{metric:?}: pruning must eliminate kernel evals"
+        );
+    }
+}
+
+#[test]
+fn training_parity_quantized_both_metrics() {
+    // The i8 shortlist + exact re-score tier scores each candidate
+    // independently, so shrinking the list cannot move any value bit:
+    // full bitwise parity holds here too.
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let (off, on) = run_pair(2000, 6, 64, 0.05, metric, 33, QuantPanels::new);
+        assert_bitwise(&off, &on, &format!("quant {metric:?}"));
+        assert!(on.stats.bound_pruned_points + on.stats.bound_pruned_candidates > 0);
+    }
+}
+
+#[test]
+fn training_parity_simd_labels_on_separated_data() {
+    // The SIMD kernel's per-candidate value bits depend on the
+    // candidate's lane position, so a shrunk list can flip a *near-tie*.
+    // On well-separated planted clusters there are no near-ties and the
+    // labels (hence centroid bits, which only read labels) must agree.
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let (off, on) = run_pair(2000, 8, 64, 0.03, metric, 37, || {
+            ParCpuPanels::with_kind(1, KernelKind::Simd)
+        });
+        assert_bitwise(&off, &on, &format!("simd {metric:?}"));
+    }
+}
+
+#[test]
+fn spec_level_bounds_thread_through_the_batched_solver() {
+    // The same parity through the public solver spec — proves the CLI's
+    // `--algo filter-batched --bounds on` path, not just the engine fn.
+    let s = generate_params(2500, 5, 64, 0.08, 1.0, 41);
+    // Scalar kernel tier: position-independent values, so the assertion
+    // below can demand full bitwise equality (the solver's default tier
+    // at workers > 1 is the blocked kernel, whose value bits shift with
+    // candidate-list position — label-exact only on separated data).
+    let base = KmeansSpec::new(64)
+        .algo(Algo::FilterBatched)
+        .kernel(KernelKind::Scalar)
+        .seed(9)
+        .max_iters(12);
+    let off = base.clone().bounds(BoundsMode::Off).solve(&mut SolverCtx::new(&s.data));
+    let on = base.bounds(BoundsMode::On).solve(&mut SolverCtx::new(&s.data));
+    assert_bitwise(&off, &on, "spec");
+    assert!(on.stats.bound_pruned_points + on.stats.bound_pruned_candidates > 0);
+    // Auto at k = 64 engages too (the documented threshold).
+    assert!(BoundsMode::Auto.enabled_for(64));
+    assert!(!BoundsMode::Auto.enabled_for(63));
+}
+
+#[test]
+fn duplicated_centroids_keep_the_lowest_index_winner() {
+    // Exact ties are unprunable by construction (`surely_lt` is strict
+    // with slack), so the first-wins tie rule survives pruning: points
+    // sitting exactly between duplicated centers keep the lower label.
+    let data = Dataset::from_flat(
+        6,
+        2,
+        vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0, 5.1, 5.0, 0.0, 0.1, 5.0, 5.1],
+    );
+    let tree = KdTree::build(&data);
+    // Centers 0 and 1 are bit-identical duplicates; center 2 is far away.
+    let init = Dataset::from_flat(3, 2, vec![0.05, 0.05, 0.05, 0.05, 5.05, 5.05]);
+    for metric in [Metric::Euclid, Metric::Manhattan] {
+        let off = FilterOpts { metric, tol: 0.0, max_iters: 3, bounds: BoundsMode::Off };
+        let on = FilterOpts { bounds: BoundsMode::On, ..off.clone() };
+        let a = filtering::run_batched(&data, &tree, &init, &off, &mut CpuPanels);
+        let b = filtering::run_batched(&data, &tree, &init, &on, &mut CpuPanels);
+        assert_eq!(a.assignments, b.assignments, "{metric:?}");
+        // Nobody may land on the duplicated higher index.
+        assert!(
+            b.assignments.iter().all(|&l| l != 1),
+            "{metric:?}: duplicated center stole a point: {:?}",
+            b.assignments
+        );
+    }
+}
+
+#[test]
+fn zero_movement_fixpoint_prunes_without_drifting() {
+    // Restart both modes from already-converged centroids: every shift
+    // is exactly 0.0, uppers stay tight, and the second iteration must
+    // prune while reproducing the fixpoint bit for bit.
+    let s = generate_params(1500, 3, 64, 0.05, 1.0, 47);
+    let tree = KdTree::build(&s.data);
+    let init = init_centroids(&s.data, 64, Init::UniformSample, Metric::Euclid, 48);
+    let warm = FilterOpts {
+        metric: Metric::Euclid,
+        tol: 1e-6,
+        max_iters: 60,
+        bounds: BoundsMode::Off,
+    };
+    let converged = filtering::run_batched(&s.data, &tree, &init, &warm, &mut CpuPanels);
+    assert!(converged.stats.converged, "warmup did not converge");
+    // Negative tolerance: zero movement must not early-out at iteration
+    // 1, or the bounds state (seeded on its first advance) never
+    // activates and the pruning claim below would be vacuous.
+    let off = FilterOpts { tol: -1.0, max_iters: 3, ..warm };
+    let on = FilterOpts { bounds: BoundsMode::On, ..off.clone() };
+    let a = filtering::run_batched(&s.data, &tree, &converged.centroids, &off, &mut CpuPanels);
+    let b = filtering::run_batched(&s.data, &tree, &converged.centroids, &on, &mut CpuPanels);
+    assert_bitwise(&a, &b, "fixpoint");
+    for (x, y) in b.centroids.flat().iter().zip(converged.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "fixpoint drifted");
+    }
+    assert!(
+        b.stats.bound_pruned_points > 0,
+        "tight uppers at a fixpoint must prune points outright"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Predictor
+// ---------------------------------------------------------------------------
+
+fn small_model(k: usize, seed: u64) -> (muchswift::kmeans::model::KmeansModel, Dataset) {
+    let s = generate_params(1200.max(k * 4), 6, k, 0.05, 1.0, seed);
+    let spec = KmeansSpec::new(k).seed(seed).max_iters(25);
+    let model = spec.fit(&mut SolverCtx::new(&s.data));
+    (model, s.data)
+}
+
+#[test]
+fn predictor_bounds_parity_scalar_and_quantized() {
+    let (model, data) = small_model(64, 51);
+    // Scalar panels: labels AND distances bitwise.
+    let (l0, d0) = Predictor::with_backend(&model, ParCpuPanels::with_kernel(2, PanelKernel::Scalar))
+        .assign_scored(&data);
+    let mut on = Predictor::with_backend(&model, ParCpuPanels::with_kernel(2, PanelKernel::Scalar))
+        .bounds(BoundsMode::On);
+    assert!(on.bounding());
+    let (l1, d1) = on.assign_scored(&data);
+    assert_eq!(l0, l1, "scalar predictor labels");
+    for (x, y) in d0.iter().zip(d1.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "scalar predictor distance bits");
+    }
+    let bs = on.bounds_stats();
+    assert!(bs.pruned_candidates > 0, "no candidates pruned at k=64");
+    assert!(bs.matrix_cost > 0);
+
+    // Quantized tier: same contract.
+    let (ql0, qd0) = Predictor::quantized(&model).assign_scored(&data);
+    let mut qon = Predictor::quantized(&model).bounds(BoundsMode::On);
+    let (ql1, qd1) = qon.assign_scored(&data);
+    assert_eq!(ql0, ql1, "quantized predictor labels");
+    for (x, y) in qd0.iter().zip(qd1.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "quantized predictor distance bits");
+    }
+    assert!(qon.bounds_stats().pruned_candidates > 0);
+}
+
+#[test]
+fn predictor_bounds_compose_with_the_kd_tree_prune() {
+    // Both pruners stacked: the kd-tree shortlist feeds the bounds
+    // filter; labels must still match the plain predictor exactly.
+    let (model, data) = small_model(64, 53);
+    let plain = Predictor::with_backend(&model, CpuPanels).assign(&data);
+    let both = Predictor::with_backend(&model, CpuPanels)
+        .prune(true)
+        .bounds(BoundsMode::On)
+        .assign(&data);
+    assert_eq!(plain, both);
+}
+
+#[test]
+fn predictor_auto_threshold_tracks_k() {
+    // Auto engages at exactly k = 64 (`bounds::AUTO_MIN_K`); On engages
+    // regardless of k.
+    let (m63, _) = small_model(63, 55);
+    let (m64, _) = small_model(64, 56);
+    assert!(!Predictor::new(&m63).bounds(BoundsMode::Auto).bounding());
+    assert!(Predictor::new(&m64).bounds(BoundsMode::Auto).bounding());
+    assert!(Predictor::new(&m63).bounds(BoundsMode::On).bounding());
+    assert!(!Predictor::new(&m64).bounds(BoundsMode::Off).bounding());
+}

@@ -302,6 +302,32 @@ fn quantized_predictor_keeps_lowest_index_tie_rule() {
 }
 
 #[test]
+fn kd_prune_auto_threshold_is_pinned_at_k_32() {
+    // The Predictor's kd-tree-over-centroids prune auto-enables at
+    // k >= 32 (`PRUNE_MIN_K`, DESIGN.md §3): below that, the shortlist
+    // build costs more than the brute scan it saves.  Pin the boundary
+    // so the constant can't silently drift, and that an explicit
+    // `prune(on)` overrides the heuristic in both directions.
+    for (k, auto_on) in [(31usize, false), (32, true), (33, true)] {
+        let s = generate_params(k * 20, 4, k, 0.1, 2.0, 60 + k as u64);
+        let spec = KmeansSpec::new(k).seed(8).max_iters(5);
+        let model = spec.fit(&mut SolverCtx::new(&s.data));
+        assert_eq!(
+            Predictor::new(&model).pruning(),
+            auto_on,
+            "auto prune at k={k}"
+        );
+        assert!(Predictor::new(&model).prune(true).pruning(), "k={k}");
+        assert!(!Predictor::new(&model).prune(false).pruning(), "k={k}");
+        // The heuristic only picks a default; labels never depend on it.
+        let q = generate_params(400, 4, k, 0.4, 2.0, 90 + k as u64).data;
+        let a = Predictor::new(&model).prune(false).assign(&q);
+        let b = Predictor::new(&model).prune(true).assign(&q);
+        assert_eq!(a, b, "k={k}: prune changed labels");
+    }
+}
+
+#[test]
 fn simd_kernel_predictor_labels_match_scalar_oracle() {
     // Label-level parity for the SIMD tier (panel values are pinned to
     // 1e-4 in tests/panel_engine.rs; labels must agree exactly wherever

@@ -344,6 +344,9 @@ fn cluster_binary_survives_a_dead_remote_and_reports_the_fallback() {
         "session_bytes_tx",
         "session_bytes_rx",
         "shard_reloads",
+        "bound_pruned_points",
+        "bound_pruned_candidates",
+        "bounds_matrix_cost",
     ] {
         assert!(text.contains(&format!("\"{key}\"")), "report lacks {key}: {text}");
     }

@@ -1,0 +1,12 @@
+//! Fixture coordinator metrics: fully in parity (summary + report JSON
+//! both know `iters`), so this tree isolates the docs-side gap.
+
+pub struct CoordMetrics {
+    pub iters: u64,
+}
+
+impl CoordMetrics {
+    pub fn summary(&self) -> String {
+        format!("iters {}", self.iters)
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture solver stats: `undocumented_counter` is declared on RunStats
+//! but absent from the fixture DESIGN.md's counters table — the
+//! metrics-parity docs check must fire exactly once, on its line.
+
+pub struct RunStats {
+    pub iters: u64,
+    pub undocumented_counter: u64,
+}

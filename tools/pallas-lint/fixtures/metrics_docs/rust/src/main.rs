@@ -1,0 +1,12 @@
+//! Fixture CLI: the report emitter knows every CoordMetrics counter.
+
+fn write_coord_report(iters: u64) -> String {
+    let pairs = [("iters", iters)];
+    let mut out = String::from("{");
+    for (k, v) in pairs {
+        out.push_str(k);
+        out.push_str(&v.to_string());
+    }
+    out.push('}');
+    out
+}

@@ -1,0 +1,24 @@
+//! Fixture serve metrics: in parity with summary and JSON, and its one
+//! counter is listed in the fixture DESIGN.md — only the RunStats ghost
+//! may fire.
+
+pub struct ServeMetrics {
+    pub requests: u64,
+}
+
+impl ServeMetrics {
+    pub fn summary(&self) -> String {
+        format!("requests {}", self.requests)
+    }
+
+    pub fn to_json(&self) -> String {
+        let pairs = [("requests", self.requests)];
+        let mut out = String::from("{");
+        for (k, v) in pairs {
+            out.push_str(k);
+            out.push_str(&v.to_string());
+        }
+        out.push('}');
+        out
+    }
+}

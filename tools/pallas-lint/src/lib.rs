@@ -68,6 +68,7 @@ pub const DECODE_PATHS: &[&str] = &[
 const PROTOCOL_RS: &str = "rust/src/kmeans/remote/protocol.rs";
 const FRAME_PROPS_RS: &str = "rust/tests/frame_properties.rs";
 const COORD_METRICS_RS: &str = "rust/src/coordinator/metrics.rs";
+const KMEANS_MOD_RS: &str = "rust/src/kmeans/mod.rs";
 const SERVE_METRICS_RS: &str = "rust/src/serve/metrics.rs";
 const MAIN_RS: &str = "rust/src/main.rs";
 const FAULT_RS: &str = "rust/src/util/fault.rs";
@@ -608,7 +609,10 @@ pub fn rule_protocol_exhaustiveness(root: &Path) -> Vec<Violation> {
 /// Every public counter field of `CoordMetrics` and `ServeMetrics` must
 /// appear in its human summary *and* its machine-readable JSON emitter.
 /// A counter that exists but never surfaces is how "exactly-once under
-/// chaos" claims quietly stop being observable.
+/// chaos" claims quietly stop being observable.  On trees that carry a
+/// DESIGN.md, every `RunStats` and `ServeMetrics` counter must also be
+/// named in its counters table — telemetry nobody documented is
+/// telemetry nobody can read.
 pub fn rule_metrics_parity(root: &Path) -> Vec<Violation> {
     let mut out = Vec::new();
 
@@ -642,6 +646,28 @@ pub fn rule_metrics_parity(root: &Path) -> Vec<Violation> {
             check_struct_parity(&sm, "ServeMetrics", &sm, "summary", &sm, "to_json", &mut out);
         }
         Err(v) => out.push(with_rule(v, RULE_METRICS)),
+    }
+
+    // Docs side: every declared `RunStats` and `ServeMetrics` counter
+    // must be named in DESIGN.md's counters table (§10) — the same
+    // docs-or-fail pattern as the wire table in the protocol rule.
+    // Gated on DESIGN.md existing so fixture trees can exercise the
+    // summary/JSON half in isolation.
+    if let Ok(design) = fs::read_to_string(root.join("DESIGN.md")) {
+        for (rel, name) in [(KMEANS_MOD_RS, "RunStats"), (SERVE_METRICS_RS, "ServeMetrics")] {
+            let Ok(src) = Source::load(root, rel) else {
+                continue;
+            };
+            for (field, li) in struct_fields(&src, name) {
+                if !has_token(&design, &field) {
+                    out.push(src.violation(
+                        li,
+                        RULE_METRICS,
+                        format!("{name}.{field} is missing from DESIGN.md's counters table"),
+                    ));
+                }
+            }
+        }
     }
     out
 }

@@ -66,6 +66,27 @@ fn metrics_rule_fires_on_ghost_counter() {
 }
 
 #[test]
+fn metrics_rule_fires_on_undocumented_counter() {
+    // Same shape as the protocol docs check: this tree is in full
+    // summary/JSON parity but carries a DESIGN.md whose counters table
+    // omits one declared RunStats counter — exactly one docs violation,
+    // pointing at the field's declaration line.
+    let v = rule_metrics_parity(&fixture("metrics_docs"));
+    assert_eq!(v.len(), 1, "expected one docs gap:\n{}", render(&v));
+    assert!(
+        v[0].msg.contains("RunStats.undocumented_counter"),
+        "{}",
+        render(&v)
+    );
+    assert!(
+        v[0].msg.contains("DESIGN.md's counters table"),
+        "{}",
+        render(&v)
+    );
+    assert!(v[0].file.contains("kmeans"), "{}", render(&v));
+}
+
+#[test]
 fn fault_rule_fires_on_uninjected_variant() {
     let v = rule_fault_coverage(&fixture("fault"));
     assert_eq!(v.len(), 1, "expected one uncovered variant:\n{}", render(&v));
